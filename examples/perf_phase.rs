@@ -1,0 +1,27 @@
+//! L1/L2 perf probe: XLA phase invocation latency (AOT artifact on PJRT CPU).
+use graphhp::runtime::{pipeline, XlaRuntime};
+fn main() {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    let rt = XlaRuntime::new(&dir).unwrap();
+    let ph = rt.load_phase("pagerank_local").unwrap();
+    let med = pipeline::time_phase_invocation(&ph, 21).unwrap();
+    let n = ph.spec.n; let k = ph.spec.steps;
+    let flops = 2.0 * (n*n) as f64 * k as f64; // K matvecs
+    println!("pagerank_local (literal args): n={n} K={k} median invocation {:?} ({:.2} GFLOP/s effective)",
+        med, flops / med.as_secs_f64() / 1e9);
+    // cached device matrix path
+    let m = vec![0.001f32; n * n];
+    let m_dev = rt.upload_f32(&m, &[n, n]).unwrap();
+    let r = vec![0.15f32; n];
+    let d = vec![0.15f32; n];
+    let mut times = Vec::new();
+    for _ in 0..21 {
+        let t0 = std::time::Instant::now();
+        let _ = ph.run_pagerank_dev(&rt, &m_dev, &r, &d).unwrap();
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    let med = times[10];
+    println!("pagerank_local (device-cached M): median invocation {:?} ({:.2} GFLOP/s effective)",
+        med, flops / med.as_secs_f64() / 1e9);
+}

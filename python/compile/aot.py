@@ -1,0 +1,114 @@
+"""AOT compile path: lower the L2 local-phase programs to HLO **text**.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` and
+NOT a serialized HloModuleProto: jax >= 0.5 emits protos with 64-bit
+instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run from ``python/``:  python -m compile.aot --outdir ../artifacts
+(the Makefile drives this; it is a no-op for unchanged inputs via make).
+
+Artifacts (block size N, scan length K fixed at AOT time):
+  pagerank_local.hlo.txt  (m:(N,N), rank:(N,1), delta:(N,1))
+                          -> (rank', delta', acc, linf)
+  sssp_local.hlo.txt      (w:(N,N), d:(N,1)) -> (d', changed)
+  manifest.txt            one line per artifact: name n steps inputs outputs
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.minplus import blocked_minplus_matvec
+from .kernels.pagerank_block import blocked_matvec
+
+# AOT parameters. N is the densified-partition tile edge; K the number of
+# pseudo-supersteps fused into one executable invocation. Rust pads
+# partitions to N and re-invokes in K-step chunks until convergence.
+AOT_N = 256
+AOT_STEPS = 8
+AOT_BLOCK = 128
+
+
+def pagerank_local_phase_aot(m, rank, delta):
+    """Non-donating clone of model.pagerank_local_phase for lowering.
+
+    (Donated buffers add input_output_alias annotations to the HLO that
+    buy nothing through the text interchange; keep the artifact plain.)
+    """
+
+    def step(carry, _):
+        rank, delta, acc = carry
+        acc = acc + delta
+        new_delta = blocked_matvec(m, delta, block=AOT_BLOCK)
+        return (rank + new_delta, new_delta, acc), None
+
+    init = (rank, delta, jnp.zeros_like(delta))
+    (rank, delta, acc), _ = jax.lax.scan(step, init, None, length=AOT_STEPS)
+    linf = jnp.max(jnp.abs(delta))
+    return rank, delta, acc, linf
+
+
+def sssp_local_phase_aot(w, d):
+    def step(d, _):
+        return jnp.minimum(d, blocked_minplus_matvec(w, d, block=AOT_BLOCK)), None
+
+    d0 = d
+    d, _ = jax.lax.scan(step, d, None, length=AOT_STEPS)
+    changed = jnp.sum((d < d0).astype(jnp.int32))
+    return d, changed
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="compat: ignored, use --outdir")
+    args = ap.parse_args()
+    outdir = args.outdir
+    if args.out is not None:
+        outdir = os.path.dirname(args.out) or "."
+    os.makedirs(outdir, exist_ok=True)
+
+    mat = jax.ShapeDtypeStruct((AOT_N, AOT_N), jnp.float32)
+    vec = jax.ShapeDtypeStruct((AOT_N, 1), jnp.float32)
+
+    manifest = []
+
+    lowered = jax.jit(pagerank_local_phase_aot).lower(mat, vec, vec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, "pagerank_local.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"pagerank_local {AOT_N} {AOT_STEPS} m,rank,delta rank,delta,acc,linf")
+    print(f"wrote {path} ({len(text)} chars)")
+
+    lowered = jax.jit(sssp_local_phase_aot).lower(mat, vec)
+    text = to_hlo_text(lowered)
+    path = os.path.join(outdir, "sssp_local.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    manifest.append(f"sssp_local {AOT_N} {AOT_STEPS} w,d d,changed")
+    print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: blocked min-plus mat-vec for the SSSP local phase.
+
+One GraphHP pseudo-superstep of single-source shortest paths (paper
+Alg. 4) over a partition's internal adjacency is one Bellman-Ford
+relaxation sweep, i.e. a mat-vec over the (min, +) semiring:
+
+    cand[i] = min_j ( W[i, j] + d[j] )        # W[i,j] = w(j -> i), +inf if no edge
+    d'[i]   = min(d[i], cand[i])              # the outer min happens in L2
+
+The (min,+) product cannot use the MXU (it is not a ring matmul), so the
+kernel targets the VPU: each grid step loads a ``(BR, BC)`` tile of W and a
+``(BC,)`` slice of d into VMEM, forms the broadcast sum, and reduces with a
+lane-wise min, accumulating the running block minimum in the VMEM-resident
+output block across the column grid dimension.
+
+Padding convention: absent edges and padding rows/cols hold ``INF``
+(a large finite f32 — using actual ``inf`` would generate nan via
+inf + -inf in user-supplied corner cases; Rust uses the same constant).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 128
+
+# "Infinity" for distances. Finite so that INF + INF does not overflow f32
+# (3.4e38); 1e30 + 1e30 = 2e30 stays representable and still compares
+# larger than any feasible path length. A plain python float: a jnp scalar
+# would be captured as a constant by the Pallas kernel, which pallas_call
+# rejects.
+INF = 1e30
+
+
+def _minplus_kernel(w_ref, x_ref, o_ref):
+    """One grid step: o[br] = min(o[br], min_j(W[br, bc] + x[bc]))."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, INF)
+
+    # (BR, BC) + (1, BC) -> (BR, BC), reduce min over columns -> (BR, 1)
+    cand = jnp.min(w_ref[...] + x_ref[...].reshape(1, -1), axis=1, keepdims=True)
+    o_ref[...] = jnp.minimum(o_ref[...], cand)
+
+
+def blocked_minplus_matvec(
+    w: jax.Array, x: jax.Array, block: int = DEFAULT_BLOCK
+) -> jax.Array:
+    """Min-plus product ``(W (+) x)[i] = min_j W[i,j] + x[j]``.
+
+    ``w: (n, n) f32`` (INF for absent edges), ``x: (n, 1) f32``.
+    """
+    n = w.shape[0]
+    if w.shape != (n, n) or x.shape != (n, 1):
+        raise ValueError(f"bad shapes w={w.shape} x={x.shape}")
+    if n % block != 0:
+        raise ValueError(f"n={n} not a multiple of block={block}")
+    grid = (n // block, n // block)
+    return pl.pallas_call(
+        _minplus_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),  # W tile
+            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),  # distance slice
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(w, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def sssp_step(w: jax.Array, d: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """One relaxation pseudo-superstep: ``d' = min(d, W (+) d)``."""
+    return jnp.minimum(d, blocked_minplus_matvec(w, d, block=block))

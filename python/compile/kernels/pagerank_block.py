@@ -1,0 +1,83 @@
+"""L1 Pallas kernel: blocked dense mat-vec for the incremental-PageRank
+local phase (GraphHP pseudo-superstep).
+
+One GraphHP pseudo-superstep of the accumulative PageRank algorithm
+(paper Alg. 5) over a partition's *internal* adjacency is
+
+    delta_out = M @ delta_in        # M[i,j] = d * A[j,i] / outdeg(j)
+    rank_out  = rank_in + delta_out
+
+where ``M`` is the damped, column-normalized transpose adjacency of the
+partition, densified into a tile by the Rust coordinator
+(``runtime/accel.rs``).
+
+The kernel is written as a VMEM-tiled blocked mat-vec: the grid walks
+(row-block, col-block); each step multiplies a ``(BR, BC)`` tile of ``M``
+against a ``(BC, 1)`` slice of the delta vector, accumulating partial sums
+in the output block, which Pallas keeps resident in VMEM across the inner
+(column) grid dimension. This is the HBM->VMEM schedule a GPU
+implementation would express with threadblocks + shared memory; BlockSpec
+expresses it here (see DESIGN.md §6 Hardware adaptation).
+
+interpret=True is mandatory on this image: real TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default block shape: 128 matches the MXU systolic-array edge; a
+# (128, 128) f32 tile is 64 KiB, so tile + vector slices + output block
+# stay well under 1 MiB of VMEM even double-buffered (DESIGN.md §7).
+DEFAULT_BLOCK = 128
+
+
+def _matvec_kernel(m_ref, x_ref, o_ref):
+    """One grid step: o[br] (+)= M[br, bc] @ x[bc]."""
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        m_ref[...], x_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def blocked_matvec(m: jax.Array, x: jax.Array, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """``m @ x`` with ``m: (n, n) f32`` and ``x: (n, 1) f32`` via Pallas.
+
+    ``n`` must be a multiple of ``block``; the Rust side pads partitions to
+    the AOT block size.
+    """
+    n = m.shape[0]
+    if m.shape != (n, n) or x.shape != (n, 1):
+        raise ValueError(f"bad shapes m={m.shape} x={x.shape}")
+    if n % block != 0:
+        raise ValueError(f"n={n} not a multiple of block={block}")
+    grid = (n // block, n // block)
+    return pl.pallas_call(
+        _matvec_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, block), lambda i, j: (i, j)),  # M tile
+            pl.BlockSpec((block, 1), lambda i, j: (j, 0)),  # delta slice
+        ],
+        out_specs=pl.BlockSpec((block, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        interpret=True,
+    )(m, x)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def pagerank_step(
+    m: jax.Array, rank: jax.Array, delta: jax.Array, block: int = DEFAULT_BLOCK
+):
+    """One pseudo-superstep: returns ``(rank + M@delta, M@delta)``."""
+    new_delta = blocked_matvec(m, delta, block=block)
+    return rank + new_delta, new_delta

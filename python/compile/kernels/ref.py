@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the semantics the kernels must match bit-for-bit structurally
+(allclose numerically): a plain dense mat-vec for the PageRank delta
+propagation and a broadcast min-plus product for SSSP relaxation.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matvec_ref(m, x):
+    """``m @ x`` for m:(n,n), x:(n,1)."""
+    return m @ x
+
+
+def pagerank_step_ref(m, rank, delta):
+    """One accumulative-PageRank pseudo-superstep (paper Alg. 5)."""
+    new_delta = m @ delta
+    return rank + new_delta, new_delta
+
+
+def minplus_matvec_ref(w, x):
+    """Min-plus product: out[i] = min_j (w[i,j] + x[j,0]); shape (n,1)."""
+    return jnp.min(w + x.reshape(1, -1), axis=1, keepdims=True)
+
+
+def sssp_step_ref(w, d):
+    """One SSSP relaxation: d' = min(d, W (+) d)."""
+    return jnp.minimum(d, minplus_matvec_ref(w, d))
+
+
+def pagerank_local_phase_ref(m, rank, delta, steps):
+    """K pseudo-supersteps by plain python loop (oracle for the scan model).
+
+    Returns (rank, delta, acc) where acc accumulates the deltas *fed into*
+    each step — the quantity the coordinator uses to derive the messages a
+    partition owes its remote neighbors at the next global barrier.
+    """
+    acc = jnp.zeros_like(delta)
+    for _ in range(steps):
+        acc = acc + delta
+        new_delta = m @ delta
+        rank = rank + new_delta
+        delta = new_delta
+    return rank, delta, acc
+
+
+def sssp_local_phase_ref(w, d, steps):
+    """K relaxation sweeps by plain python loop."""
+    for _ in range(steps):
+        d = jnp.minimum(d, minplus_matvec_ref(w, d))
+    return d

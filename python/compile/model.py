@@ -1,0 +1,82 @@
+"""L2: the GraphHP *local phase* as a JAX program.
+
+A GraphHP local phase is a partition-private fixed-point iteration
+(pseudo-supersteps) with no cross-partition synchronization. For
+value-propagation algorithms this is a scan over the L1 kernel step:
+
+- incremental PageRank (paper Alg. 5): delta-propagation mat-vec per step;
+- SSSP (paper Alg. 4): min-plus relaxation per step.
+
+``lax.scan`` fuses the whole phase into a single HLO while-loop, so the
+Rust coordinator launches ONE executable per local phase (per K-step
+chunk), not one dispatch per pseudo-superstep — the on-chip analogue of
+the paper's "pseudo-superstep iteration is performed entirely in memory".
+
+Every function here is shape-polymorphic in python but is AOT-lowered by
+``aot.py`` at fixed (n, K) to HLO text the Rust runtime loads.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.minplus import blocked_minplus_matvec
+from .kernels.pagerank_block import blocked_matvec
+
+DEFAULT_STEPS = 8
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "block"), donate_argnums=(1, 2))
+def pagerank_local_phase(m, rank, delta, steps: int = DEFAULT_STEPS, block: int = 128):
+    """Run ``steps`` PageRank pseudo-supersteps on one densified partition.
+
+    Args:
+      m:     (n, n) f32 — damped column-normalized transpose internal
+             adjacency of the partition (``M[i,j] = d*A[j,i]/outdeg(j)``).
+      rank:  (n, 1) f32 — current PageRank values.
+      delta: (n, 1) f32 — pending (undelivered) rank updates.
+      steps: pseudo-supersteps per invocation; the coordinator re-invokes
+             while ``linf`` exceeds the tolerance.
+
+    Returns:
+      (rank', delta', acc, linf): new state, the summed per-step input
+      deltas (for remote-message derivation), and the final ||delta'||_inf
+      so the coordinator can test convergence without touching the vector.
+    """
+
+    def step(carry, _):
+        rank, delta, acc = carry
+        acc = acc + delta
+        new_delta = blocked_matvec(m, delta, block=block)
+        return (rank + new_delta, new_delta, acc), None
+
+    init = (rank, delta, jnp.zeros_like(delta))
+    (rank, delta, acc), _ = jax.lax.scan(step, init, None, length=steps)
+    linf = jnp.max(jnp.abs(delta))
+    return rank, delta, acc, linf
+
+
+@functools.partial(jax.jit, static_argnames=("steps", "block"), donate_argnums=(1,))
+def sssp_local_phase(w, d, steps: int = DEFAULT_STEPS, block: int = 128):
+    """Run ``steps`` SSSP relaxation pseudo-supersteps on one partition.
+
+    Args:
+      w: (n, n) f32 — internal edge weights, ``INF`` where no edge.
+      d: (n, 1) f32 — current tentative distances.
+
+    Returns:
+      (d', changed): relaxed distances and a scalar count of vertices whose
+      distance improved this invocation (0 => the partition quiesced).
+    """
+
+    def step(d, _):
+        nd = jnp.minimum(d, blocked_minplus_matvec(w, d, block=block))
+        return nd, None
+
+    d0 = d
+    d, _ = jax.lax.scan(step, d, None, length=steps)
+    changed = jnp.sum((d < d0).astype(jnp.int32))
+    return d, changed

@@ -1,0 +1,170 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (multiples of the block), seeds and value ranges;
+assert_allclose against ref.py. This is the CORE correctness signal for
+the compute layer.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.minplus import (
+    INF,
+    blocked_minplus_matvec,
+    sssp_step,
+)
+from compile.kernels.pagerank_block import blocked_matvec, pagerank_step
+
+hypothesis.settings.register_profile(
+    "kernels", deadline=None, max_examples=25, derandomize=True
+)
+hypothesis.settings.load_profile("kernels")
+
+
+def rng_mat(seed, n, lo=-1.0, hi=1.0):
+    r = np.random.default_rng(seed)
+    return jnp.asarray(r.uniform(lo, hi, size=(n, n)).astype(np.float32))
+
+
+def rng_vec(seed, n, lo=-1.0, hi=1.0):
+    r = np.random.default_rng(seed + 777)
+    return jnp.asarray(r.uniform(lo, hi, size=(n, 1)).astype(np.float32))
+
+
+# ---------------------------------------------------------------- matvec
+
+
+@given(
+    nblocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_blocked_matvec_matches_ref(nblocks, block, seed):
+    n = nblocks * block
+    m, x = rng_mat(seed, n), rng_vec(seed, n)
+    got = blocked_matvec(m, x, block=block)
+    want = ref.matvec_ref(m, x)
+    assert got.shape == (n, 1)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@given(
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_blocked_matvec_value_ranges(seed, scale):
+    n = 64
+    m = rng_mat(seed, n, -scale, scale)
+    x = rng_vec(seed, n, -scale, scale)
+    got = blocked_matvec(m, x, block=16)
+    assert_allclose(
+        np.asarray(got), np.asarray(ref.matvec_ref(m, x)), rtol=1e-4, atol=1e-4 * scale * scale
+    )
+
+
+def test_blocked_matvec_identity():
+    n = 32
+    m = jnp.eye(n, dtype=jnp.float32)
+    x = rng_vec(3, n)
+    assert_allclose(np.asarray(blocked_matvec(m, x, block=8)), np.asarray(x), rtol=1e-6)
+
+
+def test_blocked_matvec_zero_matrix():
+    n = 16
+    got = blocked_matvec(jnp.zeros((n, n), jnp.float32), rng_vec(0, n), block=8)
+    assert_allclose(np.asarray(got), np.zeros((n, 1), np.float32))
+
+
+def test_blocked_matvec_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        blocked_matvec(jnp.zeros((8, 16), jnp.float32), jnp.zeros((16, 1), jnp.float32), block=8)
+    with pytest.raises(ValueError):
+        blocked_matvec(jnp.zeros((12, 12), jnp.float32), jnp.zeros((12, 1), jnp.float32), block=8)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_pagerank_step_matches_ref(seed):
+    n = 64
+    m, r, d = rng_mat(seed, n, 0.0, 1.0), rng_vec(seed, n, 0.0, 1.0), rng_vec(seed + 1, n)
+    got_r, got_d = pagerank_step(m, r, d, block=16)
+    want_r, want_d = ref.pagerank_step_ref(m, r, d)
+    assert_allclose(np.asarray(got_r), np.asarray(want_r), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(got_d), np.asarray(want_d), rtol=1e-5, atol=1e-5)
+
+
+# --------------------------------------------------------------- minplus
+
+
+def sparse_weights(seed, n, density=0.2):
+    r = np.random.default_rng(seed)
+    w = np.full((n, n), float(INF), np.float32)
+    mask = r.uniform(size=(n, n)) < density
+    w[mask] = r.uniform(0.1, 10.0, size=mask.sum()).astype(np.float32)
+    return jnp.asarray(w)
+
+
+@given(
+    nblocks=st.integers(min_value=1, max_value=4),
+    block=st.sampled_from([8, 16, 32, 128]),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_blocked_minplus_matches_ref(nblocks, block, seed):
+    n = nblocks * block
+    w = sparse_weights(seed, n)
+    d = rng_vec(seed, n, 0.0, 100.0)
+    got = blocked_minplus_matvec(w, d, block=block)
+    want = ref.minplus_matvec_ref(w, d)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+def test_sssp_step_matches_ref(seed):
+    n = 64
+    w = sparse_weights(seed, n)
+    d = rng_vec(seed, n, 0.0, 100.0)
+    got = sssp_step(w, d, block=16)
+    want = ref.sssp_step_ref(w, d)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+def test_minplus_all_inf_is_noop_through_step():
+    n = 16
+    w = jnp.full((n, n), float(INF), jnp.float32)
+    d = rng_vec(5, n, 0.0, 10.0)
+    got = sssp_step(w, d, block=8)
+    assert_allclose(np.asarray(got), np.asarray(d))
+
+
+def test_minplus_never_increases_distance():
+    n = 32
+    w = sparse_weights(11, n, density=0.5)
+    d = rng_vec(11, n, 0.0, 50.0)
+    got = np.asarray(sssp_step(w, d, block=8))
+    assert (got <= np.asarray(d) + 1e-6).all()
+
+
+def test_minplus_inf_padding_is_stable():
+    # Padded region (rows/cols n..N) must stay at INF and not corrupt
+    # the live region — exactly what runtime/accel.rs relies on.
+    n, live = 32, 20
+    w = np.full((n, n), float(INF), np.float32)
+    rng = np.random.default_rng(0)
+    w[:live, :live] = np.where(
+        rng.uniform(size=(live, live)) < 0.3,
+        rng.uniform(0.1, 5.0, size=(live, live)),
+        float(INF),
+    ).astype(np.float32)
+    d = np.full((n, 1), float(INF), np.float32)
+    d[0, 0] = 0.0
+    w_j, d_j = jnp.asarray(w), jnp.asarray(d)
+    got = np.asarray(sssp_step(w_j, d_j, block=8))
+    want = np.asarray(ref.sssp_step_ref(w_j, d_j))
+    assert_allclose(got, want, rtol=1e-6)
+    assert (got[live:] >= float(INF) / 2).all()

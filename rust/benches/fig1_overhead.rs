@@ -1,0 +1,83 @@
+//! Figure 1 — synchronization and communication overhead of the
+//! standard BSP platform (Hama), as a percentage of total processing
+//! time, vs number of partitions.
+//!
+//! (a) SSSP on a road network; (b) PageRank on a web graph.
+//! Paper's observation: sync+comm ≈ 86% at 12 partitions for SSSP, sync
+//! alone ≈ 74%, sync share grows with partitions while comm share falls.
+
+use graphhp::algorithms::{ClassicPageRank, Sssp};
+use graphhp::bench_support as bs;
+use graphhp::engine::{hama, EngineConfig};
+use graphhp::graph::generators;
+
+fn main() {
+    bs::header(
+        "Figure 1: Synchronization and Communication Overhead (Hama)",
+        "paper §2, Figure 1 (a) SSSP on USA-Road-NE, (b) PageRank on Web-Google",
+    );
+    let cfg = EngineConfig::default();
+
+    // ---- (a) SSSP on road network -------------------------------------
+    let g = generators::road(160, 160, 1);
+    bs::scale_note(
+        "USA-Road-NE (1.5M vertices) on a 10-machine cluster",
+        &format!("synthetic road grid, {} vertices, {} edges", g.num_vertices(), g.num_edges()),
+    );
+    println!("(a) SSSP — overhead as % of total time");
+    println!("  parts   sync%   comm%   sync+comm%      I        T");
+    let parts_sweep = [12, 24, 36, 48];
+    let mut sync_pct = Vec::new();
+    let mut comm_pct = Vec::new();
+    for &k in &parts_sweep {
+        let dg = bs::dist(&g, k);
+        let r = hama::run_hama(&Sssp { source: 0 }, &dg, &cfg);
+        let m = &r.metrics;
+        sync_pct.push(100.0 * m.sync_fraction());
+        comm_pct.push(100.0 * m.comm_fraction());
+        println!(
+            "  {k:<7} {:>5.1}   {:>5.1}   {:>9.1}   {:>6} {:>8.3}s",
+            100.0 * m.sync_fraction(),
+            100.0 * m.comm_fraction(),
+            100.0 * m.overhead_fraction(),
+            m.global_iterations,
+            m.elapsed.as_secs_f64()
+        );
+    }
+    bs::series("sssp sync% vs parts", &parts_sweep, &sync_pct);
+    bs::series("sssp comm% vs parts", &parts_sweep, &comm_pct);
+    println!("  shape checks: paper reports sync+comm ≈ 86% @12 parts, rising with parts;");
+    println!(
+        "                sync dominant and rising: {}",
+        if sync_pct.windows(2).all(|w| w[1] >= w[0] - 3.0) { "✓" } else { "✗" }
+    );
+
+    // ---- (b) classic PageRank on web graph ----------------------------
+    let g = generators::powerlaw(40_000, 5, 2);
+    println!(
+        "\n(b) PageRank (straightforward Alg. 1, 30 supersteps) — {} vertices, {} edges",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    println!("  parts   sync%   comm%   sync+comm%      I        T");
+    let mut sync_pct = Vec::new();
+    let mut comm_pct = Vec::new();
+    for &k in &parts_sweep {
+        let dg = bs::dist(&g, k);
+        let r = hama::run_hama(&ClassicPageRank { supersteps: 30 }, &dg, &cfg);
+        let m = &r.metrics;
+        sync_pct.push(100.0 * m.sync_fraction());
+        comm_pct.push(100.0 * m.comm_fraction());
+        println!(
+            "  {k:<7} {:>5.1}   {:>5.1}   {:>9.1}   {:>6} {:>8.3}s",
+            100.0 * m.sync_fraction(),
+            100.0 * m.comm_fraction(),
+            100.0 * m.overhead_fraction(),
+            m.global_iterations,
+            m.elapsed.as_secs_f64()
+        );
+    }
+    bs::series("pr sync% vs parts", &parts_sweep, &sync_pct);
+    bs::series("pr comm% vs parts", &parts_sweep, &comm_pct);
+    println!("\nfig1 done");
+}

@@ -1,0 +1,84 @@
+//! Figure 3 — SSSP on USA-Road-NE: (a) global iterations (log scale in
+//! the paper), (b) network messages (log), (c) execution time, vs number
+//! of partitions, for Hama / AM-Hama / GraphHP.
+//!
+//! Paper shape: Hama 3800+ iterations, AM-Hama 3700+, GraphHP ~20 (a
+//! reduction of hundreds of ×); messages Hama ≫ AM-Hama ≫ GraphHP;
+//! GraphHP time ~10× under AM-Hama; GraphHP iterations grow only
+//! marginally with partition count.
+
+use graphhp::algorithms::{oracle, Sssp};
+use graphhp::bench_support as bs;
+use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::graph::generators;
+
+fn main() {
+    bs::header(
+        "Figure 3: SSP on road network — iterations / messages / time vs partitions",
+        "paper §7.2, Figure 3 (USA-Road-NE)",
+    );
+    let g = generators::road(220, 220, 1);
+    bs::scale_note(
+        "USA-Road-NE: 1.52M vertices, 3.9M edges, 12-48 partitions",
+        &format!("road grid {} vertices, {} edges", g.num_vertices(), g.num_edges()),
+    );
+    let want = oracle::dijkstra(&g, 0);
+    let cfg = EngineConfig::default();
+    let prog = Sssp { source: 0 };
+    let sweep = [12usize, 24, 36, 48];
+
+    let (mut hi, mut ai, mut gi) = (vec![], vec![], vec![]);
+    let (mut hm, mut am, mut gm) = (vec![], vec![], vec![]);
+    let (mut ht, mut at, mut gt) = (vec![], vec![], vec![]);
+
+    for &k in &sweep {
+        let dg = bs::dist(&g, k);
+        println!("-- {k} partitions (edge cut {})", dg.edge_cut());
+        let h = hama::run_hama(&prog, &dg, &cfg);
+        bs::row("Hama", &h.metrics);
+        let a = am_hama::run_am_hama(&prog, &dg, &cfg);
+        bs::row("AM-Hama", &a.metrics);
+        let p = hp::run_graphhp(&prog, &dg, &cfg);
+        bs::row("GraphHP", &p.metrics);
+        // verify
+        for (i, &w) in want.iter().enumerate() {
+            if w.is_finite() {
+                assert!((p.values[i] - w as f32).abs() < 1e-2, "v{i}");
+            }
+        }
+        hi.push(h.metrics.global_iterations as f64);
+        ai.push(a.metrics.global_iterations as f64);
+        gi.push(p.metrics.global_iterations as f64);
+        hm.push(h.metrics.network_messages as f64);
+        am.push(a.metrics.network_messages as f64);
+        gm.push(p.metrics.network_messages as f64);
+        ht.push(h.metrics.elapsed.as_secs_f64());
+        at.push(a.metrics.elapsed.as_secs_f64());
+        gt.push(p.metrics.elapsed.as_secs_f64());
+    }
+
+    println!("\n(a) iterations vs partitions");
+    bs::series("Hama", &sweep, &hi);
+    bs::series("AM-Hama", &sweep, &ai);
+    bs::series("GraphHP", &sweep, &gi);
+    println!("(b) network messages vs partitions");
+    bs::series("Hama", &sweep, &hm);
+    bs::series("AM-Hama", &sweep, &am);
+    bs::series("GraphHP", &sweep, &gm);
+    println!("(c) time vs partitions");
+    bs::series("Hama", &sweep, &ht);
+    bs::series("AM-Hama", &sweep, &at);
+    bs::series("GraphHP", &sweep, &gt);
+
+    println!("\nshape checks (paper: GraphHP ≪ AM-Hama ≈ Hama iterations; GraphHP fastest):");
+    bs::expect_less("GraphHP iters ≪ Hama iters/10", gi[0] as u64, (hi[0] / 10.0) as u64);
+    bs::expect_less("AM-Hama ≤ Hama iters", ai[0] as u64, hi[0] as u64 + 1);
+    bs::expect_less("GraphHP msgs < AM-Hama msgs", gm[0] as u64, am[0] as u64);
+    bs::expect_less("AM-Hama msgs < Hama msgs", am[0] as u64, hm[0] as u64);
+    bs::expect_less(
+        "GraphHP time < AM-Hama time",
+        (gt[0] * 1e6) as u64,
+        (at[0] * 1e6) as u64,
+    );
+    println!("\nfig3 done");
+}

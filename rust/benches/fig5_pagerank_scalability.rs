@@ -1,0 +1,59 @@
+//! Figure 5 — PageRank scalability: iterations / network messages (log)
+//! / time vs number of partitions at Δ = 1e-4, for Hama / AM-Hama /
+//! GraphHP on both web datasets.
+//!
+//! Paper shape: GraphHP wins every metric at every partition count; its
+//! iteration and message counts grow only slightly with partitions.
+
+use graphhp::algorithms::IncrementalPageRank;
+use graphhp::bench_support as bs;
+use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::graph::generators;
+
+fn sweep(gname: &str, g: &graphhp::graph::Graph, parts_sweep: &[usize]) {
+    println!("\n-- {gname}: {} vertices, {} edges", g.num_vertices(), g.num_edges());
+    let cfg = EngineConfig::default();
+    let prog = IncrementalPageRank { tolerance: 1e-4 };
+    let (mut gi, mut gm) = (vec![], vec![]);
+    for &k in parts_sweep {
+        let dg = bs::dist(g, k);
+        println!("  -- {k} partitions (cut {})", dg.edge_cut());
+        let h = hama::run_hama(&prog, &dg, &cfg);
+        bs::row("Hama", &h.metrics);
+        let a = am_hama::run_am_hama(&prog, &dg, &cfg);
+        bs::row("AM-Hama", &a.metrics);
+        let p = hp::run_graphhp(&prog, &dg, &cfg);
+        bs::row("GraphHP", &p.metrics);
+        bs::expect_less(
+            "GraphHP iters < AM-Hama iters",
+            p.metrics.global_iterations,
+            a.metrics.global_iterations,
+        );
+        bs::expect_less(
+            "GraphHP msgs < AM-Hama msgs",
+            p.metrics.network_messages,
+            a.metrics.network_messages,
+        );
+        gi.push(p.metrics.global_iterations as f64);
+        gm.push(p.metrics.network_messages as f64);
+    }
+    println!("  GraphHP iterations vs partitions (should grow only slightly):");
+    bs::series("GraphHP I", parts_sweep, &gi);
+    bs::series("GraphHP M", parts_sweep, &gm);
+}
+
+fn main() {
+    bs::header(
+        "Figure 5: PageRank scalability vs partitions (Δ=1e-4)",
+        "paper §7.3, Figure 5 (Web-Google ≤14 parts, uk-2002 ≤108 parts)",
+    );
+    bs::scale_note(
+        "web-Google (≤14 partitions), uk-2002 (≤108 partitions)",
+        "synthetic web graphs at two scales",
+    );
+    let small = generators::powerlaw(30_000, 5, 7);
+    sweep("web-Google stand-in", &small, &[2, 6, 10, 14]);
+    let large = generators::powerlaw(90_000, 6, 8);
+    sweep("uk-2002 stand-in", &large, &[12, 36, 72, 108]);
+    println!("\nfig5 done");
+}

@@ -1,0 +1,69 @@
+//! Table 2 — SSSP on USA-Road-Full at 108 partitions: I / M(mil) / T for
+//! Hama, AM-Hama, GraphHP.
+//!
+//! Paper values:  Hama 10671 / 43,829M / 17912s; AM-Hama 10593 / 387M /
+//! 5792s; GraphHP 451 / 71M / 2155s. Shape: GraphHP ~24× fewer
+//! iterations than both, AM-Hama slashes messages but not iterations,
+//! GraphHP fastest.
+
+use graphhp::algorithms::{oracle, Sssp};
+use graphhp::bench_support as bs;
+use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::graph::generators;
+
+fn main() {
+    bs::header(
+        "Table 2: SSP on full road network, 108 partitions",
+        "paper §7.2, Table 2 (USA-Road-Full)",
+    );
+    // larger, higher-diameter road graph
+    let g = generators::road(420, 420, 3);
+    bs::scale_note(
+        "USA-Road-Full: 23.9M vertices, 58.3M edges, 108 partitions",
+        &format!("road grid {} vertices, {} edges, 108 partitions", g.num_vertices(), g.num_edges()),
+    );
+    let dg = bs::dist(&g, 108);
+    let cfg = EngineConfig::default();
+    let prog = Sssp { source: 0 };
+    let want = oracle::dijkstra(&g, 0);
+
+    println!("  platform         I          M            T        (paper: I / M(mil) / T(sec))");
+    let h = hama::run_hama(&prog, &dg, &cfg);
+    bs::row("Hama", &h.metrics);
+    println!("{:>64}", "paper: 10671 / 43829 / 17912");
+    let a = am_hama::run_am_hama(&prog, &dg, &cfg);
+    bs::row("AM-Hama", &a.metrics);
+    println!("{:>64}", "paper: 10593 /   387 /  5792");
+    let p = hp::run_graphhp(&prog, &dg, &cfg);
+    bs::row("GraphHP", &p.metrics);
+    println!("{:>64}", "paper:   451 /    71 /  2155");
+
+    for (i, &w) in want.iter().enumerate() {
+        if w.is_finite() {
+            assert!((p.values[i] - w as f32).abs() < 1e-2, "v{i}");
+        }
+    }
+
+    println!("\nshape checks:");
+    bs::expect_less(
+        "GraphHP iters ≤ Hama iters / 10",
+        p.metrics.global_iterations,
+        h.metrics.global_iterations / 10 + 1,
+    );
+    bs::expect_less(
+        "AM-Hama msgs < Hama msgs",
+        a.metrics.network_messages,
+        h.metrics.network_messages,
+    );
+    bs::expect_less(
+        "GraphHP msgs < AM-Hama msgs",
+        p.metrics.network_messages,
+        a.metrics.network_messages,
+    );
+    bs::expect_less(
+        "GraphHP time < AM-Hama time < Hama time",
+        p.metrics.elapsed.as_micros() as u64,
+        a.metrics.elapsed.as_micros() as u64,
+    );
+    println!("\ntable2 done");
+}

@@ -1,0 +1,128 @@
+//! Table 3 — bipartite matching: I / M(mil) / T on cit-patents (18
+//! partitions) and delaunay_n24 (48 partitions) for Hama / AM-Hama /
+//! GraphHP.
+//!
+//! Paper values: cit-patents — Hama 23/41.5M/42.9s, AM-Hama 20/4.4M/
+//! 21.6s, GraphHP 7/3.0M/13.0s; delaunay_n24 — Hama 15/126M/83.3s,
+//! AM-Hama 15/0.16M/34.9s, GraphHP 5/0.10M/15.9s. Shape: ~3× fewer
+//! iterations and ~3× faster for GraphHP; AM-Hama slashes messages but
+//! barely iterations.
+//!
+//! Dataset notes: cit-patents is bipartite-ized by the two-sided random
+//! generator; delaunay is bipartite-ized by vertex-id parity (keep only
+//! even↔odd edges), preserving its planar local structure.
+
+use graphhp::algorithms::bipartite_matching::{validate_matching, BipartiteMatching};
+use graphhp::bench_support as bs;
+use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::graph::{generators, Graph, GraphBuilder};
+
+/// Bipartite-ize a graph by id parity: left = even ids (relabeled
+/// 0..nl), right = odd ids (relabeled nl..), keeping even-odd edges in
+/// both directions.
+fn bipartite_by_parity(g: &Graph) -> (Graph, u32) {
+    let n = g.num_vertices();
+    let nl = n.div_ceil(2);
+    let relabel = |v: u32| -> u32 {
+        if v % 2 == 0 {
+            v / 2
+        } else {
+            nl as u32 + v / 2
+        }
+    };
+    let mut b = GraphBuilder::with_capacity(n, g.num_edges());
+    for v in 0..n as u32 {
+        for &t in g.out_edges(v).0 {
+            if v % 2 != t % 2 {
+                b.add_edge(relabel(v), relabel(t), 1.0);
+            }
+        }
+    }
+    b.dedup();
+    (b.build(), nl as u32)
+}
+
+fn run_one(gname: &str, g: &Graph, nl: u32, parts: usize, paper: [&str; 3]) {
+    println!(
+        "\n-- {gname}: {} vertices, {} edges, {parts} partitions",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let dg = bs::dist(g, parts);
+    let cfg = EngineConfig::default();
+    let prog = BipartiteMatching { num_left: nl };
+
+    let h = hama::run_hama(&prog, &dg, &cfg);
+    let sh = validate_matching(g, nl, &h.values).expect("hama matching");
+    bs::row("Hama", &h.metrics);
+    println!("{:>66}", paper[0]);
+    let a = am_hama::run_am_hama(&prog, &dg, &cfg);
+    let sa = validate_matching(g, nl, &a.values).expect("am matching");
+    bs::row("AM-Hama", &a.metrics);
+    println!("{:>66}", paper[1]);
+    let p = hp::run_graphhp(&prog, &dg, &cfg);
+    let sp = validate_matching(g, nl, &p.values).expect("hp matching");
+    bs::row("GraphHP", &p.metrics);
+    println!("{:>66}", paper[2]);
+    println!("  matching sizes: hama {sh}, am {sa}, graphhp {sp} (all valid + maximal)");
+
+    println!("  shape checks:");
+    // Our handshake adds CANCEL withdrawals (see algorithms/bipartite_
+    // matching.rs), which shortens contention chains for EVERY engine —
+    // so the absolute iteration counts are lower than the paper's and
+    // the Hama/GraphHP ratio is smaller (the paper's deny-retry cycles
+    // are what GraphHP collapsed so dramatically). Ordering still holds.
+    bs::expect_less(
+        "GraphHP iters < Hama iters",
+        p.metrics.global_iterations,
+        h.metrics.global_iterations,
+    );
+    bs::expect_less(
+        "AM-Hama msgs < Hama msgs",
+        a.metrics.network_messages,
+        h.metrics.network_messages,
+    );
+    bs::expect_less(
+        "GraphHP time < Hama time",
+        p.metrics.elapsed.as_micros() as u64,
+        h.metrics.elapsed.as_micros() as u64,
+    );
+}
+
+fn main() {
+    bs::header(
+        "Table 3: Bipartite Matching",
+        "paper §7.4, Table 3 (cit-patents 18 parts, delaunay_n24 48 parts)",
+    );
+    bs::scale_note(
+        "cit-patents 3.8M vertices / delaunay_n24 16.8M vertices",
+        "two-sided random graph + parity-bipartite-ized delaunay lattice",
+    );
+
+    let g1 = generators::bipartite(30_000, 30_000, 4, 5);
+    run_one(
+        "cit-patents stand-in",
+        &g1,
+        30_000,
+        18,
+        [
+            "paper: 23 / 41.5M / 42.9s",
+            "paper: 20 /  4.4M / 21.6s",
+            "paper:  7 /  3.0M / 13.0s",
+        ],
+    );
+
+    let (g2, nl2) = bipartite_by_parity(&generators::delaunay_like(180, 180, 6));
+    run_one(
+        "delaunay_n24 stand-in",
+        &g2,
+        nl2,
+        48,
+        [
+            "paper: 15 / 126.6M / 83.3s",
+            "paper: 15 /   0.2M / 34.9s",
+            "paper:  5 /   0.1M / 15.9s",
+        ],
+    );
+    println!("\ntable3 done");
+}

@@ -1,0 +1,306 @@
+//! Randomized maximal bipartite matching (paper §6.3, Alg. 6).
+//!
+//! The paper notes that GraphHP's hybrid/asynchronous execution "requires
+//! a more stringent handshake mechanism" than the classic 4-stage Pregel
+//! cycle. We implement exactly such a handshake, engine-agnostic and
+//! livelock-free:
+//!
+//! - **left** vertices send one `Request` to every neighbor at superstep
+//!   0, then react to events: on the first `Grant` they match, `Accept`
+//!   the granter and `RejectGrant` every other granter; a `DenyMatched`
+//!   marks that right vertex permanently unavailable.
+//! - **right** vertices keep a queue of pending requesters. While
+//!   `ungranted` they grant one pending requester (chosen uniformly at
+//!   random with the per-vertex deterministic RNG) and hold the rest —
+//!   *no busy-denial ping-pong*, which would livelock inside a GraphHP
+//!   local phase. An `Accept` seals the match and sends `DenyMatched` to
+//!   all still-pending requesters; a `RejectGrant` returns the right
+//!   vertex to `ungranted`, and it grants the next pending requester.
+//!
+//! Every `Grant` is always answered (`Accept` or `RejectGrant`) and every
+//! `Request` is eventually answered (`Grant` or `DenyMatched`), so the
+//! protocol terminates with a maximal matching.
+//!
+//! Graphs must store bipartite edges in BOTH directions (see
+//! [`crate::graph::generators::bipartite`]) so replies travel along edges
+//! and Definition 1's boundary classification covers all message paths.
+
+use crate::engine::{VertexContext, VertexProgram};
+use crate::graph::VertexId;
+use crate::util::Codec;
+
+/// Message kinds.
+pub const REQUEST: u8 = 0;
+pub const GRANT: u8 = 1;
+pub const ACCEPT: u8 = 2;
+pub const REJECT_GRANT: u8 = 3;
+pub const DENY_MATCHED: u8 = 4;
+/// Left withdraws its pending request (it matched elsewhere) — stops
+/// rights from wasting a serial grant→reject round-trip on dead
+/// requesters, which is what keeps GraphHP's iteration count low under
+/// cross-partition contention.
+pub const CANCEL: u8 = 5;
+
+/// (kind, sender id).
+pub type BmMsg = (u8, u32);
+
+/// State shared by both sides (left uses `matched`; right uses
+/// `matched`, `granted_to`, `pending`).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct BmState {
+    /// Matched partner, if any.
+    pub matched: Option<u32>,
+    /// Right: the left vertex we granted and are waiting on.
+    pub granted_to: Option<u32>,
+    /// Right: requesters not yet answered.
+    pub pending: Vec<u32>,
+}
+
+impl Codec for BmState {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.matched.encode(buf);
+        self.granted_to.encode(buf);
+        self.pending.encode(buf);
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        Some(BmState {
+            matched: Option::decode(r)?,
+            granted_to: Option::decode(r)?,
+            pending: Vec::decode(r)?,
+        })
+    }
+}
+
+/// The matching program. `num_left` splits the id space: ids `< num_left`
+/// are left vertices.
+pub struct BipartiteMatching {
+    pub num_left: u32,
+}
+
+impl BipartiteMatching {
+    fn is_left(&self, v: VertexId) -> bool {
+        v < self.num_left
+    }
+
+    fn compute_left(&self, ctx: &mut VertexContext<'_, Self>) {
+        if ctx.superstep() == 0 {
+            if *ctx.value() == BmState::default() && ctx.out_degree() > 0 {
+                let me = ctx.vertex_id();
+                ctx.send_along_edges(move |_| Some((REQUEST, me)));
+            }
+            ctx.vote_to_halt();
+            return;
+        }
+        let me = ctx.vertex_id();
+        let msgs: Vec<BmMsg> = ctx.messages().to_vec();
+        for (kind, sender) in msgs {
+            match kind {
+                GRANT => {
+                    if ctx.value().matched.is_none() {
+                        ctx.value_mut().matched = Some(sender);
+                        ctx.send(sender, (ACCEPT, me));
+                        // withdraw every other outstanding request
+                        let cancels: Vec<VertexId> = ctx
+                            .edges()
+                            .iter()
+                            .map(|e| e.target)
+                            .filter(|&t| t != sender)
+                            .collect();
+                        for t in cancels {
+                            ctx.send(t, (CANCEL, me));
+                        }
+                    } else {
+                        ctx.send(sender, (REJECT_GRANT, me));
+                    }
+                }
+                DENY_MATCHED => { /* right permanently unavailable */ }
+                _ => { /* lefts receive only grants/denials */ }
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn compute_right(&self, ctx: &mut VertexContext<'_, Self>) {
+        let me = ctx.vertex_id();
+        let msgs: Vec<BmMsg> = ctx.messages().to_vec();
+        for (kind, sender) in msgs {
+            match kind {
+                REQUEST => {
+                    if ctx.value().matched.is_some() {
+                        ctx.send(sender, (DENY_MATCHED, me));
+                    } else if !ctx.value().pending.contains(&sender) {
+                        ctx.value_mut().pending.push(sender);
+                    }
+                }
+                ACCEPT => {
+                    // seal the match; release everyone still waiting
+                    ctx.value_mut().matched = Some(sender);
+                    ctx.value_mut().granted_to = None;
+                    let pending = std::mem::take(&mut ctx.value_mut().pending);
+                    for l in pending {
+                        if l != sender {
+                            ctx.send(l, (DENY_MATCHED, me));
+                        }
+                    }
+                }
+                REJECT_GRANT => {
+                    if ctx.value().granted_to == Some(sender) {
+                        ctx.value_mut().granted_to = None;
+                    }
+                }
+                CANCEL => {
+                    ctx.value_mut().pending.retain(|&l| l != sender);
+                    if ctx.value().granted_to == Some(sender) {
+                        ctx.value_mut().granted_to = None;
+                    }
+                }
+                _ => {}
+            }
+        }
+        // grant the next pending requester when free
+        if ctx.value().matched.is_none() && ctx.value().granted_to.is_none() {
+            let n = ctx.value().pending.len();
+            if n > 0 {
+                let pick = ctx.rng().index(n);
+                let l = ctx.value_mut().pending.swap_remove(pick);
+                ctx.value_mut().granted_to = Some(l);
+                ctx.send(l, (GRANT, me));
+            }
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+impl VertexProgram for BipartiteMatching {
+    type V = BmState;
+    type M = BmMsg;
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> BmState {
+        BmState::default()
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        if self.is_left(ctx.vertex_id()) {
+            self.compute_left(ctx);
+        } else {
+            self.compute_right(ctx);
+        }
+    }
+    // No combiner: heterogeneous message kinds must all arrive (§6.4).
+}
+
+/// Validate a matching: consistency (partners agree, edges exist) and
+/// maximality (no edge with both endpoints unmatched). Returns the
+/// matching size.
+pub fn validate_matching(
+    g: &crate::graph::Graph,
+    num_left: u32,
+    values: &[BmState],
+) -> Result<usize, String> {
+    let mut size = 0usize;
+    for v in 0..g.num_vertices() as VertexId {
+        let s = &values[v as usize];
+        if let Some(p) = s.matched {
+            let ps = &values[p as usize];
+            if ps.matched != Some(v) {
+                return Err(format!("partner disagreement: {v} -> {p} -> {:?}", ps.matched));
+            }
+            if !g.out_edges(v).0.contains(&p) {
+                return Err(format!("matched non-edge {v} -- {p}"));
+            }
+            if (v < num_left) != (p >= num_left) {
+                return Err(format!("same-side match {v} -- {p}"));
+            }
+            if v < num_left {
+                size += 1;
+            }
+        }
+    }
+    for v in 0..g.num_vertices() as VertexId {
+        if values[v as usize].matched.is_none() {
+            for &t in g.out_edges(v).0 {
+                if values[t as usize].matched.is_none() {
+                    return Err(format!("not maximal: edge {v} -- {t} both unmatched"));
+                }
+            }
+        }
+    }
+    Ok(size)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{am_hama, graphhp, hama, EngineConfig};
+    use crate::graph::{generators, DistGraph};
+    use crate::partition::hash_partition;
+
+    fn run_and_validate(
+        engine: &str,
+        g: &crate::graph::Graph,
+        nl: u32,
+        parts: usize,
+    ) -> (usize, crate::engine::Metrics) {
+        let dg = DistGraph::new(g, &hash_partition(g, parts), parts);
+        let prog = BipartiteMatching { num_left: nl };
+        let cfg = EngineConfig::default();
+        let r = match engine {
+            "hama" => hama::run_hama(&prog, &dg, &cfg),
+            "am" => am_hama::run_am_hama(&prog, &dg, &cfg),
+            "hp" => graphhp::run_graphhp(&prog, &dg, &cfg),
+            _ => unreachable!(),
+        };
+        let size = validate_matching(g, nl, &r.values).expect(engine);
+        (size, r.metrics)
+    }
+
+    #[test]
+    fn all_engines_produce_valid_maximal_matchings() {
+        let (nl, nr) = (60u32, 50u32);
+        let g = generators::bipartite(nl as usize, nr as usize, 3, 13);
+        let (s1, m1) = run_and_validate("hama", &g, nl, 4);
+        let (s2, _m2) = run_and_validate("am", &g, nl, 4);
+        let (s3, m3) = run_and_validate("hp", &g, nl, 4);
+        assert!(s1 > 0 && s2 > 0 && s3 > 0);
+        // maximal matchings are within 2x of each other (greedy bound)
+        let lo = s1.min(s2).min(s3);
+        let hi = s1.max(s2).max(s3);
+        assert!(hi <= 2 * lo, "sizes {s1} {s2} {s3}");
+        assert!(
+            m3.global_iterations <= m1.global_iterations,
+            "graphhp {} vs hama {}",
+            m3.global_iterations,
+            m1.global_iterations
+        );
+    }
+
+    #[test]
+    fn perfect_matching_on_disjoint_pairs() {
+        // K_1,1 components: 0-2, 1-3 (nl=2)
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_undirected(0, 2, 1.0);
+        b.add_undirected(1, 3, 1.0);
+        let g = b.build();
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let r = hama::run_hama(&BipartiteMatching { num_left: 2 }, &dg, &EngineConfig::default());
+        assert_eq!(validate_matching(&g, 2, &r.values).unwrap(), 2);
+    }
+
+    #[test]
+    fn contention_resolves_star() {
+        // many lefts competing for one right
+        let nl = 5u32;
+        let mut b = crate::graph::GraphBuilder::new(6);
+        for l in 0..5u32 {
+            b.add_undirected(l, 5, 1.0);
+        }
+        let g = b.build();
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let r = graphhp::run_graphhp(
+            &BipartiteMatching { num_left: nl },
+            &dg,
+            &EngineConfig::default(),
+        );
+        assert_eq!(validate_matching(&g, nl, &r.values).unwrap(), 1);
+    }
+}

@@ -1,0 +1,151 @@
+//! Greedy graph coloring — one of the slow-convergence standard
+//! algorithms called out by [28] as pathological for plain BSP. Used as
+//! an extra stress workload for the engines.
+//!
+//! Jones–Plassmann, event-driven formulation: vertex priority = vertex
+//! id. A vertex may color itself once every *higher*-priority neighbor
+//! has announced its color; it then picks the smallest color unused among
+//! those and announces to all neighbors. Vertices with no higher
+//! neighbor color at superstep 0. No polling/re-announcement, so the
+//! cascade composes with GraphHP's local phase (in-partition chains
+//! resolve within one local phase; cross-partition dependencies advance
+//! one global iteration at a time). Assumes symmetric edges.
+
+use crate::engine::{VertexContext, VertexProgram};
+use crate::graph::VertexId;
+use crate::util::Codec;
+
+pub const UNCOLORED: u32 = u32::MAX;
+
+/// Vertex state: chosen color + colors seen from higher-priority
+/// neighbors (by neighbor id, deduped).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ColorState {
+    pub color: u32,
+    pub seen: Vec<(u32, u32)>,
+}
+
+impl Codec for ColorState {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.color.encode(buf);
+        self.seen.encode(buf);
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        Some(ColorState { color: u32::decode(r)?, seen: Vec::decode(r)? })
+    }
+}
+
+/// Message: (sender id, sender's chosen color).
+type ColorMsg = (u32, u32);
+
+/// Greedy coloring vertex program.
+pub struct Coloring;
+
+impl Coloring {
+    fn try_color(&self, ctx: &mut VertexContext<'_, Self>) {
+        let me = ctx.vertex_id();
+        // count higher-priority neighbors (dedup multi-edges)
+        let mut higher: Vec<VertexId> =
+            ctx.edges().iter().map(|e| e.target).filter(|&t| t > me).collect();
+        higher.sort_unstable();
+        higher.dedup();
+        if ctx.value().seen.len() < higher.len() {
+            return; // still waiting on some higher neighbor
+        }
+        let mut used: Vec<u32> = ctx.value().seen.iter().map(|&(_, c)| c).collect();
+        used.sort_unstable();
+        used.dedup();
+        let mut c = 0u32;
+        for &u in &used {
+            if u == c {
+                c += 1;
+            } else if u > c {
+                break;
+            }
+        }
+        ctx.value_mut().color = c;
+        ctx.send_along_edges(move |_| Some((me, c)));
+    }
+}
+
+impl VertexProgram for Coloring {
+    type V = ColorState;
+    type M = ColorMsg;
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> ColorState {
+        ColorState { color: UNCOLORED, seen: Vec::new() }
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        let me = ctx.vertex_id();
+        if ctx.value().color == UNCOLORED {
+            // record announcements from higher-priority neighbors
+            let incoming: Vec<ColorMsg> = ctx
+                .messages()
+                .iter()
+                .copied()
+                .filter(|&(nid, _)| nid > me)
+                .collect();
+            for (nid, c) in incoming {
+                if !ctx.value().seen.iter().any(|&(n, _)| n == nid) {
+                    ctx.value_mut().seen.push((nid, c));
+                }
+            }
+            self.try_color(ctx);
+        }
+        ctx.vote_to_halt();
+    }
+}
+
+/// Check a coloring is proper (no edge with equal endpoint colors, no
+/// vertex uncolored).
+pub fn is_proper_coloring(g: &crate::graph::Graph, colors: &[ColorState]) -> bool {
+    for v in 0..g.num_vertices() as VertexId {
+        if colors[v as usize].color == UNCOLORED {
+            return false;
+        }
+        for &t in g.out_edges(v).0 {
+            if t != v && colors[v as usize].color == colors[t as usize].color {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{am_hama, graphhp, hama, EngineConfig};
+    use crate::graph::{generators, DistGraph};
+    use crate::partition::hash_partition;
+
+    #[test]
+    fn hama_produces_proper_coloring() {
+        let g = generators::delaunay_like(12, 12, 5);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let r = hama::run_hama(&Coloring, &dg, &EngineConfig::default());
+        assert!(is_proper_coloring(&g, &r.values));
+    }
+
+    #[test]
+    fn graphhp_produces_proper_coloring_in_fewer_iterations() {
+        let g = generators::delaunay_like(12, 12, 5);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let cfg = EngineConfig::default();
+        let h = hama::run_hama(&Coloring, &dg, &cfg);
+        let hp = graphhp::run_graphhp(&Coloring, &dg, &cfg);
+        assert!(is_proper_coloring(&g, &hp.values));
+        assert!(hp.metrics.global_iterations <= h.metrics.global_iterations);
+        let maxc = hp.values.iter().map(|c| c.color).max().unwrap();
+        assert!(maxc < 12, "used {maxc} colors");
+    }
+
+    #[test]
+    fn am_hama_produces_proper_coloring() {
+        let g = generators::connected(120, 60, 8);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 4), 4);
+        let r = am_hama::run_am_hama(&Coloring, &dg, &EngineConfig::default());
+        assert!(is_proper_coloring(&g, &r.values));
+    }
+}

@@ -1,0 +1,26 @@
+//! The paper's case-study vertex programs (§6) plus extra classics used
+//! by the test suite:
+//!
+//! - [`sssp`] — single-source shortest paths (Alg. 4);
+//! - [`pagerank`] — incremental/accumulative PageRank (Alg. 5) and the
+//!   straightforward version (Alg. 1), plus the GAS form for the
+//!   GraphLab engines and the graph-centric form for Giraph++;
+//! - [`bipartite_matching`] — randomized maximal bipartite matching
+//!   (Alg. 6);
+//! - [`wcc`] — weakly connected components by min-label propagation;
+//! - [`coloring`] — greedy graph coloring (a slow-convergence stress
+//!   workload from [28]);
+//! - [`oracle`] — sequential reference implementations (Dijkstra, power
+//!   iteration, union-find, matching validation) used by tests.
+
+pub mod bipartite_matching;
+pub mod coloring;
+pub mod oracle;
+pub mod pagerank;
+pub mod sssp;
+pub mod wcc;
+
+pub use bipartite_matching::BipartiteMatching;
+pub use pagerank::{ClassicPageRank, IncrementalPageRank};
+pub use sssp::Sssp;
+pub use wcc::Wcc;

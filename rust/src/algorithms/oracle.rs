@@ -1,0 +1,149 @@
+//! Sequential reference implementations the test suite checks the
+//! distributed engines against.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::graph::{Graph, VertexId};
+
+/// Dijkstra single-source shortest paths (f64 accumulation).
+pub fn dijkstra(g: &Graph, source: VertexId) -> Vec<f64> {
+    let n = g.num_vertices();
+    let mut dist = vec![f64::INFINITY; n];
+    dist[source as usize] = 0.0;
+    // (ordered distance bits, vertex) min-heap
+    let mut heap: BinaryHeap<(Reverse<u64>, VertexId)> = BinaryHeap::new();
+    heap.push((Reverse(0u64), source));
+    while let Some((Reverse(dbits), v)) = heap.pop() {
+        let d = f64::from_bits(dbits);
+        if d > dist[v as usize] {
+            continue;
+        }
+        let (ts, ws) = g.out_edges(v);
+        for (&t, &w) in ts.iter().zip(ws) {
+            let nd = d + w as f64;
+            if nd < dist[t as usize] {
+                dist[t as usize] = nd;
+                heap.push((Reverse(nd.to_bits()), t));
+            }
+        }
+    }
+    dist
+}
+
+/// Power-iteration PageRank to the fixed point `r = 0.15 + 0.85·Σ r_u/d_u`
+/// (the paper's unnormalized accumulative formulation).
+pub fn pagerank(g: &Graph, tol: f64) -> Vec<f64> {
+    let n = g.num_vertices();
+    let deg: Vec<u32> = (0..n as VertexId).map(|v| g.out_degree(v) as u32).collect();
+    let mut rank = vec![0.15f64; n];
+    for _ in 0..100_000 {
+        let mut next = vec![0.15f64; n];
+        for v in 0..n as VertexId {
+            if deg[v as usize] == 0 {
+                continue;
+            }
+            let share = 0.85 * rank[v as usize] / deg[v as usize] as f64;
+            for &t in g.out_edges(v).0 {
+                next[t as usize] += share;
+            }
+        }
+        let delta: f64 = rank.iter().zip(&next).map(|(a, b)| (a - b).abs()).sum();
+        rank = next;
+        if delta < tol {
+            break;
+        }
+    }
+    rank
+}
+
+/// Union-find weakly-connected-component labels (min vertex id per
+/// component), treating edges as undirected.
+pub fn wcc_labels(g: &Graph) -> Vec<u32> {
+    let n = g.num_vertices();
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(parent: &mut [u32], mut x: u32) -> u32 {
+        while parent[x as usize] != x {
+            parent[x as usize] = parent[parent[x as usize] as usize];
+            x = parent[x as usize];
+        }
+        x
+    }
+    for v in 0..n as VertexId {
+        for &t in g.out_edges(v).0 {
+            let (a, b) = (find(&mut parent, v), find(&mut parent, t));
+            if a != b {
+                let (lo, hi) = (a.min(b), a.max(b));
+                parent[hi as usize] = lo;
+            }
+        }
+    }
+    (0..n as u32).map(|v| find(&mut parent, v)).collect()
+}
+
+/// Size of a greedy maximal matching (lower-bounds the maximum matching
+/// within a factor of 2; any valid maximal matching is within [g/2, 2g]
+/// of another).
+pub fn greedy_matching_size(g: &Graph, num_left: u32) -> usize {
+    let n = g.num_vertices();
+    let mut matched = vec![false; n];
+    let mut size = 0;
+    for l in 0..num_left.min(n as u32) {
+        if matched[l as usize] {
+            continue;
+        }
+        for &r in g.out_edges(l).0 {
+            if !matched[r as usize] {
+                matched[l as usize] = true;
+                matched[r as usize] = true;
+                size += 1;
+                break;
+            }
+        }
+    }
+    size
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, GraphBuilder};
+
+    #[test]
+    fn dijkstra_small() {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 2.0);
+        b.add_edge(0, 2, 5.0);
+        b.add_edge(2, 3, 1.0);
+        let g = b.build();
+        let d = dijkstra(&g, 0);
+        assert_eq!(d, vec![0.0, 1.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn pagerank_sums_match_structure() {
+        let g = generators::powerlaw(100, 3, 1);
+        let r = pagerank(&g, 1e-12);
+        // every rank >= base, hubs exceed it
+        assert!(r.iter().all(|&x| x >= 0.15 - 1e-9));
+        assert!(r.iter().any(|&x| x > 0.5));
+    }
+
+    #[test]
+    fn wcc_two_components() {
+        let mut b = GraphBuilder::new(5);
+        b.add_undirected(0, 1, 1.0);
+        b.add_undirected(2, 3, 1.0);
+        b.add_undirected(3, 4, 1.0);
+        let g = b.build();
+        assert_eq!(wcc_labels(&g), vec![0, 0, 2, 2, 2]);
+    }
+
+    #[test]
+    fn greedy_matching_on_bipartite() {
+        let g = generators::bipartite(20, 20, 3, 2);
+        let s = greedy_matching_size(&g, 20);
+        assert!(s > 5 && s <= 20);
+    }
+}

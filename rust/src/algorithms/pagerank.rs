@@ -1,0 +1,290 @@
+//! PageRank (paper §6.2).
+//!
+//! [`IncrementalPageRank`] is the accumulative-update algorithm of
+//! Alg. 5 ([36]): each vertex holds its accumulated rank; on receiving
+//! delta messages it adds their (damped) sum to its value and relays the
+//! increment to its out-neighbors, halting once the increment falls below
+//! the tolerance Δ. A sum-combiner collapses deltas per destination. This
+//! is the workload of Figures 4/5 and Table 4.
+//!
+//! [`ClassicPageRank`] is the straightforward Alg. 1 version: every
+//! vertex stays active for a fixed number of supersteps, recomputing its
+//! value from the full set of neighbor contributions — the workload of
+//! the Figure 1 overhead study.
+//!
+//! [`GasPageRank`] is the same fixed point in GraphLab's pull form, and
+//! [`GiraphPPPageRank`] the graph-centric form of §7.5.
+
+use crate::engine::giraphpp::{PartitionContext, PartitionProgram};
+use crate::engine::graphlab::GasProgram;
+use crate::engine::{SourceCombine, VertexContext, VertexProgram};
+use crate::graph::VertexId;
+
+/// Damping factor used throughout (the paper's 0.85/0.15 split).
+pub const DAMPING: f64 = 0.85;
+/// Base rank injected at every vertex.
+pub const BASE: f64 = 0.15;
+
+/// Accumulative / incremental PageRank (Alg. 5).
+pub struct IncrementalPageRank {
+    /// Convergence tolerance Δ: a vertex stops propagating (and halts)
+    /// when its pending update is below this.
+    pub tolerance: f64,
+}
+
+impl VertexProgram for IncrementalPageRank {
+    type V = f64;
+    type M = f64;
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> f64 {
+        0.0
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        let update = if ctx.superstep() == 0 {
+            BASE
+        } else {
+            ctx.messages().iter().sum::<f64>()
+        };
+        if update > 0.0 {
+            ctx.set_value(ctx.value() + update);
+            let deg = ctx.out_degree();
+            if update > self.tolerance && deg > 0 {
+                let share = DAMPING * update / deg as f64;
+                ctx.send_along_edges(|_| Some(share));
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combiner(&self) -> Option<fn(f64, f64) -> f64> {
+        Some(|a, b| a + b)
+    }
+
+    fn source_combine(&self) -> SourceCombine {
+        // deltas are additive: every message matters; the sum-combiner
+        // above is what actually collapses them
+        SourceCombine::KeepAll
+    }
+}
+
+/// Straightforward PageRank (Alg. 1): fixed-superstep synchronous
+/// iteration; every vertex stays active until `supersteps`.
+pub struct ClassicPageRank {
+    pub supersteps: u64,
+}
+
+impl VertexProgram for ClassicPageRank {
+    type V = f64;
+    type M = f64;
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> f64 {
+        1.0
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        if ctx.superstep() > 0 {
+            let sum: f64 = ctx.messages().iter().sum();
+            ctx.set_value(BASE + DAMPING * sum);
+        }
+        if ctx.superstep() < self.supersteps {
+            let deg = ctx.out_degree();
+            if deg > 0 {
+                let share = *ctx.value() / deg as f64;
+                ctx.send_along_edges(|_| Some(share));
+            }
+        } else {
+            ctx.vote_to_halt();
+        }
+    }
+
+    fn combiner(&self) -> Option<fn(f64, f64) -> f64> {
+        Some(|a, b| a + b)
+    }
+}
+
+/// GraphLab (GAS / pull) PageRank for the §7.5 comparison. Converges to
+/// the same fixed point as [`IncrementalPageRank`]: `r = 0.15 + 0.85 ·
+/// Σ_in r_u / deg_u`.
+pub struct GasPageRank {
+    pub tolerance: f64,
+}
+
+impl GasProgram for GasPageRank {
+    type V = f64;
+    type G = f64;
+
+    fn init(&self, _v: VertexId, _out_degree: u32) -> f64 {
+        BASE
+    }
+
+    fn gather(&self, src: &f64, src_out_degree: u32, _w: f32) -> f64 {
+        if src_out_degree == 0 {
+            0.0
+        } else {
+            src / src_out_degree as f64
+        }
+    }
+
+    fn merge(&self, a: f64, b: f64) -> f64 {
+        a + b
+    }
+
+    fn apply(&self, value: &mut f64, acc: Option<f64>) -> bool {
+        let new = BASE + DAMPING * acc.unwrap_or(0.0);
+        let change = (new - *value).abs();
+        *value = new;
+        change > self.tolerance
+    }
+}
+
+/// Graph-centric (Giraph++-style) incremental PageRank, after the
+/// improvised `bsp()` implementation the paper benchmarks in §7.5: per
+/// superstep, sequentially update each pending vertex once and
+/// immediately push its damped delta to in-partition neighbors;
+/// cross-partition deltas travel at the barrier.
+pub struct GiraphPPPageRank {
+    pub tolerance: f64,
+}
+
+impl PartitionProgram for GiraphPPPageRank {
+    type V = f64;
+    type M = f64;
+
+    fn init(&self, _vertex: VertexId, _out_degree: u32) -> f64 {
+        0.0
+    }
+
+    fn compute_partition(&self, ctx: &mut PartitionContext<'_, Self>) {
+        let n = ctx.part.num_vertices();
+        // pending[lv]: accumulated undelivered delta for this superstep
+        let mut pending = vec![0.0f64; n];
+        if ctx.superstep == 0 {
+            for d in pending.iter_mut() {
+                *d = BASE;
+            }
+        } else {
+            let mut buf = Vec::new();
+            for lv in ctx.pending_vertices() {
+                ctx.take_messages(lv as usize, &mut buf);
+                pending[lv as usize] += buf.iter().sum::<f64>();
+            }
+        }
+        let mut computations = 0u64;
+        // one sequential sweep; in-partition deltas are applied
+        // immediately to the receiver's pending slot (visible this sweep
+        // if the receiver comes later in the order)
+        for lv in 0..n {
+            let delta = std::mem::take(&mut pending[lv]);
+            if delta == 0.0 {
+                ctx.halted[lv] = true;
+                continue;
+            }
+            computations += 1;
+            ctx.values[lv] += delta;
+            let deg = ctx.part.out_degree[lv];
+            if delta > self.tolerance && deg > 0 {
+                let share = DAMPING * delta / deg as f64;
+                let edges: Vec<crate::graph::Edge> = ctx.part.out_edges(lv).to_vec();
+                for e in edges {
+                    if e.target_part == ctx.part.part {
+                        let tl = e.target_local as usize;
+                        if tl > lv {
+                            pending[tl] += share; // same-sweep visibility
+                        } else {
+                            ctx.send(e.target, share); // next superstep
+                        }
+                    } else {
+                        ctx.send(e.target, share);
+                    }
+                }
+            }
+            ctx.halted[lv] = true;
+        }
+        ctx.count_computations(computations);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::engine::{giraphpp, graphhp, graphlab, hama, EngineConfig};
+    use crate::graph::{generators, DistGraph};
+    use crate::partition::hash_partition;
+
+    fn l1_distance(a: &[f64], b: &[f64]) -> f64 {
+        a.iter().zip(b).map(|(x, y)| (x - y).abs()).sum()
+    }
+
+    #[test]
+    fn incremental_converges_to_power_iteration() {
+        let g = generators::powerlaw(300, 4, 7);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let r = hama::run_hama(
+            &IncrementalPageRank { tolerance: 1e-9 },
+            &dg,
+            &EngineConfig::default(),
+        );
+        let want = oracle::pagerank(&g, 1e-12);
+        let err = l1_distance(&r.values, &want) / want.len() as f64;
+        assert!(err < 1e-6, "avg err {err}");
+    }
+
+    #[test]
+    fn graphhp_matches_hama_values() {
+        let g = generators::powerlaw(400, 4, 9);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 4), 4);
+        let cfg = EngineConfig::default();
+        let tol = 1e-8;
+        let h = hama::run_hama(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
+        let hp = graphhp::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
+        let err = l1_distance(&h.values, &hp.values) / h.values.len() as f64;
+        // both within tolerance-bounded truncation of the same series
+        assert!(err < 1e-5, "avg err {err}");
+        assert!(hp.metrics.global_iterations < h.metrics.global_iterations);
+    }
+
+    #[test]
+    fn classic_pagerank_fixed_supersteps() {
+        let g = generators::powerlaw(200, 4, 3);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let r = hama::run_hama(&ClassicPageRank { supersteps: 30 }, &dg, &EngineConfig::default());
+        assert_eq!(r.metrics.global_iterations, 31);
+        let want = oracle::pagerank(&g, 1e-12);
+        let err = l1_distance(&r.values, &want) / want.len() as f64;
+        assert!(err < 1e-2, "avg err {err}");
+    }
+
+    #[test]
+    fn gas_pagerank_same_fixed_point() {
+        let g = generators::powerlaw(300, 4, 5);
+        let a = hash_partition(&g, 3);
+        let r = graphlab::run_graphlab_sync(
+            &GasPageRank { tolerance: 1e-9 },
+            &g,
+            &a,
+            3,
+            &EngineConfig::default(),
+            &graphlab::GraphLabCost::default(),
+        );
+        let want = oracle::pagerank(&g, 1e-12);
+        let err = l1_distance(&r.values, &want) / want.len() as f64;
+        assert!(err < 1e-5, "avg err {err}");
+    }
+
+    #[test]
+    fn giraphpp_pagerank_same_fixed_point() {
+        let g = generators::powerlaw(300, 4, 11);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let r = giraphpp::run_giraphpp(
+            &GiraphPPPageRank { tolerance: 1e-9 },
+            &dg,
+            &EngineConfig::default(),
+        );
+        let want = oracle::pagerank(&g, 1e-12);
+        let err = l1_distance(&r.values, &want) / want.len() as f64;
+        assert!(err < 1e-5, "avg err {err}");
+    }
+}

@@ -1,0 +1,137 @@
+//! Single-source shortest paths (paper §6.1, Alg. 4).
+//!
+//! Superstep 0: the source takes value 0 and propagates `0 + w(u,v)`;
+//! everyone else takes ∞. Later: a vertex adopts the minimum incoming
+//! distance if it improves its value and relays `value + w` to its
+//! neighbors. A min-combiner collapses messages per destination. Always
+//! votes to halt — message arrivals reactivate.
+//!
+//! This is an *incremental* computation (paper §4.2): any subset of the
+//! incoming messages can be applied safely, so boundary vertices can
+//! participate in GraphHP local phases.
+
+use crate::engine::{SourceCombine, VertexContext, VertexProgram};
+use crate::graph::VertexId;
+
+/// Distance "infinity" — finite so additions stay representable,
+/// matching the convention of the Pallas min-plus kernel
+/// (`python/compile/kernels/minplus.py`).
+pub const INF: f32 = 1e30;
+
+/// SSSP vertex program.
+pub struct Sssp {
+    pub source: VertexId,
+}
+
+impl VertexProgram for Sssp {
+    type V = f32;
+    type M = f32;
+
+    fn init(&self, v: VertexId, _out_degree: u32) -> f32 {
+        if v == self.source {
+            0.0
+        } else {
+            INF
+        }
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        if ctx.superstep() == 0 {
+            if ctx.vertex_id() == self.source {
+                ctx.send_along_edges(|e| Some(e.weight));
+            }
+        } else {
+            let new = ctx.messages().iter().copied().fold(INF, f32::min);
+            if new < *ctx.value() {
+                ctx.set_value(new);
+                ctx.send_along_edges(|e| Some(new + e.weight));
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combiner(&self) -> Option<fn(f32, f32) -> f32> {
+        Some(|a, b| a.min(b))
+    }
+
+    fn source_combine(&self) -> SourceCombine {
+        SourceCombine::KeepLatest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::engine::{am_hama, graphhp, hama, EngineConfig};
+    use crate::graph::{generators, DistGraph};
+    use crate::partition::{hash_partition, metis_partition, MetisConfig};
+
+    fn check_against_dijkstra(values: &[f32], g: &crate::graph::Graph, source: VertexId) {
+        let want = oracle::dijkstra(g, source);
+        assert_eq!(values.len(), want.len());
+        for (i, (&got, &w)) in values.iter().zip(&want).enumerate() {
+            if w.is_infinite() {
+                assert!(got >= INF * 0.5, "v{i}: got {got}, want inf");
+            } else {
+                assert!((got - w as f32).abs() < 1e-3, "v{i}: got {got}, want {w}");
+            }
+        }
+    }
+
+    #[test]
+    fn hama_matches_dijkstra() {
+        let g = generators::connected(150, 80, 5);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let r = hama::run_hama(&Sssp { source: 0 }, &dg, &EngineConfig::default());
+        check_against_dijkstra(&r.values, &g, 0);
+    }
+
+    #[test]
+    fn graphhp_matches_dijkstra() {
+        let g = generators::road(20, 25, 3);
+        let a = metis_partition(&g, 4, &MetisConfig::default());
+        let dg = DistGraph::new(&g, &a, 4);
+        let r = graphhp::run_graphhp(&Sssp { source: 7 }, &dg, &EngineConfig::default());
+        check_against_dijkstra(&r.values, &g, 7);
+    }
+
+    #[test]
+    fn am_hama_matches_dijkstra() {
+        let g = generators::road(15, 15, 9);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let r = am_hama::run_am_hama(&Sssp { source: 3 }, &dg, &EngineConfig::default());
+        check_against_dijkstra(&r.values, &g, 3);
+    }
+
+    #[test]
+    fn graphhp_needs_far_fewer_iterations_on_road() {
+        let g = generators::road(30, 30, 1);
+        let a = metis_partition(&g, 6, &MetisConfig::default());
+        let dg = DistGraph::new(&g, &a, 6);
+        let cfg = EngineConfig::default();
+        let h = hama::run_hama(&Sssp { source: 0 }, &dg, &cfg);
+        let hp = graphhp::run_graphhp(&Sssp { source: 0 }, &dg, &cfg);
+        assert!(
+            hp.metrics.global_iterations * 4 <= h.metrics.global_iterations,
+            "graphhp {} vs hama {}",
+            hp.metrics.global_iterations,
+            h.metrics.global_iterations
+        );
+    }
+
+    #[test]
+    fn unreachable_vertices_stay_infinite() {
+        // two disconnected edges
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(2, 3, 1.0);
+        let g = b.build();
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let r = hama::run_hama(&Sssp { source: 0 }, &dg, &EngineConfig::default());
+        assert_eq!(r.values[0], 0.0);
+        assert_eq!(r.values[1], 1.0);
+        assert!(r.values[2] >= INF);
+        assert!(r.values[3] >= INF);
+    }
+}

@@ -1,0 +1,81 @@
+//! Weakly connected components by min-label propagation. A confluent,
+//! combiner-friendly workload used heavily by the equivalence test suite
+//! (every engine must produce identical labels).
+
+use crate::engine::{SourceCombine, VertexContext, VertexProgram};
+use crate::graph::VertexId;
+
+/// WCC: every vertex converges to the minimum vertex id in its weakly
+/// connected component. Assumes edges are symmetric (use
+/// [`crate::graph::GraphBuilder::add_undirected`]-style graphs or
+/// symmetrize first); on directed graphs it computes the "reach-down"
+/// labeling instead.
+pub struct Wcc;
+
+impl VertexProgram for Wcc {
+    type V = u32;
+    type M = u32;
+
+    fn init(&self, v: VertexId, _out_degree: u32) -> u32 {
+        v
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        let mut label = *ctx.value();
+        if ctx.superstep() == 0 {
+            ctx.send_along_edges(|_| Some(label));
+        } else if let Some(&m) = ctx.messages().iter().min() {
+            if m < label {
+                label = m;
+                ctx.set_value(label);
+                ctx.send_along_edges(|_| Some(label));
+            }
+        }
+        ctx.vote_to_halt();
+    }
+
+    fn combiner(&self) -> Option<fn(u32, u32) -> u32> {
+        Some(|a, b| a.min(b))
+    }
+
+    fn source_combine(&self) -> SourceCombine {
+        SourceCombine::KeepLatest
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::oracle;
+    use crate::engine::{graphhp, hama, EngineConfig};
+    use crate::graph::{generators, DistGraph, GraphBuilder};
+    use crate::partition::hash_partition;
+
+    #[test]
+    fn labels_match_union_find() {
+        // two separate undirected components
+        let mut b = GraphBuilder::new(7);
+        b.add_undirected(0, 1, 1.0);
+        b.add_undirected(1, 2, 1.0);
+        b.add_undirected(3, 4, 1.0);
+        b.add_undirected(4, 5, 1.0);
+        // 6 isolated
+        let g = b.build();
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let r = hama::run_hama(&Wcc, &dg, &EngineConfig::default());
+        assert_eq!(r.values, vec![0, 0, 0, 3, 3, 3, 6]);
+        let want = oracle::wcc_labels(&g);
+        assert_eq!(r.values, want);
+    }
+
+    #[test]
+    fn engines_agree_on_random_graph() {
+        let g = generators::connected(250, 100, 31);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 5), 5);
+        let cfg = EngineConfig::default();
+        let h = hama::run_hama(&Wcc, &dg, &cfg);
+        let hp = graphhp::run_graphhp(&Wcc, &dg, &cfg);
+        assert_eq!(h.values, hp.values);
+        assert!(h.values.iter().all(|&l| l == 0)); // connected graph
+    }
+}

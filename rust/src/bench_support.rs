@@ -1,0 +1,58 @@
+//! Shared helpers for the paper-reproduction bench binaries
+//! (`rust/benches/*.rs`, `harness = false` — the offline vendor set has
+//! no criterion). Each bench regenerates one table/figure of the paper's
+//! evaluation section and prints it in the paper's row format.
+
+use crate::engine::Metrics;
+use crate::graph::{DistGraph, Graph};
+use crate::partition::{metis_partition, MetisConfig};
+
+/// Print a bench header with the paper reference.
+pub fn header(title: &str, paper_ref: &str) {
+    println!("\n{}", "=".repeat(78));
+    println!("{title}");
+    println!("reproduces: {paper_ref}");
+    println!("{}", "=".repeat(78));
+}
+
+/// Paper-style metric row: engine, I, M, T (+ overhead split).
+pub fn row(engine: &str, m: &Metrics) {
+    println!(
+        "  {engine:<16} I={:<8} M={:<12} T={:>9.3}s  (compute {:>4.1}% | comm {:>4.1}% | sync {:>4.1}%)",
+        m.global_iterations,
+        m.network_messages,
+        m.elapsed.as_secs_f64(),
+        100.0 * (1.0 - m.overhead_fraction()),
+        100.0 * m.comm_fraction(),
+        100.0 * m.sync_fraction(),
+    );
+}
+
+/// CSV-ish series line for figures (easy to re-plot).
+pub fn series(label: &str, xs: &[usize], ys: &[f64]) {
+    let pts: Vec<String> =
+        xs.iter().zip(ys).map(|(x, y)| format!("({x}, {y:.4})")).collect();
+    println!("  {label:<22} {}", pts.join(" "));
+}
+
+/// Metis-partition `g` into `k` parts and build the distributed view.
+pub fn dist(g: &Graph, k: usize) -> DistGraph {
+    let a = metis_partition(g, k, &MetisConfig::default());
+    DistGraph::new(g, &a, k)
+}
+
+/// Scale note printed by every bench.
+pub fn scale_note(paper_workload: &str, ours: &str) {
+    println!("workload: {ours}");
+    println!("(paper used {paper_workload}; scaled for a single-core CI box —");
+    println!(" compare SHAPES: who wins, by what factor, where crossovers fall)\n");
+}
+
+/// Quick check helper: expected ordering of two metrics with a margin.
+pub fn expect_less(label: &str, a: u64, b: u64) {
+    if a < b {
+        println!("  ✓ {label}: {a} < {b}");
+    } else {
+        println!("  ✗ {label} VIOLATED: {a} >= {b}");
+    }
+}

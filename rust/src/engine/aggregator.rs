@@ -1,0 +1,121 @@
+//! Aggregators: the global communication/monitoring mechanism of the BSP
+//! interface (paper §3). Vertices submit values during superstep S; the
+//! reduced value is visible to every vertex at superstep S+1.
+
+/// Reduce operation of an aggregator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AggOp {
+    Sum,
+    Min,
+    Max,
+}
+
+impl AggOp {
+    pub fn identity(self) -> f64 {
+        match self {
+            AggOp::Sum => 0.0,
+            AggOp::Min => f64::INFINITY,
+            AggOp::Max => f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn fold(self, a: f64, b: f64) -> f64 {
+        match self {
+            AggOp::Sum => a + b,
+            AggOp::Min => a.min(b),
+            AggOp::Max => a.max(b),
+        }
+    }
+}
+
+/// A set of named-by-index f64 aggregators with double buffering:
+/// `current` accumulates this superstep's submissions, `previous` holds
+/// the reduced values from the last superstep.
+#[derive(Clone, Debug)]
+pub struct Aggregators {
+    ops: Vec<AggOp>,
+    current: Vec<f64>,
+    previous: Vec<f64>,
+}
+
+impl Aggregators {
+    pub fn new(ops: Vec<AggOp>) -> Self {
+        let current = ops.iter().map(|o| o.identity()).collect();
+        let previous = ops.iter().map(|o| o.identity()).collect();
+        Aggregators { ops, current, previous }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Submit a value to aggregator `id` (called from vertex compute).
+    pub fn submit(&mut self, id: usize, v: f64) {
+        self.current[id] = self.ops[id].fold(self.current[id], v);
+    }
+
+    /// Value reduced during the previous superstep.
+    pub fn previous(&self, id: usize) -> f64 {
+        self.previous[id]
+    }
+
+    /// Barrier: flip current -> previous, reset current to identities.
+    pub fn barrier(&mut self) {
+        for i in 0..self.ops.len() {
+            self.previous[i] = self.current[i];
+            self.current[i] = self.ops[i].identity();
+        }
+    }
+
+    /// Merge another worker's partial accumulations into this (master)
+    /// set's current buffer.
+    pub fn merge_current(&mut self, other: &Aggregators) {
+        for i in 0..self.ops.len() {
+            self.current[i] = self.ops[i].fold(self.current[i], other.current[i]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sum_min_max_fold() {
+        let mut a = Aggregators::new(vec![AggOp::Sum, AggOp::Min, AggOp::Max]);
+        a.submit(0, 1.0);
+        a.submit(0, 2.0);
+        a.submit(1, 5.0);
+        a.submit(1, 3.0);
+        a.submit(2, 5.0);
+        a.submit(2, 7.0);
+        a.barrier();
+        assert_eq!(a.previous(0), 3.0);
+        assert_eq!(a.previous(1), 3.0);
+        assert_eq!(a.previous(2), 7.0);
+        // fresh accumulation after barrier
+        a.barrier();
+        assert_eq!(a.previous(0), 0.0);
+        assert_eq!(a.previous(1), f64::INFINITY);
+    }
+
+    #[test]
+    fn merge_across_workers() {
+        let mut master = Aggregators::new(vec![AggOp::Sum, AggOp::Min]);
+        let mut w1 = Aggregators::new(vec![AggOp::Sum, AggOp::Min]);
+        let mut w2 = Aggregators::new(vec![AggOp::Sum, AggOp::Min]);
+        w1.submit(0, 2.0);
+        w1.submit(1, 9.0);
+        w2.submit(0, 3.0);
+        w2.submit(1, 4.0);
+        master.merge_current(&w1);
+        master.merge_current(&w2);
+        master.barrier();
+        assert_eq!(master.previous(0), 5.0);
+        assert_eq!(master.previous(1), 4.0);
+    }
+}

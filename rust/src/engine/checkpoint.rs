@@ -1,0 +1,161 @@
+//! Fault tolerance via checkpointing (paper §5.3).
+//!
+//! At a checkpoint the master instructs workers to persist their
+//! partition state; when a worker fails (detected by missed pings in the
+//! paper; injected deterministically here), its partitions are reassigned
+//! and ALL workers reload the most recent checkpoint, rolling the
+//! computation back to a consistent global iteration.
+//!
+//! A checkpoint of the hybrid engine is taken at an iteration boundary,
+//! where each partition's state is exactly: vertex values, halt flags and
+//! the global-phase inbox (local-phase queues are empty between
+//! iterations by construction — the local phase runs to quiescence).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::Codec;
+
+/// A consistent snapshot of an engine run at an iteration boundary.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint<V, M> {
+    pub iteration: u64,
+    /// Per partition: vertex values.
+    pub values: Vec<Vec<V>>,
+    /// Per partition: halt flags.
+    pub halted: Vec<Vec<bool>>,
+    /// Per partition: pending global-phase messages as
+    /// (local vertex, queue) pairs.
+    pub inbox: Vec<Vec<(u32, Vec<M>)>>,
+}
+
+impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
+    pub fn encode_bytes(&self) -> Vec<u8> {
+        let mut buf = Vec::new();
+        self.iteration.encode(&mut buf);
+        (self.values.len() as u64).encode(&mut buf);
+        for p in 0..self.values.len() {
+            self.values[p].encode(&mut buf);
+            self.halted[p].encode(&mut buf);
+            self.inbox[p].encode(&mut buf);
+        }
+        buf
+    }
+
+    pub fn decode_bytes(mut r: &[u8]) -> Option<Self> {
+        let r = &mut r;
+        let iteration = u64::decode(r)?;
+        let np = u64::decode(r)? as usize;
+        let mut values = Vec::with_capacity(np);
+        let mut halted = Vec::with_capacity(np);
+        let mut inbox = Vec::with_capacity(np);
+        for _ in 0..np {
+            values.push(Vec::<V>::decode(r)?);
+            halted.push(Vec::<bool>::decode(r)?);
+            inbox.push(Vec::<(u32, Vec<M>)>::decode(r)?);
+        }
+        Some(Checkpoint { iteration, values, halted, inbox })
+    }
+
+    /// Persist to `dir/ckpt_<iteration>.bin`.
+    pub fn save(&self, dir: &Path) -> Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("ckpt_{:08}.bin", self.iteration));
+        std::fs::write(&path, self.encode_bytes()).with_context(|| format!("write {path:?}"))?;
+        Ok(path)
+    }
+
+    /// Load the latest checkpoint in `dir`, if any.
+    pub fn load_latest(dir: &Path) -> Result<Option<Self>> {
+        if !dir.exists() {
+            return Ok(None);
+        }
+        let mut ckpts: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with("ckpt_") && n.ends_with(".bin"))
+            })
+            .collect();
+        ckpts.sort();
+        let Some(path) = ckpts.pop() else {
+            return Ok(None);
+        };
+        let bytes = std::fs::read(&path)?;
+        Ok(Some(
+            Self::decode_bytes(&bytes)
+                .with_context(|| format!("corrupt checkpoint {path:?}"))?,
+        ))
+    }
+}
+
+impl<A: Codec, B: Codec, C: Codec> Codec for (A, B, C) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+        self.2.encode(buf);
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        Some((A::decode(r)?, B::decode(r)?, C::decode(r)?))
+    }
+    fn encoded_len(&self) -> usize {
+        self.0.encoded_len() + self.1.encoded_len() + self.2.encoded_len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint<f32, u32> {
+        Checkpoint {
+            iteration: 7,
+            values: vec![vec![1.0, 2.0], vec![3.0]],
+            halted: vec![vec![true, false], vec![true]],
+            inbox: vec![vec![(0, vec![9, 8])], vec![]],
+        }
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let c = sample();
+        let b = c.encode_bytes();
+        let d = Checkpoint::<f32, u32>::decode_bytes(&b).unwrap();
+        assert_eq!(c, d);
+    }
+
+    #[test]
+    fn file_roundtrip_and_latest() {
+        let dir = std::env::temp_dir().join("graphhp_ckpt_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut c = sample();
+        c.iteration = 3;
+        c.save(&dir).unwrap();
+        let mut c2 = sample();
+        c2.iteration = 12;
+        c2.values[0][0] = 42.0;
+        c2.save(&dir).unwrap();
+        let latest = Checkpoint::<f32, u32>::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.iteration, 12);
+        assert_eq!(latest.values[0][0], 42.0);
+    }
+
+    #[test]
+    fn empty_dir_gives_none() {
+        let dir = std::env::temp_dir().join("graphhp_ckpt_none");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Checkpoint::<f32, u32>::load_latest(&dir).unwrap().is_none());
+    }
+
+    #[test]
+    fn corrupt_file_is_an_error() {
+        let dir = std::env::temp_dir().join("graphhp_ckpt_corrupt");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("ckpt_00000001.bin"), b"garbage").unwrap();
+        assert!(Checkpoint::<f32, u32>::load_latest(&dir).is_err());
+    }
+}

@@ -1,0 +1,149 @@
+//! The per-vertex compute context: what a `Compute()` invocation can see
+//! and do (paper §3).
+
+use crate::graph::{Edge, PartGraph, VertexId};
+use crate::util::Rng;
+
+use super::aggregator::Aggregators;
+use super::program::VertexProgram;
+
+/// Sends collected during one `compute` invocation; the engine routes
+/// them afterwards (destination may be any vertex id, not only a
+/// neighbor, as in Pregel).
+pub struct SendBuffer<M> {
+    pub sends: Vec<(VertexId, M)>,
+}
+
+impl<M> SendBuffer<M> {
+    pub fn new() -> Self {
+        SendBuffer { sends: Vec::new() }
+    }
+    pub fn clear(&mut self) {
+        self.sends.clear();
+    }
+}
+
+impl<M> Default for SendBuffer<M> {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The context handed to [`VertexProgram::compute`].
+pub struct VertexContext<'a, P: VertexProgram> {
+    pub(crate) part: &'a PartGraph,
+    /// Local index of the vertex within the partition.
+    pub(crate) lv: usize,
+    /// Superstep counter exposed to the program. Engines map their notion
+    /// of progress onto it (global iteration index for GraphHP, as §5.3).
+    pub(crate) superstep: u64,
+    pub(crate) value: &'a mut P::V,
+    pub(crate) messages: &'a [P::M],
+    pub(crate) halted: &'a mut bool,
+    pub(crate) out: &'a mut SendBuffer<P::M>,
+    pub(crate) aggregators: &'a mut Aggregators,
+    pub(crate) seed: u64,
+}
+
+impl<'a, P: VertexProgram> VertexContext<'a, P> {
+    /// Global id of this vertex.
+    pub fn vertex_id(&self) -> VertexId {
+        self.part.global_ids[self.lv]
+    }
+
+    /// The partition this vertex lives in (topology + metadata).
+    pub fn partition(&self) -> &PartGraph {
+        self.part
+    }
+
+    /// Superstep (Hama) / global iteration (GraphHP) counter —
+    /// `getSuperstepCount()`.
+    pub fn superstep(&self) -> u64 {
+        self.superstep
+    }
+
+    /// `getValue()`.
+    pub fn value(&self) -> &P::V {
+        self.value
+    }
+
+    /// `setValue()`.
+    pub fn set_value(&mut self, v: P::V) {
+        *self.value = v;
+    }
+
+    /// Mutable access to the value (ergonomic alternative to get+set).
+    pub fn value_mut(&mut self) -> &mut P::V {
+        self.value
+    }
+
+    /// Messages delivered to this vertex for this (pseudo-)superstep.
+    pub fn messages(&self) -> &[P::M] {
+        self.messages
+    }
+
+    /// Out-edges of this vertex (targets + weights + location hints).
+    pub fn edges(&self) -> &[Edge] {
+        self.part.out_edges(self.lv)
+    }
+
+    /// Out-degree.
+    pub fn out_degree(&self) -> u32 {
+        self.part.out_degree[self.lv]
+    }
+
+    /// Whether this vertex is a boundary vertex (Definition 1). Exposed
+    /// for diagnostics; correct programs don't need it.
+    pub fn is_boundary(&self) -> bool {
+        self.part.is_boundary[self.lv]
+    }
+
+    /// `sendMessage(dest, msg)` — dest may be any vertex.
+    pub fn send(&mut self, dest: VertexId, msg: P::M) {
+        self.out.sends.push((dest, msg));
+    }
+
+    /// Send `msg` along every out-edge.
+    pub fn send_to_neighbors(&mut self, msg: P::M) {
+        // routed by the engine; we just record (target, msg) pairs
+        let targets: Vec<VertexId> = self.part.out_edges(self.lv).iter().map(|e| e.target).collect();
+        for t in targets {
+            self.out.sends.push((t, msg.clone()));
+        }
+    }
+
+    /// Send one message per out-edge, computed from the edge (no
+    /// intermediate allocation — the hot path of SSSP/PageRank).
+    pub fn send_along_edges(&mut self, f: impl Fn(&Edge) -> Option<P::M>) {
+        let (s, e) = (self.part.offsets[self.lv], self.part.offsets[self.lv + 1]);
+        for i in s..e {
+            let edge = self.part.edges[i];
+            if let Some(m) = f(&edge) {
+                self.out.sends.push((edge.target, m));
+            }
+        }
+    }
+
+    /// `voteToHalt()`.
+    pub fn vote_to_halt(&mut self) {
+        *self.halted = true;
+    }
+
+    /// Submit to aggregator `id` (visible at the next superstep).
+    pub fn aggregate(&mut self, id: usize, v: f64) {
+        self.aggregators.submit(id, v);
+    }
+
+    /// Reduced aggregator value from the previous superstep.
+    pub fn aggregated(&self, id: usize) -> f64 {
+        self.aggregators.previous(id)
+    }
+
+    /// Deterministic per-(vertex, superstep) RNG — for randomized
+    /// programs like bipartite matching.
+    pub fn rng(&self) -> Rng {
+        Rng::new(self.seed)
+            .derive(self.vertex_id() as u64)
+            .derive(self.superstep.wrapping_add(1))
+    }
+}

@@ -1,0 +1,517 @@
+//! The GraphHP hybrid execution engine (paper §4.2, §5) — the system
+//! contribution of the paper.
+//!
+//! Execution is a sequence of **global iterations**. Iteration 0 is the
+//! initialization superstep (identical to standard BSP). Every iteration
+//! ≥ 1 is:
+//!
+//! 1. **Global phase** (`globalSuperstep()` of Alg. 2): each active
+//!    boundary vertex computes once on the messages buffered for it
+//!    during the previous iteration. Messages it sends to *local-class*
+//!    vertices of its own partition go to the immediate local phase;
+//!    messages to boundary vertices of its own partition are buffered for
+//!    the next iteration's global phase (unless boundary vertices
+//!    participate in local phases); messages to remote vertices are
+//!    buffered for RPC delivery at the next barrier.
+//! 2. **Local phase** (`pseudoSuperstep()` of Alg. 2): pseudo-supersteps
+//!    over the partition's participating vertices, entirely in memory,
+//!    repeated until every participant is inactive and no message is in
+//!    transit inside the partition.
+//!
+//! Distributed synchronization + communication happen once per global
+//! iteration — the whole point of the hybrid model.
+
+use std::collections::BTreeSet;
+
+use crate::graph::DistGraph;
+
+use super::aggregator::Aggregators;
+use super::context::{SendBuffer, VertexContext};
+use super::messages::{MsgStore, Outbox};
+use super::metrics::Metrics;
+use super::netsim::{SuperstepClock, WorkerComm};
+use super::program::VertexProgram;
+use super::{EngineConfig, RunResult};
+
+/// Per-partition state of the hybrid engine.
+struct HpPart<P: VertexProgram> {
+    values: Vec<P::V>,
+    halted: Vec<bool>,
+    /// Global-phase inbox for the CURRENT iteration.
+    gq_cur: MsgStore<P::M>,
+    /// Global-phase inbox for the NEXT iteration (remote deliveries +
+    /// same-partition messages to non-participating boundary vertices).
+    gq_nxt: MsgStore<P::M>,
+    /// Local-phase pseudo-superstep inboxes.
+    lq_cur: MsgStore<P::M>,
+    lq_nxt: MsgStore<P::M>,
+    /// Local-phase frontier for the next pseudo-superstep.
+    l_frontier: Vec<u32>,
+    in_l_frontier: Vec<bool>,
+}
+
+impl<P: VertexProgram> HpPart<P> {
+    fn new(program: &P, part: &crate::graph::PartGraph) -> Self {
+        let n = part.num_vertices();
+        HpPart {
+            values: (0..n)
+                .map(|lv| program.init(part.global_ids[lv], part.out_degree[lv]))
+                .collect(),
+            halted: vec![false; n],
+            gq_cur: MsgStore::new(n),
+            gq_nxt: MsgStore::new(n),
+            lq_cur: MsgStore::new(n),
+            lq_nxt: MsgStore::new(n),
+            l_frontier: Vec::new(),
+            in_l_frontier: vec![false; n],
+        }
+    }
+
+    fn schedule_local(&mut self, lv: usize) {
+        if !self.in_l_frontier[lv] {
+            self.in_l_frontier[lv] = true;
+            self.l_frontier.push(lv as u32);
+        }
+    }
+
+    fn take_local_frontier(&mut self) -> Vec<u32> {
+        for &lv in &self.l_frontier {
+            self.in_l_frontier[lv as usize] = false;
+        }
+        std::mem::take(&mut self.l_frontier)
+    }
+}
+
+/// Route one send originating in partition `p`.
+///
+/// `in_local_phase` selects the local-phase routing rules; during the
+/// global phase, same-partition messages go to the local phase inbox
+/// (participants) or the next global inbox (non-participating boundary).
+#[allow(clippy::too_many_arguments)]
+fn route_send<P: VertexProgram>(
+    hp: &mut HpPart<P>,
+    outbox: &mut Outbox<P::M>,
+    dg: &DistGraph,
+    p: usize,
+    src_gid: crate::graph::VertexId,
+    target: crate::graph::VertexId,
+    m: P::M,
+    boundary_in_local: bool,
+    combiner: Option<fn(P::M, P::M) -> P::M>,
+    metrics: &mut Metrics,
+    // async local delivery: Some((processed stamps, current stamp,
+    // worklist)) while a pseudo-superstep sweep is in progress and async
+    // messaging is on
+    async_ctx: Option<(&[u32], u32, &mut BTreeSet<u32>)>,
+) {
+    let (tp, tl) = dg.location[target as usize];
+    if tp as usize != p {
+        outbox.push(tp, tl, src_gid, m);
+        return;
+    }
+    let tl = tl as usize;
+    metrics.local_messages += 1;
+    let target_is_boundary = dg.parts[p].is_boundary[tl];
+    let participates = boundary_in_local || !target_is_boundary;
+    if !participates {
+        // boundary vertex not in local phase: buffer for the next
+        // iteration's global phase (paper §4.2)
+        hp.gq_nxt.push_combined(tl, m, combiner);
+        return;
+    }
+    // participant: in-memory local-phase delivery
+    if let Some((stamps, stamp, worklist)) = async_ctx {
+        if stamps[tl] != stamp {
+            hp.lq_cur.push_combined(tl, m, combiner);
+            worklist.insert(tl as u32);
+            return;
+        }
+    }
+    hp.lq_nxt.push_combined(tl, m, combiner);
+    hp.schedule_local(tl);
+}
+
+/// Run `program` under the GraphHP hybrid execution model.
+pub fn run_graphhp<P: VertexProgram>(
+    program: &P,
+    dg: &DistGraph,
+    cfg: &EngineConfig,
+) -> RunResult<P::V> {
+    let mut parts: Vec<HpPart<P>> =
+        dg.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
+    let mut metrics = Metrics::default();
+    let mut clock = SuperstepClock::new();
+    let mut aggs = Aggregators::new(
+        (0..program.num_aggregators()).map(|i| program.aggregator_op(i)).collect(),
+    );
+    let combiner = program.combiner();
+    let source_combine = program.source_combine();
+    let boundary_in_local = cfg.boundary_in_local_phase;
+
+    let mut iteration: u64 = 0;
+    let mut msg_buf: Vec<P::M> = Vec::new();
+    let mut send_buf: SendBuffer<P::M> = SendBuffer::new();
+    let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
+    let mut failure_pending = cfg.inject_failure_at;
+
+    loop {
+        // ---- fault tolerance (paper §5.3) --------------------------
+        if cfg.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
+            let ckpt = super::checkpoint::Checkpoint {
+                iteration,
+                values: parts.iter().map(|hp| hp.values.clone()).collect(),
+                halted: parts.iter().map(|hp| hp.halted.clone()).collect(),
+                inbox: parts.iter_mut().map(|hp| hp.gq_cur.export()).collect(),
+            };
+            if let Some(dir) = &cfg.checkpoint_dir {
+                let _ = ckpt.save(dir);
+            }
+            last_ckpt = Some(ckpt);
+            metrics.checkpoints += 1;
+        }
+        if failure_pending == Some(iteration) {
+            failure_pending = None;
+            metrics.recoveries += 1;
+            match &last_ckpt {
+                Some(ckpt) => {
+                    // worker lost: reassign its partitions and roll every
+                    // worker back to the latest consistent checkpoint
+                    for (p, hp) in parts.iter_mut().enumerate() {
+                        let n = hp.values.len();
+                        hp.values = ckpt.values[p].clone();
+                        hp.halted = ckpt.halted[p].clone();
+                        hp.gq_cur = super::messages::MsgStore::restore(n, &ckpt.inbox[p]);
+                        hp.gq_nxt = super::messages::MsgStore::new(n);
+                        hp.lq_cur = super::messages::MsgStore::new(n);
+                        hp.lq_nxt = super::messages::MsgStore::new(n);
+                        hp.l_frontier.clear();
+                        hp.in_l_frontier = vec![false; n];
+                    }
+                    iteration = ckpt.iteration;
+                }
+                None => {
+                    // no checkpoint yet: restart from scratch
+                    parts = dg.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
+                    iteration = 0;
+                }
+            }
+        }
+
+        let mut outboxes: Vec<Outbox<P::M>> = Vec::with_capacity(dg.num_parts());
+        let mut worker_aggs: Vec<Aggregators> = Vec::new();
+
+        for p in 0..dg.num_parts() {
+            let part = &dg.parts[p];
+            let hp = &mut parts[p];
+            let mut outbox: Outbox<P::M> = Outbox::new(combiner);
+            let mut wagg = aggs.clone();
+            let t0 = std::time::Instant::now();
+            let mut pseudo_steps: u64 = 0;
+
+            if iteration == 0 {
+                // ---- initialization iteration: identical to a standard
+                // first superstep over every vertex (paper §4.2)
+                for lv in 0..part.num_vertices() {
+                    msg_buf.clear();
+                    send_buf.clear();
+                    {
+                        let mut ctx = VertexContext::<P> {
+                            part,
+                            lv,
+                            superstep: 0,
+                            value: &mut hp.values[lv],
+                            messages: &msg_buf,
+                            halted: &mut hp.halted[lv],
+                            out: &mut send_buf,
+                            aggregators: &mut wagg,
+                            seed: cfg.seed,
+                        };
+                        program.compute(&mut ctx);
+                    }
+                    metrics.vertex_computations += 1;
+                    let src_gid = part.global_ids[lv];
+                    for (target, m) in send_buf.sends.drain(..) {
+                        route_send(
+                            hp, &mut outbox, dg, p, src_gid, target, m,
+                            boundary_in_local, combiner, &mut metrics, None,
+                        );
+                    }
+                    if !hp.halted[lv] {
+                        // unhalted vertices keep computing: boundary ones
+                        // in the next global phase, participants in the
+                        // next local phase
+                        if part.is_boundary[lv] && !boundary_in_local {
+                            // picked up by the global-phase participant
+                            // rule (boundary && !halted)
+                        } else {
+                            hp.schedule_local(lv);
+                        }
+                    }
+                }
+                metrics.supersteps_total += 1;
+            } else {
+                // ---- global phase -----------------------------------
+                // participants: any vertex with buffered global messages,
+                // plus unhalted boundary vertices
+                let mut gfrontier: Vec<u32> = hp.gq_cur.pending();
+                for lv in 0..part.num_vertices() {
+                    if part.is_boundary[lv] && !hp.halted[lv] && !hp.gq_cur.has_messages(lv) {
+                        gfrontier.push(lv as u32);
+                    }
+                }
+                gfrontier.sort_unstable();
+                gfrontier.dedup();
+                for &lv32 in &gfrontier {
+                    let lv = lv32 as usize;
+                    hp.gq_cur.take_into(lv, &mut msg_buf);
+                    if hp.halted[lv] {
+                        if msg_buf.is_empty() {
+                            continue;
+                        }
+                        hp.halted[lv] = false;
+                    }
+                    send_buf.clear();
+                    {
+                        let mut ctx = VertexContext::<P> {
+                            part,
+                            lv,
+                            superstep: iteration,
+                            value: &mut hp.values[lv],
+                            messages: &msg_buf,
+                            halted: &mut hp.halted[lv],
+                            out: &mut send_buf,
+                            aggregators: &mut wagg,
+                            seed: cfg.seed,
+                        };
+                        program.compute(&mut ctx);
+                    }
+                    metrics.vertex_computations += 1;
+                    let src_gid = part.global_ids[lv];
+                    for (target, m) in send_buf.sends.drain(..) {
+                        route_send(
+                            hp, &mut outbox, dg, p, src_gid, target, m,
+                            boundary_in_local, combiner, &mut metrics, None,
+                        );
+                    }
+                    if !hp.halted[lv] && boundary_in_local {
+                        // unhalted boundary participant continues in the
+                        // local phase
+                        hp.schedule_local(lv);
+                    }
+                }
+                metrics.supersteps_total += 1;
+
+                // ---- local phase: pseudo-supersteps until quiescence --
+                // generation-stamped "processed" marks: avoids an O(n)
+                // allocation + clear per pseudo-superstep (perf log in
+                // EXPERIMENTS.md §Perf)
+                let mut stamps: Vec<u32> = vec![0; part.num_vertices()];
+                let mut stamp: u32 = 0;
+                loop {
+                    std::mem::swap(&mut hp.lq_cur, &mut hp.lq_nxt);
+                    let frontier = hp.take_local_frontier();
+                    if frontier.is_empty() && hp.lq_cur.is_empty() {
+                        break;
+                    }
+                    pseudo_steps += 1;
+                    if pseudo_steps > cfg.max_pseudo_supersteps {
+                        break;
+                    }
+                    let mut worklist: BTreeSet<u32> = frontier.into_iter().collect();
+                    for lv in hp.lq_cur.pending() {
+                        worklist.insert(lv);
+                    }
+                    stamp += 1;
+                    while let Some(lv32) = worklist.pop_first() {
+                        let lv = lv32 as usize;
+                        stamps[lv] = stamp;
+                        hp.lq_cur.take_into(lv, &mut msg_buf);
+                        if hp.halted[lv] {
+                            if msg_buf.is_empty() {
+                                continue;
+                            }
+                            hp.halted[lv] = false;
+                        }
+                        send_buf.clear();
+                        {
+                            let mut ctx = VertexContext::<P> {
+                                part,
+                                lv,
+                                superstep: iteration,
+                                value: &mut hp.values[lv],
+                                messages: &msg_buf,
+                                halted: &mut hp.halted[lv],
+                                out: &mut send_buf,
+                                aggregators: &mut wagg,
+                                seed: cfg.seed,
+                            };
+                            program.compute(&mut ctx);
+                        }
+                        metrics.vertex_computations += 1;
+                        let src_gid = part.global_ids[lv];
+                        for (target, m) in send_buf.sends.drain(..) {
+                            let async_ctx = if cfg.async_local_messaging {
+                                Some((&stamps[..], stamp, &mut worklist))
+                            } else {
+                                None
+                            };
+                            route_send(
+                                hp, &mut outbox, dg, p, src_gid, target, m,
+                                boundary_in_local, combiner, &mut metrics, async_ctx,
+                            );
+                        }
+                        if !hp.halted[lv] {
+                            hp.schedule_local(lv);
+                        }
+                    }
+                    metrics.supersteps_total += 1;
+                }
+            }
+
+            // GraphHP's SourceCombine applies to messages buffered across
+            // the iteration boundary (no-op when a combiner exists)
+            outbox.source_combine(source_combine);
+
+            let compute = cfg.net.scale_compute(t0.elapsed());
+            let comm = WorkerComm {
+                messages: outbox.len() as u64,
+                bytes: outbox.wire_bytes() as u64,
+                peer_pairs: outbox.peer_count(p as u32) as u64,
+            };
+            metrics.network_messages += comm.messages;
+            metrics.network_bytes += comm.bytes;
+            clock.record_worker(compute, cfg.net.comm_time(&comm));
+            outboxes.push(outbox);
+            worker_aggs.push(wagg);
+        }
+
+        // ---- barrier: one distributed synchronization per iteration ---
+        for mut outbox in outboxes {
+            for (tp, tl, m) in outbox.drain() {
+                parts[tp as usize].gq_nxt.push(tl as usize, m);
+            }
+        }
+        for w in &worker_aggs {
+            aggs.merge_current(w);
+        }
+        aggs.barrier();
+        clock.barrier(&cfg.net, &mut metrics);
+        metrics.global_iterations += 1;
+        iteration += 1;
+
+        // swap global inboxes for the next iteration
+        for hp in parts.iter_mut() {
+            std::mem::swap(&mut hp.gq_cur, &mut hp.gq_nxt);
+        }
+
+        // termination: every vertex inactive, nothing in transit
+        let done = parts.iter_mut().all(|hp| {
+            hp.halted.iter().all(|&h| h)
+                && hp.gq_cur.is_empty()
+                && hp.lq_cur.is_empty()
+                && hp.lq_nxt.is_empty()
+                && hp.l_frontier.is_empty()
+        });
+        if done || iteration >= cfg.max_iterations {
+            break;
+        }
+    }
+
+    let values = super::gather_values(
+        dg,
+        &parts.iter().map(|hp| hp.values.clone()).collect::<Vec<_>>(),
+    );
+    RunResult { values, metrics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::hama::run_hama;
+    use crate::graph::{generators, DistGraph, VertexId};
+    use crate::partition::{hash_partition, metis_partition, MetisConfig};
+
+    struct MinLabel;
+    impl VertexProgram for MinLabel {
+        type V = u32;
+        type M = u32;
+        fn init(&self, v: VertexId, _d: u32) -> u32 {
+            v
+        }
+        fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+            let mut best = *ctx.value();
+            if ctx.superstep() == 0 {
+                ctx.send_to_neighbors(best);
+            } else if let Some(&m) = ctx.messages().iter().min() {
+                if m < best {
+                    best = m;
+                    ctx.set_value(best);
+                    ctx.send_to_neighbors(best);
+                }
+            }
+            ctx.vote_to_halt();
+        }
+        fn combiner(&self) -> Option<fn(u32, u32) -> u32> {
+            Some(|a, b| a.min(b))
+        }
+    }
+
+    #[test]
+    fn matches_hama_with_far_fewer_iterations() {
+        let g = generators::connected(400, 100, 11);
+        let a = metis_partition(&g, 4, &MetisConfig::default());
+        let dg = DistGraph::new(&g, &a, 4);
+        let cfg = EngineConfig::default();
+        let h = run_hama(&MinLabel, &dg, &cfg);
+        let hp = run_graphhp(&MinLabel, &dg, &cfg);
+        assert_eq!(h.values, hp.values);
+        assert!(
+            hp.metrics.global_iterations * 2 <= h.metrics.global_iterations,
+            "graphhp={} hama={}",
+            hp.metrics.global_iterations,
+            h.metrics.global_iterations
+        );
+        assert!(hp.metrics.network_messages <= h.metrics.network_messages);
+    }
+
+    #[test]
+    fn single_partition_converges_in_two_iterations() {
+        // one partition => everything is local: iteration 0 (init) +
+        // iteration 1 (local fixpoint) + possibly 1 empty to quiesce
+        let g = generators::connected(200, 80, 3);
+        let dg = DistGraph::new(&g, &vec![0; 200], 1);
+        let r = run_graphhp(&MinLabel, &dg, &EngineConfig::default());
+        assert!(r.values.iter().all(|&v| v == 0));
+        assert!(r.metrics.global_iterations <= 3, "{}", r.metrics.global_iterations);
+        assert_eq!(r.metrics.network_messages, 0);
+    }
+
+    #[test]
+    fn boundary_not_in_local_phase_still_correct() {
+        let g = generators::connected(150, 60, 7);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let cfg = EngineConfig { boundary_in_local_phase: false, ..Default::default() };
+        let r = run_graphhp(&MinLabel, &dg, &cfg);
+        assert!(r.values.iter().all(|&v| v == 0), "label must reach all");
+    }
+
+    #[test]
+    fn sync_local_messaging_still_correct() {
+        let g = generators::connected(150, 60, 9);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let cfg = EngineConfig { async_local_messaging: false, ..Default::default() };
+        let r = run_graphhp(&MinLabel, &dg, &cfg);
+        assert!(r.values.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn pseudo_supersteps_counted() {
+        let g = generators::connected(100, 40, 13);
+        let dg = DistGraph::new(&g, &vec![0; 100], 1);
+        let r = run_graphhp(&MinLabel, &dg, &EngineConfig::default());
+        // pseudo-supersteps make supersteps_total exceed global iterations
+        assert!(r.metrics.supersteps_total > r.metrics.global_iterations);
+    }
+}

@@ -1,0 +1,284 @@
+//! The standard BSP execution engine (paper §4.1) — the Hama/Pregel
+//! baseline.
+//!
+//! Every superstep: each active vertex computes once on the messages from
+//! superstep S-1; ALL messages go through the messaging layer (counted as
+//! network messages, as in stock Hama) and are delivered at the barrier;
+//! the master then synchronizes all workers. Termination: all vertices
+//! inactive and no message in transit.
+
+use crate::graph::DistGraph;
+
+use super::aggregator::Aggregators;
+use super::context::{SendBuffer, VertexContext};
+use super::messages::Outbox;
+use super::metrics::Metrics;
+use super::netsim::{SuperstepClock, WorkerComm};
+use super::program::VertexProgram;
+use super::state::{init_runtimes, PartitionRuntime};
+use super::{EngineConfig, RunResult};
+
+/// Run `program` to completion under the standard BSP model.
+pub fn run_hama<P: VertexProgram>(
+    program: &P,
+    dg: &DistGraph,
+    cfg: &EngineConfig,
+) -> RunResult<P::V> {
+    let mut rts: Vec<PartitionRuntime<P>> = init_runtimes(program, dg);
+    let mut metrics = Metrics::default();
+    let mut clock = SuperstepClock::new();
+    let mut aggs = Aggregators::new(
+        (0..program.num_aggregators()).map(|i| program.aggregator_op(i)).collect(),
+    );
+    let combiner = program.combiner();
+
+    // superstep 0: every vertex is active
+    for (p, rt) in rts.iter_mut().enumerate() {
+        for lv in 0..dg.parts[p].num_vertices() {
+            rt.schedule_next(lv);
+        }
+    }
+
+    let mut superstep: u64 = 0;
+    let mut msg_buf: Vec<P::M> = Vec::new();
+    let mut send_buf: SendBuffer<P::M> = SendBuffer::new();
+
+    loop {
+        let mut outboxes: Vec<Outbox<P::M>> = Vec::with_capacity(dg.num_parts());
+        let mut worker_aggs: Vec<Aggregators> = Vec::new();
+
+        for p in 0..dg.num_parts() {
+            let part = &dg.parts[p];
+            let rt = &mut rts[p];
+            let mut outbox: Outbox<P::M> = Outbox::new(combiner);
+            let mut wagg = aggs.clone();
+            let t0 = std::time::Instant::now();
+
+            let mut frontier = rt.begin_step();
+            frontier.sort_unstable();
+            for &lv32 in &frontier {
+                let lv = lv32 as usize;
+                rt.cur.take_into(lv, &mut msg_buf);
+                if rt.halted[lv] {
+                    if msg_buf.is_empty() {
+                        continue; // halted, no mail: stays inactive
+                    }
+                    rt.halted[lv] = false; // message reactivates (§4.1)
+                }
+                send_buf.clear();
+                {
+                    let mut ctx = VertexContext::<P> {
+                        part,
+                        lv,
+                        superstep,
+                        value: &mut rt.values[lv],
+                        messages: &msg_buf,
+                        halted: &mut rt.halted[lv],
+                        out: &mut send_buf,
+                        aggregators: &mut wagg,
+                        seed: cfg.seed,
+                    };
+                    program.compute(&mut ctx);
+                }
+                metrics.vertex_computations += 1;
+                // stock Hama: every message goes through the messaging
+                // layer (sender-side combined per destination)
+                for (target, m) in send_buf.sends.drain(..) {
+                    let (tp, tl) = dg.location[target as usize];
+                    outbox.push(tp, tl, part.global_ids[lv], m);
+                }
+                if !rt.halted[lv] {
+                    rt.schedule_next(lv);
+                }
+            }
+
+            let compute = cfg.net.scale_compute(t0.elapsed());
+            let comm = WorkerComm {
+                messages: outbox.len() as u64,
+                bytes: outbox.wire_bytes() as u64,
+                peer_pairs: outbox.peer_count(p as u32) as u64,
+            };
+            metrics.network_messages += comm.messages;
+            metrics.network_bytes += comm.bytes;
+            clock.record_worker(compute, cfg.net.comm_time(&comm));
+            outboxes.push(outbox);
+            worker_aggs.push(wagg);
+        }
+
+        // ---- barrier: deliver messages, merge aggregators, advance clock
+        for mut outbox in outboxes {
+            for (tp, tl, m) in outbox.drain() {
+                let rt = &mut rts[tp as usize];
+                rt.nxt.push(tl as usize, m);
+                rt.schedule_next(tl as usize);
+            }
+        }
+        for w in &worker_aggs {
+            aggs.merge_current(w);
+        }
+        aggs.barrier();
+        clock.barrier(&cfg.net, &mut metrics);
+        metrics.global_iterations += 1;
+        metrics.supersteps_total += 1;
+        superstep += 1;
+
+        let done = rts.iter_mut().all(|rt| rt.quiesced());
+        if done || superstep >= cfg.max_iterations {
+            break;
+        }
+    }
+
+    let values = super::gather_values(
+        dg,
+        &rts.iter().map(|rt| rt.values.clone()).collect::<Vec<_>>(),
+    );
+    RunResult { values, metrics }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, DistGraph, VertexId};
+    use crate::partition::hash_partition;
+
+    /// Propagate max vertex id through the graph (simple confluent test
+    /// program with a combiner).
+    struct MaxProp;
+    impl VertexProgram for MaxProp {
+        type V = u32;
+        type M = u32;
+        fn init(&self, v: VertexId, _d: u32) -> u32 {
+            v
+        }
+        fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+            let mut best = *ctx.value();
+            if ctx.superstep() == 0 {
+                ctx.send_to_neighbors(best);
+            } else {
+                let incoming = ctx.messages().iter().copied().max();
+                if let Some(m) = incoming {
+                    if m > best {
+                        best = m;
+                        ctx.set_value(best);
+                        ctx.send_to_neighbors(best);
+                    }
+                }
+            }
+            ctx.vote_to_halt();
+        }
+        fn combiner(&self) -> Option<fn(u32, u32) -> u32> {
+            Some(|a, b| a.max(b))
+        }
+    }
+
+    #[test]
+    fn max_propagation_converges_on_connected_graph() {
+        let g = generators::connected(100, 60, 3);
+        let a = hash_partition(&g, 4);
+        let dg = DistGraph::new(&g, &a, 4);
+        let r = run_hama(&MaxProp, &dg, &EngineConfig::default());
+        assert!(r.values.iter().all(|&v| v == 99), "all reach max id");
+        assert!(r.metrics.global_iterations > 1);
+        assert!(r.metrics.network_messages > 0);
+    }
+
+    #[test]
+    fn terminates_immediately_when_everyone_halts() {
+        struct HaltNow;
+        impl VertexProgram for HaltNow {
+            type V = u32;
+            type M = u32;
+            fn init(&self, _v: VertexId, _d: u32) -> u32 {
+                0
+            }
+            fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+                ctx.vote_to_halt();
+            }
+        }
+        let g = generators::erdos_renyi(10, 20, 1);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let r = run_hama(&HaltNow, &dg, &EngineConfig::default());
+        assert_eq!(r.metrics.global_iterations, 1);
+        assert_eq!(r.metrics.network_messages, 0);
+    }
+
+    #[test]
+    fn max_iterations_cap_respected() {
+        struct Forever;
+        impl VertexProgram for Forever {
+            type V = u32;
+            type M = u32;
+            fn init(&self, _v: VertexId, _d: u32) -> u32 {
+                0
+            }
+            fn compute(&self, _ctx: &mut VertexContext<'_, Self>) {
+                // never halts
+            }
+        }
+        let g = generators::erdos_renyi(10, 20, 1);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let cfg = EngineConfig { max_iterations: 5, ..Default::default() };
+        let r = run_hama(&Forever, &dg, &cfg);
+        assert_eq!(r.metrics.global_iterations, 5);
+    }
+
+    #[test]
+    fn aggregator_visible_next_superstep() {
+        struct CountAgg;
+        impl VertexProgram for CountAgg {
+            type V = f64;
+            type M = u32;
+            fn init(&self, _v: VertexId, _d: u32) -> f64 {
+                -1.0
+            }
+            fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+                if ctx.superstep() == 0 {
+                    ctx.aggregate(0, 1.0); // count vertices
+                } else {
+                    let n = ctx.aggregated(0);
+                    ctx.set_value(n);
+                    ctx.vote_to_halt();
+                    return;
+                }
+                // stay active so superstep 1 happens
+            }
+            fn num_aggregators(&self) -> usize {
+                1
+            }
+        }
+        let g = generators::erdos_renyi(25, 50, 2);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
+        let r = run_hama(&CountAgg, &dg, &EngineConfig::default());
+        assert!(r.values.iter().all(|&v| v == 25.0), "{:?}", &r.values[..5]);
+    }
+
+    #[test]
+    fn message_reactivates_halted_vertex() {
+        // vertex 0 sends to vertex 1 at superstep 1 after 1 already halted
+        struct Poke;
+        impl VertexProgram for Poke {
+            type V = u32;
+            type M = u32;
+            fn init(&self, _v: VertexId, _d: u32) -> u32 {
+                0
+            }
+            fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+                if ctx.vertex_id() == 0 && ctx.superstep() == 1 {
+                    ctx.send(1, 99);
+                } else if ctx.vertex_id() == 0 && ctx.superstep() == 0 {
+                    // stay active for superstep 1
+                    return;
+                }
+                if !ctx.messages().is_empty() {
+                    let m = ctx.messages()[0];
+                    ctx.set_value(m);
+                }
+                ctx.vote_to_halt();
+            }
+        }
+        let g = generators::erdos_renyi(4, 6, 3);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
+        let r = run_hama(&Poke, &dg, &EngineConfig::default());
+        assert_eq!(r.values[1], 99);
+    }
+}

@@ -1,0 +1,292 @@
+//! Message stores and outboxes.
+//!
+//! [`MsgStore`] is a partition's incoming mailbox (one queue per local
+//! vertex, with a non-empty index so iteration is O(active)).
+//! [`Outbox`] collects a worker's outgoing cross-partition messages for
+//! one superstep, applying sender-side combining exactly like Pregel's
+//! `Combine()` (one combined message per destination vertex per source
+//! worker) so network-message counts match the paper's setup.
+
+use rustc_hash::FxHashMap;
+
+use crate::graph::VertexId;
+use crate::util::Codec;
+
+use super::program::SourceCombine;
+
+/// Per-partition incoming message queues.
+#[derive(Clone, Debug)]
+pub struct MsgStore<M> {
+    queues: Vec<Vec<M>>,
+    nonempty: Vec<u32>,
+    flagged: Vec<bool>,
+}
+
+impl<M> MsgStore<M> {
+    pub fn new(n: usize) -> Self {
+        let queues = (0..n).map(|_| Vec::new()).collect();
+        MsgStore { queues, nonempty: Vec::new(), flagged: vec![false; n] }
+    }
+
+    /// Append a message for local vertex `lv`.
+    pub fn push(&mut self, lv: usize, m: M) {
+        if !self.flagged[lv] {
+            self.flagged[lv] = true;
+            self.nonempty.push(lv as u32);
+        }
+        self.queues[lv].push(m);
+    }
+
+    /// Append with combining: if a combiner is given and the queue is
+    /// non-empty, fold into the single held message.
+    pub fn push_combined(&mut self, lv: usize, m: M, combiner: Option<fn(M, M) -> M>) {
+        match combiner {
+            Some(f) if !self.queues[lv].is_empty() => {
+                let prev = self.queues[lv].pop().unwrap();
+                self.queues[lv].push(f(prev, m));
+            }
+            _ => self.push(lv, m),
+        }
+    }
+
+    pub fn has_messages(&self, lv: usize) -> bool {
+        self.flagged[lv]
+    }
+
+    /// Drain the queue of `lv` into `buf` (clears the flag).
+    pub fn take_into(&mut self, lv: usize, buf: &mut Vec<M>) {
+        buf.clear();
+        if self.flagged[lv] {
+            buf.append(&mut self.queues[lv]);
+            self.flagged[lv] = false;
+            // lazy removal from `nonempty`: entries are validated on drain
+        }
+    }
+
+    /// Local vertices with pending messages (sorted, deduplicated —
+    /// lazy cleanup can leave stale duplicates in the index).
+    pub fn pending(&mut self) -> Vec<u32> {
+        self.nonempty.retain(|&lv| self.flagged[lv as usize]);
+        self.nonempty.sort_unstable();
+        self.nonempty.dedup();
+        self.nonempty.clone()
+    }
+
+    pub fn is_empty(&mut self) -> bool {
+        self.nonempty.retain(|&lv| self.flagged[lv as usize]);
+        self.nonempty.is_empty()
+    }
+
+    pub fn total_messages(&self) -> usize {
+        self.queues.iter().map(|q| q.len()).sum()
+    }
+
+    pub fn clear(&mut self) {
+        for &lv in &self.nonempty {
+            self.queues[lv as usize].clear();
+            self.flagged[lv as usize] = false;
+        }
+        self.nonempty.clear();
+    }
+}
+
+impl<M: Clone> MsgStore<M> {
+    /// Snapshot pending queues as (vertex, messages) pairs (checkpointing).
+    pub fn export(&mut self) -> Vec<(u32, Vec<M>)> {
+        self.pending()
+            .into_iter()
+            .map(|lv| (lv, self.queues[lv as usize].clone()))
+            .collect()
+    }
+
+    /// Rebuild a store of size `n` from an [`export`](Self::export) snapshot.
+    pub fn restore(n: usize, snap: &[(u32, Vec<M>)]) -> Self {
+        let mut s = MsgStore::new(n);
+        for (lv, msgs) in snap {
+            for m in msgs {
+                s.push(*lv as usize, m.clone());
+            }
+        }
+        s
+    }
+}
+
+/// Wire overhead per message on the simulated network (dest id + header).
+pub const MSG_WIRE_OVERHEAD: usize = 8;
+
+/// A worker's outgoing cross-partition traffic for one superstep.
+///
+/// With a combiner: one slot per destination vertex (sender-side
+/// combining). Without: raw list, optionally `SourceCombine`d per
+/// (source, destination) pair when the engine buffers across iterations
+/// (GraphHP §5).
+pub struct Outbox<M> {
+    /// (dest_part, dest_local) -> combined message.
+    combined: FxHashMap<(u32, u32), M>,
+    /// (dest_part, dest_local, src_gid, message).
+    raw: Vec<(u32, u32, VertexId, M)>,
+    combiner: Option<fn(M, M) -> M>,
+}
+
+impl<M: Clone + Codec> Outbox<M> {
+    pub fn new(combiner: Option<fn(M, M) -> M>) -> Self {
+        Outbox { combined: FxHashMap::default(), raw: Vec::new(), combiner }
+    }
+
+    /// Queue a message from `src` to `(dest_part, dest_local)`.
+    pub fn push(&mut self, dest_part: u32, dest_local: u32, src: VertexId, m: M) {
+        match self.combiner {
+            Some(f) => {
+                self.combined
+                    .entry((dest_part, dest_local))
+                    .and_modify(|prev| {
+                        let old = prev.clone();
+                        *prev = f(old, m.clone());
+                    })
+                    .or_insert(m);
+            }
+            None => self.raw.push((dest_part, dest_local, src, m)),
+        }
+    }
+
+    /// Apply GraphHP `SourceCombine` to the raw list (keep latest per
+    /// (src, dest)). No-op when a combiner is active or policy is KeepAll.
+    pub fn source_combine(&mut self, policy: SourceCombine) {
+        if self.combiner.is_some() || policy == SourceCombine::KeepAll {
+            return;
+        }
+        // keep the LAST message per (src, dest): iterate in order,
+        // overwriting earlier entries
+        let mut latest: FxHashMap<(u32, u32, VertexId), usize> = FxHashMap::default();
+        let mut keep = vec![false; self.raw.len()];
+        for (i, &(dp, dl, src, _)) in self.raw.iter().enumerate() {
+            if let Some(&prev) = latest.get(&(dp, dl, src)) {
+                keep[prev] = false;
+            }
+            latest.insert((dp, dl, src), i);
+            keep[i] = true;
+        }
+        let mut i = 0;
+        self.raw.retain(|_| {
+            let k = keep[i];
+            i += 1;
+            k
+        });
+    }
+
+    /// Number of messages that will cross the network.
+    pub fn len(&self) -> usize {
+        self.combined.len() + self.raw.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.combined.is_empty() && self.raw.is_empty()
+    }
+
+    /// Total bytes on the wire (payload + per-message overhead).
+    pub fn wire_bytes(&self) -> usize {
+        let payload: usize = self
+            .combined
+            .values()
+            .map(|m| m.encoded_len())
+            .chain(self.raw.iter().map(|(_, _, _, m)| m.encoded_len()))
+            .sum();
+        payload + self.len() * MSG_WIRE_OVERHEAD
+    }
+
+    /// Distinct destination partitions (for RPC-pair accounting).
+    pub fn peer_count(&self, exclude_part: u32) -> usize {
+        let mut peers: Vec<u32> = self
+            .combined
+            .keys()
+            .map(|&(p, _)| p)
+            .chain(self.raw.iter().map(|&(p, _, _, _)| p))
+            .filter(|&p| p != exclude_part)
+            .collect();
+        peers.sort_unstable();
+        peers.dedup();
+        peers.len()
+    }
+
+    /// Drain into (dest_part, dest_local, message) triples.
+    pub fn drain(&mut self) -> Vec<(u32, u32, M)> {
+        let mut out: Vec<(u32, u32, M)> =
+            self.combined.drain().map(|((p, l), m)| (p, l, m)).collect();
+        out.extend(self.raw.drain(..).map(|(p, l, _, m)| (p, l, m)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn msgstore_push_take() {
+        let mut s: MsgStore<u32> = MsgStore::new(4);
+        s.push(1, 10);
+        s.push(1, 11);
+        s.push(3, 30);
+        assert!(s.has_messages(1));
+        assert!(!s.has_messages(0));
+        assert_eq!(s.pending(), vec![1, 3]);
+        let mut buf = Vec::new();
+        s.take_into(1, &mut buf);
+        assert_eq!(buf, vec![10, 11]);
+        assert!(!s.has_messages(1));
+        assert_eq!(s.pending(), vec![3]);
+    }
+
+    #[test]
+    fn msgstore_combining() {
+        let mut s: MsgStore<f32> = MsgStore::new(2);
+        let min = |a: f32, b: f32| a.min(b);
+        s.push_combined(0, 5.0, Some(min));
+        s.push_combined(0, 3.0, Some(min));
+        s.push_combined(0, 9.0, Some(min));
+        let mut buf = Vec::new();
+        s.take_into(0, &mut buf);
+        assert_eq!(buf, vec![3.0]);
+    }
+
+    #[test]
+    fn outbox_sender_side_combining_counts() {
+        let mut o: Outbox<f32> = Outbox::new(Some(|a: f32, b: f32| a.min(b)));
+        o.push(1, 0, 100, 5.0);
+        o.push(1, 0, 101, 3.0); // same destination -> combined
+        o.push(2, 0, 100, 7.0);
+        assert_eq!(o.len(), 2);
+        assert_eq!(o.peer_count(0), 2);
+        let mut d = o.drain();
+        d.sort_by_key(|&(p, l, _)| (p, l));
+        assert_eq!(d, vec![(1, 0, 3.0), (2, 0, 7.0)]);
+    }
+
+    #[test]
+    fn outbox_source_combine_keeps_latest() {
+        let mut o: Outbox<u32> = Outbox::new(None);
+        o.push(1, 0, 7, 100);
+        o.push(1, 0, 7, 200); // same (src, dest): keep this one
+        o.push(1, 0, 8, 300); // different src: kept
+        o.source_combine(SourceCombine::KeepLatest);
+        let mut d = o.drain();
+        d.sort_by_key(|&(_, _, m)| m);
+        assert_eq!(d, vec![(1, 0, 200), (1, 0, 300)]);
+    }
+
+    #[test]
+    fn outbox_keepall_preserves_everything() {
+        let mut o: Outbox<u32> = Outbox::new(None);
+        o.push(1, 0, 7, 100);
+        o.push(1, 0, 7, 200);
+        o.source_combine(SourceCombine::KeepAll);
+        assert_eq!(o.len(), 2);
+    }
+
+    #[test]
+    fn wire_bytes_include_overhead() {
+        let mut o: Outbox<f32> = Outbox::new(None);
+        o.push(1, 0, 0, 1.0);
+        assert_eq!(o.wire_bytes(), 4 + MSG_WIRE_OVERHEAD);
+    }
+}

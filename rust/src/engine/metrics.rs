@@ -1,0 +1,106 @@
+//! Execution metrics: the three quantities the paper reports for every
+//! experiment (global iterations I, network messages M, time T) plus the
+//! compute/communication/synchronization decomposition of Figure 1.
+
+use std::time::Duration;
+
+/// Metrics of one engine run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    /// Global iterations = barrier synchronizations (supersteps for
+    /// Hama/AM-Hama; hybrid iterations for GraphHP). Paper column `I`.
+    pub global_iterations: u64,
+    /// Total (pseudo-)supersteps executed across all partitions,
+    /// including GraphHP's in-memory pseudo-supersteps.
+    pub supersteps_total: u64,
+    /// Messages that crossed the simulated network. Paper column `M`.
+    pub network_messages: u64,
+    /// Bytes that crossed the simulated network.
+    pub network_bytes: u64,
+    /// Messages delivered in memory within a partition.
+    pub local_messages: u64,
+    /// `Compute()` invocations.
+    pub vertex_computations: u64,
+    /// Measured compute time, averaged over workers per superstep and
+    /// summed (the "computation" slice of Fig. 1).
+    pub compute_time: Duration,
+    /// Simulated communication time (serialization + wire), averaged
+    /// over workers per superstep and summed.
+    pub comm_time: Duration,
+    /// Synchronization time: barrier latency + idle waiting for the
+    /// slowest worker, averaged over workers per superstep and summed.
+    pub sync_time: Duration,
+    /// Simulated cluster wall-clock: sum over supersteps of
+    /// (slowest worker + barrier). Paper column `T`.
+    pub elapsed: Duration,
+    /// Checkpoints taken.
+    pub checkpoints: u64,
+    /// Simulated worker failures recovered from.
+    pub recoveries: u64,
+}
+
+impl Metrics {
+    /// Fraction of elapsed spent in synchronization (Fig. 1 y-axis).
+    pub fn sync_fraction(&self) -> f64 {
+        let e = self.elapsed.as_secs_f64();
+        if e == 0.0 {
+            0.0
+        } else {
+            self.sync_time.as_secs_f64() / e
+        }
+    }
+
+    /// Fraction of elapsed spent in communication.
+    pub fn comm_fraction(&self) -> f64 {
+        let e = self.elapsed.as_secs_f64();
+        if e == 0.0 {
+            0.0
+        } else {
+            self.comm_time.as_secs_f64() / e
+        }
+    }
+
+    /// Combined sync+comm overhead fraction (Fig. 1 headline number).
+    pub fn overhead_fraction(&self) -> f64 {
+        self.sync_fraction() + self.comm_fraction()
+    }
+
+    /// Paper-style one-liner: `I=.. M=.. T=..`.
+    pub fn summary(&self) -> String {
+        format!(
+            "I={} M={} T={:.3}s (compute {:.1}% comm {:.1}% sync {:.1}%)",
+            self.global_iterations,
+            self.network_messages,
+            self.elapsed.as_secs_f64(),
+            100.0 * (1.0 - self.overhead_fraction()),
+            100.0 * self.comm_fraction(),
+            100.0 * self.sync_fraction(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fractions_sum_sanely() {
+        let m = Metrics {
+            elapsed: Duration::from_secs(10),
+            sync_time: Duration::from_secs(6),
+            comm_time: Duration::from_secs(2),
+            compute_time: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.sync_fraction() - 0.6).abs() < 1e-9);
+        assert!((m.comm_fraction() - 0.2).abs() < 1e-9);
+        assert!((m.overhead_fraction() - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_elapsed_is_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.sync_fraction(), 0.0);
+        assert_eq!(m.overhead_fraction(), 0.0);
+    }
+}

@@ -1,0 +1,133 @@
+//! The GraphHP execution engines and the vertex-centric BSP programming
+//! interface.
+//!
+//! Programming interface (paper §3): users implement [`VertexProgram`]
+//! (the `Vertex.Compute()` of Pregel/Hama) optionally with a message
+//! combiner and a GraphHP `SourceCombine` policy, plus [`Aggregators`]
+//! for global communication.
+//!
+//! Execution engines (paper §4, §7):
+//! - [`hama::run_hama`] — the standard BSP model (one superstep = one
+//!   global barrier + full message exchange);
+//! - [`am_hama::run_am_hama`] — BSP + asynchronous in-memory messaging
+//!   within a partition (Grace-style, the paper's AM-Hama baseline);
+//! - [`graphhp::run_graphhp`] — the paper's hybrid model: per global
+//!   iteration a *global phase* over boundary vertices then a *local
+//!   phase* of pseudo-supersteps until the partition quiesces;
+//! - [`giraphpp`] — a graph-centric (Giraph++-style) engine;
+//! - [`graphlab`] — GraphLab-style sync (pull/GAS) and async engines.
+//!
+//! All engines execute over a [`crate::graph::DistGraph`] and account
+//! wall-clock into compute/communication/synchronization buckets under
+//! the simulated cluster cost model of [`netsim`] (the stand-in for the
+//! paper's 13-machine Ethernet cluster — DESIGN.md §2).
+
+pub mod aggregator;
+pub mod am_hama;
+pub mod checkpoint;
+pub mod context;
+pub mod giraphpp;
+pub mod graphhp;
+pub mod graphlab;
+pub mod hama;
+pub mod messages;
+pub mod metrics;
+pub mod netsim;
+pub mod program;
+pub mod state;
+
+pub use aggregator::{AggOp, Aggregators};
+pub use context::VertexContext;
+pub use metrics::Metrics;
+pub use netsim::NetSimConfig;
+pub use program::{SourceCombine, VertexProgram};
+
+use crate::graph::DistGraph;
+
+/// Which engine executed a run (for reporting).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Hama,
+    AmHama,
+    GraphHP,
+    GiraphPP,
+    GraphLabSync,
+    GraphLabAsync,
+}
+
+impl std::fmt::Display for EngineKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            EngineKind::Hama => "Hama",
+            EngineKind::AmHama => "AM-Hama",
+            EngineKind::GraphHP => "GraphHP",
+            EngineKind::GiraphPP => "Giraph++",
+            EngineKind::GraphLabSync => "GraphLab(Sync)",
+            EngineKind::GraphLabAsync => "GraphLab(Async)",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Engine configuration shared by all engines (fields irrelevant to an
+/// engine are ignored by it).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Hard cap on global iterations / supersteps (safety valve).
+    pub max_iterations: u64,
+    /// GraphHP: do boundary vertices participate in local phases?
+    /// (paper §4.2 — activate for incremental computations).
+    pub boundary_in_local_phase: bool,
+    /// Asynchronous in-memory messaging within a (pseudo-)superstep
+    /// (paper §4.2 last ¶; always on for AM-Hama).
+    pub async_local_messaging: bool,
+    /// Hard cap on pseudo-supersteps per local phase (safety valve).
+    pub max_pseudo_supersteps: u64,
+    /// Simulated cluster cost model.
+    pub net: NetSimConfig,
+    /// Seed for per-vertex randomness (e.g. bipartite matching).
+    pub seed: u64,
+    /// Checkpoint every N global iterations (None = off).
+    pub checkpoint_interval: Option<u64>,
+    /// Directory for persisted checkpoints (None = keep in memory only).
+    pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Deterministic fault injection: simulate losing a worker at the
+    /// start of the given global iteration (GraphHP engine only). The
+    /// engine recovers from the latest checkpoint, as §5.3.
+    pub inject_failure_at: Option<u64>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_iterations: 1_000_000,
+            boundary_in_local_phase: true,
+            async_local_messaging: true,
+            max_pseudo_supersteps: 1_000_000,
+            net: NetSimConfig::default(),
+            seed: 42,
+            checkpoint_interval: None,
+            checkpoint_dir: None,
+            inject_failure_at: None,
+        }
+    }
+}
+
+/// Result of an engine run: final vertex values (indexed by global vertex
+/// id) plus execution metrics.
+pub struct RunResult<V> {
+    pub values: Vec<V>,
+    pub metrics: Metrics,
+}
+
+/// Gather per-partition values back into a global-id-indexed vector.
+pub(crate) fn gather_values<V: Clone>(dg: &DistGraph, parts: &[Vec<V>]) -> Vec<V> {
+    let mut out: Vec<Option<V>> = vec![None; dg.num_vertices];
+    for (p, vals) in parts.iter().enumerate() {
+        for (lv, v) in vals.iter().enumerate() {
+            let gid = dg.parts[p].global_ids[lv];
+            out[gid as usize] = Some(v.clone());
+        }
+    }
+    out.into_iter().map(|v| v.expect("vertex missing from every partition")).collect()
+}

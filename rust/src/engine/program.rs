@@ -1,0 +1,64 @@
+//! The vertex-centric programming interface (paper §3, §5).
+
+use crate::graph::VertexId;
+use crate::util::Codec;
+
+use super::context::VertexContext;
+
+/// GraphHP's `SourceCombine()` policy: how messages buffered between
+/// global iterations that originate from the *same source vertex* and
+/// target the same destination are merged (paper §5). Only consulted when
+/// [`VertexProgram::combiner`] is `None` (a full combiner subsumes it).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub enum SourceCombine {
+    /// Keep every message (no merging).
+    #[default]
+    KeepAll,
+    /// Keep only the latest message per (source, destination) pair —
+    /// the GraphHP default for value-propagation algorithms.
+    KeepLatest,
+}
+
+/// A vertex-centric BSP program: the `Vertex` subclass of Pregel/Hama.
+///
+/// The same `compute` runs unmodified on every engine — standard BSP
+/// supersteps, AM-Hama asynchronous supersteps, and GraphHP global/local
+/// phases — which is the paper's central interface claim.
+pub trait VertexProgram: Sync {
+    /// Vertex value type (`getValue()`/`setValue()`).
+    type V: Clone + Send + Sync + Codec;
+    /// Message type.
+    type M: Clone + Send + Sync + Codec;
+
+    /// Initial vertex value, assigned before superstep 0.
+    fn init(&self, vertex: VertexId, out_degree: u32) -> Self::V;
+
+    /// The user-defined `Compute()` (paper §3): runs once per active
+    /// vertex per (pseudo-)superstep, reading the messages delivered to
+    /// the vertex and the vertex state through `ctx`.
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>)
+    where
+        Self: Sized;
+
+    /// Optional `Combine()`: merge two messages bound for the same
+    /// destination vertex into one. Must be commutative + associative.
+    fn combiner(&self) -> Option<fn(Self::M, Self::M) -> Self::M> {
+        None
+    }
+
+    /// GraphHP `SourceCombine()` policy (see [`SourceCombine`]).
+    fn source_combine(&self) -> SourceCombine {
+        SourceCombine::default()
+    }
+
+    /// Number of f64 aggregators this program uses (ids `0..n`).
+    fn num_aggregators(&self) -> usize {
+        0
+    }
+
+    /// Aggregator reduce ops, queried once at startup for ids
+    /// `0..num_aggregators()`.
+    fn aggregator_op(&self, _id: usize) -> super::AggOp {
+        super::AggOp::Sum
+    }
+}

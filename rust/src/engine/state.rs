@@ -1,0 +1,127 @@
+//! Per-partition runtime state shared by all push-based engines.
+
+use crate::graph::{DistGraph, PartGraph};
+
+use super::messages::MsgStore;
+use super::program::VertexProgram;
+
+/// Mutable state a worker keeps for one partition.
+pub struct PartitionRuntime<P: VertexProgram> {
+    /// Vertex values (by local index).
+    pub values: Vec<P::V>,
+    /// voteToHalt flags.
+    pub halted: Vec<bool>,
+    /// Incoming messages for the current (pseudo-)superstep.
+    pub cur: MsgStore<P::M>,
+    /// Incoming messages for the next (pseudo-)superstep.
+    pub nxt: MsgStore<P::M>,
+    /// Frontier for the next (pseudo-)superstep: vertices that must
+    /// compute (not halted, or received a message).
+    pub next_frontier: Vec<u32>,
+    in_next_frontier: Vec<bool>,
+}
+
+impl<P: VertexProgram> PartitionRuntime<P> {
+    /// Initialize values via `program.init` for every owned vertex; all
+    /// vertices start active (standard BSP).
+    pub fn new(program: &P, part: &PartGraph) -> Self {
+        let n = part.num_vertices();
+        let values = (0..n)
+            .map(|lv| program.init(part.global_ids[lv], part.out_degree[lv]))
+            .collect();
+        PartitionRuntime {
+            values,
+            halted: vec![false; n],
+            cur: MsgStore::new(n),
+            nxt: MsgStore::new(n),
+            next_frontier: Vec::new(),
+            in_next_frontier: vec![false; n],
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Mark `lv` to compute next (pseudo-)superstep.
+    pub fn schedule_next(&mut self, lv: usize) {
+        if !self.in_next_frontier[lv] {
+            self.in_next_frontier[lv] = true;
+            self.next_frontier.push(lv as u32);
+        }
+    }
+
+    /// Swap message stores and take the next frontier for this step.
+    pub fn begin_step(&mut self) -> Vec<u32> {
+        std::mem::swap(&mut self.cur, &mut self.nxt);
+        for &lv in &self.next_frontier {
+            self.in_next_frontier[lv as usize] = false;
+        }
+        std::mem::take(&mut self.next_frontier)
+    }
+
+    /// A vertex is live if it has not halted or has pending messages.
+    pub fn is_live(&self, lv: usize) -> bool {
+        !self.halted[lv] || self.cur.has_messages(lv)
+    }
+
+    /// True when nothing remains to do in this partition:
+    /// all halted and no undelivered messages.
+    pub fn quiesced(&mut self) -> bool {
+        self.next_frontier.is_empty() && self.nxt.is_empty() && self.cur.is_empty()
+    }
+}
+
+/// Build the runtime state for every partition of `dg`.
+pub fn init_runtimes<P: VertexProgram>(program: &P, dg: &DistGraph) -> Vec<PartitionRuntime<P>> {
+    dg.parts.iter().map(|part| PartitionRuntime::new(program, part)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::context::VertexContext;
+    use crate::graph::{generators, DistGraph};
+    use crate::partition::hash_partition;
+
+    struct Noop;
+    impl VertexProgram for Noop {
+        type V = u32;
+        type M = u32;
+        fn init(&self, v: crate::graph::VertexId, _d: u32) -> u32 {
+            v * 2
+        }
+        fn compute(&self, _ctx: &mut VertexContext<'_, Self>) {}
+    }
+
+    #[test]
+    fn init_assigns_program_values() {
+        let g = generators::erdos_renyi(20, 40, 1);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let rts = init_runtimes(&Noop, &dg);
+        for (p, rt) in rts.iter().enumerate() {
+            for (lv, &v) in rt.values.iter().enumerate() {
+                assert_eq!(v, dg.parts[p].global_ids[lv] * 2);
+            }
+            assert!(rt.halted.iter().all(|&h| !h));
+        }
+    }
+
+    #[test]
+    fn frontier_dedup_and_swap() {
+        let g = generators::erdos_renyi(5, 8, 2);
+        let dg = DistGraph::new(&g, &vec![0; 5], 1);
+        let mut rt = PartitionRuntime::new(&Noop, &dg.parts[0]);
+        rt.schedule_next(2);
+        rt.schedule_next(2);
+        rt.schedule_next(4);
+        let f = rt.begin_step();
+        assert_eq!(f, vec![2, 4]);
+        assert!(rt.next_frontier.is_empty());
+        // messages pushed to nxt become cur after swap
+        rt.nxt.push(1, 9);
+        let _ = rt.begin_step();
+        assert!(rt.cur.has_messages(1));
+    }
+}

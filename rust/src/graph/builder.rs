@@ -1,0 +1,112 @@
+//! Edge-list accumulator that sorts into CSR.
+
+use super::csr::{Graph, VertexId};
+
+/// Accumulates (src, dst, weight) triples and builds a [`Graph`].
+pub struct GraphBuilder {
+    num_vertices: usize,
+    edges: Vec<(VertexId, VertexId, f32)>,
+}
+
+impl GraphBuilder {
+    pub fn new(num_vertices: usize) -> Self {
+        GraphBuilder { num_vertices, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(num_vertices: usize, num_edges: usize) -> Self {
+        GraphBuilder { num_vertices, edges: Vec::with_capacity(num_edges) }
+    }
+
+    /// Add a directed edge. Panics if an endpoint is out of range.
+    pub fn add_edge(&mut self, src: VertexId, dst: VertexId, weight: f32) {
+        assert!((src as usize) < self.num_vertices, "src {src} out of range");
+        assert!((dst as usize) < self.num_vertices, "dst {dst} out of range");
+        self.edges.push((src, dst, weight));
+    }
+
+    /// Add both directions with the same weight.
+    pub fn add_undirected(&mut self, a: VertexId, b: VertexId, weight: f32) {
+        self.add_edge(a, b, weight);
+        self.add_edge(b, a, weight);
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Drop exact duplicate (src, dst) pairs, keeping the first weight.
+    pub fn dedup(&mut self) {
+        self.edges.sort_by_key(|&(s, d, _)| (s, d));
+        self.edges.dedup_by_key(|&mut (s, d, _)| (s, d));
+    }
+
+    /// Build the CSR graph (counting sort by source; stable for parallel
+    /// edges).
+    pub fn build(self) -> Graph {
+        let nv = self.num_vertices;
+        let mut offsets = vec![0usize; nv + 1];
+        for &(s, _, _) in &self.edges {
+            offsets[s as usize + 1] += 1;
+        }
+        for i in 0..nv {
+            offsets[i + 1] += offsets[i];
+        }
+        let ne = self.edges.len();
+        let mut pos = offsets.clone();
+        let mut targets = vec![0 as VertexId; ne];
+        let mut weights = vec![0f32; ne];
+        for (s, d, w) in self.edges {
+            let p = pos[s as usize];
+            targets[p] = d;
+            weights[p] = w;
+            pos[s as usize] += 1;
+        }
+        Graph { offsets, targets, weights }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_groups_by_source() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(2, 0, 1.0);
+        b.add_edge(0, 1, 2.0);
+        b.add_edge(2, 1, 3.0);
+        let g = b.build();
+        g.validate().unwrap();
+        assert_eq!(g.out_edges(0).0, &[1]);
+        assert_eq!(g.out_edges(1).0, &[] as &[VertexId]);
+        assert_eq!(g.out_edges(2).0, &[0, 1]);
+    }
+
+    #[test]
+    fn undirected_adds_both() {
+        let mut b = GraphBuilder::new(2);
+        b.add_undirected(0, 1, 5.0);
+        let g = b.build();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.out_edges(0).0, &[1]);
+        assert_eq!(g.out_edges(1).0, &[0]);
+    }
+
+    #[test]
+    fn dedup_removes_parallel_edges() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 1, 9.0);
+        b.dedup();
+        let g = b.build();
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.out_edges(0).1, &[1.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn add_edge_bounds_checked() {
+        let mut b = GraphBuilder::new(2);
+        b.add_edge(0, 5, 1.0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Compressed-sparse-row directed graph with f32 edge weights.
+//!
+//! This is the BSP data model of the paper §3: a directed graph whose
+//! edges are associated with source vertices (adjacency lists of
+//! out-edges). Vertex/edge *state* lives in the engines; this structure is
+//! immutable topology.
+
+/// Vertex identifier. The paper's datasets peak at ~24 M vertices; u32 is
+/// plenty and halves the memory of adjacency storage.
+pub type VertexId = u32;
+
+/// Immutable directed graph in CSR form.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Graph {
+    /// `offsets[v]..offsets[v+1]` indexes `targets`/`weights` for v's
+    /// out-edges. `offsets.len() == num_vertices() + 1`.
+    pub offsets: Vec<usize>,
+    /// Out-edge target vertices, grouped by source.
+    pub targets: Vec<VertexId>,
+    /// Out-edge weights, parallel to `targets`.
+    pub weights: Vec<f32>,
+}
+
+impl Graph {
+    /// Number of vertices.
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of directed edges.
+    pub fn num_edges(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// Out-degree of `v`.
+    pub fn out_degree(&self, v: VertexId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    /// Out-edges of `v` as parallel (targets, weights) slices.
+    pub fn out_edges(&self, v: VertexId) -> (&[VertexId], &[f32]) {
+        let (s, e) = (self.offsets[v as usize], self.offsets[v as usize + 1]);
+        (&self.targets[s..e], &self.weights[s..e])
+    }
+
+    /// In-degrees of all vertices (one O(E) pass).
+    pub fn in_degrees(&self) -> Vec<u32> {
+        let mut deg = vec![0u32; self.num_vertices()];
+        for &t in &self.targets {
+            deg[t as usize] += 1;
+        }
+        deg
+    }
+
+    /// Reverse graph (all edges flipped), preserving weights.
+    pub fn reversed(&self) -> Graph {
+        let nv = self.num_vertices();
+        let mut offsets = vec![0usize; nv + 1];
+        for &t in &self.targets {
+            offsets[t as usize + 1] += 1;
+        }
+        for i in 0..nv {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut pos = offsets.clone();
+        let mut targets = vec![0 as VertexId; self.num_edges()];
+        let mut weights = vec![0f32; self.num_edges()];
+        for v in 0..nv as VertexId {
+            let (ts, ws) = self.out_edges(v);
+            for (&t, &w) in ts.iter().zip(ws) {
+                let p = pos[t as usize];
+                targets[p] = v;
+                weights[p] = w;
+                pos[t as usize] += 1;
+            }
+        }
+        Graph { offsets, targets, weights }
+    }
+
+    /// Structural validation: monotone offsets, in-range targets.
+    /// Used by tests and after deserialization.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.is_empty() {
+            return Err("empty offsets".into());
+        }
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        if *self.offsets.last().unwrap() != self.targets.len() {
+            return Err("last offset != num edges".into());
+        }
+        if self.targets.len() != self.weights.len() {
+            return Err("targets/weights length mismatch".into());
+        }
+        for w in self.offsets.windows(2) {
+            if w[0] > w[1] {
+                return Err("offsets not monotone".into());
+            }
+        }
+        let nv = self.num_vertices() as VertexId;
+        for &t in &self.targets {
+            if t >= nv {
+                return Err(format!("target {t} out of range (nv={nv})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Total weight of all edges.
+    pub fn total_weight(&self) -> f64 {
+        self.weights.iter().map(|&w| w as f64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn diamond() -> Graph {
+        // 0 -> 1 (1.0), 0 -> 2 (2.0), 1 -> 3 (3.0), 2 -> 3 (4.0)
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 2, 2.0);
+        b.add_edge(1, 3, 3.0);
+        b.add_edge(2, 3, 4.0);
+        b.build()
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = diamond();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.out_degree(3), 0);
+        let (ts, ws) = g.out_edges(0);
+        assert_eq!(ts, &[1, 2]);
+        assert_eq!(ws, &[1.0, 2.0]);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn in_degrees() {
+        let g = diamond();
+        assert_eq!(g.in_degrees(), vec![0, 1, 1, 2]);
+    }
+
+    #[test]
+    fn reversed_roundtrip() {
+        let g = diamond();
+        let r = g.reversed();
+        r.validate().unwrap();
+        assert_eq!(r.num_edges(), g.num_edges());
+        assert_eq!(r.in_degrees(), vec![2, 1, 1, 0]);
+        // reversing twice restores the edge multiset
+        let rr = r.reversed();
+        let mut a: Vec<_> = (0..4u32)
+            .flat_map(|v| {
+                let (ts, ws) = g.out_edges(v);
+                ts.iter().zip(ws).map(move |(&t, &w)| (v, t, w as u32)).collect::<Vec<_>>()
+            })
+            .collect();
+        let mut b: Vec<_> = (0..4u32)
+            .flat_map(|v| {
+                let (ts, ws) = rr.out_edges(v);
+                ts.iter().zip(ws).map(move |(&t, &w)| (v, t, w as u32)).collect::<Vec<_>>()
+            })
+            .collect();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn validate_catches_corruption() {
+        let mut g = diamond();
+        g.targets[0] = 99;
+        assert!(g.validate().is_err());
+        let mut g = diamond();
+        g.offsets[1] = 10;
+        assert!(g.validate().is_err());
+    }
+}

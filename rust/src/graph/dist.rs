@@ -1,0 +1,241 @@
+//! Distributed (partitioned) view of a graph.
+//!
+//! [`DistGraph`] is built once from a [`Graph`] + a partition assignment
+//! and is what every engine executes over. It precomputes exactly the
+//! metadata the paper's platform keeps per worker (§5.1):
+//!
+//! - each vertex's partition and partition-local index;
+//! - per-edge location indicators (same-partition target + its local
+//!   index, or remote partition);
+//! - the local/boundary classification of Definition 1: a vertex is
+//!   **boundary** iff it has at least one in-edge whose source lives in a
+//!   different partition, else **local**.
+
+use super::csr::{Graph, VertexId};
+
+/// One out-edge inside a partition, with the location indicator resolved.
+#[derive(Clone, Copy, Debug)]
+pub struct Edge {
+    /// Global id of the target vertex.
+    pub target: VertexId,
+    /// Partition holding the target.
+    pub target_part: u32,
+    /// Target's index within its partition's vertex array.
+    pub target_local: u32,
+    /// Edge weight.
+    pub weight: f32,
+}
+
+/// One partition of the distributed graph (the unit a worker owns).
+#[derive(Clone, Debug)]
+pub struct PartGraph {
+    /// This partition's id.
+    pub part: u32,
+    /// Global ids of the vertices owned by this partition.
+    pub global_ids: Vec<VertexId>,
+    /// CSR offsets over `edges`, indexed by local vertex index.
+    pub offsets: Vec<usize>,
+    /// Out-edges of owned vertices with resolved locations.
+    pub edges: Vec<Edge>,
+    /// Definition 1 classification: `true` iff the vertex has an in-edge
+    /// from another partition.
+    pub is_boundary: Vec<bool>,
+    /// Global out-degree of each owned vertex (same as local CSR degree,
+    /// kept for O(1) access in vertex programs).
+    pub out_degree: Vec<u32>,
+}
+
+impl PartGraph {
+    pub fn num_vertices(&self) -> usize {
+        self.global_ids.len()
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Out-edges of local vertex `lv`.
+    pub fn out_edges(&self, lv: usize) -> &[Edge] {
+        &self.edges[self.offsets[lv]..self.offsets[lv + 1]]
+    }
+
+    /// Number of boundary vertices.
+    pub fn num_boundary(&self) -> usize {
+        self.is_boundary.iter().filter(|&&b| b).count()
+    }
+
+    /// Number of internal (same-partition) edges.
+    pub fn num_internal_edges(&self) -> usize {
+        self.edges.iter().filter(|e| e.target_part == self.part).count()
+    }
+}
+
+/// The fully-resolved distributed graph.
+#[derive(Clone, Debug)]
+pub struct DistGraph {
+    pub parts: Vec<PartGraph>,
+    /// Global vertex id -> (partition, local index).
+    pub location: Vec<(u32, u32)>,
+    /// Total vertex count.
+    pub num_vertices: usize,
+    /// Total edge count.
+    pub num_edges: usize,
+}
+
+impl DistGraph {
+    /// Partition `g` according to `assignment` (vertex -> partition id,
+    /// all values < `num_parts`). Vertices keep their relative order
+    /// within a partition.
+    pub fn new(g: &Graph, assignment: &[u32], num_parts: usize) -> DistGraph {
+        let nv = g.num_vertices();
+        assert_eq!(assignment.len(), nv, "assignment length != num vertices");
+        assert!(num_parts > 0);
+
+        // location table
+        let mut location = vec![(0u32, 0u32); nv];
+        let mut counts = vec![0u32; num_parts];
+        for v in 0..nv {
+            let p = assignment[v] as usize;
+            assert!(p < num_parts, "assignment[{v}]={p} >= num_parts");
+            location[v] = (p as u32, counts[p]);
+            counts[p] += 1;
+        }
+
+        let mut parts: Vec<PartGraph> = (0..num_parts)
+            .map(|p| PartGraph {
+                part: p as u32,
+                global_ids: Vec::with_capacity(counts[p] as usize),
+                offsets: vec![0],
+                edges: Vec::new(),
+                is_boundary: Vec::new(),
+                out_degree: Vec::new(),
+            })
+            .collect();
+
+        for v in 0..nv as VertexId {
+            let (p, _) = location[v as usize];
+            let part = &mut parts[p as usize];
+            part.global_ids.push(v);
+            let (ts, ws) = g.out_edges(v);
+            for (&t, &w) in ts.iter().zip(ws) {
+                let (tp, tl) = location[t as usize];
+                part.edges.push(Edge { target: t, target_part: tp, target_local: tl, weight: w });
+            }
+            part.offsets.push(part.edges.len());
+            part.out_degree.push(ts.len() as u32);
+            part.is_boundary.push(false);
+        }
+
+        // Boundary classification: mark targets of cross-partition edges.
+        // (A vertex with an in-edge from a remote partition is boundary.)
+        let mut boundary = vec![false; nv];
+        for part in &parts {
+            for e in &part.edges {
+                if e.target_part != part.part {
+                    boundary[e.target as usize] = true;
+                }
+            }
+        }
+        for part in &mut parts {
+            for (i, &gid) in part.global_ids.iter().enumerate() {
+                part.is_boundary[i] = boundary[gid as usize];
+            }
+        }
+
+        DistGraph { parts, location, num_vertices: nv, num_edges: g.num_edges() }
+    }
+
+    pub fn num_parts(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Total number of cross-partition edges.
+    pub fn edge_cut(&self) -> usize {
+        self.parts
+            .iter()
+            .map(|p| p.edges.iter().filter(|e| e.target_part != p.part).count())
+            .sum()
+    }
+
+    /// Total number of boundary vertices.
+    pub fn num_boundary(&self) -> usize {
+        self.parts.iter().map(|p| p.num_boundary()).sum()
+    }
+
+    /// Largest partition size over smallest (balance indicator); inf-like
+    /// value if a partition is empty.
+    pub fn balance(&self) -> f64 {
+        let sizes: Vec<usize> = self.parts.iter().map(|p| p.num_vertices()).collect();
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        let avg = self.num_vertices as f64 / self.num_parts() as f64;
+        if avg == 0.0 {
+            return 1.0;
+        }
+        max / avg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::builder::GraphBuilder;
+
+    fn path4() -> Graph {
+        // 0 -> 1 -> 2 -> 3
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(2, 3, 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn partitioning_preserves_structure() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
+        assert_eq!(dg.num_parts(), 2);
+        assert_eq!(dg.parts[0].global_ids, vec![0, 1]);
+        assert_eq!(dg.parts[1].global_ids, vec![2, 3]);
+        assert_eq!(dg.num_edges, 3);
+        assert_eq!(dg.edge_cut(), 1); // only 1 -> 2 crosses
+    }
+
+    #[test]
+    fn location_indicators_resolved() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
+        let e = &dg.parts[0].out_edges(1)[0]; // edge 1 -> 2
+        assert_eq!(e.target, 2);
+        assert_eq!(e.target_part, 1);
+        assert_eq!(e.target_local, 0);
+        assert_eq!(dg.location[3], (1, 1));
+    }
+
+    #[test]
+    fn boundary_classification_def1() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
+        // vertex 2 has in-edge from partition 0 => boundary; others local
+        assert!(!dg.parts[0].is_boundary[0]); // v0: no in-edges
+        assert!(!dg.parts[0].is_boundary[1]); // v1: in-edge from v0, same part
+        assert!(dg.parts[1].is_boundary[0]); // v2: in-edge from remote v1
+        assert!(!dg.parts[1].is_boundary[1]); // v3: in-edge from v2, same part
+        assert_eq!(dg.num_boundary(), 1);
+    }
+
+    #[test]
+    fn single_partition_has_no_boundary() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 0, 0], 1);
+        assert_eq!(dg.num_boundary(), 0);
+        assert_eq!(dg.edge_cut(), 0);
+        assert_eq!(dg.balance(), 1.0);
+    }
+
+    #[test]
+    fn balance_reflects_skew() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 0, 1], 2);
+        assert_eq!(dg.balance(), 1.5); // max 3 / avg 2
+    }
+}

@@ -1,0 +1,338 @@
+//! Synthetic workload generators standing in for the paper's datasets.
+//!
+//! The paper evaluates on USA road networks (SSSP), web crawls
+//! (PageRank), a patent citation network and a Delaunay triangulation
+//! (bipartite matching). Those files are not available offline, so each
+//! generator reproduces the *structural property that drives the
+//! experiment* (DESIGN.md §2):
+//!
+//! - [`road`]: high diameter, low degree — BSP SSSP needs thousands of
+//!   supersteps, the regime of paper Fig. 3 / Table 2;
+//! - [`powerlaw`]: heavy-tail in-degrees — PageRank convergence behaviour
+//!   of web-Google / uk-2002 (Fig. 4/5);
+//! - [`bipartite`]: two-sided random graph for maximal matching (Table 3);
+//! - [`delaunay_like`]: planar triangulation-style lattice, the
+//!   delaunay_n24 stand-in (Table 3);
+//! - [`erdos_renyi`]: plain G(n, m) used by tests and property harnesses.
+
+use super::builder::GraphBuilder;
+use super::csr::{Graph, VertexId};
+use crate::util::Rng;
+
+/// Road-network-like graph: a `rows x cols` grid with 4-neighborhood,
+/// random weights, a small fraction of missing links (rivers/dead ends)
+/// and sparse long-range shortcuts (highways). Edges are bidirectional
+/// (two directed edges), like the USA road datasets.
+///
+/// Diameter is Θ(rows + cols), which is what makes standard-BSP SSSP take
+/// thousands of supersteps on it.
+pub fn road(rows: usize, cols: usize, seed: u64) -> Graph {
+    let n = rows * cols;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, n * 4);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            // right neighbor
+            if c + 1 < cols && !rng.chance(0.05) {
+                let w = rng.f32_range(1.0, 10.0);
+                b.add_undirected(id(r, c), id(r, c + 1), w);
+            }
+            // down neighbor
+            if r + 1 < rows && !rng.chance(0.05) {
+                let w = rng.f32_range(1.0, 10.0);
+                b.add_undirected(id(r, c), id(r + 1, c), w);
+            }
+        }
+    }
+    // Sparse highways: ~0.1% of vertices get a long-range link. These cut
+    // a few shortest paths but keep the diameter high.
+    let highways = (n / 1000).max(1);
+    for _ in 0..highways {
+        let a = rng.index(n) as VertexId;
+        let c = rng.index(n) as VertexId;
+        if a != c {
+            let w = rng.f32_range(20.0, 50.0);
+            b.add_undirected(a, c, w);
+        }
+    }
+    b.build()
+}
+
+/// Web-like directed graph: heavy-tail in-degrees via preferential
+/// attachment PLUS host-level link locality. Real crawls (web-Google,
+/// uk-2002) have both properties: a few global hubs, and the large
+/// majority of links staying within a site/host neighborhood — which is
+/// exactly what makes them partitionable (low metis edge-cut) and lets
+/// GraphHP's local phase pay off. Vertex ids are crawl-ordered, so
+/// nearby ids ≈ same host.
+pub fn powerlaw(n: usize, avg_out: usize, seed: u64) -> Graph {
+    powerlaw_with_locality(n, avg_out, 0.8, 256, seed)
+}
+
+/// [`powerlaw`] with explicit locality: each link stays within a
+/// `window`-sized id neighborhood with probability `locality`, otherwise
+/// it goes to a global preferentially-attached target (hubs).
+pub fn powerlaw_with_locality(
+    n: usize,
+    avg_out: usize,
+    locality: f64,
+    window: usize,
+    seed: u64,
+) -> Graph {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, n * avg_out);
+    // Global preferential-attachment pool: each vertex once plus once per
+    // received global link (heavy tail by repetition).
+    let mut pool: Vec<VertexId> = Vec::with_capacity(n + n * avg_out / 4);
+    pool.push(0);
+    for v in 1..n as VertexId {
+        let outs = 1 + rng.index(avg_out * 2); // mean ~ avg_out
+        let mut targets: Vec<VertexId> = Vec::with_capacity(outs);
+        for _ in 0..outs {
+            let t = if rng.chance(locality) {
+                // intra-host link: uniform in the trailing id window
+                let lo = (v as usize).saturating_sub(window);
+                (lo + rng.index((v as usize - lo).max(1))) as VertexId
+            } else if rng.chance(0.8) {
+                // global hub link, preferential
+                pool[rng.index(pool.len())]
+            } else {
+                rng.index(v as usize) as VertexId
+            };
+            if t != v && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for &t in &targets {
+            b.add_edge(v, t, 1.0);
+            if rng.chance(1.0 - locality) {
+                pool.push(t);
+            }
+        }
+        pool.push(v);
+        // occasional local back-link so early vertices have out-edges too
+        if rng.chance(0.5) {
+            let lo = (v as usize).saturating_sub(window);
+            let t = (lo + rng.index((v as usize - lo).max(1))) as VertexId;
+            if t != v {
+                b.add_edge(t, v, 1.0);
+            }
+        }
+    }
+    b.dedup();
+    b.build()
+}
+
+/// Bipartite graph: `nl` left + `nr` right vertices (left ids
+/// `0..nl`, right ids `nl..nl+nr`), each left vertex linked to ~`avg_deg`
+/// random right vertices. Edges are stored in BOTH directions so request
+/// and grant/deny/accept messages all travel along graph edges (which
+/// keeps Definition 1's boundary classification sound for the matching
+/// algorithm — see DESIGN.md §3).
+pub fn bipartite(nl: usize, nr: usize, avg_deg: usize, seed: u64) -> Graph {
+    let n = nl + nr;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, nl * avg_deg * 2);
+    for l in 0..nl as VertexId {
+        let deg = 1 + rng.index(avg_deg * 2);
+        for _ in 0..deg {
+            let r = (nl + rng.index(nr)) as VertexId;
+            b.add_undirected(l, r, 1.0);
+        }
+    }
+    b.dedup();
+    b.build()
+}
+
+/// Delaunay-like planar graph: a jittered `rows x cols` point lattice
+/// triangulated with right/down/diagonal links — matching the local,
+/// planar, bounded-degree structure of the delaunay_nXX family. Each
+/// undirected edge is stored in both directions.
+pub fn delaunay_like(rows: usize, cols: usize, seed: u64) -> Graph {
+    let n = rows * cols;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, n * 6);
+    let id = |r: usize, c: usize| (r * cols + c) as VertexId;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols {
+                b.add_undirected(id(r, c), id(r, c + 1), 1.0);
+            }
+            if r + 1 < rows {
+                b.add_undirected(id(r, c), id(r + 1, c), 1.0);
+            }
+            // one of the two diagonals, at random — the triangulation edge
+            if r + 1 < rows && c + 1 < cols {
+                if rng.chance(0.5) {
+                    b.add_undirected(id(r, c), id(r + 1, c + 1), 1.0);
+                } else {
+                    b.add_undirected(id(r, c + 1), id(r + 1, c), 1.0);
+                }
+            }
+        }
+    }
+    b.build()
+}
+
+/// G(n, m): `m` uniformly random directed edges, no self-loops.
+pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Graph {
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, m);
+    for _ in 0..m {
+        loop {
+            let s = rng.index(n) as VertexId;
+            let t = rng.index(n) as VertexId;
+            if s != t {
+                b.add_edge(s, t, rng.f32_range(0.5, 5.0));
+                break;
+            }
+        }
+    }
+    b.build()
+}
+
+/// Random connected undirected graph: a random spanning tree plus `extra`
+/// random undirected edges. Used by tests that need reachability.
+pub fn connected(n: usize, extra: usize, seed: u64) -> Graph {
+    assert!(n >= 1);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, 2 * (n + extra));
+    let mut order: Vec<VertexId> = (0..n as VertexId).collect();
+    rng.shuffle(&mut order);
+    for i in 1..n {
+        let parent = order[rng.index(i)];
+        let w = rng.f32_range(1.0, 10.0);
+        b.add_undirected(order[i], parent, w);
+    }
+    for _ in 0..extra {
+        let a = rng.index(n) as VertexId;
+        let c = rng.index(n) as VertexId;
+        if a != c {
+            b.add_undirected(a, c, rng.f32_range(1.0, 10.0));
+        }
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn road_shape_and_validity() {
+        let g = road(20, 30, 1);
+        g.validate().unwrap();
+        assert_eq!(g.num_vertices(), 600);
+        // grid with ~5% dropped links, bidirectional
+        assert!(g.num_edges() > 1500 && g.num_edges() < 2600, "{}", g.num_edges());
+        // max degree small (4-neighborhood + rare highways)
+        let max_deg = (0..600u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg <= 8, "max_deg={max_deg}");
+    }
+
+    #[test]
+    fn road_deterministic() {
+        assert_eq!(road(10, 10, 7), road(10, 10, 7));
+        assert_ne!(road(10, 10, 7), road(10, 10, 8));
+    }
+
+    #[test]
+    fn powerlaw_has_heavy_tail() {
+        let g = powerlaw(3000, 5, 2);
+        g.validate().unwrap();
+        let ind = g.in_degrees();
+        let max_in = *ind.iter().max().unwrap();
+        let avg_in = ind.iter().map(|&d| d as f64).sum::<f64>() / ind.len() as f64;
+        // heavy tail: max in-degree far above the mean
+        assert!(max_in as f64 > 5.0 * avg_in, "max={max_in} avg={avg_in}");
+        // dropping locality concentrates the tail further
+        let g = powerlaw_with_locality(3000, 5, 0.0, 256, 2);
+        let ind = g.in_degrees();
+        let max_in = *ind.iter().max().unwrap();
+        let avg_in = ind.iter().map(|&d| d as f64).sum::<f64>() / ind.len() as f64;
+        assert!(max_in as f64 > 15.0 * avg_in, "max={max_in} avg={avg_in}");
+    }
+
+    #[test]
+    fn powerlaw_locality_gives_partitionable_structure() {
+        let g = powerlaw(4000, 5, 9);
+        let a = crate::partition::metis_partition(
+            &g,
+            8,
+            &crate::partition::MetisConfig::default(),
+        );
+        let s = crate::partition::PartitionStats::compute(&g, &a, 8);
+        // web-like locality => well below the random (1 - 1/k) ≈ 87% cut
+        assert!(s.cut_fraction < 0.65, "{s}");
+        let h = crate::partition::hash_partition(&g, 8);
+        let sh = crate::partition::PartitionStats::compute(&g, &h, 8);
+        assert!(s.edge_cut < sh.edge_cut, "metis {} vs hash {}", s.edge_cut, sh.edge_cut);
+    }
+
+    #[test]
+    fn bipartite_sides_only_cross_link() {
+        let (nl, nr) = (50, 40);
+        let g = bipartite(nl, nr, 3, 3);
+        g.validate().unwrap();
+        for v in 0..(nl + nr) as VertexId {
+            let left = (v as usize) < nl;
+            for &t in g.out_edges(v).0 {
+                let t_left = (t as usize) < nl;
+                assert_ne!(left, t_left, "edge within one side: {v}->{t}");
+            }
+        }
+    }
+
+    #[test]
+    fn bipartite_edges_are_symmetric() {
+        let g = bipartite(30, 30, 4, 9);
+        for v in 0..60u32 {
+            for &t in g.out_edges(v).0 {
+                assert!(g.out_edges(t).0.contains(&v), "missing reverse {t}->{v}");
+            }
+        }
+    }
+
+    #[test]
+    fn delaunay_is_planarish_bounded_degree() {
+        let g = delaunay_like(15, 15, 4);
+        g.validate().unwrap();
+        let max_deg = (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg <= 8, "max_deg={max_deg}");
+        // Euler-ish density: |E_undirected| <= 3n - 6
+        assert!(g.num_edges() / 2 <= 3 * g.num_vertices());
+    }
+
+    #[test]
+    fn erdos_renyi_counts() {
+        let g = erdos_renyi(100, 500, 5);
+        g.validate().unwrap();
+        assert_eq!(g.num_edges(), 500);
+        // no self loops
+        for v in 0..100u32 {
+            assert!(!g.out_edges(v).0.contains(&v));
+        }
+    }
+
+    #[test]
+    fn connected_is_connected() {
+        let g = connected(200, 50, 6);
+        g.validate().unwrap();
+        // BFS from 0 reaches everyone (undirected edges stored both ways)
+        let mut seen = vec![false; 200];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            for &t in g.out_edges(v).0 {
+                if !seen[t as usize] {
+                    seen[t as usize] = true;
+                    stack.push(t);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+}

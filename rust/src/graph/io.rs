@@ -1,0 +1,174 @@
+//! Graph I/O: a text edge-list format (interoperable, debuggable) and a
+//! compact binary format (fast reload for the larger bench graphs).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::builder::GraphBuilder;
+use super::csr::{Graph, VertexId};
+
+/// Write `src dst weight` lines, preceded by a `# vertices edges` header.
+pub fn write_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "# {} {}", g.num_vertices(), g.num_edges())?;
+    for v in 0..g.num_vertices() as VertexId {
+        let (ts, ws) = g.out_edges(v);
+        for (&t, &wt) in ts.iter().zip(ws) {
+            writeln!(w, "{v} {t} {wt}")?;
+        }
+    }
+    Ok(())
+}
+
+/// Read the format written by [`write_edge_list`]. Also accepts headerless
+/// files (vertex count inferred as max id + 1, weights default 1.0).
+pub fn read_edge_list(path: &Path) -> Result<Graph> {
+    let r = BufReader::new(File::open(path).with_context(|| format!("open {path:?}"))?);
+    let mut edges: Vec<(VertexId, VertexId, f32)> = Vec::new();
+    let mut declared_nv: Option<usize> = None;
+    for (lineno, line) in r.lines().enumerate() {
+        let line = line?;
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            let mut it = rest.split_whitespace();
+            if let (Some(nv), Some(_ne)) = (it.next(), it.next()) {
+                declared_nv = Some(nv.parse().context("header vertex count")?);
+            }
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let s: VertexId = match it.next() {
+            Some(x) => x.parse().with_context(|| format!("line {}", lineno + 1))?,
+            None => continue,
+        };
+        let t: VertexId = it
+            .next()
+            .with_context(|| format!("line {}: missing target", lineno + 1))?
+            .parse()?;
+        let w: f32 = match it.next() {
+            Some(x) => x.parse()?,
+            None => 1.0,
+        };
+        edges.push((s, t, w));
+    }
+    let nv = declared_nv.unwrap_or_else(|| {
+        edges.iter().map(|&(s, t, _)| s.max(t) as usize + 1).max().unwrap_or(0)
+    });
+    let mut b = GraphBuilder::with_capacity(nv, edges.len());
+    for (s, t, w) in edges {
+        b.add_edge(s, t, w);
+    }
+    let g = b.build();
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+const BIN_MAGIC: &[u8; 8] = b"GRAPHHP1";
+
+/// Compact binary format: magic, counts, then raw LE arrays.
+pub fn write_binary(g: &Graph, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.num_vertices() as u64).to_le_bytes())?;
+    w.write_all(&(g.num_edges() as u64).to_le_bytes())?;
+    for &o in &g.offsets {
+        w.write_all(&(o as u64).to_le_bytes())?;
+    }
+    for &t in &g.targets {
+        w.write_all(&t.to_le_bytes())?;
+    }
+    for &wt in &g.weights {
+        w.write_all(&wt.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+/// Read the format written by [`write_binary`].
+pub fn read_binary(path: &Path) -> Result<Graph> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("bad magic: not a graphhp binary graph");
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let nv = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let ne = u64::from_le_bytes(u64buf) as usize;
+    let mut offsets = Vec::with_capacity(nv + 1);
+    for _ in 0..=nv {
+        r.read_exact(&mut u64buf)?;
+        offsets.push(u64::from_le_bytes(u64buf) as usize);
+    }
+    let mut u32buf = [0u8; 4];
+    let mut targets = Vec::with_capacity(ne);
+    for _ in 0..ne {
+        r.read_exact(&mut u32buf)?;
+        targets.push(u32::from_le_bytes(u32buf));
+    }
+    let mut weights = Vec::with_capacity(ne);
+    for _ in 0..ne {
+        r.read_exact(&mut u32buf)?;
+        weights.push(f32::from_le_bytes(u32buf));
+    }
+    let g = Graph { offsets, targets, weights };
+    g.validate().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let g = generators::erdos_renyi(50, 200, 1);
+        let dir = std::env::temp_dir().join("graphhp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.txt");
+        write_edge_list(&g, &p).unwrap();
+        let g2 = read_edge_list(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = generators::powerlaw(300, 4, 2);
+        let dir = std::env::temp_dir().join("graphhp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("g.bin");
+        write_binary(&g, &p).unwrap();
+        let g2 = read_binary(&p).unwrap();
+        assert_eq!(g, g2);
+    }
+
+    #[test]
+    fn headerless_edge_list_parses() {
+        let dir = std::env::temp_dir().join("graphhp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("plain.txt");
+        std::fs::write(&p, "0 1\n1 2 2.5\n\n2 0 1.5\n").unwrap();
+        let g = read_edge_list(&p).unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.out_edges(0).1, &[1.0]);
+        assert_eq!(g.out_edges(1).1, &[2.5]);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("graphhp_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.bin");
+        std::fs::write(&p, b"NOTMAGIC garbage").unwrap();
+        assert!(read_binary(&p).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! Graph substrate: CSR graphs, builders, text/binary I/O, partitioned
+//! distributed views, and the synthetic workload generators that stand in
+//! for the paper's datasets (see DESIGN.md §2 for the substitution table).
+
+pub mod builder;
+pub mod csr;
+pub mod dist;
+pub mod generators;
+pub mod io;
+
+pub use builder::GraphBuilder;
+pub use csr::{Graph, VertexId};
+pub use dist::{DistGraph, Edge, PartGraph};

@@ -1,0 +1,41 @@
+//! # GraphHP — a hybrid platform for iterative graph processing
+//!
+//! Reproduction of *GraphHP: A Hybrid Platform for Iterative Graph
+//! Processing* (Chen, Bai, Li, Gou, Suo, Pan — NWPU, cs.DC 2017).
+//!
+//! GraphHP is a Pregel/Hama-style vertex-centric BSP platform whose
+//! **hybrid execution model** splits every global iteration into a
+//! *global phase* (boundary vertices, cross-partition messages) and a
+//! *local phase* (in-memory pseudo-superstep iteration inside each
+//! partition until it quiesces), so distributed synchronization and
+//! communication happen once per global iteration instead of once per
+//! superstep.
+//!
+//! The crate contains the complete platform plus everything the paper's
+//! evaluation needs:
+//!
+//! - [`graph`] — CSR graphs, partitioned distributed views, synthetic
+//!   workload generators standing in for the paper's datasets;
+//! - [`partition`] — hash and from-scratch multilevel (METIS-like)
+//!   partitioners;
+//! - [`engine`] — the vertex-centric programming interface
+//!   ([`engine::VertexProgram`]) and five execution engines: standard BSP
+//!   (Hama), AM-Hama, **GraphHP**, a Giraph++-style graph-centric engine
+//!   and GraphLab-style sync/async engines, all over a simulated-cluster
+//!   cost model;
+//! - [`algorithms`] — SSSP, incremental & classic PageRank, bipartite
+//!   matching, WCC, greedy coloring as vertex programs;
+//! - [`runtime`] — the XLA/PJRT runtime that loads the AOT-compiled
+//!   JAX/Pallas local-phase artifacts (`artifacts/*.hlo.txt`) and the
+//!   dense local-phase accelerator built on it.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod algorithms;
+pub mod bench_support;
+pub mod engine;
+pub mod graph;
+pub mod partition;
+pub mod runtime;
+pub mod util;

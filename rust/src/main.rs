@@ -1,0 +1,233 @@
+//! GraphHP launcher: generate workloads, partition graphs, and run any
+//! algorithm on any engine with paper-style metric reporting.
+//!
+//! ```text
+//! graphhp generate --kind road --rows 100 --cols 100 --seed 1 --out g.bin
+//! graphhp partition --graph g.bin --parts 12 --method metis --out parts.txt
+//! graphhp run --graph g.bin --algo sssp --engine graphhp --parts 12 [--source 0]
+//! graphhp info --graph g.bin
+//! ```
+//!
+//! (Hand-rolled argument parsing: the offline vendor set has no clap.)
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use graphhp::algorithms::{
+    bipartite_matching::validate_matching, BipartiteMatching, IncrementalPageRank, Sssp, Wcc,
+};
+use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig, Metrics};
+use graphhp::graph::{generators, io, Graph};
+use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
+
+fn parse_flags(args: &[String]) -> Result<HashMap<String, String>> {
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        let Some(key) = a.strip_prefix("--") else {
+            bail!("unexpected argument: {a}");
+        };
+        let val = args.get(i + 1).cloned().unwrap_or_default();
+        if val.starts_with("--") || val.is_empty() {
+            flags.insert(key.to_string(), "true".to_string());
+            i += 1;
+        } else {
+            flags.insert(key.to_string(), val);
+            i += 2;
+        }
+    }
+    Ok(flags)
+}
+
+fn get<'a>(flags: &'a HashMap<String, String>, key: &str) -> Result<&'a str> {
+    flags.get(key).map(|s| s.as_str()).with_context(|| format!("missing --{key}"))
+}
+
+fn get_or<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(|s| s.as_str()).unwrap_or(default)
+}
+
+fn load_graph(path: &str) -> Result<Graph> {
+    let p = Path::new(path);
+    if path.ends_with(".bin") {
+        io::read_binary(p)
+    } else {
+        io::read_edge_list(p)
+    }
+}
+
+fn cmd_generate(flags: &HashMap<String, String>) -> Result<()> {
+    let kind = get(flags, "kind")?;
+    let seed: u64 = get_or(flags, "seed", "1").parse()?;
+    let g = match kind {
+        "road" => {
+            let rows: usize = get_or(flags, "rows", "100").parse()?;
+            let cols: usize = get_or(flags, "cols", "100").parse()?;
+            generators::road(rows, cols, seed)
+        }
+        "powerlaw" | "web" => {
+            let n: usize = get_or(flags, "n", "10000").parse()?;
+            let deg: usize = get_or(flags, "deg", "5").parse()?;
+            generators::powerlaw(n, deg, seed)
+        }
+        "bipartite" => {
+            let nl: usize = get_or(flags, "left", "5000").parse()?;
+            let nr: usize = get_or(flags, "right", "5000").parse()?;
+            let deg: usize = get_or(flags, "deg", "3").parse()?;
+            generators::bipartite(nl, nr, deg, seed)
+        }
+        "delaunay" => {
+            let rows: usize = get_or(flags, "rows", "100").parse()?;
+            let cols: usize = get_or(flags, "cols", "100").parse()?;
+            generators::delaunay_like(rows, cols, seed)
+        }
+        "erdos" => {
+            let n: usize = get_or(flags, "n", "10000").parse()?;
+            let m: usize = get_or(flags, "m", "50000").parse()?;
+            generators::erdos_renyi(n, m, seed)
+        }
+        other => bail!("unknown kind {other} (road|powerlaw|bipartite|delaunay|erdos)"),
+    };
+    let out = PathBuf::from(get(flags, "out")?);
+    if out.extension().is_some_and(|e| e == "bin") {
+        io::write_binary(&g, &out)?;
+    } else {
+        io::write_edge_list(&g, &out)?;
+    }
+    println!(
+        "wrote {} vertices, {} edges to {}",
+        g.num_vertices(),
+        g.num_edges(),
+        out.display()
+    );
+    Ok(())
+}
+
+fn make_partition(g: &Graph, flags: &HashMap<String, String>) -> Result<(Vec<u32>, usize)> {
+    let k: usize = get_or(flags, "parts", "4").parse()?;
+    let method = get_or(flags, "method", "metis");
+    let assignment = match method {
+        "hash" => hash_partition(g, k),
+        "metis" => metis_partition(g, k, &MetisConfig::default()),
+        other => bail!("unknown method {other} (hash|metis)"),
+    };
+    Ok((assignment, k))
+}
+
+fn cmd_partition(flags: &HashMap<String, String>) -> Result<()> {
+    let g = load_graph(get(flags, "graph")?)?;
+    let (assignment, k) = make_partition(&g, flags)?;
+    let stats = PartitionStats::compute(&g, &assignment, k);
+    println!("{stats}");
+    if let Some(out) = flags.get("out") {
+        let mut s = String::new();
+        for a in &assignment {
+            s.push_str(&a.to_string());
+            s.push('\n');
+        }
+        std::fs::write(out, s)?;
+        println!("wrote assignment to {out}");
+    }
+    Ok(())
+}
+
+fn report(engine: &str, m: &Metrics) {
+    println!(
+        "{engine:<14} I={:<8} M={:<12} localM={:<12} T={:.3}s  [compute {:.1}% | comm {:.1}% | sync {:.1}%]",
+        m.global_iterations,
+        m.network_messages,
+        m.local_messages,
+        m.elapsed.as_secs_f64(),
+        100.0 * (1.0 - m.overhead_fraction()),
+        100.0 * m.comm_fraction(),
+        100.0 * m.sync_fraction(),
+    );
+}
+
+fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
+    let g = load_graph(get(flags, "graph")?)?;
+    let (assignment, k) = make_partition(&g, flags)?;
+    let dg = graphhp::graph::DistGraph::new(&g, &assignment, k);
+    let algo = get(flags, "algo")?;
+    let engine = get_or(flags, "engine", "graphhp");
+    let cfg = EngineConfig::default();
+
+    macro_rules! run_engine {
+        ($prog:expr) => {{
+            let prog = $prog;
+            match engine {
+                "hama" => hama::run_hama(&prog, &dg, &cfg),
+                "am-hama" => am_hama::run_am_hama(&prog, &dg, &cfg),
+                "graphhp" => hp::run_graphhp(&prog, &dg, &cfg),
+                other => bail!("unknown engine {other} (hama|am-hama|graphhp)"),
+            }
+        }};
+    }
+
+    match algo {
+        "sssp" => {
+            let source: u32 = get_or(flags, "source", "0").parse()?;
+            let r = run_engine!(Sssp { source });
+            let reached =
+                r.values.iter().filter(|&&d| d < graphhp::algorithms::sssp::INF).count();
+            println!("sssp: {reached}/{} vertices reached", r.values.len());
+            report(engine, &r.metrics);
+        }
+        "pagerank" => {
+            let tol: f64 = get_or(flags, "tolerance", "1e-4").parse()?;
+            let r = run_engine!(IncrementalPageRank { tolerance: tol });
+            let mut top: Vec<(usize, f64)> =
+                r.values.iter().copied().enumerate().collect();
+            top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            println!("pagerank top-5: {:?}", &top[..5.min(top.len())]);
+            report(engine, &r.metrics);
+        }
+        "wcc" => {
+            let r = run_engine!(Wcc);
+            let mut labels = r.values.clone();
+            labels.sort_unstable();
+            labels.dedup();
+            println!("wcc: {} components", labels.len());
+            report(engine, &r.metrics);
+        }
+        "bm" => {
+            let nl: u32 = get(flags, "left")?.parse()?;
+            let r = run_engine!(BipartiteMatching { num_left: nl });
+            let size = validate_matching(&g, nl, &r.values)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            println!("bm: maximal matching of size {size}");
+            report(engine, &r.metrics);
+        }
+        other => bail!("unknown algo {other} (sssp|pagerank|wcc|bm)"),
+    }
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
+    let g = load_graph(get(flags, "graph")?)?;
+    let ind = g.in_degrees();
+    println!("vertices: {}", g.num_vertices());
+    println!("edges:    {}", g.num_edges());
+    println!("max out-degree: {}", (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap_or(0));
+    println!("max in-degree:  {}", ind.iter().max().copied().unwrap_or(0));
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = args.first() else {
+        eprintln!("usage: graphhp <generate|partition|run|info> [--flags]");
+        std::process::exit(2);
+    };
+    let flags = parse_flags(&args[1..])?;
+    match cmd.as_str() {
+        "generate" => cmd_generate(&flags),
+        "partition" => cmd_partition(&flags),
+        "run" => cmd_run(&flags),
+        "info" => cmd_info(&flags),
+        other => bail!("unknown command {other}"),
+    }
+}

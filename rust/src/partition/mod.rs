@@ -1,0 +1,81 @@
+//! Graph partitioners.
+//!
+//! The paper partitions with ParMetis; hash partitioning
+//! (`hash(id) mod k`) is Hama's default. We provide:
+//!
+//! - [`hash_partition`] — the Hama default (high edge-cut baseline);
+//! - [`range_partition`] — contiguous ranges (good for generator graphs
+//!   whose ids are spatially ordered, e.g. grids);
+//! - [`metis`] — a from-scratch multilevel k-way partitioner (heavy-edge
+//!   matching coarsening → greedy region-growing initial partition →
+//!   boundary FM refinement), the ParMetis stand-in.
+
+pub mod metis;
+pub mod stats;
+
+pub use metis::{metis_partition, MetisConfig};
+pub use stats::PartitionStats;
+
+use crate::graph::{Graph, VertexId};
+
+/// Hama's default: `hash(id) mod k`. We use a splitmix-style bit mix so
+/// consecutive ids scatter (plain `id % k` would behave like range
+/// partitioning on generator graphs and hide the paper's point).
+pub fn hash_partition(g: &Graph, k: usize) -> Vec<u32> {
+    assert!(k > 0);
+    (0..g.num_vertices() as VertexId)
+        .map(|v| {
+            let mut z = (v as u64).wrapping_add(0x9e3779b97f4a7c15);
+            z = (z ^ (z >> 30)).wrapping_mul(0xbf58476d1ce4e5b9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94d049bb133111eb);
+            ((z ^ (z >> 31)) % k as u64) as u32
+        })
+        .collect()
+}
+
+/// Contiguous equal ranges of vertex ids.
+pub fn range_partition(g: &Graph, k: usize) -> Vec<u32> {
+    assert!(k > 0);
+    let n = g.num_vertices();
+    let per = n.div_ceil(k);
+    (0..n).map(|v| ((v / per.max(1)) as u32).min(k as u32 - 1)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+
+    #[test]
+    fn hash_covers_all_parts_roughly_evenly() {
+        let g = generators::erdos_renyi(1000, 3000, 1);
+        let a = hash_partition(&g, 7);
+        assert_eq!(a.len(), 1000);
+        let mut counts = [0usize; 7];
+        for &p in &a {
+            assert!(p < 7);
+            counts[p as usize] += 1;
+        }
+        for &c in &counts {
+            assert!(c > 80 && c < 220, "unbalanced: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn range_partition_is_contiguous_and_covers() {
+        let g = generators::erdos_renyi(100, 300, 2);
+        let a = range_partition(&g, 4);
+        for w in a.windows(2) {
+            assert!(w[1] >= w[0]); // monotone
+        }
+        assert_eq!(*a.last().unwrap(), 3);
+        assert_eq!(a[0], 0);
+    }
+
+    #[test]
+    fn range_handles_k_bigger_than_n() {
+        let g = generators::erdos_renyi(3, 2, 3);
+        let a = range_partition(&g, 8);
+        assert!(a.iter().all(|&p| p < 8));
+    }
+}

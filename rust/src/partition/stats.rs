@@ -1,0 +1,102 @@
+//! Partition quality metrics: edge cut, balance, boundary-vertex ratio.
+
+use crate::graph::{Graph, VertexId};
+
+/// Quality summary of a partition assignment.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionStats {
+    pub num_parts: usize,
+    /// Directed edges whose endpoints lie in different partitions.
+    pub edge_cut: usize,
+    /// Fraction of edges cut.
+    pub cut_fraction: f64,
+    /// max part size / average part size (1.0 = perfectly balanced).
+    pub balance: f64,
+    /// Vertices with at least one in-edge from another partition
+    /// (GraphHP boundary vertices, Def. 1).
+    pub boundary_vertices: usize,
+    /// Part sizes.
+    pub sizes: Vec<usize>,
+}
+
+impl PartitionStats {
+    /// Compute stats for `assignment` over `g`.
+    pub fn compute(g: &Graph, assignment: &[u32], num_parts: usize) -> PartitionStats {
+        assert_eq!(assignment.len(), g.num_vertices());
+        let mut sizes = vec![0usize; num_parts];
+        for &p in assignment {
+            sizes[p as usize] += 1;
+        }
+        let mut cut = 0usize;
+        let mut boundary = vec![false; g.num_vertices()];
+        for v in 0..g.num_vertices() as VertexId {
+            let pv = assignment[v as usize];
+            for &t in g.out_edges(v).0 {
+                if assignment[t as usize] != pv {
+                    cut += 1;
+                    boundary[t as usize] = true;
+                }
+            }
+        }
+        let ne = g.num_edges().max(1);
+        let avg = g.num_vertices() as f64 / num_parts as f64;
+        let max = *sizes.iter().max().unwrap_or(&0) as f64;
+        PartitionStats {
+            num_parts,
+            edge_cut: cut,
+            cut_fraction: cut as f64 / ne as f64,
+            balance: if avg > 0.0 { max / avg } else { 1.0 },
+            boundary_vertices: boundary.iter().filter(|&&b| b).count(),
+            sizes,
+        }
+    }
+}
+
+impl std::fmt::Display for PartitionStats {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "parts={} cut={} ({:.1}%) balance={:.3} boundary={}",
+            self.num_parts,
+            self.edge_cut,
+            100.0 * self.cut_fraction,
+            self.balance,
+            self.boundary_vertices
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::hash_partition;
+
+    #[test]
+    fn single_part_has_zero_cut() {
+        let g = generators::erdos_renyi(100, 400, 1);
+        let s = PartitionStats::compute(&g, &vec![0; 100], 1);
+        assert_eq!(s.edge_cut, 0);
+        assert_eq!(s.boundary_vertices, 0);
+        assert_eq!(s.balance, 1.0);
+    }
+
+    #[test]
+    fn hash_cut_is_high_on_structured_graph() {
+        let g = generators::road(30, 30, 1);
+        let a = hash_partition(&g, 8);
+        let s = PartitionStats::compute(&g, &a, 8);
+        // random partition of a grid cuts ~(1 - 1/k) of edges
+        assert!(s.cut_fraction > 0.7, "{s}");
+    }
+
+    #[test]
+    fn stats_match_distgraph() {
+        let g = generators::powerlaw(500, 4, 2);
+        let a = hash_partition(&g, 5);
+        let s = PartitionStats::compute(&g, &a, 5);
+        let dg = crate::graph::DistGraph::new(&g, &a, 5);
+        assert_eq!(s.edge_cut, dg.edge_cut());
+        assert_eq!(s.boundary_vertices, dg.num_boundary());
+    }
+}

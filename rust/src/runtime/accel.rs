@@ -1,0 +1,257 @@
+//! Dense local-phase accelerator.
+//!
+//! GraphHP's key cost is the local phase — a partition-private fixed
+//! point. For the value-propagation algorithms (incremental PageRank,
+//! SSSP) that fixed point is linear-algebraic, so a partition whose
+//! vertex count fits the AOT tile can run its *entire local phase* as one
+//! (or a few) XLA executions of the scan-fused JAX/Pallas program instead
+//! of the scalar message loop (DESIGN.md §5).
+//!
+//! This module densifies a [`PartGraph`]'s internal adjacency into the
+//! fixed-size f32 tiles the artifacts expect, with the padding
+//! conventions the kernels are tested for:
+//! - PageRank matrix `M[i,j] = d·A[j,i]/outdeg(j)` (0 padding);
+//! - SSSP weights `W[i,j] = w(j→i)` with `INF` padding.
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::sssp::INF;
+use crate::graph::PartGraph;
+
+use super::LoadedPhase;
+
+/// Rank value used for padded lanes so they never propagate.
+pub const PAD_RANK_INF: f32 = 0.0;
+
+/// Densified views of one partition, ready for the XLA phases.
+pub struct DenseLocalAccel {
+    /// Tile edge (from the artifact spec).
+    pub n: usize,
+    /// Live vertex count (`<= n`).
+    pub live: usize,
+    /// PageRank propagation matrix, row-major `n × n`.
+    pub m_pagerank: Vec<f32>,
+    /// SSSP min-plus weight matrix, row-major `n × n` (INF = no edge).
+    pub w_sssp: Vec<f32>,
+    /// Device-resident copies of the operators (uploaded once, reused
+    /// across every invocation — §Perf optimization #3).
+    m_dev: Option<xla::PjRtBuffer>,
+    w_dev: Option<xla::PjRtBuffer>,
+}
+
+impl DenseLocalAccel {
+    /// Build both dense operators for `part`. Fails if the partition has
+    /// more vertices than the tile.
+    pub fn new(part: &PartGraph, n: usize, damping: f32) -> Result<Self> {
+        let live = part.num_vertices();
+        if live > n {
+            bail!("partition has {live} vertices > tile {n}; use the scalar path");
+        }
+        let mut m = vec![0f32; n * n];
+        let mut w = vec![INF; n * n];
+        for src in 0..live {
+            let deg = part.out_degree[src];
+            for e in part.out_edges(src) {
+                if e.target_part != part.part {
+                    continue; // internal edges only: the local phase
+                }
+                let dst = e.target_local as usize;
+                // PageRank: column src scaled by d/deg, row dst
+                if deg > 0 {
+                    m[dst * n + src] += damping / deg as f32;
+                }
+                // SSSP: W[dst, src] = min weight of src->dst
+                let slot = &mut w[dst * n + src];
+                if e.weight < *slot {
+                    *slot = e.weight;
+                }
+            }
+        }
+        Ok(DenseLocalAccel { n, live, m_pagerank: m, w_sssp: w, m_dev: None, w_dev: None })
+    }
+
+    /// Upload (once) and return the device-resident PageRank operator.
+    pub fn m_device(&mut self, rt: &super::XlaRuntime) -> Result<&xla::PjRtBuffer> {
+        if self.m_dev.is_none() {
+            self.m_dev = Some(rt.upload_f32(&self.m_pagerank, &[self.n, self.n])?);
+        }
+        Ok(self.m_dev.as_ref().unwrap())
+    }
+
+    /// Upload (once) and return the device-resident SSSP operator.
+    pub fn w_device(&mut self, rt: &super::XlaRuntime) -> Result<&xla::PjRtBuffer> {
+        if self.w_dev.is_none() {
+            self.w_dev = Some(rt.upload_f32(&self.w_sssp, &[self.n, self.n])?);
+        }
+        Ok(self.w_dev.as_ref().unwrap())
+    }
+
+    /// Run the partition's PageRank local phase to convergence:
+    /// repeatedly invoke the K-step fused executable until the delta
+    /// inf-norm drops below `tol` (or `max_invocations` runs out).
+    ///
+    /// `rank`/`delta` are live-length slices updated in place. Returns
+    /// the accumulated per-vertex delta mass (live length) from which the
+    /// coordinator derives cross-partition messages, plus the number of
+    /// XLA invocations.
+    pub fn pagerank_local_phase(
+        &mut self,
+        rt: &super::XlaRuntime,
+        phase: &LoadedPhase,
+        rank: &mut [f32],
+        delta: &mut [f32],
+        tol: f32,
+        max_invocations: usize,
+    ) -> Result<(Vec<f32>, usize)> {
+        if phase.spec.n != self.n {
+            bail!("phase tile {} != accel tile {}", phase.spec.n, self.n);
+        }
+        let n = self.n;
+        self.m_device(rt)?; // ensure resident
+        let m_dev = self.m_dev.as_ref().unwrap();
+        let mut r = vec![PAD_RANK_INF; n];
+        let mut d = vec![0f32; n];
+        r[..self.live].copy_from_slice(rank);
+        d[..self.live].copy_from_slice(delta);
+        let mut acc_total = vec![0f32; self.live];
+        let mut invocations = 0;
+        while invocations < max_invocations {
+            let (nr, nd, acc, linf) = phase.run_pagerank_dev(rt, m_dev, &r, &d)?;
+            invocations += 1;
+            for i in 0..self.live {
+                acc_total[i] += acc[i];
+            }
+            r = nr;
+            d = nd;
+            if linf < tol {
+                break;
+            }
+        }
+        rank.copy_from_slice(&r[..self.live]);
+        delta.copy_from_slice(&d[..self.live]);
+        Ok((acc_total, invocations))
+    }
+
+    /// Run the partition's SSSP local phase to quiescence. `dist` is a
+    /// live-length slice updated in place. Returns (improved-vertex
+    /// count, invocations).
+    pub fn sssp_local_phase(
+        &mut self,
+        rt: &super::XlaRuntime,
+        phase: &LoadedPhase,
+        dist: &mut [f32],
+        max_invocations: usize,
+    ) -> Result<(usize, usize)> {
+        if phase.spec.n != self.n {
+            bail!("phase tile {} != accel tile {}", phase.spec.n, self.n);
+        }
+        let n = self.n;
+        self.w_device(rt)?; // ensure resident
+        let w_dev = self.w_dev.as_ref().unwrap();
+        let mut d = vec![INF; n];
+        d[..self.live].copy_from_slice(dist);
+        let before: Vec<f32> = d[..self.live].to_vec();
+        let mut invocations = 0;
+        loop {
+            let (nd, changed) = phase.run_sssp_dev(rt, w_dev, &d)?;
+            invocations += 1;
+            d = nd;
+            if changed == 0 || invocations >= max_invocations {
+                break;
+            }
+        }
+        let improved = before
+            .iter()
+            .zip(&d[..self.live])
+            .filter(|(b, a)| **a < **b - 1e-9)
+            .count();
+        dist.copy_from_slice(&d[..self.live]);
+        Ok((improved, invocations))
+    }
+
+    /// Scalar (no-XLA) reference of the PageRank local phase — used by
+    /// tests to prove the accelerated path is a pure optimization.
+    pub fn pagerank_local_phase_scalar(
+        &self,
+        rank: &mut [f32],
+        delta: &mut [f32],
+        tol: f32,
+        max_steps: usize,
+    ) -> Vec<f32> {
+        let n = self.n;
+        let live = self.live;
+        let mut acc_total = vec![0f32; live];
+        let mut d = vec![0f32; n];
+        d[..live].copy_from_slice(delta);
+        for _ in 0..max_steps {
+            for i in 0..live {
+                acc_total[i] += d[i];
+            }
+            let mut nd = vec![0f32; n];
+            for i in 0..live {
+                let row = &self.m_pagerank[i * n..i * n + live];
+                let mut s = 0f32;
+                for j in 0..live {
+                    s += row[j] * d[j];
+                }
+                nd[i] = s;
+                rank[i] += s;
+            }
+            let linf = nd[..live].iter().fold(0f32, |a, &b| a.max(b.abs()));
+            d = nd;
+            if linf < tol {
+                break;
+            }
+        }
+        delta.copy_from_slice(&d[..live]);
+        acc_total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{generators, DistGraph};
+    use crate::partition::hash_partition;
+
+    #[test]
+    fn densify_shapes_and_padding() {
+        let g = generators::erdos_renyi(30, 120, 3);
+        let a = hash_partition(&g, 2);
+        let dg = DistGraph::new(&g, &a, 2);
+        let acc = DenseLocalAccel::new(&dg.parts[0], 64, 0.85).unwrap();
+        assert_eq!(acc.n, 64);
+        assert_eq!(acc.live, dg.parts[0].num_vertices());
+        // padded region of W stays INF
+        for i in acc.live..64 {
+            for j in 0..64 {
+                assert_eq!(acc.w_sssp[i * 64 + j], INF);
+            }
+        }
+        // column sums of M are <= damping (only internal edges present)
+        for j in 0..acc.live {
+            let col: f32 = (0..acc.live).map(|i| acc.m_pagerank[i * 64 + j]).sum();
+            assert!(col <= 0.85 + 1e-5, "col {j} sums to {col}");
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_partition() {
+        let g = generators::erdos_renyi(100, 200, 1);
+        let dg = DistGraph::new(&g, &vec![0; 100], 1);
+        assert!(DenseLocalAccel::new(&dg.parts[0], 64, 0.85).is_err());
+    }
+
+    #[test]
+    fn scalar_local_phase_drains_delta() {
+        let g = generators::powerlaw(50, 3, 5);
+        let dg = DistGraph::new(&g, &vec![0; 50], 1);
+        let acc = DenseLocalAccel::new(&dg.parts[0], 64, 0.85).unwrap();
+        let mut rank = vec![0.15f32; 50];
+        let mut delta = vec![0.15f32; 50];
+        let acc_mass = acc.pagerank_local_phase_scalar(&mut rank, &mut delta, 1e-7, 10_000);
+        assert!(delta.iter().all(|&d| d.abs() < 1e-6));
+        assert!(acc_mass.iter().sum::<f32>() > 0.0);
+        assert!(rank.iter().all(|&r| r >= 0.15 - 1e-6));
+    }
+}

@@ -1,0 +1,258 @@
+//! XLA/PJRT runtime: loads the AOT-compiled JAX/Pallas local-phase
+//! artifacts (`artifacts/*.hlo.txt`) and executes them from the Rust
+//! coordinator. Python never runs on this path.
+//!
+//! Interchange is HLO **text** (not serialized protos): jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod accel;
+pub mod pipeline;
+
+pub use accel::{DenseLocalAccel, PAD_RANK_INF};
+pub use pipeline::{run_pagerank_accelerated, run_sssp_accelerated};
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+/// Parameters of one AOT artifact, parsed from `artifacts/manifest.txt`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// Densified tile edge (partition capacity).
+    pub n: usize,
+    /// Pseudo-supersteps fused per invocation.
+    pub steps: usize,
+}
+
+/// Parse `manifest.txt` (one line per artifact: `name n steps ins outs`).
+pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
+    let mut specs = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let name = it.next().context("manifest: missing name")?.to_string();
+        let n: usize = it.next().context("manifest: missing n")?.parse()?;
+        let steps: usize = it.next().context("manifest: missing steps")?.parse()?;
+        specs.push(ArtifactSpec { name, n, steps });
+    }
+    Ok(specs)
+}
+
+/// A compiled local-phase executable.
+pub struct LoadedPhase {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime holding the CPU client and the compiled phases.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+}
+
+impl XlaRuntime {
+    /// Create a CPU PJRT client rooted at `artifacts_dir`.
+    pub fn new(artifacts_dir: impl Into<PathBuf>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(XlaRuntime { client, artifacts_dir: artifacts_dir.into() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload an f32 tensor to the device (kept resident across
+    /// invocations — the perf-critical path caches the densified
+    /// partition operator this way; see EXPERIMENTS.md §Perf).
+    pub fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Load + compile `<name>.hlo.txt`, cross-checking the manifest.
+    pub fn load_phase(&self, name: &str) -> Result<LoadedPhase> {
+        let manifest_path = self.artifacts_dir.join("manifest.txt");
+        let manifest = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {manifest_path:?} — run `make artifacts` first"))?;
+        let spec = parse_manifest(&manifest)?
+            .into_iter()
+            .find(|s| s.name == name)
+            .with_context(|| format!("artifact {name} not in manifest"))?;
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compile {name}"))?;
+        Ok(LoadedPhase { spec, exe })
+    }
+}
+
+impl LoadedPhase {
+    /// Execute with row-major f32 buffers; returns the tuple elements as
+    /// flat f32 vectors (scalars/s32 outputs are converted to f32 via
+    /// bit-faithful casts where needed by the callers).
+    pub fn execute_f32(
+        &self,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data);
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            literals.push(lit.reshape(&dims_i64)?);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.decompose_tuple()?;
+        let mut vecs = Vec::with_capacity(outs.len());
+        for out in outs {
+            // convert whatever element type to f32 (s32 `changed` counts
+            // are exact in f32 for our sizes)
+            let conv = out.convert(xla::PrimitiveType::F32)?;
+            vecs.push(conv.to_vec::<f32>()?);
+        }
+        Ok(vecs)
+    }
+
+    /// Execute with pre-uploaded device buffers for the big operands and
+    /// host slices for the small ones. Buffer order must match the
+    /// entry computation's parameter order.
+    pub fn execute_mixed_f32(
+        &self,
+        runtime: &XlaRuntime,
+        device_first: &xla::PjRtBuffer,
+        host_rest: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let mut bufs: Vec<xla::PjRtBuffer> = Vec::with_capacity(host_rest.len());
+        for (data, dims) in host_rest {
+            bufs.push(runtime.upload_f32(data, dims)?);
+        }
+        let mut args: Vec<&xla::PjRtBuffer> = vec![device_first];
+        args.extend(bufs.iter());
+        let mut result = self.exe.execute_b::<&xla::PjRtBuffer>(&args)?[0][0]
+            .to_literal_sync()?;
+        let outs = result.decompose_tuple()?;
+        let mut vecs = Vec::with_capacity(outs.len());
+        for out in outs {
+            let conv = out.convert(xla::PrimitiveType::F32)?;
+            vecs.push(conv.to_vec::<f32>()?);
+        }
+        Ok(vecs)
+    }
+
+    /// `run_pagerank` with the matrix resident on device.
+    pub fn run_pagerank_dev(
+        &self,
+        runtime: &XlaRuntime,
+        m_dev: &xla::PjRtBuffer,
+        rank: &[f32],
+        delta: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let n = self.spec.n;
+        if rank.len() != n || delta.len() != n {
+            bail!("pagerank phase: bad input sizes");
+        }
+        let outs = self.execute_mixed_f32(
+            runtime,
+            m_dev,
+            &[(rank, &[n, 1]), (delta, &[n, 1])],
+        )?;
+        if outs.len() != 4 {
+            bail!("pagerank phase: expected 4 outputs, got {}", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let rank = it.next().unwrap();
+        let delta = it.next().unwrap();
+        let acc = it.next().unwrap();
+        let linf = it.next().unwrap()[0];
+        Ok((rank, delta, acc, linf))
+    }
+
+    /// `run_sssp` with the weight matrix resident on device.
+    pub fn run_sssp_dev(
+        &self,
+        runtime: &XlaRuntime,
+        w_dev: &xla::PjRtBuffer,
+        d: &[f32],
+    ) -> Result<(Vec<f32>, u32)> {
+        let n = self.spec.n;
+        if d.len() != n {
+            bail!("sssp phase: bad input sizes");
+        }
+        let outs = self.execute_mixed_f32(runtime, w_dev, &[(d, &[n, 1])])?;
+        if outs.len() != 2 {
+            bail!("sssp phase: expected 2 outputs, got {}", outs.len());
+        }
+        let changed = outs[1][0] as u32;
+        Ok((outs[0].clone(), changed))
+    }
+
+    /// Execute the `pagerank_local` phase.
+    /// Inputs: m (n·n), rank (n), delta (n). Output: (rank', delta',
+    /// acc, linf).
+    pub fn run_pagerank(
+        &self,
+        m: &[f32],
+        rank: &[f32],
+        delta: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>, f32)> {
+        let n = self.spec.n;
+        if m.len() != n * n || rank.len() != n || delta.len() != n {
+            bail!("pagerank phase: bad input sizes");
+        }
+        let outs = self.execute_f32(&[
+            (m, &[n, n]),
+            (rank, &[n, 1]),
+            (delta, &[n, 1]),
+        ])?;
+        if outs.len() != 4 {
+            bail!("pagerank phase: expected 4 outputs, got {}", outs.len());
+        }
+        let mut it = outs.into_iter();
+        let rank = it.next().unwrap();
+        let delta = it.next().unwrap();
+        let acc = it.next().unwrap();
+        let linf = it.next().unwrap()[0];
+        Ok((rank, delta, acc, linf))
+    }
+
+    /// Execute the `sssp_local` phase.
+    /// Inputs: w (n·n), d (n). Output: (d', changed-count).
+    pub fn run_sssp(&self, w: &[f32], d: &[f32]) -> Result<(Vec<f32>, u32)> {
+        let n = self.spec.n;
+        if w.len() != n * n || d.len() != n {
+            bail!("sssp phase: bad input sizes");
+        }
+        let outs = self.execute_f32(&[(w, &[n, n]), (d, &[n, 1])])?;
+        if outs.len() != 2 {
+            bail!("sssp phase: expected 2 outputs, got {}", outs.len());
+        }
+        let changed = outs[1][0] as u32;
+        Ok((outs[0].clone(), changed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_parses() {
+        let m = "pagerank_local 256 8 m,rank,delta rank,delta,acc,linf\n\
+                 sssp_local 256 8 w,d d,changed\n";
+        let specs = parse_manifest(m).unwrap();
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0], ArtifactSpec { name: "pagerank_local".into(), n: 256, steps: 8 });
+        assert_eq!(specs[1].name, "sssp_local");
+    }
+
+    #[test]
+    fn manifest_rejects_garbage() {
+        assert!(parse_manifest("pagerank_local notanumber 8 x y").is_err());
+    }
+}

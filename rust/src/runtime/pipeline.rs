@@ -1,0 +1,332 @@
+//! Accelerated GraphHP pipelines: the end-to-end composition of all
+//! three layers.
+//!
+//! These drivers run the GraphHP hybrid iteration with the *local phase
+//! executed by the AOT-compiled JAX/Pallas programs* (L1+L2) and the
+//! global phase — cross-partition message derivation, combining,
+//! delivery, barriers, termination — owned by the Rust coordinator (L3).
+//! They are numerically interchangeable with the scalar
+//! [`crate::engine::graphhp`] engine running
+//! [`crate::algorithms::IncrementalPageRank`] / [`crate::algorithms::Sssp`]
+//! (tested in `rust/tests/runtime_xla.rs` and used by
+//! `examples/e2e_accelerated.rs`).
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::algorithms::pagerank::{BASE, DAMPING};
+use crate::algorithms::sssp::INF;
+use crate::engine::netsim::{SuperstepClock, WorkerComm};
+use crate::engine::{EngineConfig, Metrics, RunResult};
+use crate::graph::DistGraph;
+
+use super::accel::DenseLocalAccel;
+use super::{LoadedPhase, XlaRuntime};
+
+/// Per-message wire cost used by the pipelines (f32 payload + header).
+const MSG_BYTES: u64 = 12;
+
+/// Build one accelerator per partition; fails if any partition exceeds
+/// the artifact tile size.
+pub fn build_accels(dg: &DistGraph, n: usize, damping: f32) -> Result<Vec<DenseLocalAccel>> {
+    dg.parts.iter().map(|p| DenseLocalAccel::new(p, n, damping)).collect()
+}
+
+/// GraphHP incremental PageRank with XLA local phases.
+///
+/// Semantics follow Alg. 5 under the hybrid model: all vertices start
+/// with a pending delta of `BASE`; every global iteration runs each
+/// partition's local phase to convergence (fused K-step XLA scans), then
+/// exchanges the damped accumulated outflow across partition boundaries;
+/// messages below `tolerance` are not sent (the program's halting rule).
+pub fn run_pagerank_accelerated(
+    runtime: &XlaRuntime,
+    dg: &DistGraph,
+    tolerance: f32,
+    cfg: &EngineConfig,
+) -> Result<RunResult<f64>> {
+    let phase: LoadedPhase = runtime.load_phase("pagerank_local")?;
+    let n = phase.spec.n;
+    let mut accels = build_accels(dg, n, DAMPING as f32)?;
+
+    let np = dg.num_parts();
+    // The scan model adds M·delta to rank as it derives it, so mass fed
+    // INTO the phase must be pre-credited: the initial BASE here, remote
+    // deliveries below.
+    let mut rank: Vec<Vec<f32>> =
+        dg.parts.iter().map(|p| vec![BASE as f32; p.num_vertices()]).collect();
+    let mut delta: Vec<Vec<f32>> =
+        dg.parts.iter().map(|p| vec![BASE as f32; p.num_vertices()]).collect();
+
+    let mut metrics = Metrics::default();
+    let mut clock = SuperstepClock::new();
+
+    for _iter in 0..cfg.max_iterations {
+        // incoming per partition, accumulated (sum-combined) per vertex
+        let mut incoming: Vec<Vec<f32>> =
+            dg.parts.iter().map(|p| vec![0f32; p.num_vertices()]).collect();
+        let mut any_messages = false;
+
+        for p in 0..np {
+            let t0 = std::time::Instant::now();
+            // ---- local phase (L1+L2 on XLA) ------------------------
+            let (acc, invocations) = accels[p].pagerank_local_phase(
+                runtime,
+                &phase,
+                &mut rank[p],
+                &mut delta[p],
+                tolerance,
+                10_000,
+            )?;
+            metrics.supersteps_total += invocations as u64 * phase.spec.steps as u64;
+            // ---- derive cross-partition messages (L3) --------------
+            let part = &dg.parts[p];
+            let mut msgs = 0u64;
+            let mut peers: Vec<bool> = vec![false; np];
+            for lv in 0..part.num_vertices() {
+                let mass = acc[lv];
+                let deg = part.out_degree[lv];
+                if deg == 0 || mass <= 0.0 {
+                    continue;
+                }
+                let share = DAMPING as f32 * mass / deg as f32;
+                if share < tolerance {
+                    continue; // halting rule of Alg. 5
+                }
+                for e in part.out_edges(lv) {
+                    if e.target_part != part.part {
+                        incoming[e.target_part as usize][e.target_local as usize] += share;
+                        msgs += 1;
+                        peers[e.target_part as usize] = true;
+                        any_messages = true;
+                    }
+                }
+            }
+            let compute = cfg.net.scale_compute(t0.elapsed());
+            let comm = WorkerComm {
+                messages: msgs,
+                bytes: msgs * MSG_BYTES,
+                peer_pairs: peers.iter().filter(|&&x| x).count() as u64,
+            };
+            metrics.network_messages += msgs;
+            metrics.network_bytes += comm.bytes;
+            clock.record_worker(compute, cfg.net.comm_time(&comm));
+        }
+
+        clock.barrier(&cfg.net, &mut metrics);
+        metrics.global_iterations += 1;
+
+        if !any_messages {
+            break;
+        }
+        for p in 0..np {
+            for (lv, &m) in incoming[p].iter().enumerate() {
+                if m > 0.0 {
+                    rank[p][lv] += m; // apply (Alg. 5 `value += update`)
+                    delta[p][lv] += m; // and queue for propagation
+                }
+            }
+        }
+    }
+
+    // gather to global ids as f64 (engine-compatible)
+    let per_part: Vec<Vec<f64>> = rank
+        .iter()
+        .map(|r| r.iter().map(|&x| x as f64).collect())
+        .collect();
+    let values = crate::engine::gather_values(dg, &per_part);
+    Ok(RunResult { values, metrics })
+}
+
+/// GraphHP SSSP with XLA min-plus local phases.
+pub fn run_sssp_accelerated(
+    runtime: &XlaRuntime,
+    dg: &DistGraph,
+    source: u32,
+    cfg: &EngineConfig,
+) -> Result<RunResult<f32>> {
+    let phase: LoadedPhase = runtime.load_phase("sssp_local")?;
+    let n = phase.spec.n;
+    let mut accels = build_accels(dg, n, DAMPING as f32)?;
+    if source as usize >= dg.num_vertices {
+        bail!("source {source} out of range");
+    }
+
+    let np = dg.num_parts();
+    let mut dist: Vec<Vec<f32>> =
+        dg.parts.iter().map(|p| vec![INF; p.num_vertices()]).collect();
+    {
+        let (sp, sl) = dg.location[source as usize];
+        dist[sp as usize][sl as usize] = 0.0;
+    }
+    // track which vertices improved since last propagation, per partition
+    let mut dirty: Vec<Vec<bool>> =
+        dg.parts.iter().map(|p| vec![false; p.num_vertices()]).collect();
+    {
+        let (sp, sl) = dg.location[source as usize];
+        dirty[sp as usize][sl as usize] = true;
+    }
+
+    let mut metrics = Metrics::default();
+    let mut clock = SuperstepClock::new();
+
+    for _iter in 0..cfg.max_iterations {
+        let mut incoming: Vec<Vec<f32>> =
+            dg.parts.iter().map(|p| vec![INF; p.num_vertices()]).collect();
+        let mut any_messages = false;
+
+        for p in 0..np {
+            let t0 = std::time::Instant::now();
+            let part = &dg.parts[p];
+            let live = part.num_vertices();
+            let before: Vec<f32> = dist[p].clone();
+            // run the local phase only if something is dirty
+            let run_needed = dirty[p].iter().any(|&d| d);
+            if run_needed {
+                let (_improved, invocations) =
+                    accels[p].sssp_local_phase(runtime, &phase, &mut dist[p], 10_000)?;
+                metrics.supersteps_total += invocations as u64 * phase.spec.steps as u64;
+            }
+            // propagate improvements across partitions
+            let mut msgs = 0u64;
+            let mut peers: Vec<bool> = vec![false; np];
+            for lv in 0..live {
+                let changed = dist[p][lv] < before[lv] - 1e-9 || dirty[p][lv];
+                if !changed || dist[p][lv] >= INF {
+                    continue;
+                }
+                let d = dist[p][lv];
+                for e in part.out_edges(lv) {
+                    if e.target_part != part.part {
+                        let cand = d + e.weight;
+                        let slot =
+                            &mut incoming[e.target_part as usize][e.target_local as usize];
+                        if cand < *slot {
+                            if *slot >= INF {
+                                msgs += 1; // min-combined per destination
+                            }
+                            *slot = cand;
+                            peers[e.target_part as usize] = true;
+                            any_messages = true;
+                        }
+                    }
+                }
+                dirty[p][lv] = false;
+            }
+            let compute = cfg.net.scale_compute(t0.elapsed());
+            let comm = WorkerComm {
+                messages: msgs,
+                bytes: msgs * MSG_BYTES,
+                peer_pairs: peers.iter().filter(|&&x| x).count() as u64,
+            };
+            metrics.network_messages += msgs;
+            metrics.network_bytes += comm.bytes;
+            clock.record_worker(compute, cfg.net.comm_time(&comm));
+        }
+
+        clock.barrier(&cfg.net, &mut metrics);
+        metrics.global_iterations += 1;
+
+        if !any_messages {
+            break;
+        }
+        for p in 0..np {
+            for (lv, &m) in incoming[p].iter().enumerate() {
+                if m < dist[p][lv] {
+                    dist[p][lv] = m;
+                    dirty[p][lv] = true;
+                }
+            }
+        }
+    }
+
+    let values = crate::engine::gather_values(dg, &dist);
+    Ok(RunResult { values, metrics })
+}
+
+/// Wall-clock helper for perf reporting: XLA execute time of one phase
+/// invocation, median of `reps`.
+pub fn time_phase_invocation(
+    phase: &LoadedPhase,
+    reps: usize,
+) -> Result<Duration> {
+    let n = phase.spec.n;
+    let m = vec![0.001f32; n * n];
+    let r = vec![0.15f32; n];
+    let d = vec![0.15f32; n];
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = std::time::Instant::now();
+        let _ = phase.run_pagerank(&m, &r, &d)?;
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    Ok(times[reps / 2])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators;
+    use crate::partition::{metis_partition, MetisConfig};
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn accelerated_pagerank_matches_oracle() {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let rt = XlaRuntime::new(artifacts_dir()).unwrap();
+        let g = generators::powerlaw(800, 4, 21);
+        let a = metis_partition(&g, 5, &MetisConfig::default());
+        let dg = DistGraph::new(&g, &a, 5);
+        // partitions must fit the 256 tile
+        if dg.parts.iter().any(|p| p.num_vertices() > 256) {
+            eprintln!("skipping: partition too large for tile");
+            return;
+        }
+        let r =
+            run_pagerank_accelerated(&rt, &dg, 1e-6, &EngineConfig::default()).unwrap();
+        let want = crate::algorithms::oracle::pagerank(&g, 1e-12);
+        let err: f64 = r
+            .values
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (a - b).abs())
+            .sum::<f64>()
+            / want.len() as f64;
+        assert!(err < 1e-3, "avg err {err}");
+        assert!(r.metrics.global_iterations > 1);
+        assert!(r.metrics.network_messages > 0);
+    }
+
+    #[test]
+    fn accelerated_sssp_matches_dijkstra() {
+        if !artifacts_dir().join("manifest.txt").exists() {
+            eprintln!("skipping: artifacts missing");
+            return;
+        }
+        let rt = XlaRuntime::new(artifacts_dir()).unwrap();
+        let g = generators::road(20, 20, 4);
+        let a = metis_partition(&g, 4, &MetisConfig::default());
+        let dg = DistGraph::new(&g, &a, 4);
+        if dg.parts.iter().any(|p| p.num_vertices() > 256) {
+            eprintln!("skipping: partition too large for tile");
+            return;
+        }
+        let r = run_sssp_accelerated(&rt, &dg, 0, &EngineConfig::default()).unwrap();
+        let want = crate::algorithms::oracle::dijkstra(&g, 0);
+        for (i, (&got, &w)) in r.values.iter().zip(&want).enumerate() {
+            if w.is_finite() {
+                assert!((got - w as f32).abs() < 1e-2, "v{i}: {got} vs {w}");
+            } else {
+                assert!(got >= INF * 0.5);
+            }
+        }
+    }
+}

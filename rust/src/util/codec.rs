@@ -1,0 +1,176 @@
+//! Minimal byte codec used for (a) network-byte accounting in the
+//! simulated cluster and (b) checkpoint serialization.
+//!
+//! The vendored crate set has no serde, so this is a tiny hand-rolled
+//! little-endian format. It is NOT a wire format for interop — it only has
+//! to round-trip within this binary.
+
+/// Encode/decode a value as little-endian bytes.
+pub trait Codec: Sized {
+    fn encode(&self, buf: &mut Vec<u8>);
+    /// Decode from the front of `r`, advancing it. Returns None on
+    /// truncated/malformed input.
+    fn decode(r: &mut &[u8]) -> Option<Self>;
+    /// Encoded size in bytes (used for simulated network accounting).
+    fn encoded_len(&self) -> usize {
+        let mut b = Vec::new();
+        self.encode(&mut b);
+        b.len()
+    }
+}
+
+macro_rules! impl_codec_prim {
+    ($t:ty, $n:expr) => {
+        impl Codec for $t {
+            fn encode(&self, buf: &mut Vec<u8>) {
+                buf.extend_from_slice(&self.to_le_bytes());
+            }
+            fn decode(r: &mut &[u8]) -> Option<Self> {
+                if r.len() < $n {
+                    return None;
+                }
+                let (head, tail) = r.split_at($n);
+                *r = tail;
+                Some(<$t>::from_le_bytes(head.try_into().ok()?))
+            }
+            fn encoded_len(&self) -> usize {
+                $n
+            }
+        }
+    };
+}
+
+impl_codec_prim!(u8, 1);
+impl_codec_prim!(u16, 2);
+impl_codec_prim!(u32, 4);
+impl_codec_prim!(u64, 8);
+impl_codec_prim!(i32, 4);
+impl_codec_prim!(i64, 8);
+impl_codec_prim!(f32, 4);
+impl_codec_prim!(f64, 8);
+
+impl Codec for bool {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        buf.push(*self as u8);
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        u8::decode(r).map(|b| b != 0)
+    }
+    fn encoded_len(&self) -> usize {
+        1
+    }
+}
+
+impl Codec for usize {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (*self as u64).encode(buf)
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        u64::decode(r).map(|v| v as usize)
+    }
+    fn encoded_len(&self) -> usize {
+        8
+    }
+}
+
+impl<A: Codec, B: Codec> Codec for (A, B) {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.0.encode(buf);
+        self.1.encode(buf);
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        Some((A::decode(r)?, B::decode(r)?))
+    }
+    fn encoded_len(&self) -> usize {
+        self.0.encoded_len() + self.1.encoded_len()
+    }
+}
+
+impl<T: Codec> Codec for Option<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        match self {
+            None => buf.push(0),
+            Some(v) => {
+                buf.push(1);
+                v.encode(buf);
+            }
+        }
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        match u8::decode(r)? {
+            0 => Some(None),
+            1 => Some(Some(T::decode(r)?)),
+            _ => None,
+        }
+    }
+}
+
+impl<T: Codec> Codec for Vec<T> {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        (self.len() as u64).encode(buf);
+        for v in self {
+            v.encode(buf);
+        }
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        let n = u64::decode(r)? as usize;
+        // Guard against corrupt length prefixes.
+        if n > r.len() {
+            return None;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(T::decode(r)?);
+        }
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip<T: Codec + PartialEq + std::fmt::Debug>(v: T) {
+        let mut buf = Vec::new();
+        v.encode(&mut buf);
+        assert_eq!(buf.len(), v.encoded_len());
+        let mut r = &buf[..];
+        assert_eq!(T::decode(&mut r), Some(v));
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn primitives_roundtrip() {
+        roundtrip(42u32);
+        roundtrip(-7i64);
+        roundtrip(3.25f32);
+        roundtrip(f64::NEG_INFINITY);
+        roundtrip(true);
+        roundtrip(usize::MAX);
+    }
+
+    #[test]
+    fn composites_roundtrip() {
+        roundtrip((1u32, 2.5f32));
+        roundtrip(Some(9u64));
+        roundtrip(Option::<u32>::None);
+        roundtrip(vec![1u32, 2, 3]);
+        roundtrip(vec![(1u32, 0.5f32), (2, 1.5)]);
+    }
+
+    #[test]
+    fn truncated_decode_fails() {
+        let mut buf = Vec::new();
+        12345u64.encode(&mut buf);
+        let mut r = &buf[..4];
+        assert_eq!(u64::decode(&mut r), None);
+    }
+
+    #[test]
+    fn corrupt_vec_length_fails_gracefully() {
+        let mut buf = Vec::new();
+        (u64::MAX).encode(&mut buf);
+        let mut r = &buf[..];
+        assert_eq!(Vec::<u32>::decode(&mut r), None);
+    }
+}

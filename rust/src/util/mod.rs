@@ -1,0 +1,11 @@
+//! Small utilities shared across the crate: a deterministic PRNG (the
+//! vendored crate set has no `rand`), a stopwatch, and byte codecs used by
+//! message serialization accounting and checkpointing.
+
+pub mod codec;
+pub mod rng;
+pub mod timer;
+
+pub use codec::Codec;
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,74 @@
+//! Stopwatch used by the engines to attribute wall time to compute /
+//! communication / synchronization buckets.
+
+use std::time::{Duration, Instant};
+
+/// A resettable stopwatch accumulating elapsed time across start/stop pairs.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    acc: Duration,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    pub fn new() -> Self {
+        Stopwatch { acc: Duration::ZERO, started: None }
+    }
+
+    /// Start (or restart) the running segment.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop the running segment, folding it into the accumulator.
+    /// Returns the segment length.
+    pub fn stop(&mut self) -> Duration {
+        match self.started.take() {
+            Some(t) => {
+                let d = t.elapsed();
+                self.acc += d;
+                d
+            }
+            None => Duration::ZERO,
+        }
+    }
+
+    /// Total accumulated time (not counting a currently running segment).
+    pub fn total(&self) -> Duration {
+        self.acc
+    }
+
+    /// Time a closure and fold it into the accumulator.
+    pub fn time<R>(&mut self, f: impl FnOnce() -> R) -> R {
+        self.start();
+        let r = f();
+        self.stop();
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_across_segments() {
+        let mut sw = Stopwatch::new();
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        sw.time(|| std::thread::sleep(Duration::from_millis(2)));
+        assert!(sw.total() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn stop_without_start_is_zero() {
+        let mut sw = Stopwatch::new();
+        assert_eq!(sw.stop(), Duration::ZERO);
+        assert_eq!(sw.total(), Duration::ZERO);
+    }
+}

@@ -1,0 +1,155 @@
+//! Engine-equivalence property tests: for confluent vertex programs
+//! (SSSP, WCC — results independent of message timing), ALL engines must
+//! produce identical final states on random graphs under random
+//! partitionings; for PageRank the results must agree within
+//! tolerance-bounded error. Hand-rolled property harness (the vendored
+//! crate set has no proptest) over the crate's deterministic RNG.
+
+use graphhp::algorithms::{oracle, IncrementalPageRank, Sssp, Wcc};
+use graphhp::engine::giraphpp::VertexSweep;
+use graphhp::engine::{am_hama, giraphpp, graphhp as hp, hama, EngineConfig};
+use graphhp::graph::{generators, DistGraph, Graph};
+use graphhp::partition::{hash_partition, metis_partition, MetisConfig};
+use graphhp::util::Rng;
+
+/// Random test-case source: graph + partitioning + config knobs.
+struct CaseGen {
+    rng: Rng,
+}
+
+impl CaseGen {
+    fn new(seed: u64) -> Self {
+        CaseGen { rng: Rng::new(seed) }
+    }
+
+    fn graph(&mut self) -> Graph {
+        let pick = self.rng.index(4);
+        let seed = self.rng.next_u64();
+        match pick {
+            0 => generators::connected(60 + self.rng.index(200), self.rng.index(120), seed),
+            1 => generators::road(5 + self.rng.index(12), 5 + self.rng.index(12), seed),
+            2 => generators::powerlaw(60 + self.rng.index(300), 2 + self.rng.index(4), seed),
+            _ => generators::delaunay_like(4 + self.rng.index(10), 4 + self.rng.index(10), seed),
+        }
+    }
+
+    fn dist(&mut self, g: &Graph) -> DistGraph {
+        let k = 1 + self.rng.index(6);
+        let a = if self.rng.chance(0.5) {
+            hash_partition(g, k)
+        } else {
+            metis_partition(g, k, &MetisConfig { seed: self.rng.next_u64(), ..Default::default() })
+        };
+        DistGraph::new(g, &a, k)
+    }
+
+    fn config(&mut self) -> EngineConfig {
+        EngineConfig {
+            boundary_in_local_phase: self.rng.chance(0.7),
+            async_local_messaging: self.rng.chance(0.7),
+            ..Default::default()
+        }
+    }
+}
+
+const CASES: usize = 25;
+
+#[test]
+fn sssp_identical_across_engines_on_random_cases() {
+    let mut gen = CaseGen::new(0xC0FFEE);
+    for case in 0..CASES {
+        let g = gen.graph();
+        let dg = gen.dist(&g);
+        let cfg = gen.config();
+        let source = (gen.rng.index(g.num_vertices())) as u32;
+        let prog = Sssp { source };
+        let h = hama::run_hama(&prog, &dg, &cfg).values;
+        let a = am_hama::run_am_hama(&prog, &dg, &cfg).values;
+        let p = hp::run_graphhp(&prog, &dg, &cfg).values;
+        // min-fixed-point: bitwise identical across engines
+        assert_eq!(h, a, "case {case}: hama vs am-hama");
+        assert_eq!(h, p, "case {case}: hama vs graphhp (cfg {cfg:?})");
+        // and correct
+        let want = oracle::dijkstra(&g, source);
+        for (i, (&got, &w)) in h.iter().zip(&want).enumerate() {
+            if w.is_finite() {
+                assert!((got - w as f32).abs() < 1e-2, "case {case} v{i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn wcc_identical_across_engines_on_random_cases() {
+    let mut gen = CaseGen::new(0xBEEF);
+    for case in 0..CASES {
+        let g = gen.graph();
+        let dg = gen.dist(&g);
+        let cfg = gen.config();
+        let h = hama::run_hama(&Wcc, &dg, &cfg).values;
+        let a = am_hama::run_am_hama(&Wcc, &dg, &cfg).values;
+        let p = hp::run_graphhp(&Wcc, &dg, &cfg).values;
+        let gpp =
+            giraphpp::run_giraphpp(&VertexSweep { program: Wcc, seed: 1 }, &dg, &cfg).values;
+        assert_eq!(h, a, "case {case}");
+        assert_eq!(h, p, "case {case}");
+        assert_eq!(h, gpp, "case {case}");
+    }
+}
+
+#[test]
+fn pagerank_close_across_engines_on_random_cases() {
+    let mut gen = CaseGen::new(0xFACADE);
+    for case in 0..10 {
+        let g = gen.graph();
+        let dg = gen.dist(&g);
+        let cfg = gen.config();
+        let prog = IncrementalPageRank { tolerance: 1e-9 };
+        let h = hama::run_hama(&prog, &dg, &cfg).values;
+        let p = hp::run_graphhp(&prog, &dg, &cfg).values;
+        let a = am_hama::run_am_hama(&prog, &dg, &cfg).values;
+        for i in 0..h.len() {
+            assert!((h[i] - p[i]).abs() < 1e-5, "case {case} v{i}: {} vs {}", h[i], p[i]);
+            assert!((h[i] - a[i]).abs() < 1e-5, "case {case} v{i}");
+        }
+    }
+}
+
+#[test]
+fn graphhp_iterations_never_exceed_hama_on_confluent_programs() {
+    // the hybrid model can only collapse supersteps, never add barriers
+    let mut gen = CaseGen::new(0xDA7A);
+    for case in 0..15 {
+        let g = gen.graph();
+        let dg = gen.dist(&g);
+        let cfg = EngineConfig::default();
+        let source = (gen.rng.index(g.num_vertices())) as u32;
+        let h = hama::run_hama(&Sssp { source }, &dg, &cfg);
+        let p = hp::run_graphhp(&Sssp { source }, &dg, &cfg);
+        assert!(
+            p.metrics.global_iterations <= h.metrics.global_iterations,
+            "case {case}: graphhp {} > hama {}",
+            p.metrics.global_iterations,
+            h.metrics.global_iterations
+        );
+    }
+}
+
+#[test]
+fn all_engines_terminate_on_random_inputs() {
+    // no deadlock / livelock: bounded iterations on arbitrary cases
+    let mut gen = CaseGen::new(0x7E57);
+    for _ in 0..15 {
+        let g = gen.graph();
+        let dg = gen.dist(&g);
+        let cfg = EngineConfig { max_iterations: 100_000, ..gen.config() };
+        let source = (gen.rng.index(g.num_vertices())) as u32;
+        for m in [
+            hama::run_hama(&Sssp { source }, &dg, &cfg).metrics,
+            am_hama::run_am_hama(&Sssp { source }, &dg, &cfg).metrics,
+            hp::run_graphhp(&Sssp { source }, &dg, &cfg).metrics,
+        ] {
+            assert!(m.global_iterations < 100_000, "engine hit the cap");
+        }
+    }
+}

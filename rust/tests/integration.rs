@@ -1,0 +1,279 @@
+//! Cross-module integration tests: every algorithm on every engine on
+//! real (generated) graphs, verified against sequential oracles.
+
+use graphhp::algorithms::bipartite_matching::{validate_matching, BipartiteMatching};
+use graphhp::algorithms::coloring::{is_proper_coloring, Coloring};
+use graphhp::algorithms::pagerank::{GasPageRank, GiraphPPPageRank};
+use graphhp::algorithms::{oracle, IncrementalPageRank, Sssp, Wcc};
+use graphhp::engine::giraphpp::VertexSweep;
+use graphhp::engine::{am_hama, giraphpp, graphhp as hp, graphlab, hama, EngineConfig};
+use graphhp::graph::{generators, DistGraph, Graph};
+use graphhp::partition::{hash_partition, metis_partition, MetisConfig};
+
+fn dist(g: &Graph, k: usize) -> DistGraph {
+    let a = metis_partition(g, k, &MetisConfig::default());
+    DistGraph::new(g, &a, k)
+}
+
+// ---------------------------------------------------------------- SSSP
+
+fn sssp_all_engines(g: &Graph, k: usize, source: u32) {
+    let dg = dist(g, k);
+    let cfg = EngineConfig::default();
+    let want = oracle::dijkstra(g, source);
+    let prog = Sssp { source };
+    for (name, values) in [
+        ("hama", hama::run_hama(&prog, &dg, &cfg).values),
+        ("am-hama", am_hama::run_am_hama(&prog, &dg, &cfg).values),
+        ("graphhp", hp::run_graphhp(&prog, &dg, &cfg).values),
+        (
+            "giraph++",
+            giraphpp::run_giraphpp(&VertexSweep { program: Sssp { source }, seed: 5 }, &dg, &cfg)
+                .values,
+        ),
+    ] {
+        for (i, (&got, &w)) in values.iter().zip(&want).enumerate() {
+            if w.is_finite() {
+                assert!((got - w as f32).abs() < 1e-2, "{name} v{i}: {got} vs {w}");
+            } else {
+                assert!(got >= 1e29, "{name} v{i}: expected inf");
+            }
+        }
+    }
+}
+
+#[test]
+fn sssp_on_road_graph_all_engines() {
+    sssp_all_engines(&generators::road(25, 25, 3), 5, 0);
+}
+
+#[test]
+fn sssp_on_random_connected_graph_all_engines() {
+    sssp_all_engines(&generators::connected(400, 200, 9), 7, 13);
+}
+
+#[test]
+fn sssp_on_powerlaw_all_engines() {
+    sssp_all_engines(&generators::powerlaw(500, 4, 11), 4, 2);
+}
+
+// ------------------------------------------------------------ PageRank
+
+#[test]
+fn pagerank_all_engines_agree_with_power_iteration() {
+    let g = generators::powerlaw(800, 4, 17);
+    let k = 5;
+    let a = metis_partition(&g, k, &MetisConfig::default());
+    let dg = DistGraph::new(&g, &a, k);
+    let cfg = EngineConfig::default();
+    let want = oracle::pagerank(&g, 1e-12);
+    let tol = 1e-8;
+    let check = |name: &str, values: &[f64], bound: f64| {
+        let err: f64 =
+            values.iter().zip(&want).map(|(x, y)| (x - y).abs()).sum::<f64>() / want.len() as f64;
+        assert!(err < bound, "{name}: avg err {err}");
+    };
+    check(
+        "hama",
+        &hama::run_hama(&IncrementalPageRank { tolerance: tol }, &dg, &cfg).values,
+        1e-5,
+    );
+    check(
+        "am-hama",
+        &am_hama::run_am_hama(&IncrementalPageRank { tolerance: tol }, &dg, &cfg).values,
+        1e-5,
+    );
+    check(
+        "graphhp",
+        &hp::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg).values,
+        1e-4,
+    );
+    check(
+        "giraph++",
+        &giraphpp::run_giraphpp(&GiraphPPPageRank { tolerance: tol }, &dg, &cfg).values,
+        1e-4,
+    );
+    check(
+        "graphlab-sync",
+        &graphlab::run_graphlab_sync(
+            &GasPageRank { tolerance: 1e-10 },
+            &g,
+            &a,
+            k,
+            &cfg,
+            &graphlab::GraphLabCost::default(),
+        )
+        .values,
+        1e-5,
+    );
+    check(
+        "graphlab-async",
+        &graphlab::run_graphlab_async(
+            &GasPageRank { tolerance: 1e-10 },
+            &g,
+            &a,
+            k,
+            &cfg,
+            &graphlab::GraphLabCost::default(),
+        )
+        .values,
+        1e-5,
+    );
+}
+
+#[test]
+fn pagerank_iteration_ordering_matches_paper() {
+    // the paper's Table 4 ordering: GraphHP < Giraph++ < GraphLab sync
+    let g = generators::powerlaw(5_000, 5, 23);
+    let k = 8;
+    let a = metis_partition(&g, k, &MetisConfig::default());
+    let dg = DistGraph::new(&g, &a, k);
+    let cfg = EngineConfig::default();
+    let tol = 1e-4;
+    let p = hp::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
+    let gpp = giraphpp::run_giraphpp(&GiraphPPPageRank { tolerance: tol }, &dg, &cfg);
+    let s = graphlab::run_graphlab_sync(
+        &GasPageRank { tolerance: tol },
+        &g,
+        &a,
+        k,
+        &cfg,
+        &graphlab::GraphLabCost::default(),
+    );
+    assert!(
+        p.metrics.global_iterations <= gpp.metrics.global_iterations,
+        "graphhp {} vs giraph++ {}",
+        p.metrics.global_iterations,
+        gpp.metrics.global_iterations
+    );
+    assert!(
+        gpp.metrics.global_iterations < s.metrics.global_iterations,
+        "giraph++ {} vs graphlab {}",
+        gpp.metrics.global_iterations,
+        s.metrics.global_iterations
+    );
+}
+
+// ----------------------------------------------------------------- WCC
+
+#[test]
+fn wcc_multi_component_all_engines() {
+    // build several disconnected communities
+    let mut b = graphhp::graph::GraphBuilder::new(600);
+    let mut rng = graphhp::util::Rng::new(31);
+    for c in 0..6u32 {
+        let base = c * 100;
+        for i in 1..100u32 {
+            let parent = base + rng.gen_range(i as u64) as u32;
+            b.add_undirected(base + i, parent, 1.0);
+        }
+    }
+    let g = b.build();
+    let want = oracle::wcc_labels(&g);
+    let dg = dist(&g, 6);
+    let cfg = EngineConfig::default();
+    assert_eq!(hama::run_hama(&Wcc, &dg, &cfg).values, want);
+    assert_eq!(am_hama::run_am_hama(&Wcc, &dg, &cfg).values, want);
+    assert_eq!(hp::run_graphhp(&Wcc, &dg, &cfg).values, want);
+    assert_eq!(
+        giraphpp::run_giraphpp(&VertexSweep { program: Wcc, seed: 3 }, &dg, &cfg).values,
+        want
+    );
+}
+
+// ------------------------------------------------------------ Matching
+
+#[test]
+fn bipartite_matching_all_engines_valid_and_maximal() {
+    let (nl, nr) = (150usize, 130usize);
+    let g = generators::bipartite(nl, nr, 3, 41);
+    let dg = dist(&g, 6);
+    let cfg = EngineConfig::default();
+    let prog = BipartiteMatching { num_left: nl as u32 };
+    let greedy = oracle::greedy_matching_size(&g, nl as u32);
+    for (name, values) in [
+        ("hama", hama::run_hama(&prog, &dg, &cfg).values),
+        ("am-hama", am_hama::run_am_hama(&prog, &dg, &cfg).values),
+        ("graphhp", hp::run_graphhp(&prog, &dg, &cfg).values),
+    ] {
+        let size =
+            validate_matching(&g, nl as u32, &values).unwrap_or_else(|e| panic!("{name}: {e}"));
+        // any maximal matching is >= half the maximum >= half of greedy
+        assert!(size * 2 >= greedy, "{name}: size {size} vs greedy {greedy}");
+    }
+}
+
+// ------------------------------------------------------------ Coloring
+
+#[test]
+fn coloring_all_engines_proper() {
+    let g = generators::delaunay_like(16, 16, 7);
+    let dg = dist(&g, 4);
+    let cfg = EngineConfig::default();
+    assert!(is_proper_coloring(&g, &hama::run_hama(&Coloring, &dg, &cfg).values));
+    assert!(is_proper_coloring(&g, &am_hama::run_am_hama(&Coloring, &dg, &cfg).values));
+    assert!(is_proper_coloring(&g, &hp::run_graphhp(&Coloring, &dg, &cfg).values));
+}
+
+// ----------------------------------------------------- paper invariants
+
+#[test]
+fn graphhp_beats_hama_on_iterations_across_workloads() {
+    let cfg = EngineConfig::default();
+    // road SSSP
+    let g = generators::road(40, 40, 1);
+    let dg = dist(&g, 8);
+    let h = hama::run_hama(&Sssp { source: 0 }, &dg, &cfg);
+    let p = hp::run_graphhp(&Sssp { source: 0 }, &dg, &cfg);
+    assert!(p.metrics.global_iterations * 3 <= h.metrics.global_iterations);
+    // web PageRank
+    let g = generators::powerlaw(3_000, 5, 3);
+    let dg = dist(&g, 8);
+    let h = hama::run_hama(&IncrementalPageRank { tolerance: 1e-5 }, &dg, &cfg);
+    let p = hp::run_graphhp(&IncrementalPageRank { tolerance: 1e-5 }, &dg, &cfg);
+    assert!(p.metrics.global_iterations < h.metrics.global_iterations);
+    assert!(p.metrics.network_messages <= h.metrics.network_messages);
+}
+
+#[test]
+fn hash_partitioning_erases_most_of_the_gain() {
+    // the local phase exploits locality; hash partitioning should shrink
+    // the iteration gap vs metis (ablation as a regression test)
+    let g = generators::road(40, 40, 2);
+    let cfg = EngineConfig::default();
+    let k = 8;
+    let dm = DistGraph::new(&g, &metis_partition(&g, k, &MetisConfig::default()), k);
+    let dh = DistGraph::new(&g, &hash_partition(&g, k), k);
+    let pm = hp::run_graphhp(&Sssp { source: 0 }, &dm, &cfg);
+    let ph = hp::run_graphhp(&Sssp { source: 0 }, &dh, &cfg);
+    assert!(
+        pm.metrics.global_iterations < ph.metrics.global_iterations,
+        "metis {} vs hash {}",
+        pm.metrics.global_iterations,
+        ph.metrics.global_iterations
+    );
+}
+
+#[test]
+fn cli_binary_smoke() {
+    // generate -> partition -> run through the real binary
+    let exe = env!("CARGO_BIN_EXE_graphhp");
+    let dir = std::env::temp_dir().join("graphhp_cli_smoke");
+    std::fs::create_dir_all(&dir).unwrap();
+    let gpath = dir.join("g.bin");
+    let out = std::process::Command::new(exe)
+        .args(["generate", "--kind", "road", "--rows", "30", "--cols", "30", "--out"])
+        .arg(&gpath)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let out = std::process::Command::new(exe)
+        .args(["run", "--graph"])
+        .arg(&gpath)
+        .args(["--algo", "sssp", "--engine", "graphhp", "--parts", "6"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("vertices reached"), "{stdout}");
+}

@@ -1,0 +1,211 @@
+//! Integration tests of the XLA/PJRT runtime path: load the AOT
+//! artifacts produced by `make artifacts` and check the compiled
+//! local-phase executables against scalar references, then prove the
+//! dense-accelerated GraphHP local phase is equivalent to the scalar
+//! engine path.
+//!
+//! Requires `artifacts/` (run `make artifacts`); tests fail with a clear
+//! message otherwise.
+
+use graphhp::algorithms::sssp::INF;
+use graphhp::graph::{generators, DistGraph};
+use graphhp::partition::{metis_partition, MetisConfig};
+use graphhp::runtime::{DenseLocalAccel, XlaRuntime};
+use graphhp::util::Rng;
+
+fn runtime() -> XlaRuntime {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    assert!(
+        dir.join("manifest.txt").exists(),
+        "artifacts missing — run `make artifacts` first"
+    );
+    XlaRuntime::new(dir).expect("PJRT CPU client")
+}
+
+#[test]
+fn pagerank_phase_matches_scalar_matvec() {
+    let rt = runtime();
+    let phase = rt.load_phase("pagerank_local").expect("load pagerank_local");
+    let n = phase.spec.n;
+    let steps = phase.spec.steps;
+
+    let mut rng = Rng::new(7);
+    // random sparse-ish matrix with small entries (column-stochastic-ish)
+    let mut m = vec![0f32; n * n];
+    for v in m.iter_mut() {
+        if rng.chance(0.05) {
+            *v = rng.f32_range(0.0, 0.01);
+        }
+    }
+    let rank: Vec<f32> = (0..n).map(|_| rng.f32_range(0.0, 1.0)).collect();
+    let delta: Vec<f32> = (0..n).map(|_| rng.f32_range(0.0, 1.0)).collect();
+
+    let (got_rank, got_delta, got_acc, got_linf) =
+        phase.run_pagerank(&m, &rank, &delta).expect("execute");
+
+    // scalar reference of K steps
+    let mut r = rank.clone();
+    let mut d = delta.clone();
+    let mut acc = vec![0f32; n];
+    for _ in 0..steps {
+        for i in 0..n {
+            acc[i] += d[i];
+        }
+        let mut nd = vec![0f32; n];
+        for i in 0..n {
+            let row = &m[i * n..(i + 1) * n];
+            let mut s = 0f32;
+            for j in 0..n {
+                s += row[j] * d[j];
+            }
+            nd[i] = s;
+            r[i] += s;
+        }
+        d = nd;
+    }
+    let linf = d.iter().fold(0f32, |a, &b| a.max(b.abs()));
+
+    for i in 0..n {
+        assert!((got_rank[i] - r[i]).abs() < 1e-4, "rank[{i}]: {} vs {}", got_rank[i], r[i]);
+        assert!((got_delta[i] - d[i]).abs() < 1e-5, "delta[{i}]");
+        assert!((got_acc[i] - acc[i]).abs() < 1e-4, "acc[{i}]");
+    }
+    assert!((got_linf - linf).abs() < 1e-5);
+}
+
+#[test]
+fn sssp_phase_matches_scalar_minplus() {
+    let rt = runtime();
+    let phase = rt.load_phase("sssp_local").expect("load sssp_local");
+    let n = phase.spec.n;
+    let steps = phase.spec.steps;
+
+    let mut rng = Rng::new(13);
+    let mut w = vec![INF; n * n];
+    for v in w.iter_mut() {
+        if rng.chance(0.03) {
+            *v = rng.f32_range(0.1, 10.0);
+        }
+    }
+    let mut d0 = vec![INF; n];
+    d0[0] = 0.0;
+    d0[n / 2] = 5.0;
+
+    let (got, changed) = phase.run_sssp(&w, &d0).expect("execute");
+
+    let mut d = d0.clone();
+    for _ in 0..steps {
+        let mut nd = d.clone();
+        for i in 0..n {
+            let row = &w[i * n..(i + 1) * n];
+            for j in 0..n {
+                let cand = row[j] + d[j];
+                if cand < nd[i] {
+                    nd[i] = cand;
+                }
+            }
+        }
+        d = nd;
+    }
+    let want_changed = d.iter().zip(&d0).filter(|(a, b)| a < b).count() as u32;
+
+    for i in 0..n {
+        let (a, b) = (got[i], d[i]);
+        if b >= INF {
+            assert!(a >= INF * 0.5, "dist[{i}] should stay inf, got {a}");
+        } else {
+            assert!((a - b).abs() < 1e-3, "dist[{i}]: {a} vs {b}");
+        }
+    }
+    assert_eq!(changed, want_changed);
+}
+
+#[test]
+fn accelerated_pagerank_local_phase_equals_scalar() {
+    let rt = runtime();
+    let phase = rt.load_phase("pagerank_local").expect("load");
+    let n = phase.spec.n;
+
+    // one partition of a real graph, densified
+    let g = generators::powerlaw(600, 4, 5);
+    let a = metis_partition(&g, 4, &MetisConfig::default());
+    let dg = DistGraph::new(&g, &a, 4);
+    for part in &dg.parts {
+        if part.num_vertices() > n {
+            continue;
+        }
+        let mut accel = DenseLocalAccel::new(part, n, 0.85).unwrap();
+        let live = accel.live;
+
+        let mut rank_x: Vec<f32> = vec![0.15; live];
+        let mut delta_x: Vec<f32> = vec![0.15; live];
+        let (acc_x, invocations) = accel
+            .pagerank_local_phase(&rt, &phase, &mut rank_x, &mut delta_x, 1e-7, 1000)
+            .expect("accelerated phase");
+        assert!(invocations >= 1);
+
+        let mut rank_s: Vec<f32> = vec![0.15; live];
+        let mut delta_s: Vec<f32> = vec![0.15; live];
+        let acc_s = accel.pagerank_local_phase_scalar(&mut rank_s, &mut delta_s, 1e-7, 100_000);
+
+        for i in 0..live {
+            assert!(
+                (rank_x[i] - rank_s[i]).abs() < 1e-3,
+                "rank[{i}]: xla {} vs scalar {}",
+                rank_x[i],
+                rank_s[i]
+            );
+            // accumulated outflow mass drives remote messages: must agree
+            assert!((acc_x[i] - acc_s[i]).abs() < 1e-3, "acc[{i}]");
+        }
+    }
+}
+
+#[test]
+fn accelerated_sssp_local_phase_reaches_fixpoint() {
+    let rt = runtime();
+    let phase = rt.load_phase("sssp_local").expect("load");
+    let n = phase.spec.n;
+
+    let g = generators::road(14, 14, 9); // 196 vertices, one partition
+    let dg = DistGraph::new(&g, &vec![0; g.num_vertices()], 1);
+    let mut accel = DenseLocalAccel::new(&dg.parts[0], n, 0.85).unwrap();
+
+    let mut dist = vec![INF; accel.live];
+    dist[0] = 0.0;
+    let (improved, invocations) =
+        accel.sssp_local_phase(&rt, &phase, &mut dist, 1000).expect("sssp phase");
+    assert!(improved > 0);
+    assert!(invocations >= 2, "grid diameter needs multiple 8-step chunks");
+
+    // must equal Dijkstra on the whole (single-partition) graph
+    let want = graphhp::algorithms::oracle::dijkstra(&g, 0);
+    for i in 0..accel.live {
+        if want[i].is_finite() {
+            assert!(
+                (dist[i] - want[i] as f32).abs() < 1e-2,
+                "dist[{i}]: {} vs {}",
+                dist[i],
+                want[i]
+            );
+        } else {
+            assert!(dist[i] >= INF * 0.5);
+        }
+    }
+}
+
+#[test]
+fn runtime_reports_platform() {
+    let rt = runtime();
+    assert!(rt.platform().to_lowercase().contains("cpu"), "{}", rt.platform());
+}
+
+#[test]
+fn missing_artifact_is_clear_error() {
+    let rt = runtime();
+    let err = match rt.load_phase("nonexistent") {
+        Ok(_) => panic!("expected an error"),
+        Err(e) => e.to_string(),
+    };
+    assert!(err.contains("not in manifest"), "{err}");
+}
