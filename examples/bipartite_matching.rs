@@ -7,9 +7,8 @@
 //! ```
 
 use graphhp::algorithms::bipartite_matching::{validate_matching, BipartiteMatching};
-use graphhp::engine::{am_hama, graphhp as hp_engine, hama, EngineConfig};
-use graphhp::graph::{generators, DistGraph};
-use graphhp::partition::{metis_partition, MetisConfig};
+use graphhp::engine::{EngineKind, Runner};
+use graphhp::graph::generators;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -25,21 +24,19 @@ fn main() {
         g.num_edges(),
         parts
     );
-    let assignment = metis_partition(&g, parts, &MetisConfig::default());
-    let dg = DistGraph::new(&g, &assignment, parts);
-    let cfg = EngineConfig::default();
+    let mut runner = Runner::new(&g).partitions(parts);
     let prog = BipartiteMatching { num_left: nl as u32 };
 
     println!("\n  engine     iterations   net messages         time     matching");
-    for (name, r) in [
-        ("Hama", hama::run_hama(&prog, &dg, &cfg)),
-        ("AM-Hama", am_hama::run_am_hama(&prog, &dg, &cfg)),
-        ("GraphHP", hp_engine::run_graphhp(&prog, &dg, &cfg)),
-    ] {
+    for (kind, r) in runner.compare(
+        &[EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP],
+        &prog,
+    ) {
         let size = validate_matching(&g, nl as u32, &r.values)
             .expect("matching must be valid and maximal");
         println!(
-            "  {name:<10} {:>8} {:>14} {:>12.3}s {:>8}",
+            "  {:<10} {:>8} {:>14} {:>12.3}s {:>8}",
+            kind.to_string(),
             r.metrics.global_iterations,
             r.metrics.network_messages,
             r.metrics.elapsed.as_secs_f64(),

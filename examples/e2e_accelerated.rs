@@ -18,7 +18,7 @@
 //! ```
 
 use graphhp::algorithms::{oracle, IncrementalPageRank, Sssp};
-use graphhp::engine::{graphhp as hp_engine, hama, EngineConfig, Metrics};
+use graphhp::engine::{EngineConfig, EngineKind, Metrics, Runner};
 use graphhp::graph::{generators, DistGraph};
 use graphhp::partition::{metis_partition, MetisConfig, PartitionStats};
 use graphhp::runtime::{pipeline, XlaRuntime};
@@ -68,10 +68,11 @@ fn main() {
         values.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum::<f64>() / want.len() as f64
     };
 
-    let h = hama::run_hama(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
+    let mut runner = Runner::from_dist(&dg);
+    let h = runner.run_on(EngineKind::Hama, &IncrementalPageRank { tolerance: tol });
     row("Hama (scalar)", &h.metrics);
 
-    let hp = hp_engine::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
+    let hp = runner.run_on(EngineKind::GraphHP, &IncrementalPageRank { tolerance: tol });
     row("GraphHP (scalar)", &hp.metrics);
 
     let ax = pipeline::run_pagerank_accelerated(&rt, &dg, tol as f32, &cfg)
@@ -115,9 +116,10 @@ fn main() {
     println!("  ({} partitions)", kr);
     let want_d = oracle::dijkstra(&gr, 0);
 
-    let h = hama::run_hama(&Sssp { source: 0 }, &dgr, &cfg);
+    let mut road_runner = Runner::from_dist(&dgr);
+    let h = road_runner.run_on(EngineKind::Hama, &Sssp { source: 0 });
     row("Hama (scalar)", &h.metrics);
-    let hp = hp_engine::run_graphhp(&Sssp { source: 0 }, &dgr, &cfg);
+    let hp = road_runner.run_on(EngineKind::GraphHP, &Sssp { source: 0 });
     row("GraphHP (scalar)", &hp.metrics);
     let ax = pipeline::run_sssp_accelerated(&rt, &dgr, 0, &cfg).expect("sssp pipeline");
     row("GraphHP (XLA local)", &ax.metrics);

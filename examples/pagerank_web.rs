@@ -7,9 +7,8 @@
 //! ```
 
 use graphhp::algorithms::{oracle, IncrementalPageRank};
-use graphhp::engine::{am_hama, graphhp as hp_engine, hama, EngineConfig};
-use graphhp::graph::{generators, DistGraph};
-use graphhp::partition::{metis_partition, MetisConfig};
+use graphhp::engine::{EngineKind, Runner};
+use graphhp::graph::generators;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -23,32 +22,32 @@ fn main() {
         g.num_edges(),
         parts
     );
-    let assignment = metis_partition(&g, parts, &MetisConfig::default());
-    let dg = DistGraph::new(&g, &assignment, parts);
-    let cfg = EngineConfig::default();
+    let mut runner = Runner::new(&g).partitions(parts);
 
     println!("\n tolerance |      Hama          |     AM-Hama        |     GraphHP");
     println!("           |   I        T       |   I        T       |   I        T");
     for exp in 2..=6 {
         let tol = 10f64.powi(-exp);
         let prog = IncrementalPageRank { tolerance: tol };
-        let h = hama::run_hama(&prog, &dg, &cfg);
-        let am = am_hama::run_am_hama(&prog, &dg, &cfg);
-        let hp = hp_engine::run_graphhp(&prog, &dg, &cfg);
+        let results = runner.compare(
+            &[EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP],
+            &prog,
+        );
+        let [h, am, hp] = &results[..] else { unreachable!() };
         println!(
             "   1e-{exp}    | {:>5} {:>9.3}s  | {:>5} {:>9.3}s  | {:>5} {:>9.3}s",
-            h.metrics.global_iterations,
-            h.metrics.elapsed.as_secs_f64(),
-            am.metrics.global_iterations,
-            am.metrics.elapsed.as_secs_f64(),
-            hp.metrics.global_iterations,
-            hp.metrics.elapsed.as_secs_f64(),
+            h.1.metrics.global_iterations,
+            h.1.metrics.elapsed.as_secs_f64(),
+            am.1.metrics.global_iterations,
+            am.1.metrics.elapsed.as_secs_f64(),
+            hp.1.metrics.global_iterations,
+            hp.1.metrics.elapsed.as_secs_f64(),
         );
     }
 
     // accuracy spot check at the tightest tolerance
     let want = oracle::pagerank(&g, 1e-12);
-    let hp = hp_engine::run_graphhp(&IncrementalPageRank { tolerance: 1e-6 }, &dg, &cfg);
+    let hp = runner.run_on(EngineKind::GraphHP, &IncrementalPageRank { tolerance: 1e-6 });
     let err: f64 =
         hp.values.iter().zip(&want).map(|(a, b)| (a - b).abs()).sum::<f64>() / want.len() as f64;
     println!("\nGraphHP@1e-6 vs power iteration: avg |err| = {err:.2e}");

@@ -1,25 +1,38 @@
 //! L3 hot-path profiler: vertex-update throughput and per-phase costs.
 use graphhp::algorithms::{IncrementalPageRank, Sssp};
-use graphhp::engine::{graphhp as hp_engine, hama, EngineConfig};
-use graphhp::graph::{generators, DistGraph};
-use graphhp::partition::{metis_partition, MetisConfig};
+use graphhp::engine::{EngineKind, Runner};
+use graphhp::graph::generators;
 use std::time::Instant;
 
 fn main() {
     let g = generators::powerlaw(100_000, 6, 1);
-    let dg = DistGraph::new(&g, &metis_partition(&g, 12, &MetisConfig::default()), 12);
-    let cfg = EngineConfig::default();
-    for (name, which) in [("hama/pagerank", 0), ("graphhp/pagerank", 1), ("graphhp/sssp", 2)] {
+    let mut runner = Runner::new(&g).partitions(12);
+    runner.dist(); // partition outside the timed region
+    for (name, kind) in
+        [("hama/pagerank", EngineKind::Hama), ("graphhp/pagerank", EngineKind::GraphHP)]
+    {
         let t0 = Instant::now();
-        let (updates, msgs) = match which {
-            0 => { let r = hama::run_hama(&IncrementalPageRank{tolerance:1e-4}, &dg, &cfg); (r.metrics.vertex_computations, r.metrics.local_messages + r.metrics.network_messages) }
-            1 => { let r = hp_engine::run_graphhp(&IncrementalPageRank{tolerance:1e-4}, &dg, &cfg); (r.metrics.vertex_computations, r.metrics.local_messages + r.metrics.network_messages) }
-            _ => { let gr = generators::road(300,300,2); let dgr = DistGraph::new(&gr, &metis_partition(&gr, 12, &MetisConfig::default()), 12); let t=Instant::now(); let r = hp_engine::run_graphhp(&Sssp{source:0}, &dgr, &cfg); let d=t.elapsed(); println!("  graphhp/sssp: {} updates in {:.3}s = {:.2} M-updates/s", r.metrics.vertex_computations, d.as_secs_f64(), r.metrics.vertex_computations as f64/d.as_secs_f64()/1e6); continue_marker(); (0,0) }
-        };
-        if which == 2 { continue; }
+        let r = runner.run_on(kind, &IncrementalPageRank { tolerance: 1e-4 });
         let dt = t0.elapsed();
-        println!("  {name}: {updates} updates, {msgs} msgs in {:.3}s = {:.2} M-updates/s, {:.2} M-msgs/s",
-            dt.as_secs_f64(), updates as f64/dt.as_secs_f64()/1e6, msgs as f64/dt.as_secs_f64()/1e6);
+        let updates = r.metrics.vertex_computations;
+        let msgs = r.metrics.local_messages + r.metrics.network_messages;
+        println!(
+            "  {name}: {updates} updates, {msgs} msgs in {:.3}s = {:.2} M-updates/s, {:.2} M-msgs/s",
+            dt.as_secs_f64(),
+            updates as f64 / dt.as_secs_f64() / 1e6,
+            msgs as f64 / dt.as_secs_f64() / 1e6
+        );
     }
+    let gr = generators::road(300, 300, 2);
+    let mut road_runner = Runner::new(&gr).partitions(12);
+    road_runner.dist(); // partition outside the timed region
+    let t0 = Instant::now();
+    let r = road_runner.run_on(EngineKind::GraphHP, &Sssp { source: 0 });
+    let d = t0.elapsed();
+    println!(
+        "  graphhp/sssp: {} updates in {:.3}s = {:.2} M-updates/s",
+        r.metrics.vertex_computations,
+        d.as_secs_f64(),
+        r.metrics.vertex_computations as f64 / d.as_secs_f64() / 1e6
+    );
 }
-fn continue_marker() {}

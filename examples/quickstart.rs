@@ -1,35 +1,39 @@
-//! Quickstart: build a graph, partition it, run PageRank on GraphHP, and
-//! read the metrics — the 60-second tour of the public API.
+//! Quickstart: build a graph, run PageRank on GraphHP and Hama through
+//! one `Runner` session, and read the metrics — the 60-second tour of
+//! the public API.
 //!
 //! ```sh
 //! cargo run --release --example quickstart
 //! ```
 
 use graphhp::algorithms::IncrementalPageRank;
-use graphhp::engine::{graphhp as hp_engine, hama, EngineConfig};
-use graphhp::graph::{generators, DistGraph};
-use graphhp::partition::{metis_partition, MetisConfig, PartitionStats};
+use graphhp::engine::{EngineKind, Runner};
+use graphhp::graph::generators;
 
 fn main() {
     // 1. a web-like graph (the stand-in for web-Google, scaled down)
     let g = generators::powerlaw(20_000, 5, 42);
     println!("graph: {} vertices, {} edges", g.num_vertices(), g.num_edges());
 
-    // 2. partition it with the built-in multilevel partitioner
-    let k = 12;
-    let assignment = metis_partition(&g, k, &MetisConfig::default());
-    println!("partitioning: {}", PartitionStats::compute(&g, &assignment, k));
-    let dg = DistGraph::new(&g, &assignment, k);
+    // 2. one session: partitions the graph once (multilevel/metis by
+    //    default) and runs any engine over the same distributed view
+    let mut runner = Runner::new(&g).partitions(12);
 
     // 3. run incremental PageRank under the hybrid model...
-    let cfg = EngineConfig::default();
     let pr = IncrementalPageRank { tolerance: 1e-4 };
-    let hp = hp_engine::run_graphhp(&pr, &dg, &cfg);
+    let hp = runner.run_on(EngineKind::GraphHP, &pr);
 
     // ...and under standard BSP for comparison
-    let hm = hama::run_hama(&pr, &dg, &cfg);
+    let hm = runner.run_on(EngineKind::Hama, &pr);
 
     // 4. inspect results and the paper's three metrics (I, M, T)
+    let dg = runner.dist();
+    println!(
+        "partitioning: {} partitions, edge cut {}, {} boundary vertices",
+        dg.num_parts(),
+        dg.edge_cut(),
+        dg.num_boundary()
+    );
     let mut top: Vec<(usize, f64)> = hp.values.iter().copied().enumerate().collect();
     top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     println!("\ntop-5 ranks: {:?}", &top[..5]);

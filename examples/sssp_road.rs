@@ -8,9 +8,8 @@
 //! ```
 
 use graphhp::algorithms::{oracle, Sssp};
-use graphhp::engine::{am_hama, graphhp as hp_engine, hama, EngineConfig, Metrics};
-use graphhp::graph::{generators, DistGraph};
-use graphhp::partition::{metis_partition, MetisConfig};
+use graphhp::engine::{EngineKind, Metrics, Runner};
+use graphhp::graph::generators;
 
 fn check(values: &[f32], want: &[f64]) {
     for (i, (&g, &w)) in values.iter().zip(want).enumerate() {
@@ -44,31 +43,27 @@ fn main() {
         g.num_edges(),
         parts
     );
-    let assignment = metis_partition(&g, parts, &MetisConfig::default());
-    let dg = DistGraph::new(&g, &assignment, parts);
     let want = oracle::dijkstra(&g, 0);
-
-    let cfg = EngineConfig::default();
+    let mut runner = Runner::new(&g).partitions(parts);
     let prog = Sssp { source: 0 };
 
     println!("\n  engine     iterations   net messages         time");
-    let h = hama::run_hama(&prog, &dg, &cfg);
-    check(&h.values, &want);
-    row("Hama", &h.metrics);
+    let results = runner.compare(
+        &[EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP],
+        &prog,
+    );
+    for (kind, r) in &results {
+        check(&r.values, &want);
+        row(&kind.to_string(), &r.metrics);
+    }
 
-    let am = am_hama::run_am_hama(&prog, &dg, &cfg);
-    check(&am.values, &want);
-    row("AM-Hama", &am.metrics);
-
-    let hp = hp_engine::run_graphhp(&prog, &dg, &cfg);
-    check(&hp.values, &want);
-    row("GraphHP", &hp.metrics);
-
+    let h = &results[0].1.metrics;
+    let hp = &results[2].1.metrics;
     println!(
         "\nGraphHP vs Hama: {:.0}x fewer iterations, {:.0}x fewer messages, {:.1}x faster",
-        h.metrics.global_iterations as f64 / hp.metrics.global_iterations as f64,
-        h.metrics.network_messages as f64 / hp.metrics.network_messages.max(1) as f64,
-        h.metrics.elapsed.as_secs_f64() / hp.metrics.elapsed.as_secs_f64().max(1e-9),
+        h.global_iterations as f64 / hp.global_iterations as f64,
+        h.network_messages as f64 / hp.network_messages.max(1) as f64,
+        h.elapsed.as_secs_f64() / hp.elapsed.as_secs_f64().max(1e-9),
     );
     println!("(all three engines verified against Dijkstra)");
 }

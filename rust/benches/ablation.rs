@@ -8,16 +8,16 @@
 //!     accelerates convergence for incremental computations);
 //!  3. asynchronous in-(pseudo)superstep messaging: on vs off;
 //!  4. combiner: on vs off (message counts);
-//!  5. XLA-accelerated vs scalar local phase (end-to-end wallclock on
-//!     this host — interpret-mode CPU; see DESIGN.md §7 for the TPU
-//!     estimate).
+//!  5. XLA-accelerated vs scalar local phase (feature `xla` only:
+//!     end-to-end wallclock on this host — interpret-mode CPU; see
+//!     DESIGN.md §7 for the TPU estimate).
 
 use graphhp::algorithms::{IncrementalPageRank, Sssp};
 use graphhp::bench_support as bs;
-use graphhp::engine::{graphhp as hp, hama, EngineConfig, SourceCombine, VertexContext, VertexProgram};
-use graphhp::graph::{generators, DistGraph, VertexId};
-use graphhp::partition::{hash_partition, metis_partition, MetisConfig};
-use graphhp::runtime::{pipeline, XlaRuntime};
+use graphhp::engine::{
+    EngineKind, Partitioner, Runner, SourceCombine, VertexContext, VertexProgram,
+};
+use graphhp::graph::{generators, VertexId};
 
 /// SSSP without its min-combiner (ablation 4).
 struct SsspNoCombiner {
@@ -55,37 +55,36 @@ impl VertexProgram for SsspNoCombiner {
 
 fn main() {
     bs::header("Ablations: where does GraphHP's win come from?", "DESIGN.md §4 (ours)");
-    let cfg = EngineConfig::default();
 
     // ---- 1. partitioning quality --------------------------------------
     println!("\n(1) metis vs hash partitioning — SSSP on road grid, 12 parts, GraphHP");
     let g = generators::road(160, 160, 1);
     let k = 12;
-    let dm = DistGraph::new(&g, &metis_partition(&g, k, &MetisConfig::default()), k);
-    let dh = DistGraph::new(&g, &hash_partition(&g, k), k);
-    let rm = hp::run_graphhp(&Sssp { source: 0 }, &dm, &cfg);
-    let rh = hp::run_graphhp(&Sssp { source: 0 }, &dh, &cfg);
-    bs::row("GraphHP+metis", &rm.metrics);
-    bs::row("GraphHP+hash", &rh.metrics);
+    let mut rm = bs::runner(&g, k);
+    let mut rh = Runner::new(&g).partitions(k).partitioner(Partitioner::Hash);
+    let resm = rm.run(&Sssp { source: 0 });
+    let resh = rh.run(&Sssp { source: 0 });
+    bs::row("GraphHP+metis", &resm.metrics);
+    bs::row("GraphHP+hash", &resh.metrics);
     println!(
         "  metis cut={} vs hash cut={} — locality drives the local phase",
-        dm.edge_cut(),
-        dh.edge_cut()
+        rm.dist().edge_cut(),
+        rh.dist().edge_cut()
     );
     bs::expect_less(
         "metis iters < hash iters",
-        rm.metrics.global_iterations,
-        rh.metrics.global_iterations,
+        resm.metrics.global_iterations,
+        resh.metrics.global_iterations,
     );
 
     // ---- 2. boundary vertices in local phase ---------------------------
     println!("\n(2) boundary_in_local_phase on/off — PageRank, web graph, 12 parts");
     let g = generators::powerlaw(30_000, 5, 7);
-    let dg = bs::dist(&g, 12);
     let pr = IncrementalPageRank { tolerance: 1e-4 };
-    let on = hp::run_graphhp(&pr, &dg, &cfg);
-    let off_cfg = EngineConfig { boundary_in_local_phase: false, ..cfg.clone() };
-    let off = hp::run_graphhp(&pr, &dg, &off_cfg);
+    // partition once; every A/B below runs over the same view
+    let dg = bs::dist(&g, 12);
+    let on = Runner::from_dist(&dg).run(&pr);
+    let off = Runner::from_dist(&dg).boundary_in_local_phase(false).run(&pr);
     bs::row("boundary IN", &on.metrics);
     bs::row("boundary OUT", &off.metrics);
     bs::expect_less(
@@ -96,9 +95,8 @@ fn main() {
 
     // ---- 3. async local messaging --------------------------------------
     println!("\n(3) async in-pseudo-superstep messaging on/off — GraphHP, same workload");
-    let sync_cfg = EngineConfig { async_local_messaging: false, ..cfg.clone() };
-    let asy = hp::run_graphhp(&pr, &dg, &cfg);
-    let syn = hp::run_graphhp(&pr, &dg, &sync_cfg);
+    let asy = on;
+    let syn = Runner::from_dist(&dg).async_local_messaging(false).run(&pr);
     bs::row("async ON", &asy.metrics);
     bs::row("async OFF", &syn.metrics);
     bs::expect_less(
@@ -110,9 +108,9 @@ fn main() {
     // ---- 4. combiner ----------------------------------------------------
     println!("\n(4) combiner on/off — SSSP on road grid, Hama, 12 parts");
     let g = generators::road(120, 120, 2);
-    let dg4 = bs::dist(&g, 12);
-    let with = hama::run_hama(&Sssp { source: 0 }, &dg4, &cfg);
-    let without = hama::run_hama(&SsspNoCombiner { inner: Sssp { source: 0 } }, &dg4, &cfg);
+    let mut runner4 = bs::runner(&g, 12).engine(EngineKind::Hama);
+    let with = runner4.run(&Sssp { source: 0 });
+    let without = runner4.run(&SsspNoCombiner { inner: Sssp { source: 0 } });
     bs::row("combiner ON", &with.metrics);
     bs::row("combiner OFF", &without.metrics);
     bs::expect_less(
@@ -123,33 +121,49 @@ fn main() {
 
     // ---- 5. XLA local phase vs scalar ----------------------------------
     println!("\n(5) XLA-accelerated local phase vs scalar engine — PageRank");
-    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if artifacts.join("manifest.txt").exists() {
-        let rt = XlaRuntime::new(&artifacts).expect("PJRT");
-        let g = generators::powerlaw(20_000, 5, 3);
-        let a = metis_partition(&g, 110, &MetisConfig { balance_cap: 1.12, ..Default::default() });
-        let dg5 = DistGraph::new(&g, &a, 110);
-        if dg5.parts.iter().all(|p| p.num_vertices() <= 256) {
-            let t0 = std::time::Instant::now();
-            let sc = hp::run_graphhp(&IncrementalPageRank { tolerance: 1e-5 }, &dg5, &cfg);
-            let t_scalar = t0.elapsed();
-            let t0 = std::time::Instant::now();
-            let ac = pipeline::run_pagerank_accelerated(&rt, &dg5, 1e-5, &cfg).unwrap();
-            let t_xla = t0.elapsed();
-            bs::row("scalar local", &sc.metrics);
-            bs::row("XLA local", &ac.metrics);
-            println!(
-                "  host wallclock: scalar {:.3}s, xla {:.3}s (interpret-mode CPU; \
-                 the XLA path is the TPU-offload demonstration, not a CPU speedup)",
-                t_scalar.as_secs_f64(),
-                t_xla.as_secs_f64()
-            );
-        } else {
-            println!("  (skipped: a partition exceeds the 256 tile)");
-        }
-    } else {
-        println!("  (skipped: run `make artifacts` first)");
-    }
+    ablation5_xla();
 
     println!("\nablation done");
+}
+
+#[cfg(feature = "xla")]
+fn ablation5_xla() {
+    use graphhp::engine::EngineConfig;
+    use graphhp::graph::DistGraph;
+    use graphhp::partition::{metis_partition, MetisConfig};
+    use graphhp::runtime::{pipeline, XlaRuntime};
+
+    let artifacts = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.txt").exists() {
+        println!("  (skipped: run `make artifacts` first)");
+        return;
+    }
+    let cfg = EngineConfig::default();
+    let rt = XlaRuntime::new(&artifacts).expect("PJRT");
+    let g = generators::powerlaw(20_000, 5, 3);
+    let a = metis_partition(&g, 110, &MetisConfig { balance_cap: 1.12, ..Default::default() });
+    let dg5 = DistGraph::new(&g, &a, 110);
+    if dg5.parts.iter().all(|p| p.num_vertices() <= 256) {
+        let t0 = std::time::Instant::now();
+        let sc = Runner::from_dist(&dg5).run(&IncrementalPageRank { tolerance: 1e-5 });
+        let t_scalar = t0.elapsed();
+        let t0 = std::time::Instant::now();
+        let ac = pipeline::run_pagerank_accelerated(&rt, &dg5, 1e-5, &cfg).unwrap();
+        let t_xla = t0.elapsed();
+        bs::row("scalar local", &sc.metrics);
+        bs::row("XLA local", &ac.metrics);
+        println!(
+            "  host wallclock: scalar {:.3}s, xla {:.3}s (interpret-mode CPU; \
+             the XLA path is the TPU-offload demonstration, not a CPU speedup)",
+            t_scalar.as_secs_f64(),
+            t_xla.as_secs_f64()
+        );
+    } else {
+        println!("  (skipped: a partition exceeds the 256 tile)");
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+fn ablation5_xla() {
+    println!("  (skipped: build with --features xla and `make artifacts` first)");
 }

@@ -8,18 +8,16 @@
 
 use graphhp::algorithms::{ClassicPageRank, Sssp};
 use graphhp::bench_support as bs;
-use graphhp::engine::{hama, EngineConfig};
-use graphhp::graph::generators;
+use graphhp::engine::EngineKind;
 
 fn main() {
     bs::header(
         "Figure 1: Synchronization and Communication Overhead (Hama)",
         "paper §2, Figure 1 (a) SSSP on USA-Road-NE, (b) PageRank on Web-Google",
     );
-    let cfg = EngineConfig::default();
 
     // ---- (a) SSSP on road network -------------------------------------
-    let g = generators::road(160, 160, 1);
+    let g = graphhp::graph::generators::road(160, 160, 1);
     bs::scale_note(
         "USA-Road-NE (1.5M vertices) on a 10-machine cluster",
         &format!("synthetic road grid, {} vertices, {} edges", g.num_vertices(), g.num_edges()),
@@ -30,8 +28,7 @@ fn main() {
     let mut sync_pct = Vec::new();
     let mut comm_pct = Vec::new();
     for &k in &parts_sweep {
-        let dg = bs::dist(&g, k);
-        let r = hama::run_hama(&Sssp { source: 0 }, &dg, &cfg);
+        let r = bs::runner(&g, k).engine(EngineKind::Hama).run(&Sssp { source: 0 });
         let m = &r.metrics;
         sync_pct.push(100.0 * m.sync_fraction());
         comm_pct.push(100.0 * m.comm_fraction());
@@ -53,7 +50,7 @@ fn main() {
     );
 
     // ---- (b) classic PageRank on web graph ----------------------------
-    let g = generators::powerlaw(40_000, 5, 2);
+    let g = graphhp::graph::generators::powerlaw(40_000, 5, 2);
     println!(
         "\n(b) PageRank (straightforward Alg. 1, 30 supersteps) — {} vertices, {} edges",
         g.num_vertices(),
@@ -63,8 +60,8 @@ fn main() {
     let mut sync_pct = Vec::new();
     let mut comm_pct = Vec::new();
     for &k in &parts_sweep {
-        let dg = bs::dist(&g, k);
-        let r = hama::run_hama(&ClassicPageRank { supersteps: 30 }, &dg, &cfg);
+        let r =
+            bs::runner(&g, k).engine(EngineKind::Hama).run(&ClassicPageRank { supersteps: 30 });
         let m = &r.metrics;
         sync_pct.push(100.0 * m.sync_fraction());
         comm_pct.push(100.0 * m.comm_fraction());

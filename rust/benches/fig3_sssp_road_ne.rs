@@ -9,7 +9,7 @@
 
 use graphhp::algorithms::{oracle, Sssp};
 use graphhp::bench_support as bs;
-use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::engine::EngineKind;
 use graphhp::graph::generators;
 
 fn main() {
@@ -23,38 +23,34 @@ fn main() {
         &format!("road grid {} vertices, {} edges", g.num_vertices(), g.num_edges()),
     );
     let want = oracle::dijkstra(&g, 0);
-    let cfg = EngineConfig::default();
     let prog = Sssp { source: 0 };
     let sweep = [12usize, 24, 36, 48];
+    let kinds = [EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP];
 
     let (mut hi, mut ai, mut gi) = (vec![], vec![], vec![]);
     let (mut hm, mut am, mut gm) = (vec![], vec![], vec![]);
     let (mut ht, mut at, mut gt) = (vec![], vec![], vec![]);
 
     for &k in &sweep {
-        let dg = bs::dist(&g, k);
-        println!("-- {k} partitions (edge cut {})", dg.edge_cut());
-        let h = hama::run_hama(&prog, &dg, &cfg);
-        bs::row("Hama", &h.metrics);
-        let a = am_hama::run_am_hama(&prog, &dg, &cfg);
-        bs::row("AM-Hama", &a.metrics);
-        let p = hp::run_graphhp(&prog, &dg, &cfg);
-        bs::row("GraphHP", &p.metrics);
+        let mut runner = bs::runner(&g, k);
+        println!("-- {k} partitions (edge cut {})", runner.dist().edge_cut());
+        let results = bs::compare_rows(&mut runner, &kinds, &prog);
+        let [h, a, p] = &results[..] else { unreachable!() };
         // verify
         for (i, &w) in want.iter().enumerate() {
             if w.is_finite() {
-                assert!((p.values[i] - w as f32).abs() < 1e-2, "v{i}");
+                assert!((p.1.values[i] - w as f32).abs() < 1e-2, "v{i}");
             }
         }
-        hi.push(h.metrics.global_iterations as f64);
-        ai.push(a.metrics.global_iterations as f64);
-        gi.push(p.metrics.global_iterations as f64);
-        hm.push(h.metrics.network_messages as f64);
-        am.push(a.metrics.network_messages as f64);
-        gm.push(p.metrics.network_messages as f64);
-        ht.push(h.metrics.elapsed.as_secs_f64());
-        at.push(a.metrics.elapsed.as_secs_f64());
-        gt.push(p.metrics.elapsed.as_secs_f64());
+        hi.push(h.1.metrics.global_iterations as f64);
+        ai.push(a.1.metrics.global_iterations as f64);
+        gi.push(p.1.metrics.global_iterations as f64);
+        hm.push(h.1.metrics.network_messages as f64);
+        am.push(a.1.metrics.network_messages as f64);
+        gm.push(p.1.metrics.network_messages as f64);
+        ht.push(h.1.metrics.elapsed.as_secs_f64());
+        at.push(a.1.metrics.elapsed.as_secs_f64());
+        gt.push(p.1.metrics.elapsed.as_secs_f64());
     }
 
     println!("\n(a) iterations vs partitions");

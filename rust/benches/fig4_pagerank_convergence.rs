@@ -8,34 +8,37 @@
 
 use graphhp::algorithms::IncrementalPageRank;
 use graphhp::bench_support as bs;
-use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::engine::EngineKind;
 use graphhp::graph::generators;
 
 fn sweep(gname: &str, g: &graphhp::graph::Graph, parts: usize) {
-    println!("\n-- {gname}: {} vertices, {} edges, {parts} partitions", g.num_vertices(), g.num_edges());
-    let dg = bs::dist(g, parts);
-    let cfg = EngineConfig::default();
+    println!(
+        "\n-- {gname}: {} vertices, {} edges, {parts} partitions",
+        g.num_vertices(),
+        g.num_edges()
+    );
+    let mut runner = bs::runner(g, parts);
     println!("  Δ      |       Hama        |      AM-Hama      |      GraphHP");
     println!("         |    I         T    |    I         T    |    I         T");
     let tols = [1e-2f64, 1e-3, 1e-4, 1e-5, 1e-6];
+    let kinds = [EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP];
     let (mut h_iters, mut p_iters) = (vec![], vec![]);
     for (i, &tol) in tols.iter().enumerate() {
         let prog = IncrementalPageRank { tolerance: tol };
-        let h = hama::run_hama(&prog, &dg, &cfg);
-        let a = am_hama::run_am_hama(&prog, &dg, &cfg);
-        let p = hp::run_graphhp(&prog, &dg, &cfg);
+        let results = runner.compare(&kinds, &prog);
+        let [h, a, p] = &results[..] else { unreachable!() };
         println!(
             "  1e-{}   | {:>5} {:>9.3}s | {:>5} {:>9.3}s | {:>5} {:>9.3}s",
             i + 2,
-            h.metrics.global_iterations,
-            h.metrics.elapsed.as_secs_f64(),
-            a.metrics.global_iterations,
-            a.metrics.elapsed.as_secs_f64(),
-            p.metrics.global_iterations,
-            p.metrics.elapsed.as_secs_f64(),
+            h.1.metrics.global_iterations,
+            h.1.metrics.elapsed.as_secs_f64(),
+            a.1.metrics.global_iterations,
+            a.1.metrics.elapsed.as_secs_f64(),
+            p.1.metrics.global_iterations,
+            p.1.metrics.elapsed.as_secs_f64(),
         );
-        h_iters.push(h.metrics.global_iterations);
-        p_iters.push(p.metrics.global_iterations);
+        h_iters.push(h.1.metrics.global_iterations);
+        p_iters.push(p.1.metrics.global_iterations);
     }
     let h_growth = h_iters.last().unwrap() - h_iters[0];
     let p_growth = p_iters.last().unwrap() - p_iters[0];

@@ -7,35 +7,31 @@
 
 use graphhp::algorithms::IncrementalPageRank;
 use graphhp::bench_support as bs;
-use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::engine::EngineKind;
 use graphhp::graph::generators;
 
 fn sweep(gname: &str, g: &graphhp::graph::Graph, parts_sweep: &[usize]) {
     println!("\n-- {gname}: {} vertices, {} edges", g.num_vertices(), g.num_edges());
-    let cfg = EngineConfig::default();
     let prog = IncrementalPageRank { tolerance: 1e-4 };
+    let kinds = [EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP];
     let (mut gi, mut gm) = (vec![], vec![]);
     for &k in parts_sweep {
-        let dg = bs::dist(g, k);
-        println!("  -- {k} partitions (cut {})", dg.edge_cut());
-        let h = hama::run_hama(&prog, &dg, &cfg);
-        bs::row("Hama", &h.metrics);
-        let a = am_hama::run_am_hama(&prog, &dg, &cfg);
-        bs::row("AM-Hama", &a.metrics);
-        let p = hp::run_graphhp(&prog, &dg, &cfg);
-        bs::row("GraphHP", &p.metrics);
+        let mut runner = bs::runner(g, k);
+        println!("  -- {k} partitions (cut {})", runner.dist().edge_cut());
+        let results = bs::compare_rows(&mut runner, &kinds, &prog);
+        let [_, a, p] = &results[..] else { unreachable!() };
         bs::expect_less(
             "GraphHP iters < AM-Hama iters",
-            p.metrics.global_iterations,
-            a.metrics.global_iterations,
+            p.1.metrics.global_iterations,
+            a.1.metrics.global_iterations,
         );
         bs::expect_less(
             "GraphHP msgs < AM-Hama msgs",
-            p.metrics.network_messages,
-            a.metrics.network_messages,
+            p.1.metrics.network_messages,
+            a.1.metrics.network_messages,
         );
-        gi.push(p.metrics.global_iterations as f64);
-        gm.push(p.metrics.network_messages as f64);
+        gi.push(p.1.metrics.global_iterations as f64);
+        gm.push(p.1.metrics.network_messages as f64);
     }
     println!("  GraphHP iterations vs partitions (should grow only slightly):");
     bs::series("GraphHP I", parts_sweep, &gi);

@@ -8,7 +8,7 @@
 
 use graphhp::algorithms::{oracle, Sssp};
 use graphhp::bench_support as bs;
-use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::engine::EngineKind;
 use graphhp::graph::generators;
 
 fn main() {
@@ -20,21 +20,24 @@ fn main() {
     let g = generators::road(420, 420, 3);
     bs::scale_note(
         "USA-Road-Full: 23.9M vertices, 58.3M edges, 108 partitions",
-        &format!("road grid {} vertices, {} edges, 108 partitions", g.num_vertices(), g.num_edges()),
+        &format!(
+            "road grid {} vertices, {} edges, 108 partitions",
+            g.num_vertices(),
+            g.num_edges()
+        ),
     );
-    let dg = bs::dist(&g, 108);
-    let cfg = EngineConfig::default();
+    let mut runner = bs::runner(&g, 108);
     let prog = Sssp { source: 0 };
     let want = oracle::dijkstra(&g, 0);
 
     println!("  platform         I          M            T        (paper: I / M(mil) / T(sec))");
-    let h = hama::run_hama(&prog, &dg, &cfg);
+    let h = runner.run_on(EngineKind::Hama, &prog);
     bs::row("Hama", &h.metrics);
     println!("{:>64}", "paper: 10671 / 43829 / 17912");
-    let a = am_hama::run_am_hama(&prog, &dg, &cfg);
+    let a = runner.run_on(EngineKind::AmHama, &prog);
     bs::row("AM-Hama", &a.metrics);
     println!("{:>64}", "paper: 10593 /   387 /  5792");
-    let p = hp::run_graphhp(&prog, &dg, &cfg);
+    let p = runner.run_on(EngineKind::GraphHP, &prog);
     bs::row("GraphHP", &p.metrics);
     println!("{:>64}", "paper:   451 /    71 /  2155");
 

@@ -14,7 +14,7 @@
 
 use graphhp::algorithms::bipartite_matching::{validate_matching, BipartiteMatching};
 use graphhp::bench_support as bs;
-use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig};
+use graphhp::engine::EngineKind;
 use graphhp::graph::{generators, Graph, GraphBuilder};
 
 /// Bipartite-ize a graph by id parity: left = even ids (relabeled
@@ -48,19 +48,18 @@ fn run_one(gname: &str, g: &Graph, nl: u32, parts: usize, paper: [&str; 3]) {
         g.num_vertices(),
         g.num_edges()
     );
-    let dg = bs::dist(g, parts);
-    let cfg = EngineConfig::default();
+    let mut runner = bs::runner(g, parts);
     let prog = BipartiteMatching { num_left: nl };
 
-    let h = hama::run_hama(&prog, &dg, &cfg);
+    let h = runner.run_on(EngineKind::Hama, &prog);
     let sh = validate_matching(g, nl, &h.values).expect("hama matching");
     bs::row("Hama", &h.metrics);
     println!("{:>66}", paper[0]);
-    let a = am_hama::run_am_hama(&prog, &dg, &cfg);
+    let a = runner.run_on(EngineKind::AmHama, &prog);
     let sa = validate_matching(g, nl, &a.values).expect("am matching");
     bs::row("AM-Hama", &a.metrics);
     println!("{:>66}", paper[1]);
-    let p = hp::run_graphhp(&prog, &dg, &cfg);
+    let p = runner.run_on(EngineKind::GraphHP, &prog);
     let sp = validate_matching(g, nl, &p.values).expect("hp matching");
     bs::row("GraphHP", &p.metrics);
     println!("{:>66}", paper[2]);

@@ -5,12 +5,15 @@
 //! —/—/82.4s, Giraph++ 46/450k/13.9s, GraphHP 32/125k/11.2s.
 //! Shape: GraphHP < Giraph++ < GraphLab sync on iterations; GraphHP
 //! fewest messages; async GraphLab slowest (locking overhead).
+//!
+//! One Runner session drives all four programming models: vertex-centric
+//! (GraphHP), graph-centric (Giraph++), and pull/GAS (both GraphLabs) —
+//! the cross-platform comparison is exactly what the session API is for.
 
 use graphhp::algorithms::pagerank::{GasPageRank, GiraphPPPageRank, IncrementalPageRank};
 use graphhp::bench_support as bs;
-use graphhp::engine::{giraphpp, graphhp as hp, graphlab, EngineConfig};
+use graphhp::engine::EngineKind;
 use graphhp::graph::generators;
-use graphhp::partition::{metis_partition, MetisConfig};
 
 fn main() {
     bs::header(
@@ -20,45 +23,31 @@ fn main() {
     let g = generators::powerlaw(30_000, 5, 7);
     bs::scale_note(
         "web-Google 916k vertices, 12 partitions, 12-machine cluster",
-        &format!("web stand-in {} vertices, {} edges, 12 partitions", g.num_vertices(), g.num_edges()),
+        &format!(
+            "web stand-in {} vertices, {} edges, 12 partitions",
+            g.num_vertices(),
+            g.num_edges()
+        ),
     );
-    let parts = 12;
-    let assignment = metis_partition(&g, parts, &MetisConfig::default());
-    let dg = graphhp::graph::DistGraph::new(&g, &assignment, parts);
-    let cfg = EngineConfig::default();
-    let glcost = graphlab::GraphLabCost::default();
+    let mut runner = bs::runner(&g, 12);
 
     for (label, tol) in [("1e-3", 1e-3f64), ("1e-4", 1e-4f64)] {
         println!("\n-- tolerance {label}");
-        let s = graphlab::run_graphlab_sync(
-            &GasPageRank { tolerance: tol },
-            &g,
-            &assignment,
-            parts,
-            &cfg,
-            &glcost,
-        );
+        let s = runner.run_gas_on(EngineKind::GraphLabSync, &GasPageRank { tolerance: tol });
         println!(
             "  GraphLab(Sync)   I={:<6} M=—           T={:>8.3}s",
             s.metrics.global_iterations,
             s.metrics.elapsed.as_secs_f64()
         );
-        let a = graphlab::run_graphlab_async(
-            &GasPageRank { tolerance: tol },
-            &g,
-            &assignment,
-            parts,
-            &cfg,
-            &glcost,
-        );
+        let a = runner.run_gas_on(EngineKind::GraphLabAsync, &GasPageRank { tolerance: tol });
         println!(
             "  GraphLab(Async)  I=—      M=—           T={:>8.3}s   (updates={})",
             a.metrics.elapsed.as_secs_f64(),
             a.metrics.vertex_computations
         );
-        let gpp = giraphpp::run_giraphpp(&GiraphPPPageRank { tolerance: tol }, &dg, &cfg);
+        let gpp = runner.run_partition(&GiraphPPPageRank { tolerance: tol });
         bs::row("Giraph++", &gpp.metrics);
-        let p = hp::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
+        let p = runner.run_on(EngineKind::GraphHP, &IncrementalPageRank { tolerance: tol });
         bs::row("GraphHP", &p.metrics);
 
         println!("  paper @{label}: GraphLab(Sync) 92—106 I; Giraph++ 46—54 I / 450—600k M;");

@@ -21,6 +21,6 @@ pub mod sssp;
 pub mod wcc;
 
 pub use bipartite_matching::BipartiteMatching;
-pub use pagerank::{ClassicPageRank, IncrementalPageRank};
-pub use sssp::Sssp;
-pub use wcc::Wcc;
+pub use pagerank::{ClassicPageRank, GasPageRank, GiraphPPPageRank, IncrementalPageRank};
+pub use sssp::{GasSssp, Sssp};
+pub use wcc::{GasWcc, Wcc};

@@ -260,13 +260,11 @@ mod tests {
     fn gas_pagerank_same_fixed_point() {
         let g = generators::powerlaw(300, 4, 5);
         let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
         let r = graphlab::run_graphlab_sync(
             &GasPageRank { tolerance: 1e-9 },
-            &g,
-            &a,
-            3,
+            &dg,
             &EngineConfig::default(),
-            &graphlab::GraphLabCost::default(),
         );
         let want = oracle::pagerank(&g, 1e-12);
         let err = l1_distance(&r.values, &want) / want.len() as f64;

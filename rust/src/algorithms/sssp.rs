@@ -10,6 +10,7 @@
 //! incoming messages can be applied safely, so boundary vertices can
 //! participate in GraphHP local phases.
 
+use crate::engine::graphlab::GasProgram;
 use crate::engine::{SourceCombine, VertexContext, VertexProgram};
 use crate::graph::VertexId;
 
@@ -56,6 +57,45 @@ impl VertexProgram for Sssp {
 
     fn source_combine(&self) -> SourceCombine {
         SourceCombine::KeepLatest
+    }
+}
+
+/// SSSP in GraphLab's pull (GAS) form for the GraphLab engines: each
+/// vertex relaxes to the minimum of `dist(u) + w(u,v)` over its
+/// in-neighbors — Bellman-Ford as a gather. Same fixed point as
+/// [`Sssp`].
+pub struct GasSssp {
+    pub source: VertexId,
+}
+
+impl GasProgram for GasSssp {
+    type V = f32;
+    type G = f32;
+
+    fn init(&self, v: VertexId, _out_degree: u32) -> f32 {
+        if v == self.source {
+            0.0
+        } else {
+            INF
+        }
+    }
+
+    fn gather(&self, src: &f32, _src_out_degree: u32, w: f32) -> f32 {
+        src + w
+    }
+
+    fn merge(&self, a: f32, b: f32) -> f32 {
+        a.min(b)
+    }
+
+    fn apply(&self, value: &mut f32, acc: Option<f32>) -> bool {
+        let candidate = acc.unwrap_or(INF);
+        if candidate < *value {
+            *value = candidate;
+            true
+        } else {
+            false
+        }
     }
 }
 

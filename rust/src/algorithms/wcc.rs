@@ -2,6 +2,7 @@
 //! combiner-friendly workload used heavily by the equivalence test suite
 //! (every engine must produce identical labels).
 
+use crate::engine::graphlab::GasProgram;
 use crate::engine::{SourceCombine, VertexContext, VertexProgram};
 use crate::graph::VertexId;
 
@@ -40,6 +41,40 @@ impl VertexProgram for Wcc {
 
     fn source_combine(&self) -> SourceCombine {
         SourceCombine::KeepLatest
+    }
+}
+
+/// WCC in GraphLab's pull (GAS) form for the GraphLab engines: each
+/// vertex adopts the minimum label among its in-neighbors. On symmetric
+/// graphs this reaches the same fixed point as [`Wcc`]; on directed
+/// graphs it computes the same "reach-down" labeling (labels flow along
+/// edge direction in both formulations).
+pub struct GasWcc;
+
+impl GasProgram for GasWcc {
+    type V = u32;
+    type G = u32;
+
+    fn init(&self, v: VertexId, _out_degree: u32) -> u32 {
+        v
+    }
+
+    fn gather(&self, src: &u32, _src_out_degree: u32, _w: f32) -> u32 {
+        *src
+    }
+
+    fn merge(&self, a: u32, b: u32) -> u32 {
+        a.min(b)
+    }
+
+    fn apply(&self, value: &mut u32, acc: Option<u32>) -> bool {
+        match acc {
+            Some(m) if m < *value => {
+                *value = m;
+                true
+            }
+            _ => false,
+        }
     }
 }
 

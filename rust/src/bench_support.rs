@@ -2,8 +2,12 @@
 //! (`rust/benches/*.rs`, `harness = false` — the offline vendor set has
 //! no criterion). Each bench regenerates one table/figure of the paper's
 //! evaluation section and prints it in the paper's row format.
+//!
+//! The generate → partition → distribute → run plumbing every bench
+//! needs lives here as thin wrappers over the [`Runner`] session, so a
+//! bench is just: build a workload, `bs::runner(&g, k)`, run/compare.
 
-use crate::engine::Metrics;
+use crate::engine::{EngineKind, Metrics, RunResult, Runner, VertexProgram};
 use crate::graph::{DistGraph, Graph};
 use crate::partition::{metis_partition, MetisConfig};
 
@@ -35,7 +39,29 @@ pub fn series(label: &str, xs: &[usize], ys: &[f64]) {
     println!("  {label:<22} {}", pts.join(" "));
 }
 
-/// Metis-partition `g` into `k` parts and build the distributed view.
+/// A [`Runner`] session over `g` with `k` metis partitions — the
+/// standard bench setup (the paper partitions with ParMetis).
+pub fn runner(g: &Graph, k: usize) -> Runner<'_> {
+    Runner::new(g).partitions(k)
+}
+
+/// Run `program` on each engine kind over one shared partitioned view,
+/// printing a paper-style row per engine; returns the results for shape
+/// checks.
+pub fn compare_rows<P: VertexProgram>(
+    r: &mut Runner<'_>,
+    kinds: &[EngineKind],
+    program: &P,
+) -> Vec<(EngineKind, RunResult<P::V>)> {
+    let results = r.compare(kinds, program);
+    for (kind, res) in &results {
+        row(&kind.to_string(), &res.metrics);
+    }
+    results
+}
+
+/// Metis-partition `g` into `k` parts and build the distributed view
+/// (for call sites that need an owned [`DistGraph`]).
 pub fn dist(g: &Graph, k: usize) -> DistGraph {
     let a = metis_partition(g, k, &MetisConfig::default());
     DistGraph::new(g, &a, k)

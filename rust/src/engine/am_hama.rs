@@ -24,6 +24,10 @@ use super::state::{init_runtimes, PartitionRuntime};
 use super::{EngineConfig, RunResult};
 
 /// Run `program` under the AM-Hama (asynchronous messaging) model.
+///
+/// Legacy entry point — use [`super::Runner`] with
+/// [`super::EngineKind::AmHama`]; kept as a delegate for one release.
+#[doc(hidden)]
 pub fn run_am_hama<P: VertexProgram>(
     program: &P,
     dg: &DistGraph,
@@ -150,7 +154,7 @@ pub fn run_am_hama<P: VertexProgram>(
         superstep += 1;
 
         let done = rts.iter_mut().all(|rt| rt.quiesced());
-        if done || superstep >= cfg.max_iterations {
+        if done || superstep >= cfg.limits.max_iterations {
             break;
         }
     }

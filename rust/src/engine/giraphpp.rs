@@ -89,6 +89,11 @@ impl<'a, PP: PartitionProgram> PartitionContext<'a, PP> {
 }
 
 /// Run a [`PartitionProgram`] to completion.
+///
+/// Legacy entry point — use [`super::Runner::run_partition`] (or
+/// [`super::Runner::run`] with [`super::EngineKind::GiraphPP`] for a
+/// vertex program); kept as a delegate for one release.
+#[doc(hidden)]
 pub fn run_giraphpp<PP: PartitionProgram>(
     program: &PP,
     dg: &DistGraph,
@@ -165,7 +170,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
         let done = (0..np).all(|p| {
             halted[p].iter().all(|&h| h) && cur[p].is_empty() && nxt[p].is_empty()
         });
-        if done || superstep >= cfg.max_iterations {
+        if done || superstep >= cfg.limits.max_iterations {
             break;
         }
     }

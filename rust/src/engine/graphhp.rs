@@ -132,6 +132,10 @@ fn route_send<P: VertexProgram>(
 }
 
 /// Run `program` under the GraphHP hybrid execution model.
+///
+/// Legacy entry point — use [`super::Runner`] with
+/// [`super::EngineKind::GraphHP`]; kept as a delegate for one release.
+#[doc(hidden)]
 pub fn run_graphhp<P: VertexProgram>(
     program: &P,
     dg: &DistGraph,
@@ -146,24 +150,24 @@ pub fn run_graphhp<P: VertexProgram>(
     );
     let combiner = program.combiner();
     let source_combine = program.source_combine();
-    let boundary_in_local = cfg.boundary_in_local_phase;
+    let boundary_in_local = cfg.hybrid.boundary_in_local_phase;
 
     let mut iteration: u64 = 0;
     let mut msg_buf: Vec<P::M> = Vec::new();
     let mut send_buf: SendBuffer<P::M> = SendBuffer::new();
     let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
-    let mut failure_pending = cfg.inject_failure_at;
+    let mut failure_pending = cfg.fault.inject_failure_at;
 
     loop {
         // ---- fault tolerance (paper §5.3) --------------------------
-        if cfg.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
+        if cfg.fault.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
             let ckpt = super::checkpoint::Checkpoint {
                 iteration,
                 values: parts.iter().map(|hp| hp.values.clone()).collect(),
                 halted: parts.iter().map(|hp| hp.halted.clone()).collect(),
                 inbox: parts.iter_mut().map(|hp| hp.gq_cur.export()).collect(),
             };
-            if let Some(dir) = &cfg.checkpoint_dir {
+            if let Some(dir) = &cfg.fault.checkpoint_dir {
                 let _ = ckpt.save(dir);
             }
             last_ckpt = Some(ckpt);
@@ -314,7 +318,7 @@ pub fn run_graphhp<P: VertexProgram>(
                         break;
                     }
                     pseudo_steps += 1;
-                    if pseudo_steps > cfg.max_pseudo_supersteps {
+                    if pseudo_steps > cfg.limits.max_pseudo_supersteps {
                         break;
                     }
                     let mut worklist: BTreeSet<u32> = frontier.into_iter().collect();
@@ -350,7 +354,7 @@ pub fn run_graphhp<P: VertexProgram>(
                         metrics.vertex_computations += 1;
                         let src_gid = part.global_ids[lv];
                         for (target, m) in send_buf.sends.drain(..) {
-                            let async_ctx = if cfg.async_local_messaging {
+                            let async_ctx = if cfg.hybrid.async_local_messaging {
                                 Some((&stamps[..], stamp, &mut worklist))
                             } else {
                                 None
@@ -412,7 +416,7 @@ pub fn run_graphhp<P: VertexProgram>(
                 && hp.lq_nxt.is_empty()
                 && hp.l_frontier.is_empty()
         });
-        if done || iteration >= cfg.max_iterations {
+        if done || iteration >= cfg.limits.max_iterations {
             break;
         }
     }
@@ -491,7 +495,8 @@ mod tests {
         let g = generators::connected(150, 60, 7);
         let a = hash_partition(&g, 3);
         let dg = DistGraph::new(&g, &a, 3);
-        let cfg = EngineConfig { boundary_in_local_phase: false, ..Default::default() };
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid.boundary_in_local_phase = false;
         let r = run_graphhp(&MinLabel, &dg, &cfg);
         assert!(r.values.iter().all(|&v| v == 0), "label must reach all");
     }
@@ -501,7 +506,8 @@ mod tests {
         let g = generators::connected(150, 60, 9);
         let a = hash_partition(&g, 3);
         let dg = DistGraph::new(&g, &a, 3);
-        let cfg = EngineConfig { async_local_messaging: false, ..Default::default() };
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid.async_local_messaging = false;
         let r = run_graphhp(&MinLabel, &dg, &cfg);
         assert!(r.values.iter().all(|&v| v == 0));
     }

@@ -15,14 +15,17 @@
 //!   trade-off in Table 4 (the paper: "Async ... reduces the degree of
 //!   parallelism due to the locking mechanism").
 //!
-//! Cross-partition gathers are charged as network reads in the simulated
-//! cluster clock; the paper leaves `M` blank for GraphLab, and so do our
-//! reports.
+//! Both engines consume the same [`DistGraph`] every other engine runs
+//! on (the worker-partition structure doubles as the GraphLab vertex
+//! placement), so the [`super::Runner`] can dispatch to them with no
+//! extra plumbing. Cross-partition gathers are charged as network reads
+//! in the simulated cluster clock; the paper leaves `M` blank for
+//! GraphLab, and so do our reports.
 
 use std::collections::VecDeque;
 use std::time::Duration;
 
-use crate::graph::{Graph, VertexId};
+use crate::graph::{DistGraph, VertexId};
 
 use super::metrics::Metrics;
 use super::netsim::SuperstepClock;
@@ -46,9 +49,11 @@ pub trait GasProgram: Sync {
     fn apply(&self, value: &mut Self::V, acc: Option<Self::G>) -> bool;
 }
 
-/// Cost constants of the GraphLab comparator (see module docs).
+/// Cost constants of the GraphLab comparator (see module docs). Part of
+/// [`EngineConfig`] (`cfg.gas`) since the Runner redesign; previously a
+/// separate `GraphLabCost` argument.
 #[derive(Clone, Debug)]
-pub struct GraphLabCost {
+pub struct GasCost {
     /// Per-update lock acquisition/scheduling overhead in async mode (µs).
     pub async_lock_us: f64,
     /// Parallel efficiency of the async engine (0..1]: effective workers
@@ -59,40 +64,104 @@ pub struct GraphLabCost {
     pub remote_gather_us: f64,
 }
 
-impl Default for GraphLabCost {
+impl Default for GasCost {
     fn default() -> Self {
-        GraphLabCost { async_lock_us: 6.0, async_efficiency: 0.5, remote_gather_us: 0.5 }
+        GasCost { async_lock_us: 6.0, async_efficiency: 0.5, remote_gather_us: 0.5 }
     }
 }
 
-/// In-edge CSR: for each vertex, (source, source_out_degree, weight).
-struct InEdges {
-    offsets: Vec<usize>,
-    src: Vec<VertexId>,
-    src_deg: Vec<u32>,
-    w: Vec<f32>,
+/// Pre-Runner name for [`GasCost`], kept for source compatibility.
+#[doc(hidden)]
+pub type GraphLabCost = GasCost;
+
+/// Global pull-mode view derived from a [`DistGraph`]: in-edge CSR for
+/// gathers, out-neighbor CSR for scatter scheduling, and the vertex →
+/// worker placement for remote-read accounting. Edge enumeration follows
+/// global vertex order, so results are bit-identical to the old
+/// `&Graph`-based implementation.
+///
+/// Built per engine call: construction is one O(V+E) pass, small next
+/// to the multi-round engine run it precedes, so it is deliberately not
+/// cached in the Runner session (revisit if GAS runs become hot).
+struct GasView {
+    /// In-edge CSR: for each vertex, (source, source out-degree, weight).
+    in_offsets: Vec<usize>,
+    in_src: Vec<VertexId>,
+    in_src_deg: Vec<u32>,
+    in_w: Vec<f32>,
+    /// Out-neighbor CSR (scatter targets).
+    out_offsets: Vec<usize>,
+    out_targets: Vec<VertexId>,
+    /// Global out-degree per vertex.
+    out_deg: Vec<u32>,
+    /// Vertex → owning partition.
+    part_of: Vec<u32>,
 }
 
-fn in_edges(g: &Graph) -> InEdges {
-    let rev = g.reversed();
-    let deg: Vec<u32> = (0..g.num_vertices() as VertexId).map(|v| g.out_degree(v) as u32).collect();
-    let src_deg = rev.targets.iter().map(|&s| deg[s as usize]).collect();
-    InEdges { offsets: rev.offsets.clone(), src: rev.targets.clone(), src_deg, w: rev.weights.clone() }
+impl GasView {
+    fn new(dg: &DistGraph) -> GasView {
+        let nv = dg.num_vertices;
+        let mut out_deg = vec![0u32; nv];
+        let mut in_count = vec![0usize; nv];
+        let part_of: Vec<u32> = dg.location.iter().map(|&(p, _)| p).collect();
+        for v in 0..nv {
+            let (p, lv) = dg.location[v];
+            let part = &dg.parts[p as usize];
+            out_deg[v] = part.out_degree[lv as usize];
+            for e in part.out_edges(lv as usize) {
+                in_count[e.target as usize] += 1;
+            }
+        }
+        let mut in_offsets = vec![0usize; nv + 1];
+        let mut out_offsets = vec![0usize; nv + 1];
+        for v in 0..nv {
+            in_offsets[v + 1] = in_offsets[v] + in_count[v];
+            out_offsets[v + 1] = out_offsets[v] + out_deg[v] as usize;
+        }
+        let mut in_src = vec![0 as VertexId; in_offsets[nv]];
+        let mut in_w = vec![0f32; in_offsets[nv]];
+        let mut out_targets = vec![0 as VertexId; out_offsets[nv]];
+        let mut in_cursor = in_offsets.clone();
+        // walk sources in global id order: in-edges of every vertex end
+        // up sorted by source, matching Graph::reversed()
+        for v in 0..nv {
+            let (p, lv) = dg.location[v];
+            let part = &dg.parts[p as usize];
+            let mut oc = out_offsets[v];
+            for e in part.out_edges(lv as usize) {
+                let t = e.target as usize;
+                in_src[in_cursor[t]] = v as VertexId;
+                in_w[in_cursor[t]] = e.weight;
+                in_cursor[t] += 1;
+                out_targets[oc] = e.target;
+                oc += 1;
+            }
+        }
+        let in_src_deg = in_src.iter().map(|&s| out_deg[s as usize]).collect();
+        GasView { in_offsets, in_src, in_src_deg, in_w, out_offsets, out_targets, out_deg, part_of }
+    }
+
+    fn out_neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.out_targets[self.out_offsets[v as usize]..self.out_offsets[v as usize + 1]]
+    }
 }
 
 /// Synchronous GraphLab: rounds with a barrier each, pull-based updates.
+///
+/// Legacy entry point — use [`super::Runner::run_gas`] with
+/// [`super::EngineKind::GraphLabSync`]; kept as a delegate for one
+/// release.
+#[doc(hidden)]
 pub fn run_graphlab_sync<P: GasProgram>(
     program: &P,
-    g: &Graph,
-    assignment: &[u32],
-    num_parts: usize,
+    dg: &DistGraph,
     cfg: &EngineConfig,
-    cost: &GraphLabCost,
 ) -> RunResult<P::V> {
-    let nv = g.num_vertices();
-    let ie = in_edges(g);
+    let nv = dg.num_vertices;
+    let num_parts = dg.num_parts();
+    let view = GasView::new(dg);
     let mut values: Vec<P::V> =
-        (0..nv).map(|v| program.init(v as VertexId, g.out_degree(v as VertexId) as u32)).collect();
+        (0..nv).map(|v| program.init(v as VertexId, view.out_deg[v])).collect();
     let mut metrics = Metrics::default();
     let mut clock = SuperstepClock::new();
 
@@ -100,7 +169,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
     let mut in_next = vec![false; nv];
     let mut rounds = 0u64;
 
-    while !active.is_empty() && rounds < cfg.max_iterations {
+    while !active.is_empty() && rounds < cfg.limits.max_iterations {
         // per-worker accounting
         let mut worker_compute = vec![Duration::ZERO; num_parts];
         let mut worker_remote_gathers = vec![0u64; num_parts];
@@ -108,16 +177,17 @@ pub fn run_graphlab_sync<P: GasProgram>(
         // snapshot semantics: sync mode reads round-start values
         let snapshot = values.clone();
         for &v in &active {
-            let p = assignment[v as usize] as usize;
+            let p = view.part_of[v as usize] as usize;
             let t0 = std::time::Instant::now();
-            let (s, e) = (ie.offsets[v as usize], ie.offsets[v as usize + 1]);
+            let (s, e) = (view.in_offsets[v as usize], view.in_offsets[v as usize + 1]);
             let mut acc: Option<P::G> = None;
             for i in s..e {
-                let srcv = ie.src[i];
-                if assignment[srcv as usize] != assignment[v as usize] {
+                let srcv = view.in_src[i];
+                if view.part_of[srcv as usize] != view.part_of[v as usize] {
                     worker_remote_gathers[p] += 1;
                 }
-                let gth = program.gather(&snapshot[srcv as usize], ie.src_deg[i], ie.w[i]);
+                let gth =
+                    program.gather(&snapshot[srcv as usize], view.in_src_deg[i], view.in_w[i]);
                 acc = Some(match acc {
                     None => gth,
                     Some(a) => program.merge(a, gth),
@@ -127,7 +197,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
             metrics.vertex_computations += 1;
             worker_compute[p] += t0.elapsed();
             if significant {
-                for &t in g.out_edges(v).0 {
+                for &t in view.out_neighbors(v) {
                     if !in_next[t as usize] {
                         in_next[t as usize] = true;
                         next.push(t);
@@ -137,7 +207,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
         }
         for p in 0..num_parts {
             let comm = Duration::from_secs_f64(
-                worker_remote_gathers[p] as f64 * cost.remote_gather_us * 1e-6,
+                worker_remote_gathers[p] as f64 * cfg.gas.remote_gather_us * 1e-6,
             );
             clock.record_worker(cfg.net.scale_compute(worker_compute[p]), comm);
         }
@@ -156,33 +226,36 @@ pub fn run_graphlab_sync<P: GasProgram>(
 
 /// Asynchronous GraphLab: FIFO vertex scheduler, immediate visibility,
 /// per-update locking overhead, reduced parallel efficiency.
+///
+/// Legacy entry point — use [`super::Runner::run_gas`] with
+/// [`super::EngineKind::GraphLabAsync`]; kept as a delegate for one
+/// release.
+#[doc(hidden)]
 pub fn run_graphlab_async<P: GasProgram>(
     program: &P,
-    g: &Graph,
-    _assignment: &[u32],
-    num_parts: usize,
+    dg: &DistGraph,
     cfg: &EngineConfig,
-    cost: &GraphLabCost,
 ) -> RunResult<P::V> {
-    let nv = g.num_vertices();
-    let ie = in_edges(g);
+    let nv = dg.num_vertices;
+    let num_parts = dg.num_parts();
+    let view = GasView::new(dg);
     let mut values: Vec<P::V> =
-        (0..nv).map(|v| program.init(v as VertexId, g.out_degree(v as VertexId) as u32)).collect();
+        (0..nv).map(|v| program.init(v as VertexId, view.out_deg[v])).collect();
     let mut metrics = Metrics::default();
 
     let mut queue: VecDeque<VertexId> = (0..nv as VertexId).collect();
     let mut queued = vec![true; nv];
     let mut updates = 0u64;
     let t0 = std::time::Instant::now();
-    let max_updates = cfg.max_iterations.saturating_mul(nv as u64);
+    let max_updates = cfg.limits.max_iterations.saturating_mul(nv as u64);
 
     while let Some(v) = queue.pop_front() {
         queued[v as usize] = false;
-        let (s, e) = (ie.offsets[v as usize], ie.offsets[v as usize + 1]);
+        let (s, e) = (view.in_offsets[v as usize], view.in_offsets[v as usize + 1]);
         let mut acc: Option<P::G> = None;
         for i in s..e {
-            let srcv = ie.src[i] as usize;
-            let gth = program.gather(&values[srcv], ie.src_deg[i], ie.w[i]);
+            let srcv = view.in_src[i] as usize;
+            let gth = program.gather(&values[srcv], view.in_src_deg[i], view.in_w[i]);
             acc = Some(match acc {
                 None => gth,
                 Some(a) => program.merge(a, gth),
@@ -191,7 +264,7 @@ pub fn run_graphlab_async<P: GasProgram>(
         let significant = program.apply(&mut values[v as usize], acc);
         updates += 1;
         if significant {
-            for &t in g.out_edges(v).0 {
+            for &t in view.out_neighbors(v) {
                 if !queued[t as usize] {
                     queued[t as usize] = true;
                     queue.push_back(t);
@@ -206,8 +279,9 @@ pub fn run_graphlab_async<P: GasProgram>(
     // simulated parallel time: sequential work / effective workers, plus
     // per-update lock+scheduling overhead
     let seq = cfg.net.scale_compute(t0.elapsed());
-    let eff_workers = (num_parts as f64 * cost.async_efficiency).max(1.0);
-    let lock = Duration::from_secs_f64(updates as f64 * cost.async_lock_us * 1e-6 / eff_workers);
+    let eff_workers = (num_parts as f64 * cfg.gas.async_efficiency).max(1.0);
+    let lock =
+        Duration::from_secs_f64(updates as f64 * cfg.gas.async_lock_us * 1e-6 / eff_workers);
     metrics.vertex_computations = updates;
     metrics.compute_time = seq.div_f64(eff_workers);
     metrics.sync_time = lock; // lock/scheduling overhead reported as sync
@@ -256,10 +330,10 @@ mod tests {
     fn sync_and_async_agree_on_pagerank() {
         let g = generators::powerlaw(400, 4, 17);
         let a = hash_partition(&g, 4);
+        let dg = crate::graph::DistGraph::new(&g, &a, 4);
         let cfg = EngineConfig::default();
-        let cost = GraphLabCost::default();
-        let s = run_graphlab_sync(&GasPr { tol: 1e-7 }, &g, &a, 4, &cfg, &cost);
-        let asy = run_graphlab_async(&GasPr { tol: 1e-7 }, &g, &a, 4, &cfg, &cost);
+        let s = run_graphlab_sync(&GasPr { tol: 1e-7 }, &dg, &cfg);
+        let asy = run_graphlab_async(&GasPr { tol: 1e-7 }, &dg, &cfg);
         for (x, y) in s.values.iter().zip(&asy.values) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
@@ -272,15 +346,25 @@ mod tests {
     fn sync_terminates_on_inactive() {
         let g = generators::erdos_renyi(50, 100, 3);
         let a = hash_partition(&g, 2);
+        let dg = crate::graph::DistGraph::new(&g, &a, 2);
         let cfg = EngineConfig::default();
-        let r = run_graphlab_sync(
-            &GasPr { tol: 1e-3 },
-            &g,
-            &a,
-            2,
-            &cfg,
-            &GraphLabCost::default(),
-        );
-        assert!(r.metrics.global_iterations < cfg.max_iterations);
+        let r = run_graphlab_sync(&GasPr { tol: 1e-3 }, &dg, &cfg);
+        assert!(r.metrics.global_iterations < cfg.limits.max_iterations);
+    }
+
+    #[test]
+    fn gas_view_matches_reversed_graph() {
+        let g = generators::powerlaw(200, 3, 9);
+        let a = hash_partition(&g, 3);
+        let dg = crate::graph::DistGraph::new(&g, &a, 3);
+        let view = GasView::new(&dg);
+        let rev = g.reversed();
+        assert_eq!(view.in_offsets, rev.offsets);
+        assert_eq!(view.in_src, rev.targets);
+        assert_eq!(view.in_w, rev.weights);
+        for v in 0..g.num_vertices() as VertexId {
+            assert_eq!(view.out_neighbors(v), g.out_edges(v).0);
+            assert_eq!(view.out_deg[v as usize] as usize, g.out_degree(v));
+        }
     }
 }

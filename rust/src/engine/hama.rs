@@ -19,6 +19,10 @@ use super::state::{init_runtimes, PartitionRuntime};
 use super::{EngineConfig, RunResult};
 
 /// Run `program` to completion under the standard BSP model.
+///
+/// Legacy entry point — use [`super::Runner`] with
+/// [`super::EngineKind::Hama`]; kept as a delegate for one release.
+#[doc(hidden)]
 pub fn run_hama<P: VertexProgram>(
     program: &P,
     dg: &DistGraph,
@@ -123,7 +127,7 @@ pub fn run_hama<P: VertexProgram>(
         superstep += 1;
 
         let done = rts.iter_mut().all(|rt| rt.quiesced());
-        if done || superstep >= cfg.max_iterations {
+        if done || superstep >= cfg.limits.max_iterations {
             break;
         }
     }
@@ -217,7 +221,8 @@ mod tests {
         }
         let g = generators::erdos_renyi(10, 20, 1);
         let dg = DistGraph::new(&g, &hash_partition(&g, 2), 2);
-        let cfg = EngineConfig { max_iterations: 5, ..Default::default() };
+        let mut cfg = EngineConfig::default();
+        cfg.limits.max_iterations = 5;
         let r = run_hama(&Forever, &dg, &cfg);
         assert_eq!(r.metrics.global_iterations, 5);
     }

@@ -4,14 +4,57 @@
 //! Programming interface (paper §3): users implement [`VertexProgram`]
 //! (the `Vertex.Compute()` of Pregel/Hama) optionally with a message
 //! combiner and a GraphHP `SourceCombine` policy, plus [`Aggregators`]
-//! for global communication.
+//! for global communication. The GraphLab comparator uses the pull-based
+//! [`graphlab::GasProgram`], and the Giraph++ comparator the
+//! graph-centric [`giraphpp::PartitionProgram`].
 //!
-//! Execution engines (paper §4, §7):
-//! - [`hama::run_hama`] — the standard BSP model (one superstep = one
-//!   global barrier + full message exchange);
-//! - [`am_hama::run_am_hama`] — BSP + asynchronous in-memory messaging
-//!   within a partition (Grace-style, the paper's AM-Hama baseline);
-//! - [`graphhp::run_graphhp`] — the paper's hybrid model: per global
+//! # Running programs: the [`Runner`] session
+//!
+//! [`Runner`] is the single entry point for every engine: it owns the
+//! partition → distribute plumbing once and dispatches on [`EngineKind`],
+//! so the same program runs unmodified on every engine — the paper's
+//! central interface claim (§3, §5).
+//!
+//! ```no_run
+//! use graphhp::algorithms::IncrementalPageRank;
+//! use graphhp::engine::{EngineKind, Runner};
+//! use graphhp::graph::generators;
+//!
+//! let g = generators::powerlaw(20_000, 5, 42);
+//! let result = Runner::new(&g)
+//!     .partitions(12)
+//!     .engine(EngineKind::GraphHP)
+//!     .run(&IncrementalPageRank { tolerance: 1e-4 });
+//! println!("{}", result.metrics.summary());
+//! ```
+//!
+//! ## Migration from the free functions
+//!
+//! The per-engine free functions still exist (the `Runner` delegates to
+//! them) but are no longer the public surface. Mapping:
+//!
+//! | old                                               | new                                                    |
+//! |---------------------------------------------------|--------------------------------------------------------|
+//! | `hama::run_hama(&p, &dg, &cfg)`                   | `Runner::from_dist(&dg).engine(EngineKind::Hama).run(&p)` |
+//! | `am_hama::run_am_hama(&p, &dg, &cfg)`             | `.engine(EngineKind::AmHama).run(&p)`                  |
+//! | `graphhp::run_graphhp(&p, &dg, &cfg)`             | `.engine(EngineKind::GraphHP).run(&p)`                 |
+//! | `giraphpp::run_giraphpp(&VertexSweep{..}, ..)`    | `.engine(EngineKind::GiraphPP).run(&p)` (auto-wrapped) |
+//! | `giraphpp::run_giraphpp(&pp, &dg, &cfg)`          | `.run_partition(&pp)`                                  |
+//! | `graphlab::run_graphlab_sync(&gp, &g, &a, k, ..)` | `.engine(EngineKind::GraphLabSync).run_gas(&gp)`       |
+//! | `graphlab::run_graphlab_async(&gp, ..)`           | `.engine(EngineKind::GraphLabAsync).run_gas(&gp)`      |
+//! | `EngineConfig { max_iterations, .. }`             | `.max_iterations(..)` / [`Limits`]                     |
+//! | `EngineConfig { boundary_in_local_phase, .. }`    | `.boundary_in_local_phase(..)` / [`HybridPolicy`]      |
+//! | `EngineConfig { checkpoint_interval, .. }`        | `.checkpoint_interval(..)` / [`FaultPolicy`]           |
+//! | `GraphLabCost` (separate argument)                | [`GasCost`], folded into `EngineConfig::gas`           |
+//!
+//! # Execution engines (paper §4, §7)
+//!
+//! - [`hama`] (`run_hama`) — the standard BSP model (one superstep =
+//!   one global barrier + full message exchange);
+//! - [`am_hama`] (`run_am_hama`) — BSP + asynchronous in-memory
+//!   messaging within a partition (Grace-style, the paper's AM-Hama
+//!   baseline);
+//! - [`graphhp`] (`run_graphhp`) — the paper's hybrid model: per global
 //!   iteration a *global phase* over boundary vertices then a *local
 //!   phase* of pseudo-supersteps until the partition quiesces;
 //! - [`giraphpp`] — a graph-centric (Giraph++-style) engine;
@@ -34,18 +77,22 @@ pub mod messages;
 pub mod metrics;
 pub mod netsim;
 pub mod program;
+pub mod runner;
 pub mod state;
 
 pub use aggregator::{AggOp, Aggregators};
 pub use context::VertexContext;
+pub use graphlab::GasCost;
 pub use metrics::Metrics;
 pub use netsim::NetSimConfig;
 pub use program::{SourceCombine, VertexProgram};
+pub use runner::{Partitioner, Runner};
 
 use crate::graph::DistGraph;
 
-/// Which engine executed a run (for reporting).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+/// Which engine executes a run. The [`Runner`] dispatches on this; it is
+/// also used for reporting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum EngineKind {
     Hama,
     AmHama,
@@ -53,6 +100,33 @@ pub enum EngineKind {
     GiraphPP,
     GraphLabSync,
     GraphLabAsync,
+}
+
+impl EngineKind {
+    /// Every engine, in the paper's presentation order.
+    pub const ALL: [EngineKind; 6] = [
+        EngineKind::Hama,
+        EngineKind::AmHama,
+        EngineKind::GraphHP,
+        EngineKind::GiraphPP,
+        EngineKind::GraphLabSync,
+        EngineKind::GraphLabAsync,
+    ];
+
+    /// The engines that execute a [`VertexProgram`] directly (the
+    /// GraphLab engines are pull-based and take a
+    /// [`graphlab::GasProgram`] via [`Runner::run_gas`] instead).
+    pub const VERTEX_CENTRIC: [EngineKind; 4] = [
+        EngineKind::Hama,
+        EngineKind::AmHama,
+        EngineKind::GraphHP,
+        EngineKind::GiraphPP,
+    ];
+
+    /// True for the pull-based (GAS) GraphLab engines.
+    pub fn is_gas(self) -> bool {
+        matches!(self, EngineKind::GraphLabSync | EngineKind::GraphLabAsync)
+    }
 }
 
 impl std::fmt::Display for EngineKind {
@@ -69,46 +143,99 @@ impl std::fmt::Display for EngineKind {
     }
 }
 
-/// Engine configuration shared by all engines (fields irrelevant to an
-/// engine are ignored by it).
-#[derive(Clone, Debug)]
-pub struct EngineConfig {
-    /// Hard cap on global iterations / supersteps (safety valve).
+impl std::str::FromStr for EngineKind {
+    type Err = String;
+
+    /// Accepts the CLI spellings: `hama`, `am-hama`, `graphhp`,
+    /// `giraph++`/`giraphpp`, `graphlab-sync`, `graphlab-async`.
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "hama" => Ok(EngineKind::Hama),
+            "am-hama" | "amhama" => Ok(EngineKind::AmHama),
+            "graphhp" => Ok(EngineKind::GraphHP),
+            "giraph++" | "giraphpp" => Ok(EngineKind::GiraphPP),
+            "graphlab-sync" => Ok(EngineKind::GraphLabSync),
+            "graphlab-async" => Ok(EngineKind::GraphLabAsync),
+            other => Err(format!(
+                "unknown engine {other} (hama|am-hama|graphhp|giraph++|graphlab-sync|graphlab-async)"
+            )),
+        }
+    }
+}
+
+/// Iteration caps (safety valves) shared by all engines.
+#[derive(Clone, Copy, Debug)]
+pub struct Limits {
+    /// Hard cap on global iterations / supersteps.
     pub max_iterations: u64,
-    /// GraphHP: do boundary vertices participate in local phases?
+    /// Hard cap on pseudo-supersteps per GraphHP local phase.
+    pub max_pseudo_supersteps: u64,
+}
+
+impl Default for Limits {
+    fn default() -> Self {
+        Limits { max_iterations: 1_000_000, max_pseudo_supersteps: 1_000_000 }
+    }
+}
+
+/// GraphHP hybrid-execution knobs (paper §4.2).
+#[derive(Clone, Copy, Debug)]
+pub struct HybridPolicy {
+    /// Do boundary vertices participate in local phases?
     /// (paper §4.2 — activate for incremental computations).
     pub boundary_in_local_phase: bool,
     /// Asynchronous in-memory messaging within a (pseudo-)superstep
     /// (paper §4.2 last ¶; always on for AM-Hama).
     pub async_local_messaging: bool,
-    /// Hard cap on pseudo-supersteps per local phase (safety valve).
-    pub max_pseudo_supersteps: u64,
-    /// Simulated cluster cost model.
-    pub net: NetSimConfig,
-    /// Seed for per-vertex randomness (e.g. bipartite matching).
-    pub seed: u64,
+}
+
+impl Default for HybridPolicy {
+    fn default() -> Self {
+        HybridPolicy { boundary_in_local_phase: true, async_local_messaging: true }
+    }
+}
+
+/// Checkpointing and deterministic fault injection (paper §5.3;
+/// GraphHP engine only).
+#[derive(Clone, Debug, Default)]
+pub struct FaultPolicy {
     /// Checkpoint every N global iterations (None = off).
     pub checkpoint_interval: Option<u64>,
     /// Directory for persisted checkpoints (None = keep in memory only).
     pub checkpoint_dir: Option<std::path::PathBuf>,
-    /// Deterministic fault injection: simulate losing a worker at the
-    /// start of the given global iteration (GraphHP engine only). The
-    /// engine recovers from the latest checkpoint, as §5.3.
+    /// Simulate losing a worker at the start of the given global
+    /// iteration; the engine recovers from the latest checkpoint.
     pub inject_failure_at: Option<u64>,
+}
+
+/// Engine configuration shared by all engines, split into the
+/// builder-settable pieces the [`Runner`] exposes (fields irrelevant to
+/// an engine are ignored by it).
+#[derive(Clone, Debug)]
+pub struct EngineConfig {
+    /// Iteration caps.
+    pub limits: Limits,
+    /// GraphHP hybrid-execution policy.
+    pub hybrid: HybridPolicy,
+    /// Simulated cluster cost model.
+    pub net: NetSimConfig,
+    /// GraphLab comparator cost constants.
+    pub gas: GasCost,
+    /// Fault tolerance policy.
+    pub fault: FaultPolicy,
+    /// Seed for per-vertex randomness (e.g. bipartite matching).
+    pub seed: u64,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
         EngineConfig {
-            max_iterations: 1_000_000,
-            boundary_in_local_phase: true,
-            async_local_messaging: true,
-            max_pseudo_supersteps: 1_000_000,
+            limits: Limits::default(),
+            hybrid: HybridPolicy::default(),
             net: NetSimConfig::default(),
+            gas: GasCost::default(),
+            fault: FaultPolicy::default(),
             seed: 42,
-            checkpoint_interval: None,
-            checkpoint_dir: None,
-            inject_failure_at: None,
         }
     }
 }
@@ -121,6 +248,9 @@ pub struct RunResult<V> {
 }
 
 /// Gather per-partition values back into a global-id-indexed vector.
+///
+/// Panics if any global vertex id is missing from every partition (the
+/// partitions must jointly cover `0..dg.num_vertices`).
 pub(crate) fn gather_values<V: Clone>(dg: &DistGraph, parts: &[Vec<V>]) -> Vec<V> {
     let mut out: Vec<Option<V>> = vec![None; dg.num_vertices];
     for (p, vals) in parts.iter().enumerate() {
@@ -130,4 +260,65 @@ pub(crate) fn gather_values<V: Clone>(dg: &DistGraph, parts: &[Vec<V>]) -> Vec<V
         }
     }
     out.into_iter().map(|v| v.expect("vertex missing from every partition")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DistGraph, Graph, PartGraph};
+
+    fn path2() -> Graph {
+        // 0 -> 1
+        let mut b = crate::graph::GraphBuilder::new(2);
+        b.add_edge(0, 1, 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn gather_handles_empty_partition() {
+        let g = path2();
+        // both vertices in partition 0 of 2 => partition 1 is empty
+        let dg = DistGraph::new(&g, &[0, 0], 2);
+        assert_eq!(dg.parts[1].num_vertices(), 0);
+        let vals = gather_values(&dg, &[vec![10u32, 20], vec![]]);
+        assert_eq!(vals, vec![10, 20]);
+    }
+
+    #[test]
+    fn gather_single_vertex_graph() {
+        let g = Graph { offsets: vec![0, 0], targets: vec![], weights: vec![] };
+        let dg = DistGraph::new(&g, &[0], 1);
+        let vals = gather_values(&dg, &[vec![7u64]]);
+        assert_eq!(vals, vec![7]);
+    }
+
+    #[test]
+    fn gather_reorders_by_global_id() {
+        let g = path2();
+        // vertex 1 in partition 0, vertex 0 in partition 1
+        let dg = DistGraph::new(&g, &[1, 0], 2);
+        let vals = gather_values(&dg, &[vec![11u32], vec![22]]);
+        assert_eq!(vals, vec![22, 11]);
+    }
+
+    #[test]
+    #[should_panic(expected = "vertex missing from every partition")]
+    fn gather_panics_on_uncovered_vertex() {
+        // hand-build an inconsistent DistGraph: claims 2 vertices but
+        // only vertex 0 is owned by any partition
+        let dg = DistGraph {
+            parts: vec![PartGraph {
+                part: 0,
+                global_ids: vec![0],
+                offsets: vec![0, 0],
+                edges: vec![],
+                is_boundary: vec![false],
+                out_degree: vec![0],
+            }],
+            location: vec![(0, 0), (0, 1)],
+            num_vertices: 2,
+            num_edges: 0,
+        };
+        let _ = gather_values(&dg, &[vec![1u32]]);
+    }
 }

@@ -62,3 +62,48 @@ pub trait VertexProgram: Sync {
         super::AggOp::Sum
     }
 }
+
+/// A shared reference to a vertex program is itself a vertex program.
+/// This lets the [`super::Runner`] hand a borrowed program to adapters
+/// that take ownership (e.g. [`super::giraphpp::VertexSweep`]).
+impl<'p, P: VertexProgram> VertexProgram for &'p P {
+    type V = P::V;
+    type M = P::M;
+
+    fn init(&self, vertex: VertexId, out_degree: u32) -> Self::V {
+        (**self).init(vertex, out_degree)
+    }
+
+    fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+        // reborrow the context at the underlying program type; the field
+        // types are identical because Self::V = P::V and Self::M = P::M
+        let mut inner = VertexContext::<P> {
+            part: ctx.part,
+            lv: ctx.lv,
+            superstep: ctx.superstep,
+            value: &mut *ctx.value,
+            messages: ctx.messages,
+            halted: &mut *ctx.halted,
+            out: &mut *ctx.out,
+            aggregators: &mut *ctx.aggregators,
+            seed: ctx.seed,
+        };
+        (**self).compute(&mut inner);
+    }
+
+    fn combiner(&self) -> Option<fn(Self::M, Self::M) -> Self::M> {
+        (**self).combiner()
+    }
+
+    fn source_combine(&self) -> SourceCombine {
+        (**self).source_combine()
+    }
+
+    fn num_aggregators(&self) -> usize {
+        (**self).num_aggregators()
+    }
+
+    fn aggregator_op(&self, id: usize) -> super::AggOp {
+        (**self).aggregator_op(id)
+    }
+}

@@ -1,0 +1,425 @@
+//! The [`Runner`] session: one entry point for every engine.
+//!
+//! The paper's central interface claim (§3, §5) is that a single
+//! vertex-centric `Compute()` runs unmodified across platforms. The
+//! `Runner` makes that claim executable: it owns the
+//! partition → [`DistGraph`] plumbing once, dispatches on
+//! [`EngineKind`], and exposes the two non-vertex-centric programming
+//! models ([`GasProgram`], [`PartitionProgram`]) through the same
+//! session — so an engine comparison is a loop over kinds, not six
+//! differently-shaped call sites.
+//!
+//! ```no_run
+//! use graphhp::algorithms::Sssp;
+//! use graphhp::engine::{EngineKind, Runner};
+//! use graphhp::graph::generators;
+//!
+//! let g = generators::road(120, 120, 1);
+//! let mut runner = Runner::new(&g).partitions(12);
+//! for (kind, r) in runner.compare(&EngineKind::VERTEX_CENTRIC, &Sssp { source: 0 }) {
+//!     println!("{kind:<10} {}", r.metrics.summary());
+//! }
+//! ```
+
+use crate::graph::{DistGraph, Graph};
+use crate::partition::{hash_partition, metis_partition, range_partition, MetisConfig};
+
+use super::giraphpp::{run_giraphpp, PartitionProgram, VertexSweep};
+use super::graphlab::{run_graphlab_async, run_graphlab_sync, GasCost, GasProgram};
+use super::{EngineConfig, EngineKind, NetSimConfig, RunResult, VertexProgram};
+
+/// How the [`Runner`] splits the graph across simulated workers.
+#[derive(Clone, Debug)]
+pub enum Partitioner {
+    /// `vertex_id % k` (the Hama default — destroys locality).
+    Hash,
+    /// Contiguous id ranges.
+    Range,
+    /// The built-in multilevel (METIS-like) partitioner.
+    Metis(MetisConfig),
+    /// A caller-supplied vertex → partition assignment.
+    Explicit(Vec<u32>),
+}
+
+impl Default for Partitioner {
+    fn default() -> Self {
+        Partitioner::Metis(MetisConfig::default())
+    }
+}
+
+/// Where the session's graph comes from.
+#[derive(Clone, Copy)]
+enum Source<'g> {
+    /// Un-partitioned: the Runner partitions and distributes it lazily.
+    Graph(&'g Graph),
+    /// Pre-built distributed view (partitioning already decided).
+    Dist(&'g DistGraph),
+}
+
+/// A builder-style execution session over one graph.
+///
+/// Construct with [`Runner::new`] (or [`Runner::from_dist`] for a
+/// pre-partitioned graph), chain configuration, then call [`Runner::run`]
+/// / [`Runner::run_gas`] / [`Runner::run_partition`] any number of
+/// times — the distributed view is built once and reused, so comparing
+/// engines never re-partitions.
+pub struct Runner<'g> {
+    source: Source<'g>,
+    partitions: usize,
+    partitioner: Partitioner,
+    engine: EngineKind,
+    cfg: EngineConfig,
+    built: Option<DistGraph>,
+}
+
+impl<'g> Runner<'g> {
+    /// Session over an un-partitioned graph. Defaults: 4 partitions,
+    /// METIS-like partitioner, [`EngineKind::GraphHP`], default
+    /// [`EngineConfig`].
+    pub fn new(graph: &'g Graph) -> Self {
+        Runner {
+            source: Source::Graph(graph),
+            partitions: 4,
+            partitioner: Partitioner::default(),
+            engine: EngineKind::GraphHP,
+            cfg: EngineConfig::default(),
+            built: None,
+        }
+    }
+
+    /// Session over a pre-built [`DistGraph`] (the partitioning decisions
+    /// are already baked in; partition-related setters are ignored).
+    pub fn from_dist(dg: &'g DistGraph) -> Self {
+        Runner {
+            source: Source::Dist(dg),
+            partitions: dg.num_parts(),
+            partitioner: Partitioner::default(),
+            engine: EngineKind::GraphHP,
+            cfg: EngineConfig::default(),
+            built: None,
+        }
+    }
+
+    // ------------------------------------------------- builder setters
+
+    /// Number of partitions (simulated workers).
+    pub fn partitions(mut self, k: usize) -> Self {
+        assert!(k > 0, "partitions must be > 0");
+        self.partitions = k;
+        self.built = None;
+        self
+    }
+
+    /// Partitioning strategy.
+    pub fn partitioner(mut self, p: Partitioner) -> Self {
+        self.partitioner = p;
+        self.built = None;
+        self
+    }
+
+    /// Explicit vertex → partition assignment; sets the partition count
+    /// to `max(assignment) + 1`.
+    pub fn assignment(mut self, a: Vec<u32>) -> Self {
+        self.partitions = a.iter().copied().max().map_or(1, |m| m as usize + 1);
+        self.partitioner = Partitioner::Explicit(a);
+        self.built = None;
+        self
+    }
+
+    /// Engine to dispatch to (default [`EngineKind::GraphHP`]).
+    pub fn engine(mut self, kind: EngineKind) -> Self {
+        self.engine = kind;
+        self
+    }
+
+    /// Replace the whole [`EngineConfig`] at once.
+    pub fn config(mut self, cfg: EngineConfig) -> Self {
+        self.cfg = cfg;
+        self
+    }
+
+    /// Cap on global iterations / supersteps.
+    pub fn max_iterations(mut self, n: u64) -> Self {
+        self.cfg.limits.max_iterations = n;
+        self
+    }
+
+    /// Cap on pseudo-supersteps per GraphHP local phase.
+    pub fn max_pseudo_supersteps(mut self, n: u64) -> Self {
+        self.cfg.limits.max_pseudo_supersteps = n;
+        self
+    }
+
+    /// GraphHP: do boundary vertices participate in local phases?
+    pub fn boundary_in_local_phase(mut self, on: bool) -> Self {
+        self.cfg.hybrid.boundary_in_local_phase = on;
+        self
+    }
+
+    /// Asynchronous in-memory messaging inside (pseudo-)supersteps.
+    pub fn async_local_messaging(mut self, on: bool) -> Self {
+        self.cfg.hybrid.async_local_messaging = on;
+        self
+    }
+
+    /// Simulated cluster cost model.
+    pub fn net(mut self, net: NetSimConfig) -> Self {
+        self.cfg.net = net;
+        self
+    }
+
+    /// GraphLab comparator cost constants.
+    pub fn gas_cost(mut self, c: GasCost) -> Self {
+        self.cfg.gas = c;
+        self
+    }
+
+    /// Seed for per-vertex randomness.
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Checkpoint every N global iterations (GraphHP engine).
+    pub fn checkpoint_interval(mut self, n: Option<u64>) -> Self {
+        self.cfg.fault.checkpoint_interval = n;
+        self
+    }
+
+    /// Directory for persisted checkpoints.
+    pub fn checkpoint_dir(mut self, dir: impl Into<std::path::PathBuf>) -> Self {
+        self.cfg.fault.checkpoint_dir = Some(dir.into());
+        self
+    }
+
+    /// Deterministic fault injection at the given global iteration.
+    pub fn inject_failure_at(mut self, iteration: Option<u64>) -> Self {
+        self.cfg.fault.inject_failure_at = iteration;
+        self
+    }
+
+    // ---------------------------------------------------------- access
+
+    /// The session's engine kind.
+    pub fn engine_kind(&self) -> EngineKind {
+        self.engine
+    }
+
+    /// The session's engine configuration.
+    pub fn cfg(&self) -> &EngineConfig {
+        &self.cfg
+    }
+
+    /// The distributed view this session executes over, building it on
+    /// first use (partition + distribute) and caching it for every
+    /// subsequent run.
+    pub fn dist(&mut self) -> &DistGraph {
+        match self.source {
+            Source::Dist(dg) => dg,
+            Source::Graph(g) => {
+                if self.built.is_none() {
+                    let assignment = match &self.partitioner {
+                        Partitioner::Hash => hash_partition(g, self.partitions),
+                        Partitioner::Range => range_partition(g, self.partitions),
+                        Partitioner::Metis(mc) => metis_partition(g, self.partitions, mc),
+                        Partitioner::Explicit(a) => {
+                            assert_eq!(
+                                a.len(),
+                                g.num_vertices(),
+                                "explicit assignment length != vertex count"
+                            );
+                            // an explicit assignment dictates the minimum
+                            // worker count; grow a stale .partitions(k)
+                            // rather than panic in DistGraph::new
+                            let needed =
+                                a.iter().copied().max().map_or(1, |m| m as usize + 1);
+                            if needed > self.partitions {
+                                self.partitions = needed;
+                            }
+                            a.clone()
+                        }
+                    };
+                    self.built = Some(DistGraph::new(g, &assignment, self.partitions));
+                }
+                self.built.as_ref().expect("just built")
+            }
+        }
+    }
+
+    // ------------------------------------------------------------ runs
+
+    /// Run a vertex-centric program on the session's engine.
+    ///
+    /// Dispatches Hama / AM-Hama / GraphHP directly and wraps the
+    /// program in [`VertexSweep`] for Giraph++. Panics for the GraphLab
+    /// kinds — those are pull-based; express the program as a
+    /// [`GasProgram`] and call [`Runner::run_gas`].
+    pub fn run<P: VertexProgram>(&mut self, program: &P) -> RunResult<P::V> {
+        self.run_on(self.engine, program)
+    }
+
+    /// [`Runner::run`] with an explicit engine kind (the session default
+    /// is ignored for this call).
+    pub fn run_on<P: VertexProgram>(&mut self, kind: EngineKind, program: &P) -> RunResult<P::V> {
+        let cfg = self.cfg.clone();
+        let dg = self.dist();
+        match kind {
+            EngineKind::Hama => super::hama::run_hama(program, dg, &cfg),
+            EngineKind::AmHama => super::am_hama::run_am_hama(program, dg, &cfg),
+            EngineKind::GraphHP => super::graphhp::run_graphhp(program, dg, &cfg),
+            EngineKind::GiraphPP => {
+                run_giraphpp(&VertexSweep { program, seed: cfg.seed }, dg, &cfg)
+            }
+            EngineKind::GraphLabSync | EngineKind::GraphLabAsync => panic!(
+                "{kind} is pull-based: express the program as a GasProgram and \
+                 call Runner::run_gas"
+            ),
+        }
+    }
+
+    /// Run a pull-based (GAS) program on the session's engine, which
+    /// must be one of the GraphLab kinds. Panics otherwise — the
+    /// push-based engines take a [`VertexProgram`] via [`Runner::run`].
+    pub fn run_gas<P: GasProgram>(&mut self, program: &P) -> RunResult<P::V> {
+        self.run_gas_on(self.engine, program)
+    }
+
+    /// [`Runner::run_gas`] with an explicit engine kind.
+    pub fn run_gas_on<P: GasProgram>(
+        &mut self,
+        kind: EngineKind,
+        program: &P,
+    ) -> RunResult<P::V> {
+        let cfg = self.cfg.clone();
+        let dg = self.dist();
+        match kind {
+            EngineKind::GraphLabSync => run_graphlab_sync(program, dg, &cfg),
+            EngineKind::GraphLabAsync => run_graphlab_async(program, dg, &cfg),
+            other => panic!(
+                "{other} is push-based: GAS programs run on the GraphLab kinds; \
+                 use Runner::run with a VertexProgram instead"
+            ),
+        }
+    }
+
+    /// Run a graph-centric (Giraph++-style) partition program.
+    pub fn run_partition<PP: PartitionProgram>(&mut self, program: &PP) -> RunResult<PP::V> {
+        let cfg = self.cfg.clone();
+        let dg = self.dist();
+        run_giraphpp(program, dg, &cfg)
+    }
+
+    /// Run the same program on several engines over the same partitioned
+    /// graph — the shape of every fig/table bench. Kinds must be
+    /// vertex-centric (see [`Runner::run`]).
+    pub fn compare<P: VertexProgram>(
+        &mut self,
+        kinds: &[EngineKind],
+        program: &P,
+    ) -> Vec<(EngineKind, RunResult<P::V>)> {
+        kinds.iter().map(|&k| (k, self.run_on(k, program))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algorithms::{IncrementalPageRank, Wcc};
+    use crate::engine::{graphhp, hama};
+    use crate::graph::generators;
+    use crate::partition::hash_partition;
+
+    #[test]
+    fn runner_matches_direct_engine_call() {
+        let g = generators::connected(200, 80, 11);
+        let mut runner = Runner::new(&g).partitions(4).engine(EngineKind::Hama);
+        let via_runner = runner.run(&Wcc);
+        let direct = hama::run_hama(&Wcc, runner.dist(), &EngineConfig::default());
+        assert_eq!(via_runner.values, direct.values);
+        assert_eq!(
+            via_runner.metrics.global_iterations,
+            direct.metrics.global_iterations
+        );
+    }
+
+    #[test]
+    fn dist_is_built_once_and_reused() {
+        let g = generators::connected(150, 60, 7);
+        let mut runner = Runner::new(&g).partitions(3);
+        let cut1 = runner.dist().edge_cut();
+        let _ = runner.run_on(EngineKind::Hama, &Wcc);
+        let _ = runner.run_on(EngineKind::GraphHP, &Wcc);
+        assert_eq!(runner.dist().edge_cut(), cut1);
+    }
+
+    #[test]
+    fn explicit_assignment_respected() {
+        let g = generators::erdos_renyi(10, 20, 1);
+        let a = vec![0, 1, 2, 0, 1, 2, 0, 1, 2, 0];
+        let mut runner = Runner::new(&g).assignment(a.clone());
+        let dg = runner.dist();
+        assert_eq!(dg.num_parts(), 3);
+        for (v, &(p, _)) in dg.location.iter().enumerate() {
+            assert_eq!(p, a[v], "vertex {v}");
+        }
+    }
+
+    #[test]
+    fn from_dist_uses_the_given_view() {
+        let g = generators::connected(100, 40, 3);
+        let a = hash_partition(&g, 5);
+        let dg = DistGraph::new(&g, &a, 5);
+        let mut runner = Runner::from_dist(&dg).engine(EngineKind::GraphHP);
+        let r = runner.run(&Wcc);
+        let direct = graphhp::run_graphhp(&Wcc, &dg, &EngineConfig::default());
+        assert_eq!(r.values, direct.values);
+    }
+
+    #[test]
+    fn compare_covers_all_vertex_centric_kinds() {
+        let g = generators::connected(120, 50, 5);
+        let mut runner = Runner::new(&g).partitions(3);
+        let results =
+            runner.compare(&EngineKind::VERTEX_CENTRIC, &IncrementalPageRank { tolerance: 1e-6 });
+        assert_eq!(results.len(), 4);
+        let (_, base) = &results[0];
+        for (kind, r) in &results {
+            assert_eq!(r.values.len(), g.num_vertices());
+            for (i, (x, y)) in base.values.iter().zip(&r.values).enumerate() {
+                assert!((x - y).abs() < 1e-4, "{kind} v{i}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "pull-based")]
+    fn vertex_program_on_graphlab_kind_panics() {
+        let g = generators::erdos_renyi(10, 20, 1);
+        let _ = Runner::new(&g).partitions(2).engine(EngineKind::GraphLabSync).run(&Wcc);
+    }
+
+    #[test]
+    #[should_panic(expected = "push-based")]
+    fn gas_program_on_push_kind_panics() {
+        let g = generators::erdos_renyi(10, 20, 1);
+        // default session engine is GraphHP — a GAS program must not
+        // silently fall back to GraphLabSync
+        let _ = Runner::new(&g)
+            .partitions(2)
+            .run_gas(&crate::algorithms::pagerank::GasPageRank { tolerance: 1e-4 });
+    }
+
+    #[test]
+    fn builder_knobs_reach_the_config() {
+        let g = generators::erdos_renyi(10, 20, 1);
+        let runner = Runner::new(&g)
+            .max_iterations(7)
+            .boundary_in_local_phase(false)
+            .seed(99)
+            .checkpoint_interval(Some(2));
+        assert_eq!(runner.cfg().limits.max_iterations, 7);
+        assert!(!runner.cfg().hybrid.boundary_in_local_phase);
+        assert_eq!(runner.cfg().seed, 99);
+        assert_eq!(runner.cfg().fault.checkpoint_interval, Some(2));
+    }
+}

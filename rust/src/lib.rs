@@ -11,6 +11,24 @@
 //! communication happen once per global iteration instead of once per
 //! superstep.
 //!
+//! The single entry point for executing programs is the
+//! [`engine::Runner`] session, which partitions and distributes the
+//! graph once and dispatches the same program to any
+//! [`engine::EngineKind`]:
+//!
+//! ```no_run
+//! use graphhp::algorithms::IncrementalPageRank;
+//! use graphhp::engine::{EngineKind, Runner};
+//! use graphhp::graph::generators;
+//!
+//! let g = generators::powerlaw(20_000, 5, 42);
+//! let r = Runner::new(&g)
+//!     .partitions(12)
+//!     .engine(EngineKind::GraphHP)
+//!     .run(&IncrementalPageRank { tolerance: 1e-4 });
+//! println!("{}", r.metrics.summary());
+//! ```
+//!
 //! The crate contains the complete platform plus everything the paper's
 //! evaluation needs:
 //!
@@ -18,16 +36,18 @@
 //!   workload generators standing in for the paper's datasets;
 //! - [`partition`] — hash and from-scratch multilevel (METIS-like)
 //!   partitioners;
-//! - [`engine`] — the vertex-centric programming interface
-//!   ([`engine::VertexProgram`]) and five execution engines: standard BSP
-//!   (Hama), AM-Hama, **GraphHP**, a Giraph++-style graph-centric engine
-//!   and GraphLab-style sync/async engines, all over a simulated-cluster
-//!   cost model;
+//! - [`engine`] — the [`engine::Runner`] session, the vertex-centric
+//!   programming interface ([`engine::VertexProgram`]) and five
+//!   execution engines: standard BSP (Hama), AM-Hama, **GraphHP**, a
+//!   Giraph++-style graph-centric engine and GraphLab-style sync/async
+//!   engines, all over a simulated-cluster cost model;
 //! - [`algorithms`] — SSSP, incremental & classic PageRank, bipartite
-//!   matching, WCC, greedy coloring as vertex programs;
-//! - [`runtime`] — the XLA/PJRT runtime that loads the AOT-compiled
-//!   JAX/Pallas local-phase artifacts (`artifacts/*.hlo.txt`) and the
-//!   dense local-phase accelerator built on it.
+//!   matching, WCC, greedy coloring as vertex programs (plus GAS forms
+//!   of PageRank/SSSP/WCC for the GraphLab engines);
+//! - `runtime` (feature `xla`) — the XLA/PJRT runtime that loads the
+//!   AOT-compiled JAX/Pallas local-phase artifacts (`artifacts/*.hlo.txt`)
+//!   and the dense local-phase accelerator built on it. Gated because it
+//!   binds to the `xla` crate, which must be vendored separately.
 //!
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
 //! paper-vs-measured results.
@@ -37,5 +57,6 @@ pub mod bench_support;
 pub mod engine;
 pub mod graph;
 pub mod partition;
+#[cfg(feature = "xla")]
 pub mod runtime;
 pub mod util;

@@ -5,9 +5,13 @@
 //! graphhp generate --kind road --rows 100 --cols 100 --seed 1 --out g.bin
 //! graphhp partition --graph g.bin --parts 12 --method metis --out parts.txt
 //! graphhp run --graph g.bin --algo sssp --engine graphhp --parts 12 [--source 0]
+//! graphhp run --graph g.bin --algo pagerank --engine graphlab-sync --parts 12
 //! graphhp info --graph g.bin
 //! ```
 //!
+//! Execution goes through the `Runner` session; `--engine` accepts every
+//! `EngineKind` spelling (`hama|am-hama|graphhp|giraph++|graphlab-sync|
+//! graphlab-async` — the GraphLab engines run the GAS algorithm forms).
 //! (Hand-rolled argument parsing: the offline vendor set has no clap.)
 
 use std::collections::HashMap;
@@ -16,9 +20,10 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use graphhp::algorithms::{
-    bipartite_matching::validate_matching, BipartiteMatching, IncrementalPageRank, Sssp, Wcc,
+    bipartite_matching::validate_matching, BipartiteMatching, GasPageRank, GasSssp, GasWcc,
+    IncrementalPageRank, Sssp, Wcc,
 };
-use graphhp::engine::{am_hama, graphhp as hp, hama, EngineConfig, Metrics};
+use graphhp::engine::{EngineKind, Metrics, Partitioner, Runner};
 use graphhp::graph::{generators, io, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
 
@@ -150,27 +155,22 @@ fn report(engine: &str, m: &Metrics) {
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let g = load_graph(get(flags, "graph")?)?;
     let (assignment, k) = make_partition(&g, flags)?;
-    let dg = graphhp::graph::DistGraph::new(&g, &assignment, k);
     let algo = get(flags, "algo")?;
     let engine = get_or(flags, "engine", "graphhp");
-    let cfg = EngineConfig::default();
-
-    macro_rules! run_engine {
-        ($prog:expr) => {{
-            let prog = $prog;
-            match engine {
-                "hama" => hama::run_hama(&prog, &dg, &cfg),
-                "am-hama" => am_hama::run_am_hama(&prog, &dg, &cfg),
-                "graphhp" => hp::run_graphhp(&prog, &dg, &cfg),
-                other => bail!("unknown engine {other} (hama|am-hama|graphhp)"),
-            }
-        }};
-    }
+    let kind: EngineKind = engine.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let mut runner = Runner::new(&g)
+        .partitions(k)
+        .partitioner(Partitioner::Explicit(assignment))
+        .engine(kind);
 
     match algo {
         "sssp" => {
             let source: u32 = get_or(flags, "source", "0").parse()?;
-            let r = run_engine!(Sssp { source });
+            let r = if kind.is_gas() {
+                runner.run_gas(&GasSssp { source })
+            } else {
+                runner.run(&Sssp { source })
+            };
             let reached =
                 r.values.iter().filter(|&&d| d < graphhp::algorithms::sssp::INF).count();
             println!("sssp: {reached}/{} vertices reached", r.values.len());
@@ -178,7 +178,11 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         }
         "pagerank" => {
             let tol: f64 = get_or(flags, "tolerance", "1e-4").parse()?;
-            let r = run_engine!(IncrementalPageRank { tolerance: tol });
+            let r = if kind.is_gas() {
+                runner.run_gas(&GasPageRank { tolerance: tol })
+            } else {
+                runner.run(&IncrementalPageRank { tolerance: tol })
+            };
             let mut top: Vec<(usize, f64)> =
                 r.values.iter().copied().enumerate().collect();
             top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
@@ -186,7 +190,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             report(engine, &r.metrics);
         }
         "wcc" => {
-            let r = run_engine!(Wcc);
+            let r = if kind.is_gas() { runner.run_gas(&GasWcc) } else { runner.run(&Wcc) };
             let mut labels = r.values.clone();
             labels.sort_unstable();
             labels.dedup();
@@ -194,8 +198,11 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             report(engine, &r.metrics);
         }
         "bm" => {
+            if kind.is_gas() {
+                bail!("bipartite matching has no GAS form; pick a vertex-centric engine");
+            }
             let nl: u32 = get(flags, "left")?.parse()?;
-            let r = run_engine!(BipartiteMatching { num_left: nl });
+            let r = runner.run(&BipartiteMatching { num_left: nl });
             let size = validate_matching(&g, nl, &r.values)
                 .map_err(|e| anyhow::anyhow!(e))?;
             println!("bm: maximal matching of size {size}");

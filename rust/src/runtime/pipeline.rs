@@ -62,7 +62,7 @@ pub fn run_pagerank_accelerated(
     let mut metrics = Metrics::default();
     let mut clock = SuperstepClock::new();
 
-    for _iter in 0..cfg.max_iterations {
+    for _iter in 0..cfg.limits.max_iterations {
         // incoming per partition, accumulated (sum-combined) per vertex
         let mut incoming: Vec<Vec<f32>> =
             dg.parts.iter().map(|p| vec![0f32; p.num_vertices()]).collect();
@@ -171,7 +171,7 @@ pub fn run_sssp_accelerated(
     let mut metrics = Metrics::default();
     let mut clock = SuperstepClock::new();
 
-    for _iter in 0..cfg.max_iterations {
+    for _iter in 0..cfg.limits.max_iterations {
         let mut incoming: Vec<Vec<f32>> =
             dg.parts.iter().map(|p| vec![INF; p.num_vertices()]).collect();
         let mut any_messages = false;

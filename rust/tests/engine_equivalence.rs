@@ -4,10 +4,17 @@
 //! partitionings; for PageRank the results must agree within
 //! tolerance-bounded error. Hand-rolled property harness (the vendored
 //! crate set has no proptest) over the crate's deterministic RNG.
+//!
+//! Also proves the [`Runner`] session dispatches every [`EngineKind`] to
+//! exactly the legacy free-function path (bit-for-bit equal results) —
+//! the one place the deprecated free functions are still called
+//! deliberately.
 
-use graphhp::algorithms::{oracle, IncrementalPageRank, Sssp, Wcc};
+use graphhp::algorithms::{oracle, GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
 use graphhp::engine::giraphpp::VertexSweep;
-use graphhp::engine::{am_hama, giraphpp, graphhp as hp, hama, EngineConfig};
+use graphhp::engine::{
+    am_hama, giraphpp, graphhp as hp, graphlab, hama, EngineConfig, EngineKind, Runner,
+};
 use graphhp::graph::{generators, DistGraph, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig};
 use graphhp::util::Rng;
@@ -44,11 +51,10 @@ impl CaseGen {
     }
 
     fn config(&mut self) -> EngineConfig {
-        EngineConfig {
-            boundary_in_local_phase: self.rng.chance(0.7),
-            async_local_messaging: self.rng.chance(0.7),
-            ..Default::default()
-        }
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid.boundary_in_local_phase = self.rng.chance(0.7);
+        cfg.hybrid.async_local_messaging = self.rng.chance(0.7);
+        cfg
     }
 }
 
@@ -142,7 +148,8 @@ fn all_engines_terminate_on_random_inputs() {
     for _ in 0..15 {
         let g = gen.graph();
         let dg = gen.dist(&g);
-        let cfg = EngineConfig { max_iterations: 100_000, ..gen.config() };
+        let mut cfg = gen.config();
+        cfg.limits.max_iterations = 100_000;
         let source = (gen.rng.index(g.num_vertices())) as u32;
         for m in [
             hama::run_hama(&Sssp { source }, &dg, &cfg).metrics,
@@ -150,6 +157,95 @@ fn all_engines_terminate_on_random_inputs() {
             hp::run_graphhp(&Sssp { source }, &dg, &cfg).metrics,
         ] {
             assert!(m.global_iterations < 100_000, "engine hit the cap");
+        }
+    }
+}
+
+// ---------------------------------------------------- Runner == legacy
+
+/// The Runner must dispatch to exactly the code the legacy free
+/// functions run: values AND iteration counts bit-for-bit equal for
+/// PageRank, SSSP and WCC on every one of the six `EngineKind`s.
+#[test]
+fn runner_matches_legacy_free_functions_on_all_six_kinds() {
+    let mut gen = CaseGen::new(0x12A55);
+    for case in 0..8 {
+        let g = gen.graph();
+        let dg = gen.dist(&g);
+        let cfg = gen.config();
+        let source = (gen.rng.index(g.num_vertices())) as u32;
+
+        // one session over the SAME distributed view + cfg as the legacy calls
+        let mut runner = Runner::from_dist(&dg).config(cfg.clone());
+
+        for kind in EngineKind::ALL {
+            if kind.is_gas() {
+                // pull-based kinds: GAS program forms
+                let legacy_pr = match kind {
+                    EngineKind::GraphLabSync => {
+                        graphlab::run_graphlab_sync(&GasPageRank { tolerance: 1e-6 }, &dg, &cfg)
+                    }
+                    _ => {
+                        graphlab::run_graphlab_async(&GasPageRank { tolerance: 1e-6 }, &dg, &cfg)
+                    }
+                };
+                let via = runner.run_gas_on(kind, &GasPageRank { tolerance: 1e-6 });
+                assert_eq!(via.values, legacy_pr.values, "case {case} {kind} pagerank");
+                assert_eq!(
+                    via.metrics.global_iterations, legacy_pr.metrics.global_iterations,
+                    "case {case} {kind} pagerank iterations"
+                );
+
+                let legacy_sssp = match kind {
+                    EngineKind::GraphLabSync => {
+                        graphlab::run_graphlab_sync(&GasSssp { source }, &dg, &cfg)
+                    }
+                    _ => graphlab::run_graphlab_async(&GasSssp { source }, &dg, &cfg),
+                };
+                let via = runner.run_gas_on(kind, &GasSssp { source });
+                assert_eq!(via.values, legacy_sssp.values, "case {case} {kind} sssp");
+
+                let legacy_wcc = match kind {
+                    EngineKind::GraphLabSync => graphlab::run_graphlab_sync(&GasWcc, &dg, &cfg),
+                    _ => graphlab::run_graphlab_async(&GasWcc, &dg, &cfg),
+                };
+                let via = runner.run_gas_on(kind, &GasWcc);
+                assert_eq!(via.values, legacy_wcc.values, "case {case} {kind} wcc");
+                continue;
+            }
+
+            macro_rules! legacy {
+                ($prog:expr) => {{
+                    let prog = $prog;
+                    match kind {
+                        EngineKind::Hama => hama::run_hama(&prog, &dg, &cfg),
+                        EngineKind::AmHama => am_hama::run_am_hama(&prog, &dg, &cfg),
+                        EngineKind::GraphHP => hp::run_graphhp(&prog, &dg, &cfg),
+                        EngineKind::GiraphPP => giraphpp::run_giraphpp(
+                            &VertexSweep { program: prog, seed: cfg.seed },
+                            &dg,
+                            &cfg,
+                        ),
+                        _ => unreachable!(),
+                    }
+                }};
+            }
+
+            let legacy_pr = legacy!(IncrementalPageRank { tolerance: 1e-6 });
+            let via = runner.run_on(kind, &IncrementalPageRank { tolerance: 1e-6 });
+            assert_eq!(via.values, legacy_pr.values, "case {case} {kind} pagerank");
+            assert_eq!(
+                via.metrics.global_iterations, legacy_pr.metrics.global_iterations,
+                "case {case} {kind} pagerank iterations"
+            );
+
+            let legacy_sssp = legacy!(Sssp { source });
+            let via = runner.run_on(kind, &Sssp { source });
+            assert_eq!(via.values, legacy_sssp.values, "case {case} {kind} sssp");
+
+            let legacy_wcc = legacy!(Wcc);
+            let via = runner.run_on(kind, &Wcc);
+            assert_eq!(via.values, legacy_wcc.values, "case {case} {kind} wcc");
         }
     }
 }

@@ -1,32 +1,25 @@
 //! Fault-tolerance tests (paper §5.3): checkpointing + deterministic
 //! failure injection on the GraphHP engine. A run that loses a worker
 //! mid-computation must recover from the latest checkpoint and finish
-//! with exactly the same result.
+//! with exactly the same result. Configured through the `Runner`
+//! session's fault knobs.
 
 use graphhp::algorithms::{IncrementalPageRank, Sssp, Wcc};
-use graphhp::engine::{graphhp as hp, EngineConfig};
-use graphhp::graph::{generators, DistGraph};
-use graphhp::partition::{metis_partition, MetisConfig};
-
-fn dist(g: &graphhp::graph::Graph, k: usize) -> DistGraph {
-    DistGraph::new(g, &metis_partition(g, k, &MetisConfig::default()), k)
-}
+use graphhp::bench_support::runner;
+use graphhp::graph::generators;
 
 #[test]
 fn recovery_reproduces_sssp_exactly() {
     let g = generators::road(30, 30, 5);
-    let dg = dist(&g, 6);
     let prog = Sssp { source: 0 };
 
-    let clean = hp::run_graphhp(&prog, &dg, &EngineConfig::default());
+    let clean = runner(&g, 6).run(&prog);
     assert!(clean.metrics.global_iterations > 6, "need room to inject a failure");
 
-    let cfg = EngineConfig {
-        checkpoint_interval: Some(2),
-        inject_failure_at: Some(5),
-        ..Default::default()
-    };
-    let recovered = hp::run_graphhp(&prog, &dg, &cfg);
+    let recovered = runner(&g, 6)
+        .checkpoint_interval(Some(2))
+        .inject_failure_at(Some(5))
+        .run(&prog);
     assert_eq!(recovered.metrics.recoveries, 1);
     assert!(recovered.metrics.checkpoints >= 2);
     assert_eq!(clean.values, recovered.values, "recovery must be exact");
@@ -37,13 +30,7 @@ fn recovery_reproduces_sssp_exactly() {
 #[test]
 fn recovery_without_checkpoint_restarts_from_scratch() {
     let g = generators::connected(200, 80, 7);
-    let dg = dist(&g, 4);
-    let cfg = EngineConfig {
-        checkpoint_interval: None,
-        inject_failure_at: Some(2),
-        ..Default::default()
-    };
-    let r = hp::run_graphhp(&Wcc, &dg, &cfg);
+    let r = runner(&g, 4).inject_failure_at(Some(2)).run(&Wcc);
     assert_eq!(r.metrics.recoveries, 1);
     assert!(r.values.iter().all(|&l| l == 0), "still converges after restart");
 }
@@ -53,13 +40,10 @@ fn checkpoints_persist_to_disk_when_dir_configured() {
     let dir = std::env::temp_dir().join("graphhp_ft_disk");
     let _ = std::fs::remove_dir_all(&dir);
     let g = generators::road(20, 20, 9);
-    let dg = dist(&g, 4);
-    let cfg = EngineConfig {
-        checkpoint_interval: Some(3),
-        checkpoint_dir: Some(dir.clone()),
-        ..Default::default()
-    };
-    let r = hp::run_graphhp(&Sssp { source: 0 }, &dg, &cfg);
+    let r = runner(&g, 4)
+        .checkpoint_interval(Some(3))
+        .checkpoint_dir(dir.clone())
+        .run(&Sssp { source: 0 });
     assert!(r.metrics.checkpoints > 0);
     let files: Vec<_> = std::fs::read_dir(&dir).unwrap().collect();
     assert_eq!(files.len() as u64, r.metrics.checkpoints);
@@ -75,15 +59,12 @@ fn pagerank_recovery_close_to_clean_run() {
     // PageRank combines f64 sums; rollback replays deliveries in the
     // same deterministic order so values must match exactly
     let g = generators::powerlaw(1_000, 4, 3);
-    let dg = dist(&g, 5);
     let prog = IncrementalPageRank { tolerance: 1e-6 };
-    let clean = hp::run_graphhp(&prog, &dg, &EngineConfig::default());
-    let cfg = EngineConfig {
-        checkpoint_interval: Some(2),
-        inject_failure_at: Some(3),
-        ..Default::default()
-    };
-    let rec = hp::run_graphhp(&prog, &dg, &cfg);
+    let clean = runner(&g, 5).run(&prog);
+    let rec = runner(&g, 5)
+        .checkpoint_interval(Some(2))
+        .inject_failure_at(Some(3))
+        .run(&prog);
     assert_eq!(rec.metrics.recoveries, 1);
     for (a, b) in clean.values.iter().zip(&rec.values) {
         assert!((a - b).abs() < 1e-9, "{a} vs {b}");
@@ -93,13 +74,10 @@ fn pagerank_recovery_close_to_clean_run() {
 #[test]
 fn failure_after_convergence_is_harmless() {
     let g = generators::road(15, 15, 2);
-    let dg = dist(&g, 3);
-    let cfg = EngineConfig {
-        checkpoint_interval: Some(1),
-        inject_failure_at: Some(1_000_000), // never fires
-        ..Default::default()
-    };
-    let r = hp::run_graphhp(&Sssp { source: 0 }, &dg, &cfg);
+    let r = runner(&g, 3)
+        .checkpoint_interval(Some(1))
+        .inject_failure_at(Some(1_000_000)) // never fires
+        .run(&Sssp { source: 0 });
     assert_eq!(r.metrics.recoveries, 0);
     assert!(r.metrics.checkpoints > 0);
 }

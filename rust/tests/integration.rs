@@ -1,42 +1,28 @@
 //! Cross-module integration tests: every algorithm on every engine on
-//! real (generated) graphs, verified against sequential oracles.
+//! real (generated) graphs, verified against sequential oracles. All
+//! execution goes through the [`Runner`] session API.
 
 use graphhp::algorithms::bipartite_matching::{validate_matching, BipartiteMatching};
 use graphhp::algorithms::coloring::{is_proper_coloring, Coloring};
 use graphhp::algorithms::pagerank::{GasPageRank, GiraphPPPageRank};
 use graphhp::algorithms::{oracle, IncrementalPageRank, Sssp, Wcc};
-use graphhp::engine::giraphpp::VertexSweep;
-use graphhp::engine::{am_hama, giraphpp, graphhp as hp, graphlab, hama, EngineConfig};
-use graphhp::graph::{generators, DistGraph, Graph};
-use graphhp::partition::{hash_partition, metis_partition, MetisConfig};
-
-fn dist(g: &Graph, k: usize) -> DistGraph {
-    let a = metis_partition(g, k, &MetisConfig::default());
-    DistGraph::new(g, &a, k)
-}
+use graphhp::bench_support::runner;
+use graphhp::engine::{EngineKind, Partitioner, Runner};
+use graphhp::graph::Graph;
+use graphhp::graph::generators;
 
 // ---------------------------------------------------------------- SSSP
 
 fn sssp_all_engines(g: &Graph, k: usize, source: u32) {
-    let dg = dist(g, k);
-    let cfg = EngineConfig::default();
+    let mut runner = runner(g, k);
     let want = oracle::dijkstra(g, source);
     let prog = Sssp { source };
-    for (name, values) in [
-        ("hama", hama::run_hama(&prog, &dg, &cfg).values),
-        ("am-hama", am_hama::run_am_hama(&prog, &dg, &cfg).values),
-        ("graphhp", hp::run_graphhp(&prog, &dg, &cfg).values),
-        (
-            "giraph++",
-            giraphpp::run_giraphpp(&VertexSweep { program: Sssp { source }, seed: 5 }, &dg, &cfg)
-                .values,
-        ),
-    ] {
-        for (i, (&got, &w)) in values.iter().zip(&want).enumerate() {
+    for (kind, r) in runner.compare(&EngineKind::VERTEX_CENTRIC, &prog) {
+        for (i, (&got, &w)) in r.values.iter().zip(&want).enumerate() {
             if w.is_finite() {
-                assert!((got - w as f32).abs() < 1e-2, "{name} v{i}: {got} vs {w}");
+                assert!((got - w as f32).abs() < 1e-2, "{kind} v{i}: {got} vs {w}");
             } else {
-                assert!(got >= 1e29, "{name} v{i}: expected inf");
+                assert!(got >= 1e29, "{kind} v{i}: expected inf");
             }
         }
     }
@@ -62,10 +48,7 @@ fn sssp_on_powerlaw_all_engines() {
 #[test]
 fn pagerank_all_engines_agree_with_power_iteration() {
     let g = generators::powerlaw(800, 4, 17);
-    let k = 5;
-    let a = metis_partition(&g, k, &MetisConfig::default());
-    let dg = DistGraph::new(&g, &a, k);
-    let cfg = EngineConfig::default();
+    let mut runner = runner(&g, 5);
     let want = oracle::pagerank(&g, 1e-12);
     let tol = 1e-8;
     let check = |name: &str, values: &[f64], bound: f64| {
@@ -73,50 +56,30 @@ fn pagerank_all_engines_agree_with_power_iteration() {
             values.iter().zip(&want).map(|(x, y)| (x - y).abs()).sum::<f64>() / want.len() as f64;
         assert!(err < bound, "{name}: avg err {err}");
     };
-    check(
-        "hama",
-        &hama::run_hama(&IncrementalPageRank { tolerance: tol }, &dg, &cfg).values,
-        1e-5,
-    );
-    check(
-        "am-hama",
-        &am_hama::run_am_hama(&IncrementalPageRank { tolerance: tol }, &dg, &cfg).values,
-        1e-5,
-    );
+    for (kind, r) in runner.compare(
+        &[EngineKind::Hama, EngineKind::AmHama],
+        &IncrementalPageRank { tolerance: tol },
+    ) {
+        check(&kind.to_string(), &r.values, 1e-5);
+    }
     check(
         "graphhp",
-        &hp::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg).values,
+        &runner.run_on(EngineKind::GraphHP, &IncrementalPageRank { tolerance: tol }).values,
         1e-4,
     );
     check(
         "giraph++",
-        &giraphpp::run_giraphpp(&GiraphPPPageRank { tolerance: tol }, &dg, &cfg).values,
+        &runner.run_partition(&GiraphPPPageRank { tolerance: tol }).values,
         1e-4,
     );
     check(
         "graphlab-sync",
-        &graphlab::run_graphlab_sync(
-            &GasPageRank { tolerance: 1e-10 },
-            &g,
-            &a,
-            k,
-            &cfg,
-            &graphlab::GraphLabCost::default(),
-        )
-        .values,
+        &runner.run_gas_on(EngineKind::GraphLabSync, &GasPageRank { tolerance: 1e-10 }).values,
         1e-5,
     );
     check(
         "graphlab-async",
-        &graphlab::run_graphlab_async(
-            &GasPageRank { tolerance: 1e-10 },
-            &g,
-            &a,
-            k,
-            &cfg,
-            &graphlab::GraphLabCost::default(),
-        )
-        .values,
+        &runner.run_gas_on(EngineKind::GraphLabAsync, &GasPageRank { tolerance: 1e-10 }).values,
         1e-5,
     );
 }
@@ -125,21 +88,11 @@ fn pagerank_all_engines_agree_with_power_iteration() {
 fn pagerank_iteration_ordering_matches_paper() {
     // the paper's Table 4 ordering: GraphHP < Giraph++ < GraphLab sync
     let g = generators::powerlaw(5_000, 5, 23);
-    let k = 8;
-    let a = metis_partition(&g, k, &MetisConfig::default());
-    let dg = DistGraph::new(&g, &a, k);
-    let cfg = EngineConfig::default();
+    let mut runner = runner(&g, 8);
     let tol = 1e-4;
-    let p = hp::run_graphhp(&IncrementalPageRank { tolerance: tol }, &dg, &cfg);
-    let gpp = giraphpp::run_giraphpp(&GiraphPPPageRank { tolerance: tol }, &dg, &cfg);
-    let s = graphlab::run_graphlab_sync(
-        &GasPageRank { tolerance: tol },
-        &g,
-        &a,
-        k,
-        &cfg,
-        &graphlab::GraphLabCost::default(),
-    );
+    let p = runner.run_on(EngineKind::GraphHP, &IncrementalPageRank { tolerance: tol });
+    let gpp = runner.run_partition(&GiraphPPPageRank { tolerance: tol });
+    let s = runner.run_gas_on(EngineKind::GraphLabSync, &GasPageRank { tolerance: tol });
     assert!(
         p.metrics.global_iterations <= gpp.metrics.global_iterations,
         "graphhp {} vs giraph++ {}",
@@ -170,15 +123,10 @@ fn wcc_multi_component_all_engines() {
     }
     let g = b.build();
     let want = oracle::wcc_labels(&g);
-    let dg = dist(&g, 6);
-    let cfg = EngineConfig::default();
-    assert_eq!(hama::run_hama(&Wcc, &dg, &cfg).values, want);
-    assert_eq!(am_hama::run_am_hama(&Wcc, &dg, &cfg).values, want);
-    assert_eq!(hp::run_graphhp(&Wcc, &dg, &cfg).values, want);
-    assert_eq!(
-        giraphpp::run_giraphpp(&VertexSweep { program: Wcc, seed: 3 }, &dg, &cfg).values,
-        want
-    );
+    let mut runner = runner(&g, 6);
+    for (kind, r) in runner.compare(&EngineKind::VERTEX_CENTRIC, &Wcc) {
+        assert_eq!(r.values, want, "{kind}");
+    }
 }
 
 // ------------------------------------------------------------ Matching
@@ -187,19 +135,16 @@ fn wcc_multi_component_all_engines() {
 fn bipartite_matching_all_engines_valid_and_maximal() {
     let (nl, nr) = (150usize, 130usize);
     let g = generators::bipartite(nl, nr, 3, 41);
-    let dg = dist(&g, 6);
-    let cfg = EngineConfig::default();
+    let mut runner = runner(&g, 6);
     let prog = BipartiteMatching { num_left: nl as u32 };
     let greedy = oracle::greedy_matching_size(&g, nl as u32);
-    for (name, values) in [
-        ("hama", hama::run_hama(&prog, &dg, &cfg).values),
-        ("am-hama", am_hama::run_am_hama(&prog, &dg, &cfg).values),
-        ("graphhp", hp::run_graphhp(&prog, &dg, &cfg).values),
-    ] {
-        let size =
-            validate_matching(&g, nl as u32, &values).unwrap_or_else(|e| panic!("{name}: {e}"));
+    for (kind, r) in
+        runner.compare(&[EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP], &prog)
+    {
+        let size = validate_matching(&g, nl as u32, &r.values)
+            .unwrap_or_else(|e| panic!("{kind}: {e}"));
         // any maximal matching is >= half the maximum >= half of greedy
-        assert!(size * 2 >= greedy, "{name}: size {size} vs greedy {greedy}");
+        assert!(size * 2 >= greedy, "{kind}: size {size} vs greedy {greedy}");
     }
 }
 
@@ -208,29 +153,29 @@ fn bipartite_matching_all_engines_valid_and_maximal() {
 #[test]
 fn coloring_all_engines_proper() {
     let g = generators::delaunay_like(16, 16, 7);
-    let dg = dist(&g, 4);
-    let cfg = EngineConfig::default();
-    assert!(is_proper_coloring(&g, &hama::run_hama(&Coloring, &dg, &cfg).values));
-    assert!(is_proper_coloring(&g, &am_hama::run_am_hama(&Coloring, &dg, &cfg).values));
-    assert!(is_proper_coloring(&g, &hp::run_graphhp(&Coloring, &dg, &cfg).values));
+    let mut runner = runner(&g, 4);
+    for (kind, r) in
+        runner.compare(&[EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP], &Coloring)
+    {
+        assert!(is_proper_coloring(&g, &r.values), "{kind}");
+    }
 }
 
 // ----------------------------------------------------- paper invariants
 
 #[test]
 fn graphhp_beats_hama_on_iterations_across_workloads() {
-    let cfg = EngineConfig::default();
     // road SSSP
     let g = generators::road(40, 40, 1);
-    let dg = dist(&g, 8);
-    let h = hama::run_hama(&Sssp { source: 0 }, &dg, &cfg);
-    let p = hp::run_graphhp(&Sssp { source: 0 }, &dg, &cfg);
+    let mut r = runner(&g, 8);
+    let h = r.run_on(EngineKind::Hama, &Sssp { source: 0 });
+    let p = r.run_on(EngineKind::GraphHP, &Sssp { source: 0 });
     assert!(p.metrics.global_iterations * 3 <= h.metrics.global_iterations);
     // web PageRank
     let g = generators::powerlaw(3_000, 5, 3);
-    let dg = dist(&g, 8);
-    let h = hama::run_hama(&IncrementalPageRank { tolerance: 1e-5 }, &dg, &cfg);
-    let p = hp::run_graphhp(&IncrementalPageRank { tolerance: 1e-5 }, &dg, &cfg);
+    let mut r = runner(&g, 8);
+    let h = r.run_on(EngineKind::Hama, &IncrementalPageRank { tolerance: 1e-5 });
+    let p = r.run_on(EngineKind::GraphHP, &IncrementalPageRank { tolerance: 1e-5 });
     assert!(p.metrics.global_iterations < h.metrics.global_iterations);
     assert!(p.metrics.network_messages <= h.metrics.network_messages);
 }
@@ -240,12 +185,12 @@ fn hash_partitioning_erases_most_of_the_gain() {
     // the local phase exploits locality; hash partitioning should shrink
     // the iteration gap vs metis (ablation as a regression test)
     let g = generators::road(40, 40, 2);
-    let cfg = EngineConfig::default();
     let k = 8;
-    let dm = DistGraph::new(&g, &metis_partition(&g, k, &MetisConfig::default()), k);
-    let dh = DistGraph::new(&g, &hash_partition(&g, k), k);
-    let pm = hp::run_graphhp(&Sssp { source: 0 }, &dm, &cfg);
-    let ph = hp::run_graphhp(&Sssp { source: 0 }, &dh, &cfg);
+    let pm = runner(&g, k).run(&Sssp { source: 0 });
+    let ph = Runner::new(&g)
+        .partitions(k)
+        .partitioner(Partitioner::Hash)
+        .run(&Sssp { source: 0 });
     assert!(
         pm.metrics.global_iterations < ph.metrics.global_iterations,
         "metis {} vs hash {}",
@@ -276,4 +221,34 @@ fn cli_binary_smoke() {
     assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
     let stdout = String::from_utf8_lossy(&out.stdout);
     assert!(stdout.contains("vertices reached"), "{stdout}");
+}
+
+#[test]
+fn cli_runs_every_engine_kind() {
+    // the Runner-backed CLI dispatches all six kinds, GAS forms included
+    let exe = env!("CARGO_BIN_EXE_graphhp");
+    let dir = std::env::temp_dir().join("graphhp_cli_kinds");
+    std::fs::create_dir_all(&dir).unwrap();
+    let gpath = dir.join("g.bin");
+    let out = std::process::Command::new(exe)
+        .args(["generate", "--kind", "erdos", "--n", "200", "--m", "800", "--out"])
+        .arg(&gpath)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    for engine in
+        ["hama", "am-hama", "graphhp", "giraph++", "graphlab-sync", "graphlab-async"]
+    {
+        let out = std::process::Command::new(exe)
+            .args(["run", "--graph"])
+            .arg(&gpath)
+            .args(["--algo", "pagerank", "--engine", engine, "--parts", "4"])
+            .output()
+            .unwrap();
+        assert!(
+            out.status.success(),
+            "engine {engine}: {}",
+            String::from_utf8_lossy(&out.stderr)
+        );
+    }
 }

@@ -1,0 +1,132 @@
+//! Runner session API tests: PageRank through the [`Runner`] on every
+//! [`EngineKind`], checked against the sequential oracle AND bit-for-bit
+//! against the legacy free-function path; plus builder/session behavior
+//! that unit tests can't cover from inside the crate.
+
+use graphhp::algorithms::pagerank::GasPageRank;
+use graphhp::algorithms::{oracle, IncrementalPageRank, Sssp};
+use graphhp::engine::giraphpp::VertexSweep;
+use graphhp::engine::{
+    am_hama, giraphpp, graphhp as hp, graphlab, hama, EngineConfig, EngineKind, NetSimConfig,
+    Partitioner, Runner,
+};
+use graphhp::graph::generators;
+use graphhp::partition::{metis_partition, MetisConfig};
+
+/// PageRank on every one of the six kinds through one session: values
+/// must match the power-iteration oracle within the tolerance bound and
+/// the legacy free-function results exactly.
+#[test]
+fn pagerank_via_runner_on_every_kind_matches_oracle_and_legacy() {
+    let g = generators::powerlaw(600, 4, 13);
+    let k = 4;
+    let assignment = metis_partition(&g, k, &MetisConfig::default());
+    let dg = graphhp::graph::DistGraph::new(&g, &assignment, k);
+    let cfg = EngineConfig::default();
+    let want = oracle::pagerank(&g, 1e-12);
+    let oracle_check = |kind: EngineKind, values: &[f64]| {
+        let err: f64 =
+            values.iter().zip(&want).map(|(x, y)| (x - y).abs()).sum::<f64>() / want.len() as f64;
+        assert!(err < 1e-4, "{kind}: avg err {err} vs oracle");
+    };
+
+    // the session partitions with the same metis config => same DistGraph
+    let mut runner = Runner::new(&g)
+        .partitions(k)
+        .partitioner(Partitioner::Metis(MetisConfig::default()));
+
+    let vp = IncrementalPageRank { tolerance: 1e-8 };
+    let gp = GasPageRank { tolerance: 1e-9 };
+    for kind in EngineKind::ALL {
+        let (via, legacy) = if kind.is_gas() {
+            let via = runner.run_gas_on(kind, &gp);
+            let legacy = match kind {
+                EngineKind::GraphLabSync => graphlab::run_graphlab_sync(&gp, &dg, &cfg),
+                _ => graphlab::run_graphlab_async(&gp, &dg, &cfg),
+            };
+            (via, legacy)
+        } else {
+            let via = runner.run_on(kind, &vp);
+            let legacy = match kind {
+                EngineKind::Hama => hama::run_hama(&vp, &dg, &cfg),
+                EngineKind::AmHama => am_hama::run_am_hama(&vp, &dg, &cfg),
+                EngineKind::GraphHP => hp::run_graphhp(&vp, &dg, &cfg),
+                EngineKind::GiraphPP => {
+                    let sweep = VertexSweep {
+                        program: IncrementalPageRank { tolerance: 1e-8 },
+                        seed: cfg.seed,
+                    };
+                    giraphpp::run_giraphpp(&sweep, &dg, &cfg)
+                }
+                _ => unreachable!(),
+            };
+            (via, legacy)
+        };
+        oracle_check(kind, &via.values);
+        assert_eq!(via.values, legacy.values, "{kind}: Runner != legacy free function");
+        assert_eq!(
+            via.metrics.global_iterations, legacy.metrics.global_iterations,
+            "{kind}: iteration counts diverge"
+        );
+        assert_eq!(
+            via.metrics.network_messages, legacy.metrics.network_messages,
+            "{kind}: message counts diverge"
+        );
+    }
+}
+
+/// The session builds the distributed view lazily and exactly once; an
+/// explicit assignment pins the placement.
+#[test]
+fn session_reuses_one_distributed_view() {
+    let g = generators::connected(300, 120, 21);
+    let mut runner = Runner::new(&g).partitions(5);
+    let cut_before = runner.dist().edge_cut();
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let r = runner.run_on(kind, &Sssp { source: 0 });
+        assert_eq!(r.values.len(), g.num_vertices(), "{kind}");
+    }
+    assert_eq!(runner.dist().edge_cut(), cut_before, "view must not be rebuilt");
+}
+
+/// Builder knobs actually reach the engines: a 3-iteration cap stops
+/// Hama early, and a custom net config changes the simulated clock.
+#[test]
+fn builder_knobs_are_honored_end_to_end() {
+    let g = generators::road(20, 20, 3);
+    let capped = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::Hama)
+        .max_iterations(3)
+        .run(&Sssp { source: 0 });
+    assert_eq!(capped.metrics.global_iterations, 3);
+
+    let slow_net = NetSimConfig { barrier_latency_us: 50_000.0, ..Default::default() };
+    let fast = Runner::new(&g).partitions(4).engine(EngineKind::Hama).run(&Sssp { source: 0 });
+    let slow = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::Hama)
+        .net(slow_net)
+        .run(&Sssp { source: 0 });
+    assert_eq!(fast.metrics.global_iterations, slow.metrics.global_iterations);
+    assert!(slow.metrics.elapsed > fast.metrics.elapsed, "barrier cost must show up");
+}
+
+/// `compare` runs every requested kind over the same view and keeps the
+/// kind labels aligned with the results.
+#[test]
+fn compare_returns_labeled_results() {
+    let g = generators::connected(150, 60, 9);
+    let mut runner = Runner::new(&g).partitions(3);
+    let results = runner.compare(&EngineKind::VERTEX_CENTRIC, &Sssp { source: 0 });
+    assert_eq!(results.len(), EngineKind::VERTEX_CENTRIC.len());
+    for ((kind, r), want_kind) in results.iter().zip(EngineKind::VERTEX_CENTRIC) {
+        assert_eq!(*kind, want_kind);
+        assert_eq!(r.values.len(), g.num_vertices());
+    }
+    // confluent program: all engines bit-identical
+    let base = &results[0].1.values;
+    for (kind, r) in &results[1..] {
+        assert_eq!(&r.values, base, "{kind}");
+    }
+}
