@@ -5,10 +5,14 @@ fn main() {
     let rt = XlaRuntime::new(&dir).unwrap();
     let ph = rt.load_phase("pagerank_local").unwrap();
     let med = pipeline::time_phase_invocation(&ph, 21).unwrap();
-    let n = ph.spec.n; let k = ph.spec.steps;
-    let flops = 2.0 * (n*n) as f64 * k as f64; // K matvecs
-    println!("pagerank_local (literal args): n={n} K={k} median invocation {:?} ({:.2} GFLOP/s effective)",
-        med, flops / med.as_secs_f64() / 1e9);
+    let n = ph.spec.n;
+    let k = ph.spec.steps;
+    let flops = 2.0 * (n * n) as f64 * k as f64; // K matvecs
+    println!(
+        "pagerank_local (literal args): n={n} K={k} median invocation {:?} ({:.2} GFLOP/s effective)",
+        med,
+        flops / med.as_secs_f64() / 1e9
+    );
     // cached device matrix path
     let m = vec![0.001f32; n * n];
     let m_dev = rt.upload_f32(&m, &[n, n]).unwrap();
@@ -22,6 +26,9 @@ fn main() {
     }
     times.sort();
     let med = times[10];
-    println!("pagerank_local (device-cached M): median invocation {:?} ({:.2} GFLOP/s effective)",
-        med, flops / med.as_secs_f64() / 1e9);
+    println!(
+        "pagerank_local (device-cached M): median invocation {:?} ({:.2} GFLOP/s effective)",
+        med,
+        flops / med.as_secs_f64() / 1e9
+    );
 }

@@ -9,18 +9,23 @@
 //!   it sees the message *this* superstep (each vertex still computes at
 //!   most once per superstep);
 //! - only cross-partition messages go through RPC at the barrier.
+//!
+//! Routing policy: `LocalRoute::ThisSweep`. The worker body lives in
+//! `super::worker`; workers run in parallel per
+//! [`super::EngineConfig::parallelism`].
 
 use std::collections::BTreeSet;
 
 use crate::graph::DistGraph;
 
 use super::aggregator::Aggregators;
-use super::context::{SendBuffer, VertexContext};
 use super::messages::Outbox;
 use super::metrics::Metrics;
-use super::netsim::{SuperstepClock, WorkerComm};
+use super::netsim::SuperstepClock;
 use super::program::VertexProgram;
-use super::state::{init_runtimes, PartitionRuntime};
+use super::worker::{
+    close_superstep, init_worker_states, run_workers, LocalRoute, Reschedule, Sweep, WorkerOut,
+};
 use super::{EngineConfig, RunResult};
 
 /// Run `program` under the AM-Hama (asynchronous messaging) model.
@@ -33,7 +38,7 @@ pub fn run_am_hama<P: VertexProgram>(
     dg: &DistGraph,
     cfg: &EngineConfig,
 ) -> RunResult<P::V> {
-    let mut rts: Vec<PartitionRuntime<P>> = init_runtimes(program, dg);
+    let mut workers = init_worker_states(program, dg);
     let mut metrics = Metrics::default();
     let mut clock = SuperstepClock::new();
     let mut aggs = Aggregators::new(
@@ -41,133 +46,75 @@ pub fn run_am_hama<P: VertexProgram>(
     );
     let combiner = program.combiner();
 
-    for (p, rt) in rts.iter_mut().enumerate() {
-        for lv in 0..dg.parts[p].num_vertices() {
-            rt.schedule_next(lv);
+    for ws in workers.iter_mut() {
+        for lv in 0..ws.rt.num_vertices() {
+            ws.rt.schedule_next(lv);
         }
     }
 
     let mut superstep: u64 = 0;
-    let mut msg_buf: Vec<P::M> = Vec::new();
-    let mut send_buf: SendBuffer<P::M> = SendBuffer::new();
 
     loop {
-        let mut outboxes: Vec<Outbox<P::M>> = Vec::with_capacity(dg.num_parts());
-        let mut worker_aggs: Vec<Aggregators> = Vec::new();
-
-        for p in 0..dg.num_parts() {
-            let part = &dg.parts[p];
-            let rt = &mut rts[p];
+        let outs = run_workers(cfg.parallelism, &mut workers, |p, ws| {
             let mut outbox: Outbox<P::M> = Outbox::new(combiner);
             let mut wagg = aggs.clone();
             let t0 = std::time::Instant::now();
 
             // Vertices are processed in local-index order; in-memory
             // messages can still reach vertices later in the order this
-            // same superstep, so the worklist is an ordered set that
-            // accepts insertions ahead of the cursor.
-            let frontier = rt.begin_step();
-            let mut worklist: BTreeSet<u32> = frontier.into_iter().collect();
-            let n = rt.num_vertices();
-            let mut processed = vec![false; n];
-
-            while let Some(lv32) = worklist.pop_first() {
-                let lv = lv32 as usize;
-                processed[lv] = true;
-                rt.cur.take_into(lv, &mut msg_buf);
-                if rt.halted[lv] {
-                    if msg_buf.is_empty() {
-                        continue;
-                    }
-                    rt.halted[lv] = false;
-                }
-                send_buf.clear();
-                {
-                    let mut ctx = VertexContext::<P> {
-                        part,
-                        lv,
-                        superstep,
-                        value: &mut rt.values[lv],
-                        messages: &msg_buf,
-                        halted: &mut rt.halted[lv],
-                        out: &mut send_buf,
-                        aggregators: &mut wagg,
-                        seed: cfg.seed,
-                    };
-                    program.compute(&mut ctx);
-                }
-                metrics.vertex_computations += 1;
-                for (target, m) in send_buf.sends.drain(..) {
-                    let (tp, tl) = dg.location[target as usize];
-                    if tp as usize == p {
-                        // in-memory delivery (never network)
-                        metrics.local_messages += 1;
-                        let tl = tl as usize;
-                        // No same-superstep delivery during the
-                        // initialization superstep: programs treat
-                        // superstep 0 as message-free setup, so async
-                        // delivery there would silently drop messages.
-                        if superstep > 0 && !processed[tl] {
-                            // receiver still to run this superstep
-                            rt.cur.push_combined(tl, m, combiner);
-                            worklist.insert(tl as u32);
-                        } else {
-                            rt.nxt.push_combined(tl, m, combiner);
-                            rt.schedule_next(tl);
-                        }
-                    } else {
-                        outbox.push(tp, tl, part.global_ids[lv], m);
-                    }
-                }
-                if !rt.halted[lv] {
-                    rt.schedule_next(lv);
-                }
-            }
-
-            let compute = cfg.net.scale_compute(t0.elapsed());
-            let comm = WorkerComm {
-                messages: outbox.len() as u64,
-                bytes: outbox.wire_bytes() as u64,
-                peer_pairs: outbox.peer_count(p as u32) as u64,
+            // same superstep (the worklist accepts insertions ahead of
+            // the cursor). The frontier alone seeds it: every delivery
+            // into `nxt` is paired with a schedule, so cur's pending set
+            // is always a subset of the frontier.
+            let worklist: BTreeSet<u32> = ws.rt.begin_step().into_iter().collect();
+            let sweep = Sweep {
+                program,
+                dg,
+                part: &dg.parts[p],
+                p,
+                superstep,
+                seed: cfg.seed,
+                combiner,
+                route: LocalRoute::ThisSweep,
+                reschedule: Reschedule::Active,
+                boundary_in_local: true,
             };
-            metrics.network_messages += comm.messages;
-            metrics.network_bytes += comm.bytes;
-            clock.record_worker(compute, cfg.net.comm_time(&comm));
-            outboxes.push(outbox);
-            worker_aggs.push(wagg);
-        }
+            let outcome = sweep.run(
+                worklist,
+                ws.rt.sweep_target(),
+                None,
+                &mut outbox,
+                &mut wagg,
+                &mut ws.scratch,
+                &mut ws.marks,
+            );
+            let compute = cfg.net.scale_compute(t0.elapsed());
+            WorkerOut::new(outbox, wagg, compute, p, outcome, 0)
+        });
 
-        for mut outbox in outboxes {
-            for (tp, tl, m) in outbox.drain() {
-                let rt = &mut rts[tp as usize];
-                rt.nxt.push(tl as usize, m);
-                rt.schedule_next(tl as usize);
-            }
-        }
-        for w in &worker_aggs {
-            aggs.merge_current(w);
-        }
-        aggs.barrier();
-        clock.barrier(&cfg.net, &mut metrics);
+        close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+            let rt = &mut workers[tp as usize].rt;
+            rt.nxt.push(tl as usize, m);
+            rt.schedule_next(tl as usize);
+        });
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         superstep += 1;
 
-        let done = rts.iter_mut().all(|rt| rt.quiesced());
+        let done = workers.iter_mut().all(|ws| ws.rt.quiesced());
         if done || superstep >= cfg.limits.max_iterations {
             break;
         }
     }
 
-    let values = super::gather_values(
-        dg,
-        &rts.iter().map(|rt| rt.values.clone()).collect::<Vec<_>>(),
-    );
+    let values =
+        super::gather_values_owned(dg, workers.into_iter().map(|ws| ws.rt.values).collect());
     RunResult { values, metrics }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::context::VertexContext;
     use super::*;
     use crate::engine::hama::run_hama;
     use crate::graph::{generators, DistGraph, VertexId};

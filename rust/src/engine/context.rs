@@ -106,7 +106,8 @@ impl<'a, P: VertexProgram> VertexContext<'a, P> {
     /// Send `msg` along every out-edge.
     pub fn send_to_neighbors(&mut self, msg: P::M) {
         // routed by the engine; we just record (target, msg) pairs
-        let targets: Vec<VertexId> = self.part.out_edges(self.lv).iter().map(|e| e.target).collect();
+        let targets: Vec<VertexId> =
+            self.part.out_edges(self.lv).iter().map(|e| e.target).collect();
         for t in targets {
             self.out.sends.push((t, msg.clone()));
         }

@@ -9,20 +9,25 @@
 //! The paper benchmarks an improvised Hama `bsp()` implementation of this
 //! model: "sequentially update each vertex once and immediately propagate
 //! its update to its neighboring vertices within a same partition" per
-//! superstep. [`run_giraphpp`] executes a [`PartitionProgram`]; the
+//! superstep. [`run_giraphpp`] executes a [`PartitionProgram`] — one
+//! parallel worker per partition, like every other engine — and the
 //! [`VertexSweep`] adapter runs any [`VertexProgram`] under those
-//! single-sweep semantics.
+//! single-sweep semantics via the shared `super::worker::Sweep` body.
 
 use std::collections::BTreeSet;
 
 use crate::graph::{DistGraph, PartGraph, VertexId};
 use crate::util::Codec;
 
-use super::context::{SendBuffer, VertexContext};
 use super::messages::{MsgStore, Outbox};
 use super::metrics::Metrics;
-use super::netsim::{SuperstepClock, WorkerComm};
+use super::netsim::SuperstepClock;
 use super::program::VertexProgram;
+use super::state::{Frontier, PartitionRuntime};
+use super::worker::{
+    close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepTarget,
+    WorkerOut, WorkerScratch,
+};
 use super::{Aggregators, EngineConfig, RunResult};
 
 /// The graph-centric programming interface: a sequential algorithm over
@@ -50,6 +55,10 @@ pub struct PartitionContext<'a, PP: PartitionProgram> {
     pub halted: &'a mut [bool],
     cur: &'a mut MsgStore<PP::M>,
     nxt: &'a mut MsgStore<PP::M>,
+    /// Next-superstep schedules ([`VertexSweep`]'s frontier bookkeeping;
+    /// plain partition programs leave it untouched and re-derive their
+    /// worklist from pending messages).
+    frontier: &'a mut Frontier,
     outbox: &'a mut Outbox<PP::M>,
     dg: &'a DistGraph,
     p: usize,
@@ -99,40 +108,39 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     dg: &DistGraph,
     cfg: &EngineConfig,
 ) -> RunResult<PP::V> {
-    let np = dg.num_parts();
-    let mut values: Vec<Vec<PP::V>> = dg
+    let mut rts: Vec<PartitionRuntime<PP::V, PP::M>> = dg
         .parts
         .iter()
         .map(|pg| {
-            (0..pg.num_vertices())
-                .map(|lv| program.init(pg.global_ids[lv], pg.out_degree[lv]))
-                .collect()
+            PartitionRuntime::from_values(
+                (0..pg.num_vertices())
+                    .map(|lv| program.init(pg.global_ids[lv], pg.out_degree[lv]))
+                    .collect(),
+            )
         })
         .collect();
-    let mut halted: Vec<Vec<bool>> =
-        dg.parts.iter().map(|pg| vec![false; pg.num_vertices()]).collect();
-    let mut cur: Vec<MsgStore<PP::M>> =
-        dg.parts.iter().map(|pg| MsgStore::new(pg.num_vertices())).collect();
-    let mut nxt: Vec<MsgStore<PP::M>> =
-        dg.parts.iter().map(|pg| MsgStore::new(pg.num_vertices())).collect();
 
     let mut metrics = Metrics::default();
     let mut clock = SuperstepClock::new();
+    // the graph-centric interface has no aggregators; keep an empty
+    // master set so the shared barrier fold applies unchanged
+    let mut aggs = Aggregators::new(Vec::new());
     let mut superstep: u64 = 0;
 
     loop {
-        let mut outboxes: Vec<Outbox<PP::M>> = Vec::with_capacity(np);
-        for p in 0..np {
+        let outs = run_workers(cfg.parallelism, &mut rts, |p, rt| {
             let mut outbox: Outbox<PP::M> = Outbox::new(None);
             let t0 = std::time::Instant::now();
+            let (computations, local_messages);
             {
                 let mut ctx = PartitionContext::<PP> {
                     part: &dg.parts[p],
                     superstep,
-                    values: &mut values[p],
-                    halted: &mut halted[p],
-                    cur: &mut cur[p],
-                    nxt: &mut nxt[p],
+                    values: &mut rt.values,
+                    halted: &mut rt.halted,
+                    cur: &mut rt.cur,
+                    nxt: &mut rt.nxt,
+                    frontier: &mut rt.frontier,
                     outbox: &mut outbox,
                     dg,
                     p,
@@ -140,49 +148,41 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                     local_messages: 0,
                 };
                 program.compute_partition(&mut ctx);
-                metrics.vertex_computations += ctx.computations;
-                metrics.local_messages += ctx.local_messages;
+                computations = ctx.computations;
+                local_messages = ctx.local_messages;
             }
             let compute = cfg.net.scale_compute(t0.elapsed());
-            let comm = WorkerComm {
-                messages: outbox.len() as u64,
-                bytes: outbox.wire_bytes() as u64,
-                peer_pairs: outbox.peer_count(p as u32) as u64,
-            };
-            metrics.network_messages += comm.messages;
-            metrics.network_bytes += comm.bytes;
-            clock.record_worker(compute, cfg.net.comm_time(&comm));
-            outboxes.push(outbox);
-        }
-        for (_p, mut outbox) in outboxes.into_iter().enumerate() {
-            for (tp, tl, m) in outbox.drain() {
-                nxt[tp as usize].push(tl as usize, m);
-            }
-        }
-        clock.barrier(&cfg.net, &mut metrics);
+            let outcome =
+                super::worker::SweepOutcome { computations, local_messages };
+            WorkerOut::new(outbox, Aggregators::new(Vec::new()), compute, p, outcome, 0)
+        });
+
+        close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+            rts[tp as usize].nxt.push(tl as usize, m);
+        });
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         superstep += 1;
 
-        for p in 0..np {
-            std::mem::swap(&mut cur[p], &mut nxt[p]);
+        for rt in rts.iter_mut() {
+            std::mem::swap(&mut rt.cur, &mut rt.nxt);
         }
-        let done = (0..np).all(|p| {
-            halted[p].iter().all(|&h| h) && cur[p].is_empty() && nxt[p].is_empty()
-        });
+        let done =
+            rts.iter_mut().all(|rt| rt.halted.iter().all(|&h| h) && rt.quiesced());
         if done || superstep >= cfg.limits.max_iterations {
             break;
         }
     }
 
-    let values = super::gather_values(dg, &values);
+    let values = super::gather_values_owned(dg, rts.into_iter().map(|rt| rt.values).collect());
     RunResult { values, metrics }
 }
 
 /// Adapter: run a vertex-centric [`VertexProgram`] under Giraph++
 /// single-sweep semantics — each active vertex computes at most once per
 /// superstep, in-partition messages reach vertices later in the sweep
-/// within the same superstep.
+/// within the same superstep. The sweep itself is the shared worker body
+/// (`super::worker::Sweep` with `LocalRoute::ThisSweep`).
 pub struct VertexSweep<P: VertexProgram> {
     pub program: P,
     pub seed: u64,
@@ -198,72 +198,57 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
 
     fn compute_partition(&self, ctx: &mut PartitionContext<'_, Self>) {
         let n = ctx.part.num_vertices();
-        let combiner = self.program.combiner();
-        // worklist: vertices with messages + unhalted vertices
-        let mut worklist: BTreeSet<u32> = ctx.pending_vertices().into_iter().collect();
-        for lv in 0..n {
-            if !ctx.halted[lv] {
-                worklist.insert(lv as u32);
+        // worklist: scheduled vertices + vertices with mail (plus every
+        // vertex at the initialization superstep)
+        let mut worklist: BTreeSet<u32> = ctx.frontier.take().into_iter().collect();
+        for lv in ctx.cur.pending() {
+            worklist.insert(lv);
+        }
+        if ctx.superstep == 0 {
+            for lv in 0..n as u32 {
+                worklist.insert(lv);
             }
         }
-        let mut processed = vec![false; n];
-        let mut msg_buf: Vec<P::M> = Vec::new();
-        let mut send_buf: SendBuffer<P::M> = SendBuffer::new();
-        let mut aggs = Aggregators::new(Vec::new());
-        let mut computations = 0u64;
-        while let Some(lv32) = worklist.pop_first() {
-            let lv = lv32 as usize;
-            processed[lv] = true;
-            ctx.take_messages(lv, &mut msg_buf);
-            if ctx.halted[lv] {
-                if msg_buf.is_empty() {
-                    continue;
-                }
-                ctx.halted[lv] = false;
-            }
-            send_buf.clear();
-            {
-                let mut vctx = VertexContext::<P> {
-                    part: ctx.part,
-                    lv,
-                    superstep: ctx.superstep,
-                    value: &mut ctx.values[lv],
-                    messages: &msg_buf,
-                    halted: &mut ctx.halted[lv],
-                    out: &mut send_buf,
-                    aggregators: &mut aggs,
-                    seed: self.seed,
-                };
-                self.program.compute(&mut vctx);
-            }
-            computations += 1;
-            for (target, m) in send_buf.sends.drain(..) {
-                let (tp, tl) = ctx.dg.location[target as usize];
-                if tp as usize == ctx.p {
-                    let tl = tl as usize;
-                    ctx.local_messages += 1;
-                    // no same-sweep delivery during the initialization
-                    // superstep (programs treat superstep 0 as
-                    // message-free setup; async delivery there would
-                    // silently drop messages)
-                    if ctx.superstep > 0 && !processed[tl] {
-                        // visible within this sweep
-                        ctx.cur.push_combined(tl, m, combiner);
-                        worklist.insert(tl as u32);
-                    } else {
-                        ctx.nxt.push_combined(tl, m, combiner);
-                    }
-                } else {
-                    ctx.outbox.push(tp, tl, ctx.part.global_ids[lv], m);
-                }
-            }
-        }
-        ctx.count_computations(computations);
+        let sweep = Sweep {
+            program: &self.program,
+            dg: ctx.dg,
+            part: ctx.part,
+            p: ctx.p,
+            superstep: ctx.superstep,
+            seed: self.seed,
+            combiner: self.program.combiner(),
+            route: LocalRoute::ThisSweep,
+            reschedule: Reschedule::Active,
+            boundary_in_local: true,
+        };
+        let mut scratch: WorkerScratch<P::M> = WorkerScratch::new();
+        let mut marks = ProcessedMarks::new(n);
+        // the vertex-centric aggregator mechanism is not part of the
+        // graph-centric interface
+        let mut wagg = Aggregators::new(Vec::new());
+        let outcome = sweep.run(
+            worklist,
+            SweepTarget {
+                values: &mut *ctx.values,
+                halted: &mut *ctx.halted,
+                cur: &mut *ctx.cur,
+                nxt: &mut *ctx.nxt,
+                frontier: Some(&mut *ctx.frontier),
+            },
+            None,
+            &mut *ctx.outbox,
+            &mut wagg,
+            &mut scratch,
+            &mut marks,
+        );
+        ctx.computations += outcome.computations;
+        ctx.local_messages += outcome.local_messages;
     }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::context::VertexContext;
     use super::*;
     use crate::engine::hama::run_hama;
     use crate::graph::generators;

@@ -20,115 +20,54 @@
 //!
 //! Distributed synchronization + communication happen once per global
 //! iteration — the whole point of the hybrid model.
+//!
+//! The per-vertex body of all three sweeps (init / global / local) is
+//! the shared `super::worker::Sweep`; this file keeps only the phase
+//! structure and the hybrid routing policy. Partitions run as parallel
+//! workers per [`super::EngineConfig::parallelism`].
 
 use std::collections::BTreeSet;
 
-use crate::graph::DistGraph;
+use crate::graph::{DistGraph, PartGraph};
 
 use super::aggregator::Aggregators;
-use super::context::{SendBuffer, VertexContext};
 use super::messages::{MsgStore, Outbox};
 use super::metrics::Metrics;
-use super::netsim::{SuperstepClock, WorkerComm};
+use super::netsim::SuperstepClock;
 use super::program::VertexProgram;
+use super::state::PartitionRuntime;
+use super::worker::{
+    close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepOutcome,
+    SweepTarget, WorkerOut, WorkerScratch,
+};
 use super::{EngineConfig, RunResult};
 
-/// Per-partition state of the hybrid engine.
+/// Per-partition state of the hybrid engine: the shared
+/// [`PartitionRuntime`] carries the local-phase inboxes/frontier, plus
+/// the global-phase inbox pair the hybrid model adds on top.
 struct HpPart<P: VertexProgram> {
-    values: Vec<P::V>,
-    halted: Vec<bool>,
+    rt: PartitionRuntime<P::V, P::M>,
     /// Global-phase inbox for the CURRENT iteration.
     gq_cur: MsgStore<P::M>,
     /// Global-phase inbox for the NEXT iteration (remote deliveries +
     /// same-partition messages to non-participating boundary vertices).
     gq_nxt: MsgStore<P::M>,
-    /// Local-phase pseudo-superstep inboxes.
-    lq_cur: MsgStore<P::M>,
-    lq_nxt: MsgStore<P::M>,
-    /// Local-phase frontier for the next pseudo-superstep.
-    l_frontier: Vec<u32>,
-    in_l_frontier: Vec<bool>,
+    scratch: WorkerScratch<P::M>,
+    marks: ProcessedMarks,
 }
 
 impl<P: VertexProgram> HpPart<P> {
-    fn new(program: &P, part: &crate::graph::PartGraph) -> Self {
-        let n = part.num_vertices();
+    fn new(program: &P, part: &PartGraph) -> Self {
+        let rt = PartitionRuntime::new(program, part);
+        let n = rt.num_vertices();
         HpPart {
-            values: (0..n)
-                .map(|lv| program.init(part.global_ids[lv], part.out_degree[lv]))
-                .collect(),
-            halted: vec![false; n],
+            rt,
             gq_cur: MsgStore::new(n),
             gq_nxt: MsgStore::new(n),
-            lq_cur: MsgStore::new(n),
-            lq_nxt: MsgStore::new(n),
-            l_frontier: Vec::new(),
-            in_l_frontier: vec![false; n],
+            scratch: WorkerScratch::new(),
+            marks: ProcessedMarks::new(n),
         }
     }
-
-    fn schedule_local(&mut self, lv: usize) {
-        if !self.in_l_frontier[lv] {
-            self.in_l_frontier[lv] = true;
-            self.l_frontier.push(lv as u32);
-        }
-    }
-
-    fn take_local_frontier(&mut self) -> Vec<u32> {
-        for &lv in &self.l_frontier {
-            self.in_l_frontier[lv as usize] = false;
-        }
-        std::mem::take(&mut self.l_frontier)
-    }
-}
-
-/// Route one send originating in partition `p`.
-///
-/// `in_local_phase` selects the local-phase routing rules; during the
-/// global phase, same-partition messages go to the local phase inbox
-/// (participants) or the next global inbox (non-participating boundary).
-#[allow(clippy::too_many_arguments)]
-fn route_send<P: VertexProgram>(
-    hp: &mut HpPart<P>,
-    outbox: &mut Outbox<P::M>,
-    dg: &DistGraph,
-    p: usize,
-    src_gid: crate::graph::VertexId,
-    target: crate::graph::VertexId,
-    m: P::M,
-    boundary_in_local: bool,
-    combiner: Option<fn(P::M, P::M) -> P::M>,
-    metrics: &mut Metrics,
-    // async local delivery: Some((processed stamps, current stamp,
-    // worklist)) while a pseudo-superstep sweep is in progress and async
-    // messaging is on
-    async_ctx: Option<(&[u32], u32, &mut BTreeSet<u32>)>,
-) {
-    let (tp, tl) = dg.location[target as usize];
-    if tp as usize != p {
-        outbox.push(tp, tl, src_gid, m);
-        return;
-    }
-    let tl = tl as usize;
-    metrics.local_messages += 1;
-    let target_is_boundary = dg.parts[p].is_boundary[tl];
-    let participates = boundary_in_local || !target_is_boundary;
-    if !participates {
-        // boundary vertex not in local phase: buffer for the next
-        // iteration's global phase (paper §4.2)
-        hp.gq_nxt.push_combined(tl, m, combiner);
-        return;
-    }
-    // participant: in-memory local-phase delivery
-    if let Some((stamps, stamp, worklist)) = async_ctx {
-        if stamps[tl] != stamp {
-            hp.lq_cur.push_combined(tl, m, combiner);
-            worklist.insert(tl as u32);
-            return;
-        }
-    }
-    hp.lq_nxt.push_combined(tl, m, combiner);
-    hp.schedule_local(tl);
 }
 
 /// Run `program` under the GraphHP hybrid execution model.
@@ -153,8 +92,6 @@ pub fn run_graphhp<P: VertexProgram>(
     let boundary_in_local = cfg.hybrid.boundary_in_local_phase;
 
     let mut iteration: u64 = 0;
-    let mut msg_buf: Vec<P::M> = Vec::new();
-    let mut send_buf: SendBuffer<P::M> = SendBuffer::new();
     let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
     let mut failure_pending = cfg.fault.inject_failure_at;
 
@@ -163,8 +100,8 @@ pub fn run_graphhp<P: VertexProgram>(
         if cfg.fault.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
             let ckpt = super::checkpoint::Checkpoint {
                 iteration,
-                values: parts.iter().map(|hp| hp.values.clone()).collect(),
-                halted: parts.iter().map(|hp| hp.halted.clone()).collect(),
+                values: parts.iter().map(|hp| hp.rt.values.clone()).collect(),
+                halted: parts.iter().map(|hp| hp.rt.halted.clone()).collect(),
                 inbox: parts.iter_mut().map(|hp| hp.gq_cur.export()).collect(),
             };
             if let Some(dir) = &cfg.fault.checkpoint_dir {
@@ -181,15 +118,14 @@ pub fn run_graphhp<P: VertexProgram>(
                     // worker lost: reassign its partitions and roll every
                     // worker back to the latest consistent checkpoint
                     for (p, hp) in parts.iter_mut().enumerate() {
-                        let n = hp.values.len();
-                        hp.values = ckpt.values[p].clone();
-                        hp.halted = ckpt.halted[p].clone();
-                        hp.gq_cur = super::messages::MsgStore::restore(n, &ckpt.inbox[p]);
-                        hp.gq_nxt = super::messages::MsgStore::new(n);
-                        hp.lq_cur = super::messages::MsgStore::new(n);
-                        hp.lq_nxt = super::messages::MsgStore::new(n);
-                        hp.l_frontier.clear();
-                        hp.in_l_frontier = vec![false; n];
+                        let n = hp.rt.num_vertices();
+                        hp.rt.values = ckpt.values[p].clone();
+                        hp.rt.halted = ckpt.halted[p].clone();
+                        hp.rt.cur = MsgStore::new(n);
+                        hp.rt.nxt = MsgStore::new(n);
+                        hp.rt.frontier.clear();
+                        hp.gq_cur = MsgStore::restore(n, &ckpt.inbox[p]);
+                        hp.gq_nxt = MsgStore::new(n);
                     }
                     iteration = ckpt.iteration;
                 }
@@ -201,174 +137,120 @@ pub fn run_graphhp<P: VertexProgram>(
             }
         }
 
-        let mut outboxes: Vec<Outbox<P::M>> = Vec::with_capacity(dg.num_parts());
-        let mut worker_aggs: Vec<Aggregators> = Vec::new();
-
-        for p in 0..dg.num_parts() {
+        let outs = run_workers(cfg.parallelism, &mut parts, |p, hp| {
             let part = &dg.parts[p];
-            let hp = &mut parts[p];
             let mut outbox: Outbox<P::M> = Outbox::new(combiner);
             let mut wagg = aggs.clone();
             let t0 = std::time::Instant::now();
-            let mut pseudo_steps: u64 = 0;
+            let mut outcome = SweepOutcome::default();
+            let mut steps: u64 = 0;
+
+            let local_route = if cfg.hybrid.async_local_messaging {
+                LocalRoute::ThisSweep
+            } else {
+                LocalRoute::NextSweep
+            };
+            let mk_sweep = |route: LocalRoute, reschedule: Reschedule| Sweep {
+                program,
+                dg,
+                part,
+                p,
+                superstep: iteration,
+                seed: cfg.seed,
+                combiner,
+                route,
+                reschedule,
+                boundary_in_local,
+            };
+            let merge = |outcome: &mut SweepOutcome, oc: SweepOutcome| {
+                outcome.computations += oc.computations;
+                outcome.local_messages += oc.local_messages;
+            };
 
             if iteration == 0 {
                 // ---- initialization iteration: identical to a standard
-                // first superstep over every vertex (paper §4.2)
-                for lv in 0..part.num_vertices() {
-                    msg_buf.clear();
-                    send_buf.clear();
-                    {
-                        let mut ctx = VertexContext::<P> {
-                            part,
-                            lv,
-                            superstep: 0,
-                            value: &mut hp.values[lv],
-                            messages: &msg_buf,
-                            halted: &mut hp.halted[lv],
-                            out: &mut send_buf,
-                            aggregators: &mut wagg,
-                            seed: cfg.seed,
-                        };
-                        program.compute(&mut ctx);
-                    }
-                    metrics.vertex_computations += 1;
-                    let src_gid = part.global_ids[lv];
-                    for (target, m) in send_buf.sends.drain(..) {
-                        route_send(
-                            hp, &mut outbox, dg, p, src_gid, target, m,
-                            boundary_in_local, combiner, &mut metrics, None,
-                        );
-                    }
-                    if !hp.halted[lv] {
-                        // unhalted vertices keep computing: boundary ones
-                        // in the next global phase, participants in the
-                        // next local phase
-                        if part.is_boundary[lv] && !boundary_in_local {
-                            // picked up by the global-phase participant
-                            // rule (boundary && !halted)
-                        } else {
-                            hp.schedule_local(lv);
-                        }
-                    }
-                }
-                metrics.supersteps_total += 1;
+                // first superstep over every vertex (paper §4.2).
+                // Unhalted vertices keep computing afterwards: boundary
+                // ones in the next global phase (picked up by the
+                // boundary && !halted rule), participants in the next
+                // local phase (Reschedule::Participants).
+                let worklist: BTreeSet<u32> = (0..part.num_vertices() as u32).collect();
+                let oc = mk_sweep(LocalRoute::NextSweep, Reschedule::Participants).run(
+                    worklist,
+                    SweepTarget {
+                        values: &mut hp.rt.values,
+                        halted: &mut hp.rt.halted,
+                        cur: &mut hp.gq_cur,
+                        nxt: &mut hp.rt.nxt,
+                        frontier: Some(&mut hp.rt.frontier),
+                    },
+                    Some(&mut hp.gq_nxt),
+                    &mut outbox,
+                    &mut wagg,
+                    &mut hp.scratch,
+                    &mut hp.marks,
+                );
+                merge(&mut outcome, oc);
+                steps += 1;
             } else {
                 // ---- global phase -----------------------------------
                 // participants: any vertex with buffered global messages,
-                // plus unhalted boundary vertices
-                let mut gfrontier: Vec<u32> = hp.gq_cur.pending();
+                // plus unhalted boundary vertices; an unhalted boundary
+                // participant continues in the local phase iff boundary
+                // vertices take part in it
+                let mut worklist: BTreeSet<u32> =
+                    hp.gq_cur.pending().into_iter().collect();
                 for lv in 0..part.num_vertices() {
-                    if part.is_boundary[lv] && !hp.halted[lv] && !hp.gq_cur.has_messages(lv) {
-                        gfrontier.push(lv as u32);
+                    if part.is_boundary[lv] && !hp.rt.halted[lv] {
+                        worklist.insert(lv as u32);
                     }
                 }
-                gfrontier.sort_unstable();
-                gfrontier.dedup();
-                for &lv32 in &gfrontier {
-                    let lv = lv32 as usize;
-                    hp.gq_cur.take_into(lv, &mut msg_buf);
-                    if hp.halted[lv] {
-                        if msg_buf.is_empty() {
-                            continue;
-                        }
-                        hp.halted[lv] = false;
-                    }
-                    send_buf.clear();
-                    {
-                        let mut ctx = VertexContext::<P> {
-                            part,
-                            lv,
-                            superstep: iteration,
-                            value: &mut hp.values[lv],
-                            messages: &msg_buf,
-                            halted: &mut hp.halted[lv],
-                            out: &mut send_buf,
-                            aggregators: &mut wagg,
-                            seed: cfg.seed,
-                        };
-                        program.compute(&mut ctx);
-                    }
-                    metrics.vertex_computations += 1;
-                    let src_gid = part.global_ids[lv];
-                    for (target, m) in send_buf.sends.drain(..) {
-                        route_send(
-                            hp, &mut outbox, dg, p, src_gid, target, m,
-                            boundary_in_local, combiner, &mut metrics, None,
-                        );
-                    }
-                    if !hp.halted[lv] && boundary_in_local {
-                        // unhalted boundary participant continues in the
-                        // local phase
-                        hp.schedule_local(lv);
-                    }
-                }
-                metrics.supersteps_total += 1;
+                let resched =
+                    if boundary_in_local { Reschedule::Active } else { Reschedule::Never };
+                let oc = mk_sweep(LocalRoute::NextSweep, resched).run(
+                    worklist,
+                    SweepTarget {
+                        values: &mut hp.rt.values,
+                        halted: &mut hp.rt.halted,
+                        cur: &mut hp.gq_cur,
+                        nxt: &mut hp.rt.nxt,
+                        frontier: Some(&mut hp.rt.frontier),
+                    },
+                    Some(&mut hp.gq_nxt),
+                    &mut outbox,
+                    &mut wagg,
+                    &mut hp.scratch,
+                    &mut hp.marks,
+                );
+                merge(&mut outcome, oc);
+                steps += 1;
 
                 // ---- local phase: pseudo-supersteps until quiescence --
-                // generation-stamped "processed" marks: avoids an O(n)
-                // allocation + clear per pseudo-superstep (perf log in
-                // EXPERIMENTS.md §Perf)
-                let mut stamps: Vec<u32> = vec![0; part.num_vertices()];
-                let mut stamp: u32 = 0;
+                let mut pseudo_steps: u64 = 0;
                 loop {
-                    std::mem::swap(&mut hp.lq_cur, &mut hp.lq_nxt);
-                    let frontier = hp.take_local_frontier();
-                    if frontier.is_empty() && hp.lq_cur.is_empty() {
+                    let mut worklist: BTreeSet<u32> =
+                        hp.rt.begin_step().into_iter().collect();
+                    for lv in hp.rt.cur.pending() {
+                        worklist.insert(lv);
+                    }
+                    if worklist.is_empty() {
                         break;
                     }
                     pseudo_steps += 1;
                     if pseudo_steps > cfg.limits.max_pseudo_supersteps {
                         break;
                     }
-                    let mut worklist: BTreeSet<u32> = frontier.into_iter().collect();
-                    for lv in hp.lq_cur.pending() {
-                        worklist.insert(lv);
-                    }
-                    stamp += 1;
-                    while let Some(lv32) = worklist.pop_first() {
-                        let lv = lv32 as usize;
-                        stamps[lv] = stamp;
-                        hp.lq_cur.take_into(lv, &mut msg_buf);
-                        if hp.halted[lv] {
-                            if msg_buf.is_empty() {
-                                continue;
-                            }
-                            hp.halted[lv] = false;
-                        }
-                        send_buf.clear();
-                        {
-                            let mut ctx = VertexContext::<P> {
-                                part,
-                                lv,
-                                superstep: iteration,
-                                value: &mut hp.values[lv],
-                                messages: &msg_buf,
-                                halted: &mut hp.halted[lv],
-                                out: &mut send_buf,
-                                aggregators: &mut wagg,
-                                seed: cfg.seed,
-                            };
-                            program.compute(&mut ctx);
-                        }
-                        metrics.vertex_computations += 1;
-                        let src_gid = part.global_ids[lv];
-                        for (target, m) in send_buf.sends.drain(..) {
-                            let async_ctx = if cfg.hybrid.async_local_messaging {
-                                Some((&stamps[..], stamp, &mut worklist))
-                            } else {
-                                None
-                            };
-                            route_send(
-                                hp, &mut outbox, dg, p, src_gid, target, m,
-                                boundary_in_local, combiner, &mut metrics, async_ctx,
-                            );
-                        }
-                        if !hp.halted[lv] {
-                            hp.schedule_local(lv);
-                        }
-                    }
-                    metrics.supersteps_total += 1;
+                    let oc = mk_sweep(local_route, Reschedule::Active).run(
+                        worklist,
+                        hp.rt.sweep_target(),
+                        Some(&mut hp.gq_nxt),
+                        &mut outbox,
+                        &mut wagg,
+                        &mut hp.scratch,
+                        &mut hp.marks,
+                    );
+                    merge(&mut outcome, oc);
+                    steps += 1;
                 }
             }
 
@@ -377,29 +259,13 @@ pub fn run_graphhp<P: VertexProgram>(
             outbox.source_combine(source_combine);
 
             let compute = cfg.net.scale_compute(t0.elapsed());
-            let comm = WorkerComm {
-                messages: outbox.len() as u64,
-                bytes: outbox.wire_bytes() as u64,
-                peer_pairs: outbox.peer_count(p as u32) as u64,
-            };
-            metrics.network_messages += comm.messages;
-            metrics.network_bytes += comm.bytes;
-            clock.record_worker(compute, cfg.net.comm_time(&comm));
-            outboxes.push(outbox);
-            worker_aggs.push(wagg);
-        }
+            WorkerOut::new(outbox, wagg, compute, p, outcome, steps)
+        });
 
         // ---- barrier: one distributed synchronization per iteration ---
-        for mut outbox in outboxes {
-            for (tp, tl, m) in outbox.drain() {
-                parts[tp as usize].gq_nxt.push(tl as usize, m);
-            }
-        }
-        for w in &worker_aggs {
-            aggs.merge_current(w);
-        }
-        aggs.barrier();
-        clock.barrier(&cfg.net, &mut metrics);
+        close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+            parts[tp as usize].gq_nxt.push(tl as usize, m);
+        });
         metrics.global_iterations += 1;
         iteration += 1;
 
@@ -410,26 +276,21 @@ pub fn run_graphhp<P: VertexProgram>(
 
         // termination: every vertex inactive, nothing in transit
         let done = parts.iter_mut().all(|hp| {
-            hp.halted.iter().all(|&h| h)
-                && hp.gq_cur.is_empty()
-                && hp.lq_cur.is_empty()
-                && hp.lq_nxt.is_empty()
-                && hp.l_frontier.is_empty()
+            hp.rt.halted.iter().all(|&h| h) && hp.gq_cur.is_empty() && hp.rt.quiesced()
         });
         if done || iteration >= cfg.limits.max_iterations {
             break;
         }
     }
 
-    let values = super::gather_values(
-        dg,
-        &parts.iter().map(|hp| hp.values.clone()).collect::<Vec<_>>(),
-    );
+    let values =
+        super::gather_values_owned(dg, parts.into_iter().map(|hp| hp.rt.values).collect());
     RunResult { values, metrics }
 }
 
 #[cfg(test)]
 mod tests {
+    use super::super::context::VertexContext;
     use super::*;
     use crate::engine::hama::run_hama;
     use crate::graph::{generators, DistGraph, VertexId};

@@ -7,13 +7,19 @@
 //! - [`run_graphlab_sync`] — synchronous mode: rounds; every scheduled
 //!   vertex gathers over its in-edges, applies, and (if its change is
 //!   significant) schedules its out-neighbors for the next round. One
-//!   barrier per round, like BSP.
+//!   barrier per round, like BSP. Rounds execute with one worker per
+//!   partition (snapshot reads, disjoint writes), threaded per
+//!   [`super::EngineConfig::parallelism`] and bit-for-bit identical to
+//!   sequential execution.
 //! - [`run_graphlab_async`] — asynchronous mode: a FIFO scheduler
 //!   processes one vertex at a time with immediate visibility. Fewer
 //!   updates to converge, but each update pays locking/scheduling
 //!   overhead and parallel efficiency is reduced — reproducing the
 //!   trade-off in Table 4 (the paper: "Async ... reduces the degree of
-//!   parallelism due to the locking mechanism").
+//!   parallelism due to the locking mechanism"). Because immediate
+//!   visibility makes results depend on update order, this engine
+//!   ignores `parallelism` and always executes sequentially; its reduced
+//!   parallel efficiency is *modeled* via [`GasCost`] instead.
 //!
 //! Both engines consume the same [`DistGraph`] every other engine runs
 //! on (the worker-partition structure doubles as the GraphLab vertex
@@ -29,13 +35,18 @@ use crate::graph::{DistGraph, VertexId};
 
 use super::metrics::Metrics;
 use super::netsim::SuperstepClock;
+use super::worker::run_workers;
 use super::{EngineConfig, RunResult};
 
 /// The GraphLab-style update program (gather over in-edges, apply).
+///
+/// The `Send + Sync` bounds on the associated types let rounds execute
+/// on parallel worker threads (values are read from a shared snapshot;
+/// accumulators stay worker-local).
 pub trait GasProgram: Sync {
     type V: Clone + Send + Sync;
     /// Gather accumulator.
-    type G: Clone;
+    type G: Clone + Send;
 
     fn init(&self, vertex: VertexId, out_degree: u32) -> Self::V;
 
@@ -169,47 +180,83 @@ pub fn run_graphlab_sync<P: GasProgram>(
     let mut in_next = vec![false; nv];
     let mut rounds = 0u64;
 
+    /// One worker's round output: the applied values plus accounting.
+    struct RoundOut<V> {
+        updates: Vec<(VertexId, V, bool)>,
+        compute: Duration,
+        remote_gathers: u64,
+    }
+
     while !active.is_empty() && rounds < cfg.limits.max_iterations {
-        // per-worker accounting
-        let mut worker_compute = vec![Duration::ZERO; num_parts];
-        let mut worker_remote_gathers = vec![0u64; num_parts];
-        let mut next: Vec<VertexId> = Vec::new();
-        // snapshot semantics: sync mode reads round-start values
-        let snapshot = values.clone();
+        // group the active list by owning partition (preserving relative
+        // order): the per-worker work lists, identical in sequential and
+        // threaded mode
+        let mut by_part: Vec<Vec<VertexId>> = vec![Vec::new(); num_parts];
         for &v in &active {
-            let p = view.part_of[v as usize] as usize;
+            by_part[view.part_of[v as usize] as usize].push(v);
+        }
+        // snapshot semantics: sync mode reads round-start values, so
+        // workers only read the snapshot and write disjoint updates
+        let snapshot = values.clone();
+        let view_ref = &view;
+        let snap = &snapshot;
+        let outs = run_workers(cfg.parallelism, &mut by_part, |p, list| {
             let t0 = std::time::Instant::now();
-            let (s, e) = (view.in_offsets[v as usize], view.in_offsets[v as usize + 1]);
-            let mut acc: Option<P::G> = None;
-            for i in s..e {
-                let srcv = view.in_src[i];
-                if view.part_of[srcv as usize] != view.part_of[v as usize] {
-                    worker_remote_gathers[p] += 1;
+            let mut updates = Vec::with_capacity(list.len());
+            let mut remote_gathers = 0u64;
+            for &v in list.iter() {
+                let (s, e) =
+                    (view_ref.in_offsets[v as usize], view_ref.in_offsets[v as usize + 1]);
+                let mut acc: Option<P::G> = None;
+                for i in s..e {
+                    let srcv = view_ref.in_src[i];
+                    if view_ref.part_of[srcv as usize] != p as u32 {
+                        remote_gathers += 1;
+                    }
+                    let gth = program.gather(
+                        &snap[srcv as usize],
+                        view_ref.in_src_deg[i],
+                        view_ref.in_w[i],
+                    );
+                    acc = Some(match acc {
+                        None => gth,
+                        Some(a) => program.merge(a, gth),
+                    });
                 }
-                let gth =
-                    program.gather(&snapshot[srcv as usize], view.in_src_deg[i], view.in_w[i]);
-                acc = Some(match acc {
-                    None => gth,
-                    Some(a) => program.merge(a, gth),
-                });
+                // apply against the round-start value (values[v] is
+                // untouched until the fold below, so this equals the
+                // in-place apply of the sequential implementation)
+                let mut newv = snap[v as usize].clone();
+                let significant = program.apply(&mut newv, acc);
+                updates.push((v, newv, significant));
             }
-            let significant = program.apply(&mut values[v as usize], acc);
-            metrics.vertex_computations += 1;
-            worker_compute[p] += t0.elapsed();
-            if significant {
-                for &t in view.out_neighbors(v) {
-                    if !in_next[t as usize] {
-                        in_next[t as usize] = true;
-                        next.push(t);
+            RoundOut {
+                updates,
+                compute: cfg.net.scale_compute(t0.elapsed()),
+                remote_gathers,
+            }
+        });
+
+        // fold in partition order: disjoint value writes + deterministic
+        // next-round scheduling
+        let mut next: Vec<VertexId> = Vec::new();
+        for (p, out) in outs.into_iter().enumerate() {
+            let comm = Duration::from_secs_f64(
+                out.remote_gathers as f64 * cfg.gas.remote_gather_us * 1e-6,
+            );
+            clock.record_worker_at(p, out.compute, comm);
+            for (v, newv, significant) in out.updates {
+                values[v as usize] = newv;
+                metrics.vertex_computations += 1;
+                if significant {
+                    for &t in view.out_neighbors(v) {
+                        if !in_next[t as usize] {
+                            in_next[t as usize] = true;
+                            next.push(t);
+                        }
                     }
                 }
             }
-        }
-        for p in 0..num_parts {
-            let comm = Duration::from_secs_f64(
-                worker_remote_gathers[p] as f64 * cfg.gas.remote_gather_us * 1e-6,
-            );
-            clock.record_worker(cfg.net.scale_compute(worker_compute[p]), comm);
         }
         clock.barrier(&cfg.net, &mut metrics);
         metrics.global_iterations += 1;
@@ -226,6 +273,12 @@ pub fn run_graphlab_sync<P: GasProgram>(
 
 /// Asynchronous GraphLab: FIFO vertex scheduler, immediate visibility,
 /// per-update locking overhead, reduced parallel efficiency.
+///
+/// Always executes sequentially regardless of
+/// [`super::EngineConfig::parallelism`]: immediate visibility makes the
+/// result depend on update interleaving, so any real threading would
+/// break the determinism guarantee the other engines honor. The engine
+/// *models* the paper's reduced async parallelism through [`GasCost`].
 ///
 /// Legacy entry point — use [`super::Runner::run_gas`] with
 /// [`super::EngineKind::GraphLabAsync`]; kept as a delegate for one

@@ -46,6 +46,23 @@
 //! | `EngineConfig { boundary_in_local_phase, .. }`    | `.boundary_in_local_phase(..)` / [`HybridPolicy`]      |
 //! | `EngineConfig { checkpoint_interval, .. }`        | `.checkpoint_interval(..)` / [`FaultPolicy`]           |
 //! | `GraphLabCost` (separate argument)                | [`GasCost`], folded into `EngineConfig::gas`           |
+//! | *(new)* sequential partition loop                 | `.parallelism(..)` / `.threads(n)` / [`Parallelism`]   |
+//!
+//! # Parallel execution
+//!
+//! Engines run one worker per partition. By default the workers execute
+//! on real OS threads (`Parallelism::Threads(available_parallelism)`,
+//! see [`Parallelism`]); `Parallelism::Sequential` runs them one after
+//! another on the calling thread. The two modes are **bit-for-bit
+//! identical** — workers share nothing within a superstep and the
+//! barrier folds their outboxes, aggregator partials and clock records
+//! in partition order (`engine/worker.rs`). Compute time is measured on
+//! the worker threads, so the max-over-workers term of the simulated
+//! superstep ([`netsim`]) reflects a *measured* straggler under real
+//! parallelism. The GraphLab async comparator is the one exception: its
+//! immediate-visibility updates are order-dependent, so it always
+//! executes sequentially and models parallel efficiency via [`GasCost`]
+//! (the paper's locking argument).
 //!
 //! # Execution engines (paper §4, §7)
 //!
@@ -79,6 +96,7 @@ pub mod netsim;
 pub mod program;
 pub mod runner;
 pub mod state;
+pub(crate) mod worker;
 
 pub use aggregator::{AggOp, Aggregators};
 pub use context::VertexContext;
@@ -163,6 +181,38 @@ impl std::str::FromStr for EngineKind {
     }
 }
 
+/// How the engines execute their per-partition workers within a
+/// superstep (the barrier structure is the same either way).
+///
+/// Determinism guarantee: `Sequential` and `Threads(n)` produce
+/// bit-for-bit identical [`RunResult`] values and identical
+/// message/iteration counts for every engine — workers are
+/// shared-nothing within a superstep and the barrier folds their
+/// outputs in partition order. Only wall-clock changes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Parallelism {
+    /// One worker after another on the calling thread.
+    Sequential,
+    /// One worker per partition, multiplexed onto up to N scoped OS
+    /// threads (`std::thread::scope`).
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// `Threads(available_parallelism)` — the default.
+    pub fn auto() -> Parallelism {
+        Parallelism::Threads(
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        )
+    }
+}
+
+impl Default for Parallelism {
+    fn default() -> Self {
+        Parallelism::auto()
+    }
+}
+
 /// Iteration caps (safety valves) shared by all engines.
 #[derive(Clone, Copy, Debug)]
 pub struct Limits {
@@ -223,6 +273,8 @@ pub struct EngineConfig {
     pub gas: GasCost,
     /// Fault tolerance policy.
     pub fault: FaultPolicy,
+    /// Worker execution mode (threads vs sequential).
+    pub parallelism: Parallelism,
     /// Seed for per-vertex randomness (e.g. bipartite matching).
     pub seed: u64,
 }
@@ -235,6 +287,7 @@ impl Default for EngineConfig {
             net: NetSimConfig::default(),
             gas: GasCost::default(),
             fault: FaultPolicy::default(),
+            parallelism: Parallelism::default(),
             seed: 42,
         }
     }
@@ -247,19 +300,28 @@ pub struct RunResult<V> {
     pub metrics: Metrics,
 }
 
-/// Gather per-partition values back into a global-id-indexed vector.
+/// Gather per-partition values back into a global-id-indexed vector,
+/// consuming the per-partition buffers — no per-value clone; the engines
+/// hand over their runtimes' value vectors by move at the end of a run.
 ///
 /// Panics if any global vertex id is missing from every partition (the
 /// partitions must jointly cover `0..dg.num_vertices`).
-pub(crate) fn gather_values<V: Clone>(dg: &DistGraph, parts: &[Vec<V>]) -> Vec<V> {
-    let mut out: Vec<Option<V>> = vec![None; dg.num_vertices];
-    for (p, vals) in parts.iter().enumerate() {
-        for (lv, v) in vals.iter().enumerate() {
+pub(crate) fn gather_values_owned<V>(dg: &DistGraph, parts: Vec<Vec<V>>) -> Vec<V> {
+    let mut out: Vec<Option<V>> = Vec::with_capacity(dg.num_vertices);
+    out.resize_with(dg.num_vertices, || None);
+    for (p, vals) in parts.into_iter().enumerate() {
+        for (lv, v) in vals.into_iter().enumerate() {
             let gid = dg.parts[p].global_ids[lv];
-            out[gid as usize] = Some(v.clone());
+            out[gid as usize] = Some(v);
         }
     }
     out.into_iter().map(|v| v.expect("vertex missing from every partition")).collect()
+}
+
+/// Borrowing form of [`gather_values_owned`] (clones every value; kept
+/// for call sites that must retain the per-partition buffers).
+pub(crate) fn gather_values<V: Clone>(dg: &DistGraph, parts: &[Vec<V>]) -> Vec<V> {
+    gather_values_owned(dg, parts.to_vec())
 }
 
 #[cfg(test)]
@@ -299,6 +361,15 @@ mod tests {
         let dg = DistGraph::new(&g, &[1, 0], 2);
         let vals = gather_values(&dg, &[vec![11u32], vec![22]]);
         assert_eq!(vals, vec![22, 11]);
+    }
+
+    #[test]
+    fn gather_owned_matches_borrowed() {
+        let g = path2();
+        let dg = DistGraph::new(&g, &[1, 0], 2);
+        let by_ref = gather_values(&dg, &[vec![11u32], vec![22]]);
+        let owned = gather_values_owned(&dg, vec![vec![11u32], vec![22]]);
+        assert_eq!(by_ref, owned);
     }
 
     #[test]

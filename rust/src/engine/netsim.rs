@@ -6,6 +6,13 @@
 //! costs are charged by this model. Iteration and message counts — the
 //! paper's other two metrics — are exact and model-independent.
 //!
+//! Under the threaded runtime ([`crate::engine::Parallelism`]) the
+//! workers genuinely race each other: each measures its own compute span
+//! on its own OS thread and the engine records them keyed by worker
+//! index after the join ([`SuperstepClock::record_worker_at`]), so the
+//! max-over-workers term below is a **measured** straggler, not a
+//! simulated one.
+//!
 //! Per superstep the cluster clock advances by
 //!
 //! ```text
@@ -96,6 +103,17 @@ impl SuperstepClock {
         self.workers.push((compute, comm));
     }
 
+    /// Record worker `idx`'s costs for this superstep. The parallel
+    /// runtime folds worker outputs on the engine thread in partition
+    /// order after the threads join, so the recording is deterministic
+    /// regardless of how the workers interleaved on the hardware.
+    pub fn record_worker_at(&mut self, idx: usize, compute: Duration, comm: Duration) {
+        if self.workers.len() <= idx {
+            self.workers.resize(idx + 1, (Duration::ZERO, Duration::ZERO));
+        }
+        self.workers[idx] = (compute, comm);
+    }
+
     /// Close the superstep: advance the cluster clock, attribute averages
     /// into `m`, reset for the next superstep.
     pub fn barrier(&mut self, cfg: &NetSimConfig, m: &mut super::Metrics) {
@@ -148,6 +166,24 @@ mod tests {
         // 10 barriers à 2 ms dominate ~0.1 ms compute
         assert!(m.sync_fraction() > 0.9, "sync={}", m.sync_fraction());
         assert_eq!(m.elapsed.as_millis(), 20);
+    }
+
+    #[test]
+    fn record_at_index_matches_push_order() {
+        let cfg = NetSimConfig::default();
+        let (mut a, mut b) = (Metrics::default(), Metrics::default());
+        let mut pushed = SuperstepClock::new();
+        pushed.record_worker(Duration::from_millis(3), Duration::from_millis(1));
+        pushed.record_worker(Duration::from_millis(5), Duration::ZERO);
+        pushed.barrier(&cfg, &mut a);
+        let mut indexed = SuperstepClock::new();
+        // out-of-order indices must land in the same slots
+        indexed.record_worker_at(1, Duration::from_millis(5), Duration::ZERO);
+        indexed.record_worker_at(0, Duration::from_millis(3), Duration::from_millis(1));
+        indexed.barrier(&cfg, &mut b);
+        assert_eq!(a.elapsed, b.elapsed);
+        assert_eq!(a.compute_time, b.compute_time);
+        assert_eq!(a.sync_time, b.sync_time);
     }
 
     #[test]

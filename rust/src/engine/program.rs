@@ -24,6 +24,12 @@ pub enum SourceCombine {
 /// The same `compute` runs unmodified on every engine — standard BSP
 /// supersteps, AM-Hama asynchronous supersteps, and GraphHP global/local
 /// phases — which is the paper's central interface claim.
+///
+/// The trait is `Sync` and its associated types are `Send + Sync`
+/// because the engines run one worker per partition on real OS threads
+/// ([`crate::engine::Parallelism`]): the program is shared across
+/// workers, and values/messages move between worker-owned partition
+/// state at the barrier.
 pub trait VertexProgram: Sync {
     /// Vertex value type (`getValue()`/`setValue()`).
     type V: Clone + Send + Sync + Codec;

@@ -26,7 +26,7 @@ use crate::partition::{hash_partition, metis_partition, range_partition, MetisCo
 
 use super::giraphpp::{run_giraphpp, PartitionProgram, VertexSweep};
 use super::graphlab::{run_graphlab_async, run_graphlab_sync, GasCost, GasProgram};
-use super::{EngineConfig, EngineKind, NetSimConfig, RunResult, VertexProgram};
+use super::{EngineConfig, EngineKind, NetSimConfig, Parallelism, RunResult, VertexProgram};
 
 /// How the [`Runner`] splits the graph across simulated workers.
 #[derive(Clone, Debug)]
@@ -171,6 +171,22 @@ impl<'g> Runner<'g> {
     /// GraphLab comparator cost constants.
     pub fn gas_cost(mut self, c: GasCost) -> Self {
         self.cfg.gas = c;
+        self
+    }
+
+    /// Worker execution mode. The default is
+    /// `Parallelism::Threads(available_parallelism)`; sequential and
+    /// threaded runs are bit-for-bit identical (see [`Parallelism`]),
+    /// only wall-clock changes.
+    pub fn parallelism(mut self, p: Parallelism) -> Self {
+        self.cfg.parallelism = p;
+        self
+    }
+
+    /// Shorthand for `.parallelism(Parallelism::Threads(n))`.
+    pub fn threads(mut self, n: usize) -> Self {
+        assert!(n > 0, "threads must be > 0 (use Parallelism::Sequential)");
+        self.cfg.parallelism = Parallelism::Threads(n);
         self
     }
 
@@ -407,6 +423,21 @@ mod tests {
         let _ = Runner::new(&g)
             .partitions(2)
             .run_gas(&crate::algorithms::pagerank::GasPageRank { tolerance: 1e-4 });
+    }
+
+    #[test]
+    fn parallelism_knob_sequential_and_threaded_agree() {
+        let g = generators::connected(150, 60, 5);
+        let seq = Runner::new(&g)
+            .partitions(4)
+            .engine(EngineKind::Hama)
+            .parallelism(Parallelism::Sequential)
+            .run(&Wcc);
+        let par =
+            Runner::new(&g).partitions(4).engine(EngineKind::Hama).threads(4).run(&Wcc);
+        assert_eq!(seq.values, par.values);
+        assert_eq!(seq.metrics.network_messages, par.metrics.network_messages);
+        assert_eq!(seq.metrics.global_iterations, par.metrics.global_iterations);
     }
 
     #[test]

@@ -1,42 +1,99 @@
 //! Per-partition runtime state shared by all push-based engines.
+//!
+//! [`PartitionRuntime`] is generic over the value/message types rather
+//! than over a program trait so both the vertex-centric engines
+//! ([`VertexProgram`]) and the graph-centric one
+//! ([`super::giraphpp::PartitionProgram`]) execute over the same state —
+//! one runtime per partition is exactly what a worker thread owns in the
+//! parallel runtime (`super::worker`).
 
 use crate::graph::{DistGraph, PartGraph};
 
 use super::messages::MsgStore;
 use super::program::VertexProgram;
+use super::worker::SweepTarget;
+
+/// A deduplicated "compute next (pseudo-)superstep" set: O(1) schedule
+/// via a membership bitmap, drained in insertion order.
+#[derive(Clone, Debug, Default)]
+pub struct Frontier {
+    next: Vec<u32>,
+    flagged: Vec<bool>,
+}
+
+impl Frontier {
+    pub fn new(n: usize) -> Self {
+        Frontier { next: Vec::new(), flagged: vec![false; n] }
+    }
+
+    /// Mark `lv` to compute in the next (pseudo-)superstep.
+    pub fn schedule(&mut self, lv: usize) {
+        if !self.flagged[lv] {
+            self.flagged[lv] = true;
+            self.next.push(lv as u32);
+        }
+    }
+
+    /// Take the scheduled set, leaving the frontier empty.
+    pub fn take(&mut self) -> Vec<u32> {
+        for &lv in &self.next {
+            self.flagged[lv as usize] = false;
+        }
+        std::mem::take(&mut self.next)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.next.is_empty()
+    }
+
+    /// Drop everything scheduled (checkpoint recovery).
+    pub fn clear(&mut self) {
+        for &lv in &self.next {
+            self.flagged[lv as usize] = false;
+        }
+        self.next.clear();
+    }
+}
 
 /// Mutable state a worker keeps for one partition.
-pub struct PartitionRuntime<P: VertexProgram> {
+pub struct PartitionRuntime<V, M> {
     /// Vertex values (by local index).
-    pub values: Vec<P::V>,
+    pub values: Vec<V>,
     /// voteToHalt flags.
     pub halted: Vec<bool>,
     /// Incoming messages for the current (pseudo-)superstep.
-    pub cur: MsgStore<P::M>,
+    pub cur: MsgStore<M>,
     /// Incoming messages for the next (pseudo-)superstep.
-    pub nxt: MsgStore<P::M>,
-    /// Frontier for the next (pseudo-)superstep: vertices that must
-    /// compute (not halted, or received a message).
-    pub next_frontier: Vec<u32>,
-    in_next_frontier: Vec<bool>,
+    pub nxt: MsgStore<M>,
+    /// Vertices that must compute next (pseudo-)superstep (not halted,
+    /// or received a message).
+    pub frontier: Frontier,
 }
 
-impl<P: VertexProgram> PartitionRuntime<P> {
-    /// Initialize values via `program.init` for every owned vertex; all
-    /// vertices start active (standard BSP).
-    pub fn new(program: &P, part: &PartGraph) -> Self {
-        let n = part.num_vertices();
-        let values = (0..n)
-            .map(|lv| program.init(part.global_ids[lv], part.out_degree[lv]))
-            .collect();
+impl<V, M> PartitionRuntime<V, M> {
+    /// Build from per-local-vertex initial values; all vertices start
+    /// active (standard BSP).
+    pub fn from_values(values: Vec<V>) -> Self {
+        let n = values.len();
         PartitionRuntime {
             values,
             halted: vec![false; n],
             cur: MsgStore::new(n),
             nxt: MsgStore::new(n),
-            next_frontier: Vec::new(),
-            in_next_frontier: vec![false; n],
+            frontier: Frontier::new(n),
         }
+    }
+
+    /// Initialize values via `program.init` for every owned vertex.
+    pub fn new<P>(program: &P, part: &PartGraph) -> Self
+    where
+        P: VertexProgram<V = V, M = M>,
+    {
+        Self::from_values(
+            (0..part.num_vertices())
+                .map(|lv| program.init(part.global_ids[lv], part.out_degree[lv]))
+                .collect(),
+        )
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -45,19 +102,13 @@ impl<P: VertexProgram> PartitionRuntime<P> {
 
     /// Mark `lv` to compute next (pseudo-)superstep.
     pub fn schedule_next(&mut self, lv: usize) {
-        if !self.in_next_frontier[lv] {
-            self.in_next_frontier[lv] = true;
-            self.next_frontier.push(lv as u32);
-        }
+        self.frontier.schedule(lv);
     }
 
     /// Swap message stores and take the next frontier for this step.
     pub fn begin_step(&mut self) -> Vec<u32> {
         std::mem::swap(&mut self.cur, &mut self.nxt);
-        for &lv in &self.next_frontier {
-            self.in_next_frontier[lv as usize] = false;
-        }
-        std::mem::take(&mut self.next_frontier)
+        self.frontier.take()
     }
 
     /// A vertex is live if it has not halted or has pending messages.
@@ -68,12 +119,26 @@ impl<P: VertexProgram> PartitionRuntime<P> {
     /// True when nothing remains to do in this partition:
     /// all halted and no undelivered messages.
     pub fn quiesced(&mut self) -> bool {
-        self.next_frontier.is_empty() && self.nxt.is_empty() && self.cur.is_empty()
+        self.frontier.is_empty() && self.nxt.is_empty() && self.cur.is_empty()
+    }
+
+    /// The split borrow a `super::worker::Sweep` runs against.
+    pub(crate) fn sweep_target(&mut self) -> SweepTarget<'_, V, M> {
+        SweepTarget {
+            values: &mut self.values,
+            halted: &mut self.halted,
+            cur: &mut self.cur,
+            nxt: &mut self.nxt,
+            frontier: Some(&mut self.frontier),
+        }
     }
 }
 
 /// Build the runtime state for every partition of `dg`.
-pub fn init_runtimes<P: VertexProgram>(program: &P, dg: &DistGraph) -> Vec<PartitionRuntime<P>> {
+pub fn init_runtimes<P: VertexProgram>(
+    program: &P,
+    dg: &DistGraph,
+) -> Vec<PartitionRuntime<P::V, P::M>> {
     dg.parts.iter().map(|part| PartitionRuntime::new(program, part)).collect()
 }
 
@@ -118,10 +183,21 @@ mod tests {
         rt.schedule_next(4);
         let f = rt.begin_step();
         assert_eq!(f, vec![2, 4]);
-        assert!(rt.next_frontier.is_empty());
+        assert!(rt.frontier.is_empty());
         // messages pushed to nxt become cur after swap
         rt.nxt.push(1, 9);
         let _ = rt.begin_step();
         assert!(rt.cur.has_messages(1));
+    }
+
+    #[test]
+    fn frontier_clear_allows_rescheduling() {
+        let mut f = Frontier::new(4);
+        f.schedule(1);
+        f.schedule(3);
+        f.clear();
+        assert!(f.is_empty());
+        f.schedule(1);
+        assert_eq!(f.take(), vec![1]);
     }
 }

@@ -1,0 +1,430 @@
+//! The shared per-partition worker core and the parallel worker runtime.
+//!
+//! Every push-based engine executes the same per-vertex body — drain the
+//! vertex's mail, reactivate on mail, run the user `Compute()`, route the
+//! sends, reschedule if still active — and differs only in *routing
+//! policy* (where a same-partition message goes) and *phase structure*
+//! (how sweeps are sequenced between barriers). [`Sweep`] is the single
+//! implementation of that body; the engine files keep only their policy
+//! and phases.
+//!
+//! [`run_workers`] executes one worker per partition, either on the
+//! calling thread or multiplexed onto scoped OS threads
+//! ([`Parallelism::Threads`]). Workers are shared-nothing within a
+//! superstep: each owns its partition state and fills a private
+//! [`WorkerOut`] (outbox, aggregator partials, timings). The barrier
+//! ([`close_superstep`]) folds those outputs in **partition order**, so a
+//! threaded run is bit-for-bit identical to a sequential one — the
+//! determinism contract `tests/parallel_equivalence.rs` enforces.
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use crate::graph::{DistGraph, PartGraph};
+use crate::util::Codec;
+
+use super::aggregator::Aggregators;
+use super::context::{SendBuffer, VertexContext};
+use super::messages::{MsgStore, Outbox};
+use super::metrics::Metrics;
+use super::netsim::{NetSimConfig, SuperstepClock, WorkerComm};
+use super::program::VertexProgram;
+use super::state::{Frontier, PartitionRuntime};
+use super::Parallelism;
+
+/// Per-worker scratch buffers reused across vertices and sweeps.
+pub(crate) struct WorkerScratch<M> {
+    pub msg_buf: Vec<M>,
+    pub send_buf: SendBuffer<M>,
+}
+
+impl<M> WorkerScratch<M> {
+    pub fn new() -> Self {
+        WorkerScratch { msg_buf: Vec::new(), send_buf: SendBuffer::new() }
+    }
+}
+
+/// Generation-stamped "processed this sweep" marks: O(1) reset per sweep
+/// instead of an O(n) clear (hoisted from the GraphHP local phase so
+/// every sweep-based engine shares it).
+pub(crate) struct ProcessedMarks {
+    stamps: Vec<u32>,
+    stamp: u32,
+}
+
+impl ProcessedMarks {
+    pub fn new(n: usize) -> Self {
+        ProcessedMarks { stamps: vec![0; n], stamp: 0 }
+    }
+
+    /// Start a new sweep: previously-set marks become stale.
+    pub fn begin_sweep(&mut self) {
+        self.stamp = self.stamp.wrapping_add(1);
+        if self.stamp == 0 {
+            // u32 wrap: one O(n) clear every 2^32 sweeps
+            self.stamps.iter_mut().for_each(|s| *s = 0);
+            self.stamp = 1;
+        }
+    }
+
+    pub fn mark(&mut self, lv: usize) {
+        self.stamps[lv] = self.stamp;
+    }
+
+    pub fn processed(&self, lv: usize) -> bool {
+        self.stamps[lv] == self.stamp
+    }
+}
+
+/// Where a same-partition message goes — the one policy axis that
+/// distinguishes the push-based engines' message semantics.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum LocalRoute {
+    /// Through the network outbox like any remote message (stock Hama).
+    Network,
+    /// In memory, visible the *next* sweep (synchronous local messaging:
+    /// GraphHP global phase and sync-mode local phases).
+    NextSweep,
+    /// In memory, visible *this* sweep when the receiver has not yet run
+    /// (AM-Hama, Giraph++ vertex sweep, GraphHP async local phase).
+    /// Sweep 0 always defers to the next sweep: programs treat the
+    /// initialization superstep as message-free setup.
+    ThisSweep,
+}
+
+/// Whether a vertex that stays active after computing is rescheduled
+/// into the frontier for the next sweep.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Reschedule {
+    /// Always (standard BSP superstep loops, GraphHP local phase).
+    Active,
+    /// Only local-phase participants (GraphHP init sweep: boundary
+    /// vertices sit out when `boundary_in_local_phase` is off).
+    Participants,
+    /// Never (the engine derives the next worklist itself).
+    Never,
+}
+
+/// The mutable per-partition state a sweep runs against, as split
+/// borrows so engines with extra per-partition state (GraphHP's global
+/// inboxes) can lend exactly the relevant pieces.
+pub(crate) struct SweepTarget<'a, V, M> {
+    pub values: &'a mut [V],
+    pub halted: &'a mut [bool],
+    /// Inbox drained by this sweep (and receiving `ThisSweep` mail).
+    pub cur: &'a mut MsgStore<M>,
+    /// Inbox for the next sweep.
+    pub nxt: &'a mut MsgStore<M>,
+    /// Frontier receiving next-sweep schedules (None: the engine seeds
+    /// the next sweep from `nxt`'s pending set instead).
+    pub frontier: Option<&'a mut Frontier>,
+}
+
+/// Counters a sweep reports back to its engine.
+#[derive(Clone, Copy, Default)]
+pub(crate) struct SweepOutcome {
+    pub computations: u64,
+    pub local_messages: u64,
+}
+
+/// One in-memory sweep over a partition's worklist: the shared worker
+/// body of every push-based engine.
+pub(crate) struct Sweep<'a, P: VertexProgram> {
+    pub program: &'a P,
+    pub dg: &'a DistGraph,
+    pub part: &'a PartGraph,
+    pub p: usize,
+    /// Superstep counter exposed to the program (global iteration for
+    /// GraphHP).
+    pub superstep: u64,
+    pub seed: u64,
+    pub combiner: Option<fn(P::M, P::M) -> P::M>,
+    pub route: LocalRoute,
+    pub reschedule: Reschedule,
+    /// GraphHP §4.2: do boundary vertices participate in local phases?
+    /// Read by `Reschedule::Participants` and the deferred-inbox routing;
+    /// engines without the hybrid split pass `true` (neutral).
+    pub boundary_in_local: bool,
+}
+
+impl<'a, P: VertexProgram> Sweep<'a, P> {
+    /// Run the sweep. `deferred` is GraphHP's next-global-phase inbox for
+    /// messages to non-participating boundary vertices (None elsewhere).
+    #[allow(clippy::too_many_arguments)]
+    pub fn run(
+        &self,
+        mut worklist: BTreeSet<u32>,
+        tgt: SweepTarget<'_, P::V, P::M>,
+        mut deferred: Option<&mut MsgStore<P::M>>,
+        outbox: &mut Outbox<P::M>,
+        wagg: &mut Aggregators,
+        scratch: &mut WorkerScratch<P::M>,
+        marks: &mut ProcessedMarks,
+    ) -> SweepOutcome {
+        let mut out = SweepOutcome::default();
+        marks.begin_sweep();
+        let SweepTarget { values, halted, cur, nxt, mut frontier } = tgt;
+        while let Some(lv32) = worklist.pop_first() {
+            let lv = lv32 as usize;
+            marks.mark(lv);
+            cur.take_into(lv, &mut scratch.msg_buf);
+            if halted[lv] {
+                if scratch.msg_buf.is_empty() {
+                    continue; // halted, no mail: stays inactive
+                }
+                halted[lv] = false; // a message reactivates (§4.1)
+            }
+            scratch.send_buf.clear();
+            {
+                let mut ctx = VertexContext::<P> {
+                    part: self.part,
+                    lv,
+                    superstep: self.superstep,
+                    value: &mut values[lv],
+                    messages: &scratch.msg_buf,
+                    halted: &mut halted[lv],
+                    out: &mut scratch.send_buf,
+                    aggregators: &mut *wagg,
+                    seed: self.seed,
+                };
+                self.program.compute(&mut ctx);
+            }
+            out.computations += 1;
+            let src_gid = self.part.global_ids[lv];
+            for (target, m) in scratch.send_buf.sends.drain(..) {
+                let (tp, tl) = self.dg.location[target as usize];
+                if tp as usize != self.p || self.route == LocalRoute::Network {
+                    outbox.push(tp, tl, src_gid, m);
+                    continue;
+                }
+                let tl = tl as usize;
+                out.local_messages += 1;
+                if !(self.boundary_in_local || !self.part.is_boundary[tl]) {
+                    if let Some(gq) = deferred.as_deref_mut() {
+                        // boundary vertex sitting out the local phase:
+                        // buffer for the next global phase (paper §4.2)
+                        gq.push_combined(tl, m, self.combiner);
+                        continue;
+                    }
+                }
+                if self.route == LocalRoute::ThisSweep
+                    && self.superstep > 0
+                    && !marks.processed(tl)
+                {
+                    // receiver still to run this sweep: deliver now
+                    cur.push_combined(tl, m, self.combiner);
+                    worklist.insert(tl as u32);
+                } else {
+                    nxt.push_combined(tl, m, self.combiner);
+                    if let Some(f) = frontier.as_deref_mut() {
+                        f.schedule(tl);
+                    }
+                }
+            }
+            if !halted[lv] {
+                let resched = match self.reschedule {
+                    Reschedule::Active => true,
+                    Reschedule::Participants => {
+                        self.boundary_in_local || !self.part.is_boundary[lv]
+                    }
+                    Reschedule::Never => false,
+                };
+                if resched {
+                    if let Some(f) = frontier.as_deref_mut() {
+                        f.schedule(lv);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Everything a vertex-centric BSP worker owns for its partition:
+/// runtime state plus reusable scratch.
+pub(crate) struct WorkerState<V, M> {
+    pub rt: PartitionRuntime<V, M>,
+    pub scratch: WorkerScratch<M>,
+    pub marks: ProcessedMarks,
+}
+
+/// One [`WorkerState`] per partition of `dg`.
+pub(crate) fn init_worker_states<P: VertexProgram>(
+    program: &P,
+    dg: &DistGraph,
+) -> Vec<WorkerState<P::V, P::M>> {
+    dg.parts
+        .iter()
+        .map(|part| {
+            let rt = PartitionRuntime::new(program, part);
+            let n = rt.num_vertices();
+            WorkerState { rt, scratch: WorkerScratch::new(), marks: ProcessedMarks::new(n) }
+        })
+        .collect()
+}
+
+/// What one worker hands back at the barrier.
+pub(crate) struct WorkerOut<M> {
+    pub outbox: Outbox<M>,
+    /// This worker's aggregator partials.
+    pub aggs: Aggregators,
+    /// Scaled compute time measured on this worker's thread.
+    pub compute: Duration,
+    /// Outgoing cross-partition traffic (for the simulated network).
+    pub comm: WorkerComm,
+    pub computations: u64,
+    pub local_messages: u64,
+    /// (Pseudo-)supersteps this worker executed (GraphHP counts its
+    /// phases here; plain BSP engines report 0 and count the global
+    /// superstep engine-side).
+    pub supersteps: u64,
+}
+
+impl<M: Clone + Codec> WorkerOut<M> {
+    /// Package a finished worker turn: derive the wire accounting from
+    /// the outbox.
+    pub fn new(
+        outbox: Outbox<M>,
+        aggs: Aggregators,
+        compute: Duration,
+        p: usize,
+        outcome: SweepOutcome,
+        supersteps: u64,
+    ) -> Self {
+        let comm = WorkerComm {
+            messages: outbox.len() as u64,
+            bytes: outbox.wire_bytes() as u64,
+            peer_pairs: outbox.peer_count(p as u32) as u64,
+        };
+        WorkerOut {
+            outbox,
+            aggs,
+            compute,
+            comm,
+            computations: outcome.computations,
+            local_messages: outcome.local_messages,
+            supersteps,
+        }
+    }
+}
+
+/// Run one worker per partition — `f(p, &mut states[p])` — sequentially
+/// or multiplexed onto scoped OS threads, returning the outputs in
+/// partition order. A worker panic propagates after all threads join
+/// (`std::thread::scope`), so a panicking vertex program aborts the run
+/// instead of deadlocking the barrier.
+pub(crate) fn run_workers<T, R, F>(par: Parallelism, states: &mut [T], f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(usize, &mut T) -> R + Sync,
+{
+    let threads = match par {
+        Parallelism::Sequential => 1,
+        Parallelism::Threads(n) => n.max(1).min(states.len().max(1)),
+    };
+    if threads <= 1 {
+        return states.iter_mut().enumerate().map(|(p, st)| f(p, st)).collect();
+    }
+    let n = states.len();
+    let chunk = (n + threads - 1) / threads;
+    let mut results: Vec<Option<R>> = Vec::with_capacity(n);
+    results.resize_with(n, || None);
+    let fref = &f;
+    std::thread::scope(|scope| {
+        for (ci, (st_chunk, res_chunk)) in
+            states.chunks_mut(chunk).zip(results.chunks_mut(chunk)).enumerate()
+        {
+            let base = ci * chunk;
+            scope.spawn(move || {
+                for (i, (st, slot)) in
+                    st_chunk.iter_mut().zip(res_chunk.iter_mut()).enumerate()
+                {
+                    *slot = Some(fref(base + i, st));
+                }
+            });
+        }
+    });
+    results.into_iter().map(|r| r.expect("worker produced no output")).collect()
+}
+
+/// Fold the workers' outputs into the engine's global state in partition
+/// order — the delivery order that makes a threaded run bit-for-bit
+/// identical to a sequential one. `deliver` routes one cross-partition
+/// message `(dest_part, dest_local, msg)` into the destination's inbox.
+pub(crate) fn close_superstep<M: Clone + Codec>(
+    outs: Vec<WorkerOut<M>>,
+    aggs: &mut Aggregators,
+    clock: &mut SuperstepClock,
+    net: &NetSimConfig,
+    metrics: &mut Metrics,
+    mut deliver: impl FnMut(u32, u32, M),
+) {
+    for (w, mut o) in outs.into_iter().enumerate() {
+        metrics.network_messages += o.comm.messages;
+        metrics.network_bytes += o.comm.bytes;
+        metrics.local_messages += o.local_messages;
+        metrics.vertex_computations += o.computations;
+        metrics.supersteps_total += o.supersteps;
+        clock.record_worker_at(w, o.compute, net.comm_time(&o.comm));
+        for (tp, tl, m) in o.outbox.drain() {
+            deliver(tp, tl, m);
+        }
+        aggs.merge_current(&o.aggs);
+    }
+    aggs.barrier();
+    clock.barrier(net, metrics);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn processed_marks_reset_per_sweep() {
+        let mut m = ProcessedMarks::new(3);
+        m.begin_sweep();
+        m.mark(1);
+        assert!(m.processed(1));
+        assert!(!m.processed(0));
+        m.begin_sweep();
+        assert!(!m.processed(1));
+    }
+
+    #[test]
+    fn run_workers_sequential_and_threaded_agree() {
+        let mut a: Vec<u64> = (0..17).collect();
+        let mut b = a.clone();
+        let seq = run_workers(Parallelism::Sequential, &mut a, |p, x| {
+            *x += 1;
+            *x * p as u64
+        });
+        let par = run_workers(Parallelism::Threads(4), &mut b, |p, x| {
+            *x += 1;
+            *x * p as u64
+        });
+        assert_eq!(seq, par);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn run_workers_more_threads_than_items() {
+        let mut xs: Vec<u32> = vec![5, 6];
+        let out = run_workers(Parallelism::Threads(16), &mut xs, |_, x| *x * 2);
+        assert_eq!(out, vec![10, 12]);
+    }
+
+    #[test]
+    fn run_workers_propagates_worker_panic() {
+        let mut xs: Vec<u32> = (0..8).collect();
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            run_workers(Parallelism::Threads(4), &mut xs, |_, x| {
+                if *x == 5 {
+                    panic!("worker boom");
+                }
+                *x
+            })
+        }));
+        assert!(r.is_err(), "panic must propagate through the scope join");
+    }
+}

@@ -162,8 +162,12 @@ impl DistGraph {
         self.parts.iter().map(|p| p.num_boundary()).sum()
     }
 
-    /// Largest partition size over smallest (balance indicator); inf-like
-    /// value if a partition is empty.
+    /// Partition balance indicator: the largest partition's vertex count
+    /// over the *mean* partition size (the METIS load-imbalance metric).
+    /// 1.0 = perfectly balanced; k = all vertices in one of k partitions.
+    /// Dividing by the mean rather than the smallest partition keeps the
+    /// indicator finite when a partition is empty. Returns 1.0 for an
+    /// empty graph.
     pub fn balance(&self) -> f64 {
         let sizes: Vec<usize> = self.parts.iter().map(|p| p.num_vertices()).collect();
         let max = *sizes.iter().max().unwrap_or(&0) as f64;
@@ -237,5 +241,16 @@ mod tests {
         let g = path4();
         let dg = DistGraph::new(&g, &[0, 0, 0, 1], 2);
         assert_eq!(dg.balance(), 1.5); // max 3 / avg 2
+    }
+
+    #[test]
+    fn balance_is_max_over_mean_and_finite_with_empty_partition() {
+        let g = path4();
+        // every vertex in partition 0 of 3: max 4 / mean (4/3) = 3.0 —
+        // max/min would be infinite here, max/mean stays the partition
+        // count (the documented worst case)
+        let dg = DistGraph::new(&g, &[0, 0, 0, 0], 3);
+        assert_eq!(dg.balance(), 3.0);
+        assert!(dg.balance().is_finite());
     }
 }

@@ -6,8 +6,13 @@
 //! graphhp partition --graph g.bin --parts 12 --method metis --out parts.txt
 //! graphhp run --graph g.bin --algo sssp --engine graphhp --parts 12 [--source 0]
 //! graphhp run --graph g.bin --algo pagerank --engine graphlab-sync --parts 12
+//! graphhp run --graph g.bin --algo wcc --parts 12 --threads 4
 //! graphhp info --graph g.bin
 //! ```
+//!
+//! `--threads N` pins the worker parallelism (`0` = sequential; default:
+//! one OS thread per core). Results are bit-for-bit identical across
+//! thread counts — the knob only changes wall-clock.
 //!
 //! Execution goes through the `Runner` session; `--engine` accepts every
 //! `EngineKind` spelling (`hama|am-hama|graphhp|giraph++|graphlab-sync|
@@ -23,7 +28,7 @@ use graphhp::algorithms::{
     bipartite_matching::validate_matching, BipartiteMatching, GasPageRank, GasSssp, GasWcc,
     IncrementalPageRank, Sssp, Wcc,
 };
-use graphhp::engine::{EngineKind, Metrics, Partitioner, Runner};
+use graphhp::engine::{EngineKind, Metrics, Parallelism, Partitioner, Runner};
 use graphhp::graph::{generators, io, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
 
@@ -162,6 +167,14 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         .partitions(k)
         .partitioner(Partitioner::Explicit(assignment))
         .engine(kind);
+    if let Some(t) = flags.get("threads") {
+        let n: usize = t.parse().with_context(|| format!("bad --threads {t}"))?;
+        runner = runner.parallelism(if n == 0 {
+            Parallelism::Sequential
+        } else {
+            Parallelism::Threads(n)
+        });
+    }
 
     match algo {
         "sssp" => {
@@ -218,7 +231,10 @@ fn cmd_info(flags: &HashMap<String, String>) -> Result<()> {
     let ind = g.in_degrees();
     println!("vertices: {}", g.num_vertices());
     println!("edges:    {}", g.num_edges());
-    println!("max out-degree: {}", (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap_or(0));
+    println!(
+        "max out-degree: {}",
+        (0..g.num_vertices() as u32).map(|v| g.out_degree(v)).max().unwrap_or(0)
+    );
     println!("max in-degree:  {}", ind.iter().max().copied().unwrap_or(0));
     Ok(())
 }

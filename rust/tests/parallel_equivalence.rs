@@ -1,0 +1,173 @@
+//! Determinism contract of the parallel worker runtime:
+//! `Parallelism::Threads(n)` must be **bit-for-bit** identical to
+//! `Parallelism::Sequential` on every [`EngineKind`] — same final vertex
+//! values (compared at the bit level for floats) and the same
+//! message/iteration/computation counts. Workers are shared-nothing
+//! within a superstep and the barrier folds their outputs in partition
+//! order, so thread interleaving must be unobservable.
+//!
+//! Also proves a panicking vertex program inside a worker thread aborts
+//! the run (propagates through the scoped join) instead of deadlocking
+//! the barrier.
+
+use graphhp::algorithms::{GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
+use graphhp::engine::graphlab::GasProgram;
+use graphhp::engine::{
+    EngineConfig, EngineKind, Metrics, Parallelism, Runner, VertexContext, VertexProgram,
+};
+use graphhp::graph::{generators, DistGraph, Graph};
+use graphhp::partition::{metis_partition, MetisConfig};
+
+fn dist(g: &Graph, k: usize) -> DistGraph {
+    let a = metis_partition(g, k, &MetisConfig::default());
+    DistGraph::new(g, &a, k)
+}
+
+fn cfg_with(par: Parallelism) -> EngineConfig {
+    EngineConfig { parallelism: par, ..Default::default() }
+}
+
+/// All the deterministic counters two equivalent runs must share.
+fn assert_counts_equal(kind: EngineKind, algo: &str, seq: &Metrics, par: &Metrics) {
+    assert_eq!(seq.global_iterations, par.global_iterations, "{kind} {algo}: iterations");
+    assert_eq!(seq.supersteps_total, par.supersteps_total, "{kind} {algo}: supersteps");
+    assert_eq!(seq.network_messages, par.network_messages, "{kind} {algo}: messages");
+    assert_eq!(seq.network_bytes, par.network_bytes, "{kind} {algo}: bytes");
+    assert_eq!(seq.local_messages, par.local_messages, "{kind} {algo}: local messages");
+    assert_eq!(
+        seq.vertex_computations, par.vertex_computations,
+        "{kind} {algo}: computations"
+    );
+}
+
+/// Run a vertex program on `kind` under both modes and require bitwise
+/// equality. `bits` projects a value to its bit representation.
+fn check_vertex<P, B, F>(kind: EngineKind, algo: &str, dg: &DistGraph, prog: &P, bits: F)
+where
+    P: VertexProgram,
+    B: PartialEq + std::fmt::Debug,
+    F: Fn(&P::V) -> B,
+{
+    let seq = Runner::from_dist(dg)
+        .config(cfg_with(Parallelism::Sequential))
+        .run_on(kind, prog);
+    let par =
+        Runner::from_dist(dg).config(cfg_with(Parallelism::Threads(4))).run_on(kind, prog);
+    assert_eq!(seq.values.len(), par.values.len(), "{kind} {algo}: length");
+    for (i, (a, b)) in seq.values.iter().zip(&par.values).enumerate() {
+        assert_eq!(bits(a), bits(b), "{kind} {algo}: v{i} differs between modes");
+    }
+    assert_counts_equal(kind, algo, &seq.metrics, &par.metrics);
+}
+
+/// GAS analogue of [`check_vertex`].
+fn check_gas<P, B, F>(kind: EngineKind, algo: &str, dg: &DistGraph, prog: &P, bits: F)
+where
+    P: GasProgram,
+    B: PartialEq + std::fmt::Debug,
+    F: Fn(&P::V) -> B,
+{
+    let seq = Runner::from_dist(dg)
+        .config(cfg_with(Parallelism::Sequential))
+        .run_gas_on(kind, prog);
+    let par = Runner::from_dist(dg)
+        .config(cfg_with(Parallelism::Threads(4)))
+        .run_gas_on(kind, prog);
+    assert_eq!(seq.values.len(), par.values.len(), "{kind} {algo}: length");
+    for (i, (a, b)) in seq.values.iter().zip(&par.values).enumerate() {
+        assert_eq!(bits(a), bits(b), "{kind} {algo}: v{i} differs between modes");
+    }
+    assert_counts_equal(kind, algo, &seq.metrics, &par.metrics);
+}
+
+/// Threads(4) ≡ Sequential on all six kinds for PageRank, SSSP and WCC,
+/// across several graph shapes and partition counts (including more
+/// partitions than threads and an empty partition or two).
+#[test]
+fn threads_bit_identical_to_sequential_on_all_six_kinds() {
+    let cases: Vec<(Graph, usize)> = vec![
+        (generators::connected(300, 150, 7), 4),
+        (generators::powerlaw(400, 4, 11), 6),
+        (generators::road(18, 18, 3), 9),
+        (generators::erdos_renyi(120, 240, 5), 2),
+    ];
+    for (g, k) in &cases {
+        let dg = dist(g, *k);
+        for kind in EngineKind::ALL {
+            if kind.is_gas() {
+                check_gas(kind, "pagerank", &dg, &GasPageRank { tolerance: 1e-7 }, |v| {
+                    v.to_bits()
+                });
+                check_gas(kind, "sssp", &dg, &GasSssp { source: 1 }, |v| v.to_bits());
+                check_gas(kind, "wcc", &dg, &GasWcc, |v| *v);
+            } else {
+                check_vertex(
+                    kind,
+                    "pagerank",
+                    &dg,
+                    &IncrementalPageRank { tolerance: 1e-7 },
+                    |v| v.to_bits(),
+                );
+                check_vertex(kind, "sssp", &dg, &Sssp { source: 1 }, |v| v.to_bits());
+                check_vertex(kind, "wcc", &dg, &Wcc, |v| *v);
+            }
+        }
+    }
+}
+
+/// More worker threads than partitions, and a single-partition graph,
+/// must still match sequential exactly.
+#[test]
+fn thread_count_never_changes_results() {
+    let g = generators::connected(200, 80, 13);
+    let dg = dist(&g, 3);
+    let base = Runner::from_dist(&dg)
+        .config(cfg_with(Parallelism::Sequential))
+        .run_on(EngineKind::GraphHP, &Wcc);
+    for t in [1, 2, 3, 8, 32] {
+        let r = Runner::from_dist(&dg)
+            .config(cfg_with(Parallelism::Threads(t)))
+            .run_on(EngineKind::GraphHP, &Wcc);
+        assert_eq!(base.values, r.values, "Threads({t})");
+        assert_counts_equal(EngineKind::GraphHP, "wcc", &base.metrics, &r.metrics);
+    }
+    let dg1 = DistGraph::new(&g, &vec![0; 200], 1);
+    let solo_seq = Runner::from_dist(&dg1)
+        .config(cfg_with(Parallelism::Sequential))
+        .run_on(EngineKind::Hama, &Wcc);
+    let solo_par = Runner::from_dist(&dg1)
+        .config(cfg_with(Parallelism::Threads(4)))
+        .run_on(EngineKind::Hama, &Wcc);
+    assert_eq!(solo_seq.values, solo_par.values);
+}
+
+/// A vertex program that panics inside a worker thread: the panic must
+/// propagate out of the run (scoped threads re-raise on join) rather
+/// than leaving the barrier waiting forever.
+#[test]
+fn worker_panic_propagates_instead_of_deadlocking() {
+    struct Exploder;
+    impl VertexProgram for Exploder {
+        type V = u32;
+        type M = u32;
+        fn init(&self, _v: graphhp::graph::VertexId, _d: u32) -> u32 {
+            0
+        }
+        fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+            if ctx.vertex_id() == 17 {
+                panic!("injected vertex-program panic");
+            }
+            ctx.vote_to_halt();
+        }
+    }
+    let g = generators::connected(60, 30, 9);
+    let dg = dist(&g, 4);
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            Runner::from_dist(&dg)
+                .config(cfg_with(Parallelism::Threads(4)))
+                .run_on(kind, &Exploder)
+        }));
+        assert!(result.is_err(), "{kind}: worker panic must propagate");
+    }
+}
