@@ -1,0 +1,112 @@
+//! Figure 7 (repo-local) — message-plane throughput: messages/sec,
+//! wire bytes, and heap allocations per engine on the Figure 5 PageRank
+//! workload.
+//!
+//! Motivates the flat pooled message plane: the vertex-centric surveys
+//! (McCune et al. 2015; Ammar & Özsu 2018) identify message-buffer
+//! management as the dominant memory/throughput cost of BSP systems.
+//! `MsgStore` recycles arena slots across sweeps and `Outbox` reuses its
+//! per-destination-partition batch buffers across supersteps, so the
+//! allocations-per-1k-messages column should stay in the low single
+//! digits at steady state (startup structures amortize away as the
+//! workload grows).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use graphhp::algorithms::IncrementalPageRank;
+use graphhp::bench_support as bs;
+use graphhp::engine::{EngineKind, Parallelism};
+use graphhp::graph::generators;
+
+/// System allocator wrapped with allocation counters (no external
+/// dependencies — the vendor set has no profiling crates).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+static ALLOC_BYTES: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        ALLOC_BYTES.fetch_add(new_size as u64, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn snapshot() -> (u64, u64) {
+    (ALLOC_CALLS.load(Ordering::Relaxed), ALLOC_BYTES.load(Ordering::Relaxed))
+}
+
+fn bench_engine(g: &graphhp::graph::Graph, parts: usize, kind: EngineKind) {
+    let prog = IncrementalPageRank { tolerance: 1e-4 };
+    // sequential workers: allocation counts attribute to one engine run,
+    // not to thread-pool noise (results are bit-identical either way)
+    let mut runner = bs::runner(g, parts).parallelism(Parallelism::Sequential);
+    runner.dist(); // build the distributed view outside the measurement
+    let (a0, b0) = snapshot();
+    let t0 = std::time::Instant::now();
+    let r = runner.run_on(kind, &prog);
+    let wall = t0.elapsed();
+    let (a1, b1) = snapshot();
+
+    let m = &r.metrics;
+    let delivered = m.network_messages + m.local_messages;
+    let rate = delivered as f64 / wall.as_secs_f64().max(1e-9);
+    let allocs = a1 - a0;
+    let alloc_kb = (b1 - b0) / 1024;
+    let per_1k = allocs as f64 * 1000.0 / (delivered.max(1)) as f64;
+    println!(
+        "  {:<16} msgs={:<10} (net {:<9} local {:<10}) bytes={:<11} {:>10.0} msg/s  \
+         allocs={:<9} ({:>7} KiB, {:>6.1}/1k msg)",
+        kind,
+        delivered,
+        m.network_messages,
+        m.local_messages,
+        m.network_bytes,
+        rate,
+        allocs,
+        alloc_kb,
+        per_1k,
+    );
+}
+
+fn main() {
+    bs::header(
+        "Figure 7 (repo): message-plane throughput — msgs/sec, bytes, allocations",
+        "message-plane cost motivation (McCune 2015 §5.2; Ammar & Özsu 2018)",
+    );
+    bs::scale_note(
+        "web-Google (fig5 PageRank workload)",
+        "synthetic web graph at the fig5 small scale",
+    );
+    let workloads = [
+        ("warmup", 5_000usize, 5usize, 7u64, 12usize),
+        ("web-Google stand-in", 30_000, 5, 7, 12),
+    ];
+    for (label, n, deg, seed, parts) in workloads {
+        let g = generators::powerlaw(n, deg, seed);
+        println!(
+            "\n-- {label}: {} vertices, {} edges, {parts} partitions",
+            g.num_vertices(),
+            g.num_edges()
+        );
+        for kind in [EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP] {
+            bench_engine(&g, parts, kind);
+        }
+    }
+    println!("\nfig7 done");
+}

@@ -6,10 +6,15 @@
 //! and ALL workers reload the most recent checkpoint, rolling the
 //! computation back to a consistent global iteration.
 //!
-//! A checkpoint of the hybrid engine is taken at an iteration boundary,
-//! where each partition's state is exactly: vertex values, halt flags and
-//! the global-phase inbox (local-phase queues are empty between
-//! iterations by construction — the local phase runs to quiescence).
+//! A checkpoint of the hybrid engine is taken at an iteration boundary.
+//! Each partition's state there is: vertex values, halt flags, the
+//! global-phase inbox, **and the local-phase runtime state** — the
+//! `cur`/`nxt` inboxes and the scheduled frontier. The local-phase
+//! queues are empty between iterations when the local phase runs to
+//! quiescence, but a `max_pseudo_supersteps`-truncated phase carries
+//! its remaining frontier and in-flight mail across the boundary
+//! (`PartitionRuntime::abort_step_carryover`); a snapshot that dropped
+//! them would recover into a state the clean run never visits.
 
 use std::path::Path;
 
@@ -28,6 +33,15 @@ pub struct Checkpoint<V, M> {
     /// Per partition: pending global-phase messages as
     /// (local vertex, queue) pairs.
     pub inbox: Vec<Vec<(u32, Vec<M>)>>,
+    /// Per partition: the local-phase `cur` inbox (normally empty at a
+    /// boundary; live after a cap-truncated local phase).
+    pub local_cur: Vec<Vec<(u32, Vec<M>)>>,
+    /// Per partition: the local-phase `nxt` inbox (ditto — this is
+    /// where carryover mail waits for the next phase's swap).
+    pub local_nxt: Vec<Vec<(u32, Vec<M>)>>,
+    /// Per partition: the scheduled local-phase frontier, in insertion
+    /// order.
+    pub frontier: Vec<Vec<u32>>,
 }
 
 impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
@@ -39,6 +53,9 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
             self.values[p].encode(&mut buf);
             self.halted[p].encode(&mut buf);
             self.inbox[p].encode(&mut buf);
+            self.local_cur[p].encode(&mut buf);
+            self.local_nxt[p].encode(&mut buf);
+            self.frontier[p].encode(&mut buf);
         }
         buf
     }
@@ -50,12 +67,18 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
         let mut values = Vec::with_capacity(np);
         let mut halted = Vec::with_capacity(np);
         let mut inbox = Vec::with_capacity(np);
+        let mut local_cur = Vec::with_capacity(np);
+        let mut local_nxt = Vec::with_capacity(np);
+        let mut frontier = Vec::with_capacity(np);
         for _ in 0..np {
             values.push(Vec::<V>::decode(r)?);
             halted.push(Vec::<bool>::decode(r)?);
             inbox.push(Vec::<(u32, Vec<M>)>::decode(r)?);
+            local_cur.push(Vec::<(u32, Vec<M>)>::decode(r)?);
+            local_nxt.push(Vec::<(u32, Vec<M>)>::decode(r)?);
+            frontier.push(Vec::<u32>::decode(r)?);
         }
-        Some(Checkpoint { iteration, values, halted, inbox })
+        Some(Checkpoint { iteration, values, halted, inbox, local_cur, local_nxt, frontier })
     }
 
     /// Persist to `dir/ckpt_<iteration>.bin`.
@@ -116,6 +139,9 @@ mod tests {
             values: vec![vec![1.0, 2.0], vec![3.0]],
             halted: vec![vec![true, false], vec![true]],
             inbox: vec![vec![(0, vec![9, 8])], vec![]],
+            local_cur: vec![vec![], vec![(0, vec![5])]],
+            local_nxt: vec![vec![(1, vec![6, 7])], vec![]],
+            frontier: vec![vec![1, 0], vec![]],
         }
     }
 
@@ -125,6 +151,17 @@ mod tests {
         let b = c.encode_bytes();
         let d = Checkpoint::<f32, u32>::decode_bytes(&b).unwrap();
         assert_eq!(c, d);
+    }
+
+    #[test]
+    fn roundtrip_preserves_local_phase_state() {
+        // the carryover fields must survive encode/decode untouched —
+        // they are exactly what a cap-truncated local phase leaves live
+        let c = sample();
+        let d = Checkpoint::<f32, u32>::decode_bytes(&c.encode_bytes()).unwrap();
+        assert_eq!(d.local_cur, vec![vec![], vec![(0, vec![5])]]);
+        assert_eq!(d.local_nxt, vec![vec![(1, vec![6, 7])], vec![]]);
+        assert_eq!(d.frontier, vec![vec![1, 0], vec![]], "insertion order kept");
     }
 
     #[test]

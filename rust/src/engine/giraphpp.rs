@@ -10,7 +10,8 @@
 //! model: "sequentially update each vertex once and immediately propagate
 //! its update to its neighboring vertices within a same partition" per
 //! superstep. [`run_giraphpp`] executes a [`PartitionProgram`] — one
-//! parallel worker per partition, like every other engine — and the
+//! parallel worker per partition, like every other engine, each turn an
+//! explicit step on the shared [`PartitionRuntime`] lifecycle — and the
 //! [`VertexSweep`] adapter runs any [`VertexProgram`] under those
 //! single-sweep semantics via the shared `super::worker::Sweep` body.
 
@@ -22,7 +23,7 @@ use crate::util::Codec;
 use super::messages::{MsgStore, Outbox};
 use super::metrics::Metrics;
 use super::netsim::SuperstepClock;
-use super::program::VertexProgram;
+use super::program::{SourceCombine, VertexProgram};
 use super::state::{Frontier, PartitionRuntime};
 use super::worker::{
     close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepTarget,
@@ -45,6 +46,13 @@ pub trait PartitionProgram: Sync {
     fn compute_partition(&self, ctx: &mut PartitionContext<'_, Self>)
     where
         Self: Sized;
+
+    /// Optional message combiner, applied sender-side in the outbox and
+    /// receiver-side at barrier delivery (like the vertex-centric
+    /// engines). [`VertexSweep`] forwards the wrapped program's.
+    fn combiner(&self) -> Option<fn(Self::M, Self::M) -> Self::M> {
+        None
+    }
 }
 
 /// Full-partition access handed to a [`PartitionProgram`].
@@ -59,7 +67,13 @@ pub struct PartitionContext<'a, PP: PartitionProgram> {
     /// plain partition programs leave it untouched and re-derive their
     /// worklist from pending messages).
     frontier: &'a mut Frontier,
+    /// Vertices the previous superstep scheduled (the frontier drained
+    /// by this turn's `begin_step`).
+    scheduled: &'a [u32],
     outbox: &'a mut Outbox<PP::M>,
+    scratch: &'a mut WorkerScratch<PP::M>,
+    marks: &'a mut ProcessedMarks,
+    combiner: Option<fn(PP::M, PP::M) -> PP::M>,
     dg: &'a DistGraph,
     p: usize,
     computations: u64,
@@ -72,19 +86,25 @@ impl<'a, PP: PartitionProgram> PartitionContext<'a, PP> {
         self.cur.pending()
     }
 
+    /// Vertices scheduled by the previous superstep (insertion order).
+    pub fn scheduled_vertices(&self) -> &[u32] {
+        self.scheduled
+    }
+
     /// Drain the incoming messages of local vertex `lv` into `buf`.
     pub fn take_messages(&mut self, lv: usize, buf: &mut Vec<PP::M>) {
         self.cur.take_into(lv, buf);
     }
 
     /// Send a message to any vertex. Same-partition destinations are
-    /// queued in memory for the next superstep; remote destinations go
-    /// through RPC at the barrier.
+    /// queued in memory for the next superstep (combined on arrival when
+    /// the program has a combiner); remote destinations go through RPC
+    /// at the barrier.
     pub fn send(&mut self, target: VertexId, m: PP::M) {
         let (tp, tl) = self.dg.location[target as usize];
         if tp as usize == self.p {
             self.local_messages += 1;
-            self.nxt.push(tl as usize, m);
+            self.nxt.push_combined(tl as usize, m, self.combiner);
         } else {
             let src = self.part.global_ids[0]; // graph-centric: partition-level source
             self.outbox.push(tp, tl, src, m);
@@ -95,6 +115,15 @@ impl<'a, PP: PartitionProgram> PartitionContext<'a, PP> {
     pub fn count_computations(&mut self, n: u64) {
         self.computations += n;
     }
+}
+
+/// What a Giraph++ worker owns for its partition: the shared runtime
+/// plus the pooled outbox and sweep scratch (reused across supersteps).
+struct GpWorker<PP: PartitionProgram> {
+    rt: PartitionRuntime<PP::V, PP::M>,
+    outbox: Outbox<PP::M>,
+    scratch: WorkerScratch<PP::M>,
+    marks: ProcessedMarks,
 }
 
 /// Run a [`PartitionProgram`] to completion.
@@ -108,15 +137,23 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     dg: &DistGraph,
     cfg: &EngineConfig,
 ) -> RunResult<PP::V> {
-    let mut rts: Vec<PartitionRuntime<PP::V, PP::M>> = dg
+    let combiner = program.combiner();
+    let mut workers: Vec<GpWorker<PP>> = dg
         .parts
         .iter()
         .map(|pg| {
-            PartitionRuntime::from_values(
+            let rt = PartitionRuntime::from_values(
                 (0..pg.num_vertices())
                     .map(|lv| program.init(pg.global_ids[lv], pg.out_degree[lv]))
                     .collect(),
-            )
+            );
+            let n = rt.num_vertices();
+            GpWorker {
+                rt,
+                outbox: Outbox::new(combiner),
+                scratch: WorkerScratch::new(),
+                marks: ProcessedMarks::new(n),
+            }
         })
         .collect();
 
@@ -128,8 +165,10 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     let mut superstep: u64 = 0;
 
     loop {
-        let outs = run_workers(cfg.parallelism, &mut rts, |p, rt| {
-            let mut outbox: Outbox<PP::M> = Outbox::new(None);
+        let outs = run_workers(cfg.parallelism, &mut workers, |p, w| {
+            let GpWorker { rt, outbox, scratch, marks } = w;
+            outbox.reset();
+            let scheduled = rt.begin_step();
             let t0 = std::time::Instant::now();
             let (computations, local_messages);
             {
@@ -141,7 +180,11 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                     cur: &mut rt.cur,
                     nxt: &mut rt.nxt,
                     frontier: &mut rt.frontier,
-                    outbox: &mut outbox,
+                    scheduled: &scheduled,
+                    outbox: &mut *outbox,
+                    scratch: &mut *scratch,
+                    marks: &mut *marks,
+                    combiner,
                     dg,
                     p,
                     computations: 0,
@@ -151,30 +194,43 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                 computations = ctx.computations;
                 local_messages = ctx.local_messages;
             }
+            rt.commit_step();
+            outbox.seal(SourceCombine::KeepAll);
             let compute = cfg.net.scale_compute(t0.elapsed());
-            let outcome =
-                super::worker::SweepOutcome { computations, local_messages };
-            WorkerOut::new(outbox, Aggregators::new(Vec::new()), compute, p, outcome, 0)
+            let outcome = super::worker::SweepOutcome { computations, local_messages };
+            WorkerOut::new(
+                std::mem::take(outbox),
+                Aggregators::new(Vec::new()),
+                compute,
+                p,
+                outcome,
+                0,
+            )
         });
 
-        close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
-            rts[tp as usize].nxt.push(tl as usize, m);
-        });
+        let outboxes =
+            close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+                workers[tp as usize].rt.nxt.push_combined(tl as usize, m, combiner);
+            });
+        for (w, ob) in workers.iter_mut().zip(outboxes) {
+            w.outbox = ob;
+        }
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         superstep += 1;
 
-        for rt in rts.iter_mut() {
-            std::mem::swap(&mut rt.cur, &mut rt.nxt);
-        }
-        let done =
-            rts.iter_mut().all(|rt| rt.halted.iter().all(|&h| h) && rt.quiesced());
+        // barrier deliveries land in `nxt`; the next turn's `begin_step`
+        // swaps them in, so quiescence checks both stores
+        let done = workers
+            .iter_mut()
+            .all(|w| w.rt.halted.iter().all(|&h| h) && w.rt.quiesced());
         if done || superstep >= cfg.limits.max_iterations {
             break;
         }
     }
 
-    let values = super::gather_values_owned(dg, rts.into_iter().map(|rt| rt.values).collect());
+    let values =
+        super::gather_values_owned(dg, workers.into_iter().map(|w| w.rt.values).collect());
     RunResult { values, metrics }
 }
 
@@ -196,11 +252,15 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
         self.program.init(vertex, out_degree)
     }
 
+    fn combiner(&self) -> Option<fn(P::M, P::M) -> P::M> {
+        self.program.combiner()
+    }
+
     fn compute_partition(&self, ctx: &mut PartitionContext<'_, Self>) {
         let n = ctx.part.num_vertices();
         // worklist: scheduled vertices + vertices with mail (plus every
         // vertex at the initialization superstep)
-        let mut worklist: BTreeSet<u32> = ctx.frontier.take().into_iter().collect();
+        let mut worklist: BTreeSet<u32> = ctx.scheduled.iter().copied().collect();
         for lv in ctx.cur.pending() {
             worklist.insert(lv);
         }
@@ -221,8 +281,6 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
             reschedule: Reschedule::Active,
             boundary_in_local: true,
         };
-        let mut scratch: WorkerScratch<P::M> = WorkerScratch::new();
-        let mut marks = ProcessedMarks::new(n);
         // the vertex-centric aggregator mechanism is not part of the
         // graph-centric interface
         let mut wagg = Aggregators::new(Vec::new());
@@ -238,8 +296,8 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
             None,
             &mut *ctx.outbox,
             &mut wagg,
-            &mut scratch,
-            &mut marks,
+            &mut *ctx.scratch,
+            &mut *ctx.marks,
         );
         ctx.computations += outcome.computations;
         ctx.local_messages += outcome.local_messages;
@@ -290,5 +348,45 @@ mod tests {
         assert_eq!(h.values, gp.values);
         // in-partition propagation converges in fewer supersteps
         assert!(gp.metrics.global_iterations <= h.metrics.global_iterations);
+    }
+
+    #[test]
+    fn vertex_sweep_combiner_reduces_network_messages() {
+        // VertexSweep now forwards the program's combiner to the outbox:
+        // many same-destination deltas collapse to one wire message
+        let g = generators::connected(200, 80, 25);
+        let a = hash_partition(&g, 4);
+        let dg = DistGraph::new(&g, &a, 4);
+        let cfg = EngineConfig::default();
+        struct NoCombine;
+        impl VertexProgram for NoCombine {
+            type V = u32;
+            type M = u32;
+            fn init(&self, v: VertexId, _d: u32) -> u32 {
+                v
+            }
+            fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+                let mut best = *ctx.value();
+                if ctx.superstep() == 0 {
+                    ctx.send_to_neighbors(best);
+                } else if let Some(&m) = ctx.messages().iter().min() {
+                    if m < best {
+                        best = m;
+                        ctx.set_value(best);
+                        ctx.send_to_neighbors(best);
+                    }
+                }
+                ctx.vote_to_halt();
+            }
+        }
+        let with = run_giraphpp(&VertexSweep { program: MinLabel, seed: 1 }, &dg, &cfg);
+        let without = run_giraphpp(&VertexSweep { program: NoCombine, seed: 1 }, &dg, &cfg);
+        assert_eq!(with.values, without.values, "combining must not change results");
+        assert!(
+            with.metrics.network_messages <= without.metrics.network_messages,
+            "combined {} > raw {}",
+            with.metrics.network_messages,
+            without.metrics.network_messages
+        );
     }
 }

@@ -16,7 +16,13 @@
 //! 2. **Local phase** (`pseudoSuperstep()` of Alg. 2): pseudo-supersteps
 //!    over the partition's participating vertices, entirely in memory,
 //!    repeated until every participant is inactive and no message is in
-//!    transit inside the partition.
+//!    transit inside the partition — or until
+//!    [`super::Limits::max_pseudo_supersteps`], in which case the
+//!    in-flight work **carries over**: the truncated step is rolled back
+//!    with [`PartitionRuntime::abort_step_carryover`], so the remaining
+//!    frontier and mail resume in the next iteration's local phase
+//!    instead of being dropped (the pre-lifecycle code lost both and
+//!    livelocked until `max_iterations`).
 //!
 //! Distributed synchronization + communication happen once per global
 //! iteration — the whole point of the hybrid model.
@@ -35,7 +41,7 @@ use super::messages::{MsgStore, Outbox};
 use super::metrics::Metrics;
 use super::netsim::SuperstepClock;
 use super::program::VertexProgram;
-use super::state::PartitionRuntime;
+use super::state::{Frontier, PartitionRuntime};
 use super::worker::{
     close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepOutcome,
     SweepTarget, WorkerOut, WorkerScratch,
@@ -44,7 +50,8 @@ use super::{EngineConfig, RunResult};
 
 /// Per-partition state of the hybrid engine: the shared
 /// [`PartitionRuntime`] carries the local-phase inboxes/frontier, plus
-/// the global-phase inbox pair the hybrid model adds on top.
+/// the global-phase inbox pair the hybrid model adds on top and the
+/// pooled outbox.
 struct HpPart<P: VertexProgram> {
     rt: PartitionRuntime<P::V, P::M>,
     /// Global-phase inbox for the CURRENT iteration.
@@ -52,6 +59,7 @@ struct HpPart<P: VertexProgram> {
     /// Global-phase inbox for the NEXT iteration (remote deliveries +
     /// same-partition messages to non-participating boundary vertices).
     gq_nxt: MsgStore<P::M>,
+    outbox: Outbox<P::M>,
     scratch: WorkerScratch<P::M>,
     marks: ProcessedMarks,
 }
@@ -64,6 +72,7 @@ impl<P: VertexProgram> HpPart<P> {
             rt,
             gq_cur: MsgStore::new(n),
             gq_nxt: MsgStore::new(n),
+            outbox: Outbox::new(program.combiner()),
             scratch: WorkerScratch::new(),
             marks: ProcessedMarks::new(n),
         }
@@ -98,11 +107,17 @@ pub fn run_graphhp<P: VertexProgram>(
     loop {
         // ---- fault tolerance (paper §5.3) --------------------------
         if cfg.fault.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
+            // the snapshot covers the local-phase runtime state too:
+            // after a cap-truncated local phase the carryover frontier
+            // and in-flight mail are live state at the boundary
             let ckpt = super::checkpoint::Checkpoint {
                 iteration,
                 values: parts.iter().map(|hp| hp.rt.values.clone()).collect(),
                 halted: parts.iter().map(|hp| hp.rt.halted.clone()).collect(),
                 inbox: parts.iter_mut().map(|hp| hp.gq_cur.export()).collect(),
+                local_cur: parts.iter_mut().map(|hp| hp.rt.cur.export()).collect(),
+                local_nxt: parts.iter_mut().map(|hp| hp.rt.nxt.export()).collect(),
+                frontier: parts.iter().map(|hp| hp.rt.frontier.snapshot()).collect(),
             };
             if let Some(dir) = &cfg.fault.checkpoint_dir {
                 let _ = ckpt.save(dir);
@@ -121,9 +136,9 @@ pub fn run_graphhp<P: VertexProgram>(
                         let n = hp.rt.num_vertices();
                         hp.rt.values = ckpt.values[p].clone();
                         hp.rt.halted = ckpt.halted[p].clone();
-                        hp.rt.cur = MsgStore::new(n);
-                        hp.rt.nxt = MsgStore::new(n);
-                        hp.rt.frontier.clear();
+                        hp.rt.cur = MsgStore::restore(n, &ckpt.local_cur[p]);
+                        hp.rt.nxt = MsgStore::restore(n, &ckpt.local_nxt[p]);
+                        hp.rt.frontier = Frontier::restore(n, &ckpt.frontier[p]);
                         hp.gq_cur = MsgStore::restore(n, &ckpt.inbox[p]);
                         hp.gq_nxt = MsgStore::new(n);
                     }
@@ -138,8 +153,9 @@ pub fn run_graphhp<P: VertexProgram>(
         }
 
         let outs = run_workers(cfg.parallelism, &mut parts, |p, hp| {
+            let HpPart { rt, gq_cur, gq_nxt, outbox, scratch, marks } = hp;
             let part = &dg.parts[p];
-            let mut outbox: Outbox<P::M> = Outbox::new(combiner);
+            outbox.reset();
             let mut wagg = aggs.clone();
             let t0 = std::time::Instant::now();
             let mut outcome = SweepOutcome::default();
@@ -178,17 +194,17 @@ pub fn run_graphhp<P: VertexProgram>(
                 let oc = mk_sweep(LocalRoute::NextSweep, Reschedule::Participants).run(
                     worklist,
                     SweepTarget {
-                        values: &mut hp.rt.values,
-                        halted: &mut hp.rt.halted,
-                        cur: &mut hp.gq_cur,
-                        nxt: &mut hp.rt.nxt,
-                        frontier: Some(&mut hp.rt.frontier),
+                        values: &mut rt.values,
+                        halted: &mut rt.halted,
+                        cur: &mut *gq_cur,
+                        nxt: &mut rt.nxt,
+                        frontier: Some(&mut rt.frontier),
                     },
-                    Some(&mut hp.gq_nxt),
-                    &mut outbox,
+                    Some(&mut *gq_nxt),
+                    outbox,
                     &mut wagg,
-                    &mut hp.scratch,
-                    &mut hp.marks,
+                    scratch,
+                    marks,
                 );
                 merge(&mut outcome, oc);
                 steps += 1;
@@ -198,10 +214,9 @@ pub fn run_graphhp<P: VertexProgram>(
                 // plus unhalted boundary vertices; an unhalted boundary
                 // participant continues in the local phase iff boundary
                 // vertices take part in it
-                let mut worklist: BTreeSet<u32> =
-                    hp.gq_cur.pending().into_iter().collect();
+                let mut worklist: BTreeSet<u32> = gq_cur.pending().into_iter().collect();
                 for lv in 0..part.num_vertices() {
-                    if part.is_boundary[lv] && !hp.rt.halted[lv] {
+                    if part.is_boundary[lv] && !rt.halted[lv] {
                         worklist.insert(lv as u32);
                     }
                 }
@@ -210,62 +225,77 @@ pub fn run_graphhp<P: VertexProgram>(
                 let oc = mk_sweep(LocalRoute::NextSweep, resched).run(
                     worklist,
                     SweepTarget {
-                        values: &mut hp.rt.values,
-                        halted: &mut hp.rt.halted,
-                        cur: &mut hp.gq_cur,
-                        nxt: &mut hp.rt.nxt,
-                        frontier: Some(&mut hp.rt.frontier),
+                        values: &mut rt.values,
+                        halted: &mut rt.halted,
+                        cur: &mut *gq_cur,
+                        nxt: &mut rt.nxt,
+                        frontier: Some(&mut rt.frontier),
                     },
-                    Some(&mut hp.gq_nxt),
-                    &mut outbox,
+                    Some(&mut *gq_nxt),
+                    outbox,
                     &mut wagg,
-                    &mut hp.scratch,
-                    &mut hp.marks,
+                    scratch,
+                    marks,
                 );
                 merge(&mut outcome, oc);
                 steps += 1;
 
                 // ---- local phase: pseudo-supersteps until quiescence --
+                // a cap of 0 would abort every phase before its first
+                // sweep (zero progress, spin to max_iterations): floor 1
+                let cap = cfg.limits.max_pseudo_supersteps.max(1);
                 let mut pseudo_steps: u64 = 0;
                 loop {
-                    let mut worklist: BTreeSet<u32> =
-                        hp.rt.begin_step().into_iter().collect();
-                    for lv in hp.rt.cur.pending() {
+                    let taken = rt.begin_step();
+                    let mut worklist: BTreeSet<u32> = taken.into_iter().collect();
+                    for lv in rt.cur.pending() {
                         worklist.insert(lv);
                     }
                     if worklist.is_empty() {
+                        rt.commit_step();
+                        break;
+                    }
+                    if pseudo_steps >= cap {
+                        // cap hit with work remaining: roll the step back
+                        // so the frontier and in-flight mail carry over
+                        // to the next iteration's local phase — nothing
+                        // is dropped, nothing strands in the wrong inbox
+                        rt.abort_step_carryover(worklist);
                         break;
                     }
                     pseudo_steps += 1;
-                    if pseudo_steps > cfg.limits.max_pseudo_supersteps {
-                        break;
-                    }
                     let oc = mk_sweep(local_route, Reschedule::Active).run(
                         worklist,
-                        hp.rt.sweep_target(),
-                        Some(&mut hp.gq_nxt),
-                        &mut outbox,
+                        rt.sweep_target(),
+                        Some(&mut *gq_nxt),
+                        outbox,
                         &mut wagg,
-                        &mut hp.scratch,
-                        &mut hp.marks,
+                        scratch,
+                        marks,
                     );
+                    rt.commit_step();
                     merge(&mut outcome, oc);
                     steps += 1;
                 }
             }
 
             // GraphHP's SourceCombine applies to messages buffered across
-            // the iteration boundary (no-op when a combiner exists)
-            outbox.source_combine(source_combine);
+            // the iteration boundary (subsumed by a full combiner)
+            outbox.seal(source_combine);
 
             let compute = cfg.net.scale_compute(t0.elapsed());
-            WorkerOut::new(outbox, wagg, compute, p, outcome, steps)
+            WorkerOut::new(std::mem::take(outbox), wagg, compute, p, outcome, steps)
         });
 
-        // ---- barrier: one distributed synchronization per iteration ---
-        close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
-            parts[tp as usize].gq_nxt.push(tl as usize, m);
-        });
+        // ---- barrier: one distributed synchronization per iteration;
+        // remote mail lands with receiver-side combining
+        let outboxes =
+            close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+                parts[tp as usize].gq_nxt.push_combined(tl as usize, m, combiner);
+            });
+        for (hp, ob) in parts.iter_mut().zip(outboxes) {
+            hp.outbox = ob;
+        }
         metrics.global_iterations += 1;
         iteration += 1;
 
@@ -380,5 +410,95 @@ mod tests {
         let r = run_graphhp(&MinLabel, &dg, &EngineConfig::default());
         // pseudo-supersteps make supersteps_total exceed global iterations
         assert!(r.metrics.supersteps_total > r.metrics.global_iterations);
+    }
+
+    // ------------------------------------------ cap-truncation regression
+
+    /// Regression for the pseudo-superstep cap bug: the pre-lifecycle
+    /// code broke out of the local loop AFTER `begin_step()` had drained
+    /// the frontier and swapped the inboxes, silently dropping scheduled
+    /// vertices and stranding mail in `nxt` — the run livelocked until
+    /// `max_iterations`. A truncated local phase must lose nothing.
+    #[test]
+    fn pseudo_superstep_cap_converges_without_livelock() {
+        let g = generators::connected(200, 80, 17);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let mut cfg = EngineConfig::default();
+        cfg.limits.max_pseudo_supersteps = 1;
+        cfg.limits.max_iterations = 500;
+        let r = run_graphhp(&MinLabel, &dg, &cfg);
+        assert!(r.values.iter().all(|&v| v == 0), "capped run must still converge");
+        assert!(
+            r.metrics.global_iterations < 500,
+            "cap must not livelock until max_iterations (took {})",
+            r.metrics.global_iterations
+        );
+        // and the result is exactly the uncapped fixed point
+        let full = run_graphhp(&MinLabel, &dg, &EngineConfig::default());
+        assert_eq!(r.values, full.values);
+    }
+
+    /// A program that stays active WITHOUT mail: every vertex must
+    /// compute exactly `target` times before halting. Under the old bug
+    /// the cap dropped the drained frontier, so non-boundary vertices
+    /// stopped being scheduled, never reached the target, and never
+    /// halted — proof that carryover preserves frontier entries (not
+    /// just messages).
+    struct CountTo {
+        target: u32,
+    }
+    impl VertexProgram for CountTo {
+        type V = u32;
+        type M = u32;
+        fn init(&self, _v: VertexId, _d: u32) -> u32 {
+            0
+        }
+        fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+            let v = *ctx.value() + 1;
+            ctx.set_value(v);
+            if v >= self.target {
+                ctx.vote_to_halt();
+            }
+        }
+    }
+
+    #[test]
+    fn cap_carryover_preserves_frontier_entries() {
+        let g = generators::connected(120, 50, 19);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let mut cfg = EngineConfig::default();
+        cfg.limits.max_pseudo_supersteps = 1;
+        cfg.limits.max_iterations = 200;
+        let r = run_graphhp(&CountTo { target: 12 }, &dg, &cfg);
+        assert!(
+            r.values.iter().all(|&v| v == 12),
+            "every vertex computes to the target exactly (lost frontier entries \
+             would leave some below it): {:?}",
+            r.values.iter().filter(|&&v| v != 12).take(5).collect::<Vec<_>>()
+        );
+        assert!(
+            r.metrics.global_iterations < 200,
+            "carryover must converge, not livelock ({})",
+            r.metrics.global_iterations
+        );
+    }
+
+    /// Sync-mode local messaging takes the NextSweep route, which is the
+    /// path that parks mail in `nxt` — exactly what the old cap break
+    /// stranded. Cover it too.
+    #[test]
+    fn cap_carryover_sync_local_messaging() {
+        let g = generators::connected(150, 60, 23);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid.async_local_messaging = false;
+        cfg.limits.max_pseudo_supersteps = 1;
+        cfg.limits.max_iterations = 500;
+        let r = run_graphhp(&MinLabel, &dg, &cfg);
+        assert!(r.values.iter().all(|&v| v == 0));
+        assert!(r.metrics.global_iterations < 500, "{}", r.metrics.global_iterations);
     }
 }

@@ -28,13 +28,13 @@
 //! in the simulated cluster clock; the paper leaves `M` blank for
 //! GraphLab, and so do our reports.
 
-use std::collections::VecDeque;
 use std::time::Duration;
 
 use crate::graph::{DistGraph, VertexId};
 
 use super::metrics::Metrics;
 use super::netsim::SuperstepClock;
+use super::state::{FifoScheduler, Frontier};
 use super::worker::run_workers;
 use super::{EngineConfig, RunResult};
 
@@ -176,8 +176,13 @@ pub fn run_graphlab_sync<P: GasProgram>(
     let mut metrics = Metrics::default();
     let mut clock = SuperstepClock::new();
 
-    let mut active: Vec<VertexId> = (0..nv as VertexId).collect();
-    let mut in_next = vec![false; nv];
+    // the shared scheduling structure of the push engines doubles as
+    // GraphLab's round scheduler: rounds begin by draining it (the step
+    // lifecycle's frontier take) and scatter re-schedules into it
+    let mut frontier = Frontier::new(nv);
+    for v in 0..nv {
+        frontier.schedule(v);
+    }
     let mut rounds = 0u64;
 
     /// One worker's round output: the applied values plus accounting.
@@ -187,7 +192,14 @@ pub fn run_graphlab_sync<P: GasProgram>(
         remote_gathers: u64,
     }
 
-    while !active.is_empty() && rounds < cfg.limits.max_iterations {
+    loop {
+        if rounds >= cfg.limits.max_iterations {
+            break;
+        }
+        let active = frontier.take();
+        if active.is_empty() {
+            break;
+        }
         // group the active list by owning partition (preserving relative
         // order): the per-worker work lists, identical in sequential and
         // threaded mode
@@ -239,7 +251,6 @@ pub fn run_graphlab_sync<P: GasProgram>(
 
         // fold in partition order: disjoint value writes + deterministic
         // next-round scheduling
-        let mut next: Vec<VertexId> = Vec::new();
         for (p, out) in outs.into_iter().enumerate() {
             let comm = Duration::from_secs_f64(
                 out.remote_gathers as f64 * cfg.gas.remote_gather_us * 1e-6,
@@ -250,10 +261,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
                 metrics.vertex_computations += 1;
                 if significant {
                     for &t in view.out_neighbors(v) {
-                        if !in_next[t as usize] {
-                            in_next[t as usize] = true;
-                            next.push(t);
-                        }
+                        frontier.schedule(t as usize);
                     }
                 }
             }
@@ -262,10 +270,6 @@ pub fn run_graphlab_sync<P: GasProgram>(
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         rounds += 1;
-        for &t in &next {
-            in_next[t as usize] = false;
-        }
-        active = next;
     }
 
     RunResult { values, metrics }
@@ -296,14 +300,12 @@ pub fn run_graphlab_async<P: GasProgram>(
         (0..nv).map(|v| program.init(v as VertexId, view.out_deg[v])).collect();
     let mut metrics = Metrics::default();
 
-    let mut queue: VecDeque<VertexId> = (0..nv as VertexId).collect();
-    let mut queued = vec![true; nv];
+    let mut sched = FifoScheduler::seeded(nv);
     let mut updates = 0u64;
     let t0 = std::time::Instant::now();
     let max_updates = cfg.limits.max_iterations.saturating_mul(nv as u64);
 
-    while let Some(v) = queue.pop_front() {
-        queued[v as usize] = false;
+    while let Some(v) = sched.pop() {
         let (s, e) = (view.in_offsets[v as usize], view.in_offsets[v as usize + 1]);
         let mut acc: Option<P::G> = None;
         for i in s..e {
@@ -318,10 +320,7 @@ pub fn run_graphlab_async<P: GasProgram>(
         updates += 1;
         if significant {
             for &t in view.out_neighbors(v) {
-                if !queued[t as usize] {
-                    queued[t as usize] = true;
-                    queue.push_back(t);
-                }
+                sched.schedule(t);
             }
         }
         if updates >= max_updates {

@@ -17,10 +17,9 @@ use std::collections::BTreeSet;
 use crate::graph::DistGraph;
 
 use super::aggregator::Aggregators;
-use super::messages::Outbox;
 use super::metrics::Metrics;
 use super::netsim::SuperstepClock;
-use super::program::VertexProgram;
+use super::program::{SourceCombine, VertexProgram};
 use super::worker::{
     close_superstep, init_worker_states, run_workers, LocalRoute, Reschedule, Sweep, WorkerOut,
 };
@@ -55,7 +54,7 @@ pub fn run_hama<P: VertexProgram>(
 
     loop {
         let outs = run_workers(cfg.parallelism, &mut workers, |p, ws| {
-            let mut outbox: Outbox<P::M> = Outbox::new(combiner);
+            ws.outbox.reset();
             let mut wagg = aggs.clone();
             let t0 = std::time::Instant::now();
 
@@ -79,21 +78,29 @@ pub fn run_hama<P: VertexProgram>(
                 worklist,
                 ws.rt.sweep_target(),
                 None,
-                &mut outbox,
+                &mut ws.outbox,
                 &mut wagg,
                 &mut ws.scratch,
                 &mut ws.marks,
             );
+            ws.rt.commit_step();
+            ws.outbox.seal(SourceCombine::KeepAll);
             let compute = cfg.net.scale_compute(t0.elapsed());
-            WorkerOut::new(outbox, wagg, compute, p, outcome, 0)
+            WorkerOut::new(std::mem::take(&mut ws.outbox), wagg, compute, p, outcome, 0)
         });
 
-        // ---- barrier: deliver messages, merge aggregators, advance clock
-        close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
-            let rt = &mut workers[tp as usize].rt;
-            rt.nxt.push(tl as usize, m);
-            rt.schedule_next(tl as usize);
-        });
+        // ---- barrier: deliver messages (receiver-side combining keeps
+        // inboxes at one message per vertex), merge aggregators, advance
+        // the clock; drained outboxes return to their workers
+        let outboxes =
+            close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+                let rt = &mut workers[tp as usize].rt;
+                rt.nxt.push_combined(tl as usize, m, combiner);
+                rt.schedule_next(tl as usize);
+            });
+        for (ws, ob) in workers.iter_mut().zip(outboxes) {
+            ws.outbox = ob;
+        }
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         superstep += 1;

@@ -1,49 +1,122 @@
-//! Message stores and outboxes.
+//! The message plane: partition inboxes and worker outboxes.
 //!
-//! [`MsgStore`] is a partition's incoming mailbox (one queue per local
-//! vertex, with a non-empty index so iteration is O(active)).
+//! [`MsgStore`] is a partition's incoming mailbox. Messages live in one
+//! **flat arena** (a slot pool threaded into per-vertex chains) instead
+//! of a `Vec<Vec<M>>`: drained slots go onto a free list and are reused
+//! by later sweeps, so the steady-state hot path performs no heap
+//! allocation — the dominant memory/throughput cost in BSP message
+//! buffers (McCune et al. 2015; Ammar & Özsu 2018).
+//!
 //! [`Outbox`] collects a worker's outgoing cross-partition messages for
-//! one superstep, applying sender-side combining exactly like Pregel's
-//! `Combine()` (one combined message per destination vertex per source
-//! worker) so network-message counts match the paper's setup.
+//! one superstep in **per-destination-partition batch buffers**. Pushes
+//! are plain appends; [`Outbox::seal`] then applies sender-side
+//! combining (Pregel's `Combine()`, one message per destination vertex
+//! per source worker) or GraphHP's `SourceCombine` policy, and orders
+//! every batch by destination — so [`Outbox::drain`] yields messages in
+//! `(dest_part, dest_local)` order, independent of any hasher. Outboxes
+//! are pooled by the worker runtime ([`Outbox::reset`]) and their batch
+//! buffers are reused across supersteps.
 
-use rustc_hash::FxHashMap;
+use std::collections::HashMap;
 
 use crate::graph::VertexId;
 use crate::util::Codec;
 
 use super::program::SourceCombine;
 
-/// Per-partition incoming message queues.
+/// Sentinel for "no slot" in the arena chains.
+const NIL: u32 = u32::MAX;
+
+/// Per-partition incoming message queues backed by a flat slot arena.
+///
+/// Each local vertex owns a FIFO chain of arena slots; `take_into`
+/// returns the slots to the free list, so the arena's high-water mark is
+/// the peak number of simultaneously-buffered messages, not the total
+/// message traffic.
 #[derive(Clone, Debug)]
 pub struct MsgStore<M> {
-    queues: Vec<Vec<M>>,
+    /// Flat message arena: `(payload, next slot in chain / free list)`.
+    /// `payload` is `None` only for slots on the free list.
+    slots: Vec<(Option<M>, u32)>,
+    /// Free-list head.
+    free: u32,
+    /// Per-vertex chain head (`NIL` = empty).
+    head: Vec<u32>,
+    /// Per-vertex chain tail, for O(1) FIFO append.
+    tail: Vec<u32>,
     nonempty: Vec<u32>,
     flagged: Vec<bool>,
+    /// Buffered message count (all vertices).
+    total: usize,
 }
 
 impl<M> MsgStore<M> {
     pub fn new(n: usize) -> Self {
-        let queues = (0..n).map(|_| Vec::new()).collect();
-        MsgStore { queues, nonempty: Vec::new(), flagged: vec![false; n] }
+        MsgStore {
+            slots: Vec::new(),
+            free: NIL,
+            head: vec![NIL; n],
+            tail: vec![NIL; n],
+            nonempty: Vec::new(),
+            flagged: vec![false; n],
+            total: 0,
+        }
+    }
+
+    fn alloc_slot(&mut self, m: M) -> u32 {
+        if self.free != NIL {
+            let s = self.free as usize;
+            self.free = self.slots[s].1;
+            self.slots[s] = (Some(m), NIL);
+            s as u32
+        } else {
+            self.slots.push((Some(m), NIL));
+            (self.slots.len() - 1) as u32
+        }
+    }
+
+    /// Return one chain to the free list (payloads already taken or
+    /// dropped by the caller).
+    fn free_chain(&mut self, lv: usize) {
+        let mut s = self.head[lv];
+        while s != NIL {
+            let idx = s as usize;
+            self.slots[idx].0 = None;
+            let next = self.slots[idx].1;
+            self.slots[idx].1 = self.free;
+            self.free = s;
+            s = next;
+        }
+        self.head[lv] = NIL;
+        self.tail[lv] = NIL;
+        self.flagged[lv] = false;
     }
 
     /// Append a message for local vertex `lv`.
     pub fn push(&mut self, lv: usize, m: M) {
-        if !self.flagged[lv] {
+        let slot = self.alloc_slot(m);
+        if self.flagged[lv] {
+            let t = self.tail[lv] as usize;
+            self.slots[t].1 = slot;
+        } else {
             self.flagged[lv] = true;
             self.nonempty.push(lv as u32);
+            self.head[lv] = slot;
         }
-        self.queues[lv].push(m);
+        self.tail[lv] = slot;
+        self.total += 1;
     }
 
-    /// Append with combining: if a combiner is given and the queue is
-    /// non-empty, fold into the single held message.
+    /// Append with combining: if a combiner is given and the chain is
+    /// non-empty, fold into the tail message (receiver-side combining —
+    /// queues hold one message per vertex regardless of how many source
+    /// partitions delivered).
     pub fn push_combined(&mut self, lv: usize, m: M, combiner: Option<fn(M, M) -> M>) {
         match combiner {
-            Some(f) if !self.queues[lv].is_empty() => {
-                let prev = self.queues[lv].pop().unwrap();
-                self.queues[lv].push(f(prev, m));
+            Some(f) if self.flagged[lv] => {
+                let t = self.tail[lv] as usize;
+                let prev = self.slots[t].0.take().expect("tail slot occupied");
+                self.slots[t].0 = Some(f(prev, m));
             }
             _ => self.push(lv, m),
         }
@@ -53,14 +126,27 @@ impl<M> MsgStore<M> {
         self.flagged[lv]
     }
 
-    /// Drain the queue of `lv` into `buf` (clears the flag).
+    /// Drain the chain of `lv` into `buf` in FIFO order (clears the flag
+    /// and recycles the slots).
     pub fn take_into(&mut self, lv: usize, buf: &mut Vec<M>) {
         buf.clear();
-        if self.flagged[lv] {
-            buf.append(&mut self.queues[lv]);
-            self.flagged[lv] = false;
-            // lazy removal from `nonempty`: entries are validated on drain
+        if !self.flagged[lv] {
+            return;
         }
+        let mut s = self.head[lv];
+        while s != NIL {
+            let idx = s as usize;
+            buf.push(self.slots[idx].0.take().expect("chain slot occupied"));
+            let next = self.slots[idx].1;
+            self.slots[idx].1 = self.free;
+            self.free = s;
+            s = next;
+        }
+        self.total -= buf.len();
+        self.head[lv] = NIL;
+        self.tail[lv] = NIL;
+        self.flagged[lv] = false;
+        // lazy removal from `nonempty`: entries are validated on drain
     }
 
     /// Local vertices with pending messages (sorted, deduplicated —
@@ -78,24 +164,42 @@ impl<M> MsgStore<M> {
     }
 
     pub fn total_messages(&self) -> usize {
-        self.queues.iter().map(|q| q.len()).sum()
+        self.total
+    }
+
+    /// Arena size in slots — the store's message high-water mark.
+    /// Steady-state sweeps reuse slots instead of growing this.
+    pub fn arena_slots(&self) -> usize {
+        self.slots.len()
     }
 
     pub fn clear(&mut self) {
-        for &lv in &self.nonempty {
-            self.queues[lv as usize].clear();
-            self.flagged[lv as usize] = false;
+        for lv in std::mem::take(&mut self.nonempty) {
+            let lv = lv as usize;
+            if self.flagged[lv] {
+                self.free_chain(lv);
+            }
         }
-        self.nonempty.clear();
+        self.total = 0;
     }
 }
 
 impl<M: Clone> MsgStore<M> {
-    /// Snapshot pending queues as (vertex, messages) pairs (checkpointing).
+    /// Snapshot pending queues as (vertex, messages) pairs in FIFO order
+    /// (checkpointing; non-draining).
     pub fn export(&mut self) -> Vec<(u32, Vec<M>)> {
         self.pending()
             .into_iter()
-            .map(|lv| (lv, self.queues[lv as usize].clone()))
+            .map(|lv| {
+                let mut q = Vec::new();
+                let mut s = self.head[lv as usize];
+                while s != NIL {
+                    let (m, next) = &self.slots[s as usize];
+                    q.push(m.as_ref().expect("chain slot occupied").clone());
+                    s = *next;
+                }
+                (lv, q)
+            })
             .collect()
     }
 
@@ -114,106 +218,178 @@ impl<M: Clone> MsgStore<M> {
 /// Wire overhead per message on the simulated network (dest id + header).
 pub const MSG_WIRE_OVERHEAD: usize = 8;
 
-/// A worker's outgoing cross-partition traffic for one superstep.
+/// A worker's outgoing cross-partition traffic for one superstep,
+/// batched per destination partition.
 ///
-/// With a combiner: one slot per destination vertex (sender-side
-/// combining). Without: raw list, optionally `SourceCombine`d per
-/// (source, destination) pair when the engine buffers across iterations
-/// (GraphHP §5).
+/// Lifecycle: [`push`](Self::push) during the sweep(s), one
+/// [`seal`](Self::seal) when the worker's turn ends (combining + ordering),
+/// then accounting ([`len`](Self::len), [`wire_bytes`](Self::wire_bytes),
+/// [`peer_count`](Self::peer_count)) and [`drain`](Self::drain) at the
+/// barrier. [`reset`](Self::reset) re-arms the outbox for the next
+/// superstep, keeping every batch buffer's capacity.
 pub struct Outbox<M> {
-    /// (dest_part, dest_local) -> combined message.
-    combined: FxHashMap<(u32, u32), M>,
-    /// (dest_part, dest_local, src_gid, message).
-    raw: Vec<(u32, u32, VertexId, M)>,
+    /// Per-destination-partition batches, indexed by partition (grown on
+    /// demand): `(dest_local, src_gid, message)` in push order.
+    batches: Vec<Vec<(u32, VertexId, M)>>,
     combiner: Option<fn(M, M) -> M>,
+    /// Entry count; collapses to the combined count at `seal`.
+    len: usize,
+    sealed: bool,
+    /// Scratch for the KeepLatest filter, reused across seals.
+    keep: Vec<bool>,
+    /// Scratch: last batch index per source within one destination run
+    /// (membership only — hash order never reaches the output).
+    latest: HashMap<VertexId, usize>,
+}
+
+/// An empty combinerless outbox — the placeholder
+/// [`std::mem::take`] leaves behind while the worker runtime lends a
+/// pooled outbox out of its slot.
+impl<M> Default for Outbox<M> {
+    fn default() -> Self {
+        Outbox {
+            batches: Vec::new(),
+            combiner: None,
+            len: 0,
+            sealed: false,
+            keep: Vec::new(),
+            latest: HashMap::new(),
+        }
+    }
 }
 
 impl<M: Clone + Codec> Outbox<M> {
     pub fn new(combiner: Option<fn(M, M) -> M>) -> Self {
-        Outbox { combined: FxHashMap::default(), raw: Vec::new(), combiner }
+        Outbox { combiner, ..Outbox::default() }
     }
 
-    /// Queue a message from `src` to `(dest_part, dest_local)`.
+    /// Queue a message from `src` to `(dest_part, dest_local)`: a plain
+    /// append onto the destination partition's batch.
     pub fn push(&mut self, dest_part: u32, dest_local: u32, src: VertexId, m: M) {
-        match self.combiner {
-            Some(f) => {
-                self.combined
-                    .entry((dest_part, dest_local))
-                    .and_modify(|prev| {
-                        let old = prev.clone();
-                        *prev = f(old, m.clone());
-                    })
-                    .or_insert(m);
-            }
-            None => self.raw.push((dest_part, dest_local, src, m)),
+        debug_assert!(!self.sealed, "Outbox::push after seal");
+        let dp = dest_part as usize;
+        if self.batches.len() <= dp {
+            self.batches.resize_with(dp + 1, Vec::new);
         }
+        self.batches[dp].push((dest_local, src, m));
+        self.len += 1;
     }
 
-    /// Apply GraphHP `SourceCombine` to the raw list (keep latest per
-    /// (src, dest)). No-op when a combiner is active or policy is KeepAll.
-    pub fn source_combine(&mut self, policy: SourceCombine) {
-        if self.combiner.is_some() || policy == SourceCombine::KeepAll {
-            return;
-        }
-        // keep the LAST message per (src, dest): iterate in order,
-        // overwriting earlier entries
-        let mut latest: FxHashMap<(u32, u32, VertexId), usize> = FxHashMap::default();
-        let mut keep = vec![false; self.raw.len()];
-        for (i, &(dp, dl, src, _)) in self.raw.iter().enumerate() {
-            if let Some(&prev) = latest.get(&(dp, dl, src)) {
-                keep[prev] = false;
+    /// Close the outbox for this superstep: order every batch by
+    /// destination vertex (stable, so same-destination messages keep
+    /// push order) and apply sender-side combining — the full combiner
+    /// when the program has one, else the GraphHP `SourceCombine`
+    /// policy (keep the latest message per (source, destination) pair).
+    ///
+    /// After sealing, [`drain`](Self::drain) yields messages in
+    /// `(dest_part, dest_local)` order — deterministic by construction,
+    /// with no hash-order dependence.
+    pub fn seal(&mut self, policy: SourceCombine) {
+        assert!(!self.sealed, "Outbox sealed twice in one superstep");
+        self.sealed = true;
+        for batch in &mut self.batches {
+            batch.sort_by_key(|&(l, _, _)| l); // stable sort
+            if let Some(f) = self.combiner {
+                // fold each destination run in push order; entries past
+                // the write cursor are consumed and truncated below
+                let mut w = 0usize;
+                let mut r = 0usize;
+                while r < batch.len() {
+                    batch.swap(w, r);
+                    let mut j = r + 1;
+                    while j < batch.len() && batch[j].0 == batch[w].0 {
+                        batch[w].2 = f(batch[w].2.clone(), batch[j].2.clone());
+                        j += 1;
+                    }
+                    r = j;
+                    w += 1;
+                }
+                batch.truncate(w);
+            } else if policy == SourceCombine::KeepLatest {
+                // keep the LAST message per (destination, source),
+                // preserving push order among the kept
+                let n = batch.len();
+                self.keep.clear();
+                self.keep.resize(n, true);
+                let mut s = 0usize;
+                while s < n {
+                    let mut e = s + 1;
+                    while e < n && batch[e].0 == batch[s].0 {
+                        e += 1;
+                    }
+                    // linear per run: record each source's last index,
+                    // then keep exactly those entries
+                    self.latest.clear();
+                    for i in s..e {
+                        self.latest.insert(batch[i].1, i);
+                    }
+                    for i in s..e {
+                        if self.latest[&batch[i].1] != i {
+                            self.keep[i] = false;
+                        }
+                    }
+                    s = e;
+                }
+                let mut w = 0usize;
+                for r in 0..n {
+                    if self.keep[r] {
+                        batch.swap(w, r);
+                        w += 1;
+                    }
+                }
+                batch.truncate(w);
             }
-            latest.insert((dp, dl, src), i);
-            keep[i] = true;
         }
-        let mut i = 0;
-        self.raw.retain(|_| {
-            let k = keep[i];
-            i += 1;
-            k
-        });
+        self.len = self.batches.iter().map(Vec::len).sum();
     }
 
-    /// Number of messages that will cross the network.
+    /// Re-arm a pooled outbox for the next superstep, keeping batch
+    /// capacities.
+    pub fn reset(&mut self) {
+        for b in &mut self.batches {
+            b.clear();
+        }
+        self.len = 0;
+        self.sealed = false;
+    }
+
+    /// Number of messages that will cross the network (combined count
+    /// once sealed).
     pub fn len(&self) -> usize {
-        self.combined.len() + self.raw.len()
+        self.len
     }
 
     pub fn is_empty(&self) -> bool {
-        self.combined.is_empty() && self.raw.is_empty()
+        self.len == 0
     }
 
     /// Total bytes on the wire (payload + per-message overhead).
     pub fn wire_bytes(&self) -> usize {
-        let payload: usize = self
-            .combined
-            .values()
-            .map(|m| m.encoded_len())
-            .chain(self.raw.iter().map(|(_, _, _, m)| m.encoded_len()))
-            .sum();
-        payload + self.len() * MSG_WIRE_OVERHEAD
+        debug_assert!(self.sealed, "wire accounting before seal");
+        let payload: usize =
+            self.batches.iter().flatten().map(|(_, _, m)| m.encoded_len()).sum();
+        payload + self.len * MSG_WIRE_OVERHEAD
     }
 
     /// Distinct destination partitions (for RPC-pair accounting).
     pub fn peer_count(&self, exclude_part: u32) -> usize {
-        let mut peers: Vec<u32> = self
-            .combined
-            .keys()
-            .map(|&(p, _)| p)
-            .chain(self.raw.iter().map(|&(p, _, _, _)| p))
-            .filter(|&p| p != exclude_part)
-            .collect();
-        peers.sort_unstable();
-        peers.dedup();
-        peers.len()
+        self.batches
+            .iter()
+            .enumerate()
+            .filter(|&(p, b)| !b.is_empty() && p as u32 != exclude_part)
+            .count()
     }
 
-    /// Drain into (dest_part, dest_local, message) triples.
-    pub fn drain(&mut self) -> Vec<(u32, u32, M)> {
-        let mut out: Vec<(u32, u32, M)> =
-            self.combined.drain().map(|((p, l), m)| (p, l, m)).collect();
-        out.extend(self.raw.drain(..).map(|(p, l, _, m)| (p, l, m)));
-        out
+    /// Drain into `(dest_part, dest_local, message)` triples, in
+    /// `(dest_part, dest_local)` order. Requires [`seal`](Self::seal);
+    /// batch capacities survive for [`reset`](Self::reset).
+    pub fn drain(&mut self) -> impl Iterator<Item = (u32, u32, M)> + '_ {
+        debug_assert!(self.sealed, "Outbox::drain before seal");
+        self.len = 0;
+        self.batches
+            .iter_mut()
+            .enumerate()
+            .flat_map(|(p, b)| b.drain(..).map(move |(l, _, m)| (p as u32, l, m)))
     }
 }
 
@@ -250,15 +426,88 @@ mod tests {
     }
 
     #[test]
+    fn msgstore_arena_reused_across_sweeps() {
+        let mut s: MsgStore<u64> = MsgStore::new(4);
+        let mut buf = Vec::new();
+        for round in 0..100u64 {
+            for lv in 0..4 {
+                s.push(lv, round);
+                s.push(lv, round + 1);
+            }
+            for lv in 0..4 {
+                s.take_into(lv, &mut buf);
+                assert_eq!(buf.len(), 2);
+            }
+        }
+        assert_eq!(s.total_messages(), 0);
+        assert!(s.arena_slots() <= 8, "arena must be recycled, got {}", s.arena_slots());
+    }
+
+    #[test]
+    fn msgstore_clear_with_stale_index_entries() {
+        let mut s: MsgStore<u32> = MsgStore::new(3);
+        s.push(1, 7);
+        let mut buf = Vec::new();
+        s.take_into(1, &mut buf); // leaves a stale `nonempty` entry for 1
+        s.push(2, 8);
+        s.push(1, 9); // duplicates 1 in the lazy index
+        s.clear();
+        assert_eq!(s.total_messages(), 0);
+        assert!(s.is_empty());
+        assert!(!s.has_messages(1));
+        assert!(!s.has_messages(2));
+        // the store still works after the clear (slots were recycled)
+        s.push(1, 10);
+        s.take_into(1, &mut buf);
+        assert_eq!(buf, vec![10]);
+    }
+
+    #[test]
+    fn msgstore_push_combined_on_drained_queue_starts_fresh() {
+        let mut s: MsgStore<u32> = MsgStore::new(2);
+        let min = |a: u32, b: u32| a.min(b);
+        s.push_combined(0, 5, Some(min));
+        let mut buf = Vec::new();
+        s.take_into(0, &mut buf);
+        assert_eq!(buf, vec![5]);
+        // drained queue: the next combined push must NOT fold into the
+        // recycled slot's ghost — it starts a fresh chain
+        s.push_combined(0, 9, Some(min));
+        s.take_into(0, &mut buf);
+        assert_eq!(buf, vec![9]);
+    }
+
+    #[test]
+    fn msgstore_export_restore_roundtrip_under_combining() {
+        let min = |a: u32, b: u32| a.min(b);
+        let mut s: MsgStore<u32> = MsgStore::new(4);
+        s.push_combined(0, 5, Some(min));
+        s.push_combined(0, 3, Some(min));
+        s.push(2, 9);
+        s.push(2, 1);
+        let snap = s.export();
+        assert_eq!(snap, vec![(0, vec![3]), (2, vec![9, 1])]);
+        // export must not drain
+        assert_eq!(s.total_messages(), 3);
+        let mut r = MsgStore::restore(4, &snap);
+        assert_eq!(r.export(), snap);
+        // combining keeps working on the restored store
+        r.push_combined(0, 2, Some(min));
+        let mut buf = Vec::new();
+        r.take_into(0, &mut buf);
+        assert_eq!(buf, vec![2]);
+    }
+
+    #[test]
     fn outbox_sender_side_combining_counts() {
         let mut o: Outbox<f32> = Outbox::new(Some(|a: f32, b: f32| a.min(b)));
         o.push(1, 0, 100, 5.0);
-        o.push(1, 0, 101, 3.0); // same destination -> combined
+        o.push(1, 0, 101, 3.0); // same destination -> combined at seal
         o.push(2, 0, 100, 7.0);
+        o.seal(SourceCombine::KeepAll);
         assert_eq!(o.len(), 2);
         assert_eq!(o.peer_count(0), 2);
-        let mut d = o.drain();
-        d.sort_by_key(|&(p, l, _)| (p, l));
+        let d: Vec<_> = o.drain().collect();
         assert_eq!(d, vec![(1, 0, 3.0), (2, 0, 7.0)]);
     }
 
@@ -268,8 +517,8 @@ mod tests {
         o.push(1, 0, 7, 100);
         o.push(1, 0, 7, 200); // same (src, dest): keep this one
         o.push(1, 0, 8, 300); // different src: kept
-        o.source_combine(SourceCombine::KeepLatest);
-        let mut d = o.drain();
+        o.seal(SourceCombine::KeepLatest);
+        let mut d: Vec<_> = o.drain().collect();
         d.sort_by_key(|&(_, _, m)| m);
         assert_eq!(d, vec![(1, 0, 200), (1, 0, 300)]);
     }
@@ -279,14 +528,51 @@ mod tests {
         let mut o: Outbox<u32> = Outbox::new(None);
         o.push(1, 0, 7, 100);
         o.push(1, 0, 7, 200);
-        o.source_combine(SourceCombine::KeepAll);
+        o.seal(SourceCombine::KeepAll);
         assert_eq!(o.len(), 2);
+        // push order preserved per destination
+        let d: Vec<_> = o.drain().collect();
+        assert_eq!(d, vec![(1, 0, 100), (1, 0, 200)]);
+    }
+
+    #[test]
+    fn outbox_drain_is_destination_ordered() {
+        // regression: the old FxHashMap-backed combined path drained in
+        // hash order, so delivery order depended on hasher internals
+        let mut o: Outbox<u32> = Outbox::new(Some(|a: u32, b: u32| a + b));
+        o.push(2, 5, 0, 1);
+        o.push(0, 9, 0, 2);
+        o.push(2, 1, 0, 3);
+        o.push(0, 4, 0, 4);
+        o.push(1, 0, 0, 5);
+        o.seal(SourceCombine::KeepAll);
+        let d: Vec<_> = o.drain().collect();
+        let keys: Vec<(u32, u32)> = d.iter().map(|&(p, l, _)| (p, l)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort_unstable();
+        assert_eq!(keys, sorted, "drain must be (dest_part, dest_local)-ordered");
+        assert_eq!(keys, vec![(0, 4), (0, 9), (1, 0), (2, 1), (2, 5)]);
+    }
+
+    #[test]
+    fn outbox_reset_reuses_batches() {
+        let mut o: Outbox<u32> = Outbox::new(None);
+        for round in 0..10 {
+            o.push(1, 0, 7, round);
+            o.push(3, 2, 7, round);
+            o.seal(SourceCombine::KeepAll);
+            assert_eq!(o.len(), 2);
+            assert_eq!(o.drain().count(), 2);
+            o.reset();
+            assert!(o.is_empty());
+        }
     }
 
     #[test]
     fn wire_bytes_include_overhead() {
         let mut o: Outbox<f32> = Outbox::new(None);
         o.push(1, 0, 0, 1.0);
+        o.seal(SourceCombine::KeepAll);
         assert_eq!(o.wire_bytes(), 4 + MSG_WIRE_OVERHEAD);
     }
 }

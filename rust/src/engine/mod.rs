@@ -47,6 +47,26 @@
 //! | `EngineConfig { checkpoint_interval, .. }`        | `.checkpoint_interval(..)` / [`FaultPolicy`]           |
 //! | `GraphLabCost` (separate argument)                | [`GasCost`], folded into `EngineConfig::gas`           |
 //! | *(new)* sequential partition loop                 | `.parallelism(..)` / `.threads(n)` / [`Parallelism`]   |
+//! | `Outbox::source_combine(policy)` + hash-order `drain()` | `Outbox::seal(policy)`, then destination-ordered `drain()` |
+//! | `begin_step()` alone (swap + frontier drain)      | step lifecycle: `begin_step` / `commit_step` / `abort_step_carryover` |
+//! | `Checkpoint { values, halted, inbox }`            | adds `local_cur` / `local_nxt` / `frontier` (local-phase carryover) |
+//!
+//! # The message plane and step lifecycle
+//!
+//! [`messages::MsgStore`] (a partition's inbox) stores messages in one
+//! flat slot arena threaded into per-vertex chains; drained slots are
+//! recycled, so steady-state sweeps allocate nothing.
+//! [`messages::Outbox`] (a worker's per-superstep output) batches by
+//! destination partition; `seal` applies sender-side combining and
+//! orders each batch, making barrier delivery deterministic by
+//! construction, and delivery itself combines receiver-side
+//! (`MsgStore::push_combined`), so inboxes hold one message per vertex
+//! under a combiner no matter how many source partitions sent.
+//! Engines advance per-partition state through the explicit step
+//! lifecycle on [`state::PartitionRuntime`]
+//! (`begin_step`/`commit_step`/`abort_step_carryover`), which is what
+//! lets GraphHP's `max_pseudo_supersteps` cap truncate a local phase
+//! without losing frontier entries or in-flight mail.
 //!
 //! # Parallel execution
 //!
@@ -218,7 +238,10 @@ impl Default for Parallelism {
 pub struct Limits {
     /// Hard cap on global iterations / supersteps.
     pub max_iterations: u64,
-    /// Hard cap on pseudo-supersteps per GraphHP local phase.
+    /// Hard cap on pseudo-supersteps per GraphHP local phase. A capped
+    /// phase carries its remaining work into the next iteration
+    /// (`PartitionRuntime::abort_step_carryover`); 0 is treated as 1 —
+    /// a phase always makes progress.
     pub max_pseudo_supersteps: u64,
 }
 

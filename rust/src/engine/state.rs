@@ -6,6 +6,22 @@
 //! ([`super::giraphpp::PartitionProgram`]) execute over the same state —
 //! one runtime per partition is exactly what a worker thread owns in the
 //! parallel runtime (`super::worker`).
+//!
+//! # The step lifecycle
+//!
+//! A (pseudo-)superstep is an explicit transaction on the runtime:
+//! [`begin_step`](PartitionRuntime::begin_step) swaps the inbox pair and
+//! drains the frontier, [`commit_step`](PartitionRuntime::commit_step)
+//! closes a step whose sweep ran, and
+//! [`abort_step_carryover`](PartitionRuntime::abort_step_carryover)
+//! rolls a *not-yet-swept* step back — un-swapping the inboxes and
+//! re-scheduling the drained worklist — so an engine that hits a cap
+//! (GraphHP's `max_pseudo_supersteps`) can stop mid-phase without
+//! losing frontier entries or stranding mail in the wrong inbox. The
+//! pre-lifecycle code broke out of the loop *after* the swap/drain and
+//! silently dropped both (livelock until `max_iterations`).
+
+use std::collections::VecDeque;
 
 use crate::graph::{DistGraph, PartGraph};
 
@@ -53,6 +69,58 @@ impl Frontier {
         }
         self.next.clear();
     }
+
+    /// Scheduled vertices in insertion order, non-draining
+    /// (checkpointing).
+    pub fn snapshot(&self) -> Vec<u32> {
+        self.next.clone()
+    }
+
+    /// Rebuild a frontier of size `n` from a [`snapshot`](Self::snapshot).
+    pub fn restore(n: usize, snap: &[u32]) -> Self {
+        let mut f = Frontier::new(n);
+        for &lv in snap {
+            f.schedule(lv as usize);
+        }
+        f
+    }
+}
+
+/// A deduplicating FIFO worklist — the GraphLab async scheduler:
+/// scheduling an already-queued vertex is a no-op; popping a vertex
+/// re-arms it for future scheduling.
+#[derive(Clone, Debug, Default)]
+pub struct FifoScheduler {
+    queue: VecDeque<u32>,
+    queued: Vec<bool>,
+}
+
+impl FifoScheduler {
+    pub fn new(n: usize) -> Self {
+        FifoScheduler { queue: VecDeque::new(), queued: vec![false; n] }
+    }
+
+    /// All of `0..n`, queued in id order.
+    pub fn seeded(n: usize) -> Self {
+        FifoScheduler { queue: (0..n as u32).collect(), queued: vec![true; n] }
+    }
+
+    pub fn schedule(&mut self, v: u32) {
+        if !self.queued[v as usize] {
+            self.queued[v as usize] = true;
+            self.queue.push_back(v);
+        }
+    }
+
+    pub fn pop(&mut self) -> Option<u32> {
+        let v = self.queue.pop_front()?;
+        self.queued[v as usize] = false;
+        Some(v)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
 }
 
 /// Mutable state a worker keeps for one partition.
@@ -68,6 +136,9 @@ pub struct PartitionRuntime<V, M> {
     /// Vertices that must compute next (pseudo-)superstep (not halted,
     /// or received a message).
     pub frontier: Frontier,
+    /// Step-lifecycle guard: a `begin_step` is open until `commit_step`
+    /// or `abort_step_carryover` closes it.
+    step_open: bool,
 }
 
 impl<V, M> PartitionRuntime<V, M> {
@@ -81,6 +152,7 @@ impl<V, M> PartitionRuntime<V, M> {
             cur: MsgStore::new(n),
             nxt: MsgStore::new(n),
             frontier: Frontier::new(n),
+            step_open: false,
         }
     }
 
@@ -105,10 +177,37 @@ impl<V, M> PartitionRuntime<V, M> {
         self.frontier.schedule(lv);
     }
 
-    /// Swap message stores and take the next frontier for this step.
+    /// Open a step: swap the message stores and take the next frontier.
+    /// Every `begin_step` must be paired with a
+    /// [`commit_step`](Self::commit_step) (sweep ran) or an
+    /// [`abort_step_carryover`](Self::abort_step_carryover) (sweep
+    /// skipped).
     pub fn begin_step(&mut self) -> Vec<u32> {
+        assert!(!self.step_open, "begin_step on an already-open step");
+        self.step_open = true;
         std::mem::swap(&mut self.cur, &mut self.nxt);
         self.frontier.take()
+    }
+
+    /// Close a step whose sweep executed.
+    pub fn commit_step(&mut self) {
+        assert!(self.step_open, "commit_step without begin_step");
+        self.step_open = false;
+    }
+
+    /// Roll back a step that was begun but **not swept** (e.g. a
+    /// pseudo-superstep cap): un-swap the message stores — the mail that
+    /// was about to be read returns to `nxt`, where the *next* step's
+    /// swap will find it — and re-schedule `worklist` (the drained
+    /// frontier, possibly widened with mail-pending vertices; extra
+    /// entries are harmless) so no scheduled vertex is lost.
+    pub fn abort_step_carryover(&mut self, worklist: impl IntoIterator<Item = u32>) {
+        assert!(self.step_open, "abort_step_carryover without begin_step");
+        std::mem::swap(&mut self.cur, &mut self.nxt);
+        for lv in worklist {
+            self.frontier.schedule(lv as usize);
+        }
+        self.step_open = false;
     }
 
     /// A vertex is live if it has not halted or has pending messages.
@@ -184,10 +283,12 @@ mod tests {
         let f = rt.begin_step();
         assert_eq!(f, vec![2, 4]);
         assert!(rt.frontier.is_empty());
+        rt.commit_step();
         // messages pushed to nxt become cur after swap
         rt.nxt.push(1, 9);
         let _ = rt.begin_step();
         assert!(rt.cur.has_messages(1));
+        rt.commit_step();
     }
 
     #[test]
@@ -199,5 +300,77 @@ mod tests {
         assert!(f.is_empty());
         f.schedule(1);
         assert_eq!(f.take(), vec![1]);
+    }
+
+    #[test]
+    fn frontier_snapshot_restore_roundtrip() {
+        let mut f = Frontier::new(5);
+        f.schedule(3);
+        f.schedule(0);
+        f.schedule(4);
+        let snap = f.snapshot();
+        assert_eq!(snap, vec![3, 0, 4]);
+        assert!(!f.is_empty(), "snapshot must not drain");
+        let mut r = Frontier::restore(5, &snap);
+        assert_eq!(r.take(), f.take(), "restored frontier preserves order");
+    }
+
+    #[test]
+    fn abort_carryover_restores_frontier_and_mail() {
+        let g = generators::erdos_renyi(6, 10, 3);
+        let dg = DistGraph::new(&g, &vec![0; 6], 1);
+        let mut rt = PartitionRuntime::new(&Noop, &dg.parts[0]);
+        rt.schedule_next(2);
+        rt.nxt.push(5, 99);
+        rt.schedule_next(5);
+
+        let taken = rt.begin_step();
+        assert_eq!(taken, vec![2, 5]);
+        assert!(rt.cur.has_messages(5), "mail swapped in for this step");
+
+        // decide not to sweep (cap hit): everything must carry over
+        rt.abort_step_carryover(taken);
+        assert!(!rt.quiesced(), "carried-over work keeps the partition live");
+        assert!(rt.nxt.has_messages(5), "mail back where the next swap finds it");
+
+        let retaken = rt.begin_step();
+        assert_eq!(retaken, vec![2, 5], "no frontier entry lost");
+        assert!(rt.cur.has_messages(5), "no message lost");
+        let mut buf = Vec::new();
+        rt.cur.take_into(5, &mut buf);
+        assert_eq!(buf, vec![99]);
+        rt.commit_step();
+    }
+
+    #[test]
+    #[should_panic(expected = "begin_step on an already-open step")]
+    fn double_begin_step_panics() {
+        let g = generators::erdos_renyi(4, 6, 1);
+        let dg = DistGraph::new(&g, &vec![0; 4], 1);
+        let mut rt = PartitionRuntime::new(&Noop, &dg.parts[0]);
+        let _ = rt.begin_step();
+        let _ = rt.begin_step();
+    }
+
+    #[test]
+    #[should_panic(expected = "commit_step without begin_step")]
+    fn commit_without_begin_panics() {
+        let g = generators::erdos_renyi(4, 6, 1);
+        let dg = DistGraph::new(&g, &vec![0; 4], 1);
+        let mut rt = PartitionRuntime::new(&Noop, &dg.parts[0]);
+        rt.commit_step();
+    }
+
+    #[test]
+    fn fifo_scheduler_dedups_and_rearms() {
+        let mut s = FifoScheduler::seeded(3);
+        assert_eq!(s.pop(), Some(0));
+        s.schedule(0); // re-arm after pop: accepted
+        s.schedule(2); // still queued: no-op
+        assert_eq!(s.pop(), Some(1));
+        assert_eq!(s.pop(), Some(2));
+        assert_eq!(s.pop(), Some(0));
+        assert!(s.is_empty());
+        assert_eq!(s.pop(), None);
     }
 }

@@ -11,11 +11,13 @@
 //! [`run_workers`] executes one worker per partition, either on the
 //! calling thread or multiplexed onto scoped OS threads
 //! ([`Parallelism::Threads`]). Workers are shared-nothing within a
-//! superstep: each owns its partition state and fills a private
-//! [`WorkerOut`] (outbox, aggregator partials, timings). The barrier
-//! ([`close_superstep`]) folds those outputs in **partition order**, so a
-//! threaded run is bit-for-bit identical to a sequential one — the
-//! determinism contract `tests/parallel_equivalence.rs` enforces.
+//! superstep: each owns its partition state — including a pooled
+//! [`Outbox`] whose batch buffers are reused across supersteps — and
+//! fills a private [`WorkerOut`] (outbox, aggregator partials, timings).
+//! The barrier ([`close_superstep`]) folds those outputs in **partition
+//! order** and hands the drained outboxes back for reuse, so a threaded
+//! run is bit-for-bit identical to a sequential one — the determinism
+//! contract `tests/parallel_equivalence.rs` enforces.
 
 use std::collections::BTreeSet;
 use std::time::Duration;
@@ -241,11 +243,14 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
 }
 
 /// Everything a vertex-centric BSP worker owns for its partition:
-/// runtime state plus reusable scratch.
+/// runtime state, reusable scratch, and the pooled outbox.
 pub(crate) struct WorkerState<V, M> {
     pub rt: PartitionRuntime<V, M>,
     pub scratch: WorkerScratch<M>,
     pub marks: ProcessedMarks,
+    /// Pooled cross-partition outbox, lent to [`WorkerOut`] each
+    /// superstep and returned by [`close_superstep`].
+    pub outbox: Outbox<M>,
 }
 
 /// One [`WorkerState`] per partition of `dg`.
@@ -258,13 +263,20 @@ pub(crate) fn init_worker_states<P: VertexProgram>(
         .map(|part| {
             let rt = PartitionRuntime::new(program, part);
             let n = rt.num_vertices();
-            WorkerState { rt, scratch: WorkerScratch::new(), marks: ProcessedMarks::new(n) }
+            WorkerState {
+                rt,
+                scratch: WorkerScratch::new(),
+                marks: ProcessedMarks::new(n),
+                outbox: Outbox::new(program.combiner()),
+            }
         })
         .collect()
 }
 
 /// What one worker hands back at the barrier.
 pub(crate) struct WorkerOut<M> {
+    /// The worker's (sealed) outbox, moved out of its pooled slot for
+    /// the barrier drain and handed back by [`close_superstep`].
     pub outbox: Outbox<M>,
     /// This worker's aggregator partials.
     pub aggs: Aggregators,
@@ -282,7 +294,7 @@ pub(crate) struct WorkerOut<M> {
 
 impl<M: Clone + Codec> WorkerOut<M> {
     /// Package a finished worker turn: derive the wire accounting from
-    /// the outbox.
+    /// the sealed outbox.
     pub fn new(
         outbox: Outbox<M>,
         aggs: Aggregators,
@@ -308,6 +320,17 @@ impl<M: Clone + Codec> WorkerOut<M> {
     }
 }
 
+/// Balanced work split: chunk sizes for distributing `n` items over
+/// `threads` workers differ by at most one. The previous
+/// `ceil(n/threads)` split could idle almost half the pool (n=17,
+/// threads=16 → 9 chunks of ≤2, only 9 threads running).
+pub(crate) fn chunk_sizes(n: usize, threads: usize) -> Vec<usize> {
+    let t = threads.min(n).max(1);
+    let base = n / t;
+    let rem = n % t;
+    (0..t).map(|i| base + usize::from(i < rem)).collect()
+}
+
 /// Run one worker per partition — `f(p, &mut states[p])` — sequentially
 /// or multiplexed onto scoped OS threads, returning the outputs in
 /// partition order. A worker panic propagates after all threads join
@@ -327,22 +350,30 @@ where
         return states.iter_mut().enumerate().map(|(p, st)| f(p, st)).collect();
     }
     let n = states.len();
-    let chunk = (n + threads - 1) / threads;
+    let sizes = chunk_sizes(n, threads);
     let mut results: Vec<Option<R>> = Vec::with_capacity(n);
     results.resize_with(n, || None);
     let fref = &f;
     std::thread::scope(|scope| {
-        for (ci, (st_chunk, res_chunk)) in
-            states.chunks_mut(chunk).zip(results.chunks_mut(chunk)).enumerate()
-        {
-            let base = ci * chunk;
+        let mut st_rest: &mut [T] = states;
+        let mut res_rest: &mut [Option<R>] = &mut results;
+        let mut base = 0usize;
+        for &size in &sizes {
+            // move the remainder out before splitting so the chunk
+            // borrows can outlive this loop iteration (scoped spawn)
+            let (st_chunk, st_tail) = std::mem::take(&mut st_rest).split_at_mut(size);
+            let (res_chunk, res_tail) = std::mem::take(&mut res_rest).split_at_mut(size);
+            st_rest = st_tail;
+            res_rest = res_tail;
+            let start = base;
             scope.spawn(move || {
                 for (i, (st, slot)) in
                     st_chunk.iter_mut().zip(res_chunk.iter_mut()).enumerate()
                 {
-                    *slot = Some(fref(base + i, st));
+                    *slot = Some(fref(start + i, st));
                 }
             });
+            base += size;
         }
     });
     results.into_iter().map(|r| r.expect("worker produced no output")).collect()
@@ -351,7 +382,10 @@ where
 /// Fold the workers' outputs into the engine's global state in partition
 /// order — the delivery order that makes a threaded run bit-for-bit
 /// identical to a sequential one. `deliver` routes one cross-partition
-/// message `(dest_part, dest_local, msg)` into the destination's inbox.
+/// message `(dest_part, dest_local, msg)` into the destination's inbox
+/// (engines apply receiver-side combining here via
+/// [`MsgStore::push_combined`]). Returns the drained outboxes in
+/// partition order so engines can slot them back for reuse.
 pub(crate) fn close_superstep<M: Clone + Codec>(
     outs: Vec<WorkerOut<M>>,
     aggs: &mut Aggregators,
@@ -359,7 +393,8 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
     net: &NetSimConfig,
     metrics: &mut Metrics,
     mut deliver: impl FnMut(u32, u32, M),
-) {
+) -> Vec<Outbox<M>> {
+    let mut outboxes = Vec::with_capacity(outs.len());
     for (w, mut o) in outs.into_iter().enumerate() {
         metrics.network_messages += o.comm.messages;
         metrics.network_bytes += o.comm.bytes;
@@ -370,10 +405,12 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
         for (tp, tl, m) in o.outbox.drain() {
             deliver(tp, tl, m);
         }
+        outboxes.push(o.outbox);
         aggs.merge_current(&o.aggs);
     }
     aggs.barrier();
     clock.barrier(net, metrics);
+    outboxes
 }
 
 #[cfg(test)]
@@ -392,6 +429,29 @@ mod tests {
     }
 
     #[test]
+    fn chunk_sizes_differ_by_at_most_one() {
+        for (n, t) in [(17usize, 16usize), (16, 4), (5, 16), (1, 8), (100, 7), (9, 9)] {
+            let sizes = chunk_sizes(n, t);
+            assert_eq!(sizes.iter().sum::<usize>(), n, "n={n} t={t}");
+            assert_eq!(sizes.len(), t.min(n), "n={n} t={t}: every thread gets work");
+            let (min, max) =
+                (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+            assert!(max - min <= 1, "n={n} t={t}: {sizes:?}");
+            assert!(*min >= 1, "n={n} t={t}: no empty chunk");
+        }
+    }
+
+    #[test]
+    fn chunking_uses_every_thread() {
+        // the regression case from the old ceil split: n=17, threads=16
+        // produced 9 chunks — 7 threads sat idle
+        let sizes = chunk_sizes(17, 16);
+        assert_eq!(sizes.len(), 16);
+        assert_eq!(sizes.iter().filter(|&&s| s == 2).count(), 1);
+        assert_eq!(sizes.iter().filter(|&&s| s == 1).count(), 15);
+    }
+
+    #[test]
     fn run_workers_sequential_and_threaded_agree() {
         let mut a: Vec<u64> = (0..17).collect();
         let mut b = a.clone();
@@ -405,6 +465,18 @@ mod tests {
         });
         assert_eq!(seq, par);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn run_workers_balanced_split_keeps_index_mapping() {
+        // n=17 over 16 threads: uneven chunk sizes must not scramble the
+        // partition-index → result mapping
+        let mut xs: Vec<u64> = (0..17).collect();
+        let out = run_workers(Parallelism::Threads(16), &mut xs, |p, x| (p as u64, *x));
+        for (i, &(p, v)) in out.iter().enumerate() {
+            assert_eq!(p, i as u64);
+            assert_eq!(v, i as u64);
+        }
     }
 
     #[test]

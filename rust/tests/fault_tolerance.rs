@@ -72,6 +72,30 @@ fn pagerank_recovery_close_to_clean_run() {
 }
 
 #[test]
+fn recovery_preserves_cap_truncated_local_phase() {
+    // regression: the old Checkpoint exported only the global-phase
+    // inbox, so recovering after a max_pseudo_supersteps-truncated local
+    // phase dropped the carried-over frontier and in-flight cur/nxt mail
+    // — the recovered run diverged from (or ran far longer than) the
+    // clean one. The snapshot now includes the local-phase runtime
+    // state, so rollback replays the capped run exactly.
+    let g = generators::road(30, 30, 5);
+    let prog = Sssp { source: 0 };
+
+    let clean = runner(&g, 6).max_pseudo_supersteps(1).run(&prog);
+    assert!(clean.metrics.global_iterations > 6, "need room to inject a failure");
+
+    let recovered = runner(&g, 6)
+        .max_pseudo_supersteps(1)
+        .checkpoint_interval(Some(2))
+        .inject_failure_at(Some(5))
+        .run(&prog);
+    assert_eq!(recovered.metrics.recoveries, 1);
+    assert_eq!(clean.values, recovered.values, "carried-over state must survive recovery");
+    assert!(recovered.metrics.global_iterations >= clean.metrics.global_iterations);
+}
+
+#[test]
 fn failure_after_convergence_is_harmless() {
     let g = generators::road(15, 15, 2);
     let r = runner(&g, 3)

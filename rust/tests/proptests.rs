@@ -178,9 +178,14 @@ fn outbox_combining_is_min_fold() {
                 .and_modify(|v| *v = v.min(m))
                 .or_insert(m);
         }
+        ob.seal(SourceCombine::KeepAll);
         assert_eq!(ob.len(), oracle.len());
+        let mut prev_key = None;
         for (dp, dl, m) in ob.drain() {
             assert_eq!(m, oracle[&(dp, dl)]);
+            // sealed drain is (dest_part, dest_local)-ordered
+            assert!(prev_key < Some((dp, dl)), "unordered drain at ({dp},{dl})");
+            prev_key = Some((dp, dl));
         }
     }
 }
@@ -199,8 +204,8 @@ fn outbox_source_combine_latest_only() {
             ob.push(0, dl, src, m);
             latest.insert((0, dl, src), m);
         }
-        ob.source_combine(SourceCombine::KeepLatest);
-        let drained = ob.drain();
+        ob.seal(SourceCombine::KeepLatest);
+        let drained: Vec<_> = ob.drain().collect();
         assert_eq!(drained.len(), latest.len());
         let vals: std::collections::HashSet<u64> = drained.iter().map(|&(_, _, m)| m).collect();
         for v in latest.values() {
