@@ -1,0 +1,150 @@
+//! Figure 8 (repo-original) — static vs adaptive hybrid policy:
+//! supersteps / network messages of GraphHP under the hand-tuned
+//! `HybridPolicy::Static` defaults against the telemetry-driven
+//! `HybridPolicy::Adaptive` scheduler, on the two workloads where the
+//! local phase matters most:
+//!
+//! - PageRank (Δ=1e-4) on the fig5 web workload — shrinking-frontier
+//!   incremental computation, the cap-growth regime;
+//! - SSSP on the road-network workload (fig3 setup) — high-diameter
+//!   wavefront, the regime where boundary-dominated partitions appear.
+//!
+//! Also reported: a tight-cap regime — static pinned to 2
+//! pseudo-supersteps vs adaptive *starting* at 2 — where the static
+//! policy burns a carryover iteration per barrier while the adaptive
+//! controller grows its per-partition caps back out.
+//!
+//! Shape to expect: adaptive ≈ static on iterations/messages at the
+//! defaults (the defaults are already near-optimal for these
+//! workloads — the scheduler must not regress them), and adaptive
+//! clearly fewer global iterations in the tight-cap regime. The trace
+//! columns (pseudo-supersteps, carryovers, skipped local phases) show
+//! *why* each run behaved as it did.
+
+use graphhp::algorithms::{IncrementalPageRank, Sssp};
+use graphhp::bench_support as bs;
+use graphhp::engine::{
+    AdaptiveConfig, EngineKind, HybridPolicy, RunResult, Runner, VertexProgram,
+};
+use graphhp::graph::generators;
+use graphhp::graph::Graph;
+
+fn policy_row<V>(label: &str, r: &RunResult<V>) {
+    bs::row(label, &r.metrics);
+    println!(
+        "    trace: pseudo-supersteps={} carryovers={} skipped-local-phases={} supersteps-total={}",
+        r.trace.pseudo_supersteps(),
+        r.trace.carryover_events(),
+        r.trace.skipped_local_phases(),
+        r.metrics.supersteps_total,
+    );
+}
+
+/// Element-wise agreement check with a per-workload comparator —
+/// confluent programs (SSSP) demand bit equality, while PageRank's
+/// tolerance-truncated f64 sums legitimately differ in the last bits
+/// when the phase grouping changes.
+fn assert_agree<V>(label: &str, a: &[V], b: &[V], agree: &impl Fn(&V, &V) -> bool) {
+    assert_eq!(a.len(), b.len(), "{label}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(agree(x, y), "{label}: v{i} disagrees between policies");
+    }
+}
+
+fn compare<P: VertexProgram>(
+    workload: &str,
+    g: &Graph,
+    parts: usize,
+    prog: &P,
+    agree: impl Fn(&P::V, &P::V) -> bool,
+) {
+    println!("\n-- {workload}: {} vertices, {parts} partitions", g.num_vertices());
+    // partition once, outside every timed region; every policy variant
+    // executes over the identical distributed view
+    let dg = bs::dist(g, parts);
+
+    let s = Runner::from_dist(&dg).engine(EngineKind::GraphHP).run(prog);
+    policy_row("static", &s);
+
+    let a = Runner::from_dist(&dg)
+        .engine(EngineKind::GraphHP)
+        .hybrid_policy(HybridPolicy::adaptive())
+        .run(prog);
+    policy_row("adaptive", &a);
+
+    // diagnostic shape checks (printed ✓/✗): the scheduler should track
+    // the near-optimal static defaults within a small margin
+    bs::expect_less(
+        "adaptive supersteps within 1.25x of static",
+        a.metrics.supersteps_total,
+        s.metrics.supersteps_total * 5 / 4 + 2,
+    );
+    bs::expect_less(
+        "adaptive messages within 1.25x of static",
+        a.metrics.network_messages,
+        s.metrics.network_messages * 5 / 4 + 2,
+    );
+
+    // tight-cap regime: both policies start with a pseudo-superstep cap
+    // of 2, but the static one is stuck there (`Limits`) while the
+    // adaptive controller grows its per-partition caps back out of the
+    // carryover thrash — the re-fit the scheduler exists for
+    let st = Runner::from_dist(&dg)
+        .engine(EngineKind::GraphHP)
+        .max_pseudo_supersteps(2)
+        .run(prog);
+    policy_row("static cap=2", &st);
+
+    let at = Runner::from_dist(&dg)
+        .engine(EngineKind::GraphHP)
+        .hybrid_policy(HybridPolicy::Adaptive(AdaptiveConfig {
+            initial_cap: 2,
+            ..Default::default()
+        }))
+        .run(prog);
+    policy_row("adaptive from cap=2", &at);
+
+    bs::expect_less(
+        "adaptive-from-2 iterations < static-2 iterations",
+        at.metrics.global_iterations,
+        st.metrics.global_iterations,
+    );
+
+    assert_agree(workload, &s.values, &a.values, &agree);
+    assert_agree(workload, &s.values, &st.values, &agree);
+    assert_agree(workload, &s.values, &at.values, &agree);
+}
+
+fn main() {
+    bs::header(
+        "Figure 8: static vs adaptive hybrid policy (GraphHP)",
+        "repo-original experiment on the fig5 PageRank and fig3 SSSP workloads",
+    );
+    bs::scale_note(
+        "hand-tuned HybridPolicy knobs fixed per run",
+        "HybridPolicy::Adaptive re-fits cap / boundary participation / \
+         local-phase skip per partition per iteration from the RunTrace",
+    );
+
+    let web = generators::powerlaw(30_000, 5, 7);
+    compare(
+        "PageRank Δ=1e-4, web graph",
+        &web,
+        12,
+        &IncrementalPageRank { tolerance: 1e-4 },
+        // tolerance-truncated accumulation: relative agreement
+        |x, y| (x - y).abs() <= 1e-3 * x.abs().max(1.0),
+    );
+
+    let road = generators::road(120, 120, 1);
+    compare(
+        "SSSP, road network",
+        &road,
+        12,
+        &Sssp { source: 0 },
+        // min-fixed-point: bit-exact across every policy
+        |x, y| x.to_bits() == y.to_bits(),
+    );
+
+    println!("\nfig8 done");
+}

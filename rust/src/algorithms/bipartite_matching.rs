@@ -29,11 +29,15 @@ use crate::engine::{VertexContext, VertexProgram};
 use crate::graph::VertexId;
 use crate::util::Codec;
 
-/// Message kinds.
+/// Left asks a right neighbor for a match.
 pub const REQUEST: u8 = 0;
+/// Right offers the match to one pending requester.
 pub const GRANT: u8 = 1;
+/// Left seals the match with the granter.
 pub const ACCEPT: u8 = 2;
+/// Left declines a grant (it already matched elsewhere).
 pub const REJECT_GRANT: u8 = 3;
+/// Right is permanently matched; requester must look elsewhere.
 pub const DENY_MATCHED: u8 = 4;
 /// Left withdraws its pending request (it matched elsewhere) — stops
 /// rights from wasting a serial grant→reject round-trip on dead
@@ -74,6 +78,7 @@ impl Codec for BmState {
 /// The matching program. `num_left` splits the id space: ids `< num_left`
 /// are left vertices.
 pub struct BipartiteMatching {
+    /// Ids below this are left vertices; the rest are right.
     pub num_left: u32,
 }
 

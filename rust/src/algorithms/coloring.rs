@@ -15,13 +15,17 @@ use crate::engine::{VertexContext, VertexProgram};
 use crate::graph::VertexId;
 use crate::util::Codec;
 
+/// Sentinel for "no color chosen yet".
 pub const UNCOLORED: u32 = u32::MAX;
 
 /// Vertex state: chosen color + colors seen from higher-priority
 /// neighbors (by neighbor id, deduped).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ColorState {
+    /// Chosen color, or [`UNCOLORED`].
     pub color: u32,
+    /// (neighbor id, color) announcements from higher-priority
+    /// neighbors, deduplicated by neighbor.
     pub seen: Vec<(u32, u32)>,
 }
 

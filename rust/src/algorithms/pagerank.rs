@@ -71,6 +71,7 @@ impl VertexProgram for IncrementalPageRank {
 /// Straightforward PageRank (Alg. 1): fixed-superstep synchronous
 /// iteration; every vertex stays active until `supersteps`.
 pub struct ClassicPageRank {
+    /// Fixed number of supersteps to run before halting.
     pub supersteps: u64,
 }
 
@@ -107,6 +108,8 @@ impl VertexProgram for ClassicPageRank {
 /// the same fixed point as [`IncrementalPageRank`]: `r = 0.15 + 0.85 ·
 /// Σ_in r_u / deg_u`.
 pub struct GasPageRank {
+    /// Convergence tolerance: reschedule out-neighbors while the value
+    /// change exceeds this.
     pub tolerance: f64,
 }
 
@@ -144,6 +147,7 @@ impl GasProgram for GasPageRank {
 /// immediately push its damped delta to in-partition neighbors;
 /// cross-partition deltas travel at the barrier.
 pub struct GiraphPPPageRank {
+    /// Convergence tolerance Δ: deltas below it stop propagating.
     pub tolerance: f64,
 }
 

@@ -21,6 +21,7 @@ pub const INF: f32 = 1e30;
 
 /// SSSP vertex program.
 pub struct Sssp {
+    /// The source vertex (distance 0).
     pub source: VertexId,
 }
 
@@ -65,6 +66,7 @@ impl VertexProgram for Sssp {
 /// in-neighbors — Bellman-Ford as a gather. Same fixed point as
 /// [`Sssp`].
 pub struct GasSssp {
+    /// The source vertex (distance 0).
     pub source: VertexId,
 }
 

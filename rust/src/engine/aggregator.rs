@@ -5,12 +5,16 @@
 /// Reduce operation of an aggregator.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AggOp {
+    /// Sum of all submissions.
     Sum,
+    /// Minimum submission.
     Min,
+    /// Maximum submission.
     Max,
 }
 
 impl AggOp {
+    /// The fold's neutral element (0, +∞, −∞ respectively).
     pub fn identity(self) -> f64 {
         match self {
             AggOp::Sum => 0.0,
@@ -19,6 +23,7 @@ impl AggOp {
         }
     }
 
+    /// Reduce two values under this operation.
     pub fn fold(self, a: f64, b: f64) -> f64 {
         match self {
             AggOp::Sum => a + b,
@@ -39,16 +44,19 @@ pub struct Aggregators {
 }
 
 impl Aggregators {
+    /// A fresh set with one aggregator per op, both buffers at identity.
     pub fn new(ops: Vec<AggOp>) -> Self {
         let current = ops.iter().map(|o| o.identity()).collect();
         let previous = ops.iter().map(|o| o.identity()).collect();
         Aggregators { ops, current, previous }
     }
 
+    /// Number of aggregators.
     pub fn len(&self) -> usize {
         self.ops.len()
     }
 
+    /// True when no aggregator is registered.
     pub fn is_empty(&self) -> bool {
         self.ops.is_empty()
     }

@@ -19,11 +19,12 @@ use std::collections::BTreeSet;
 use crate::graph::DistGraph;
 
 use super::aggregator::Aggregators;
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
 use super::netsim::SuperstepClock;
 use super::program::{SourceCombine, VertexProgram};
 use super::worker::{
-    close_superstep, init_worker_states, run_workers, LocalRoute, Reschedule, Sweep, WorkerOut,
+    boundary_count, close_superstep, init_worker_states, run_workers, LocalRoute, Reschedule,
+    Sweep, WorkerOut,
 };
 use super::{EngineConfig, RunResult};
 
@@ -39,6 +40,7 @@ pub fn run_am_hama<P: VertexProgram>(
 ) -> RunResult<P::V> {
     let mut workers = init_worker_states(program, dg);
     let mut metrics = Metrics::default();
+    let mut trace = RunTrace::default();
     let mut clock = SuperstepClock::new();
     let mut aggs = Aggregators::new(
         (0..program.num_aggregators()).map(|i| program.aggregator_op(i)).collect(),
@@ -66,6 +68,11 @@ pub fn run_am_hama<P: VertexProgram>(
             // into `nxt` is paired with a schedule, so cur's pending set
             // is always a subset of the frontier.
             let worklist: BTreeSet<u32> = ws.rt.begin_step().into_iter().collect();
+            let pt = PartitionStepTrace {
+                frontier: worklist.len() as u64,
+                boundary_frontier: boundary_count(&dg.parts[p], &worklist),
+                ..Default::default()
+            };
             let sweep = Sweep {
                 program,
                 dg,
@@ -90,15 +97,22 @@ pub fn run_am_hama<P: VertexProgram>(
             ws.rt.commit_step();
             ws.outbox.seal(SourceCombine::KeepAll);
             let compute = cfg.net.scale_compute(t0.elapsed());
-            WorkerOut::new(std::mem::take(&mut ws.outbox), wagg, compute, p, outcome, 0)
+            WorkerOut::new(std::mem::take(&mut ws.outbox), wagg, compute, p, outcome, 0, pt)
         });
 
-        let outboxes =
-            close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+        let outboxes = close_superstep(
+            outs,
+            &mut aggs,
+            &mut clock,
+            &cfg.net,
+            &mut metrics,
+            &mut trace,
+            |tp, tl, m| {
                 let rt = &mut workers[tp as usize].rt;
                 rt.nxt.push_combined(tl as usize, m, combiner);
                 rt.schedule_next(tl as usize);
-            });
+            },
+        );
         for (ws, ob) in workers.iter_mut().zip(outboxes) {
             ws.outbox = ob;
         }
@@ -114,7 +128,7 @@ pub fn run_am_hama<P: VertexProgram>(
 
     let values =
         super::gather_values_owned(dg, workers.into_iter().map(|ws| ws.rt.values).collect());
-    RunResult { values, metrics }
+    RunResult { values, metrics, trace }
 }
 
 #[cfg(test)]

@@ -8,13 +8,17 @@
 //!
 //! A checkpoint of the hybrid engine is taken at an iteration boundary.
 //! Each partition's state there is: vertex values, halt flags, the
-//! global-phase inbox, **and the local-phase runtime state** — the
-//! `cur`/`nxt` inboxes and the scheduled frontier. The local-phase
+//! global-phase inbox, **the local-phase runtime state** — the
+//! `cur`/`nxt` inboxes and the scheduled frontier — and the
+//! hybrid-scheduler state ([`PolicyCheckpoint`]). The local-phase
 //! queues are empty between iterations when the local phase runs to
 //! quiescence, but a `max_pseudo_supersteps`-truncated phase carries
 //! its remaining frontier and in-flight mail across the boundary
 //! (`PartitionRuntime::abort_step_carryover`); a snapshot that dropped
-//! them would recover into a state the clean run never visits.
+//! them would recover into a state the clean run never visits. The same
+//! holds for the adaptive scheduler's per-partition caps/streaks/skip
+//! flags: without them, rolled-back iterations would replay under a
+//! schedule the clean run never executed.
 
 use std::path::Path;
 
@@ -22,9 +26,55 @@ use anyhow::{Context, Result};
 
 use crate::util::Codec;
 
+/// One partition's hybrid-scheduler state. This is the GraphHP engine's
+/// live per-partition policy (static policies hold their constant
+/// knobs, adaptive ones their evolved state), persisted verbatim in
+/// checkpoints so a recovered run replays exactly the schedule the
+/// checkpointed run would have executed — without it, rolled-back
+/// iterations would replay under policy state adapted by the aborted
+/// timeline and the recovered trajectory could diverge from a clean
+/// run. The controller's update rules live in `engine/graphhp.rs`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
+pub struct PolicyCheckpoint {
+    /// Run the local phase next iteration?
+    pub run_local: bool,
+    /// Pseudo-superstep cap of the partition.
+    pub cap: u64,
+    /// Do the partition's boundary vertices join its local phases?
+    pub boundary_in_local: bool,
+    /// Locality-derived default to restore after clean iterations.
+    pub preferred_boundary: bool,
+    /// Consecutive thrashing carryovers observed.
+    pub carryover_streak: u32,
+    /// Consecutive carryover-free iterations observed.
+    pub clean_streak: u32,
+}
+
+impl Codec for PolicyCheckpoint {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.run_local.encode(buf);
+        self.cap.encode(buf);
+        self.boundary_in_local.encode(buf);
+        self.preferred_boundary.encode(buf);
+        self.carryover_streak.encode(buf);
+        self.clean_streak.encode(buf);
+    }
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        Some(PolicyCheckpoint {
+            run_local: bool::decode(r)?,
+            cap: u64::decode(r)?,
+            boundary_in_local: bool::decode(r)?,
+            preferred_boundary: bool::decode(r)?,
+            carryover_streak: u32::decode(r)?,
+            clean_streak: u32::decode(r)?,
+        })
+    }
+}
+
 /// A consistent snapshot of an engine run at an iteration boundary.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint<V, M> {
+    /// Global iteration the snapshot was taken at.
     pub iteration: u64,
     /// Per partition: vertex values.
     pub values: Vec<Vec<V>>,
@@ -42,9 +92,13 @@ pub struct Checkpoint<V, M> {
     /// Per partition: the scheduled local-phase frontier, in insertion
     /// order.
     pub frontier: Vec<Vec<u32>>,
+    /// Per partition: the hybrid-scheduler state (see
+    /// [`PolicyCheckpoint`]).
+    pub policy: Vec<PolicyCheckpoint>,
 }
 
 impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
+    /// Serialize with the crate's little-endian [`Codec`].
     pub fn encode_bytes(&self) -> Vec<u8> {
         let mut buf = Vec::new();
         self.iteration.encode(&mut buf);
@@ -56,10 +110,13 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
             self.local_cur[p].encode(&mut buf);
             self.local_nxt[p].encode(&mut buf);
             self.frontier[p].encode(&mut buf);
+            self.policy[p].encode(&mut buf);
         }
         buf
     }
 
+    /// Inverse of [`encode_bytes`](Self::encode_bytes); `None` on
+    /// truncated or malformed input.
     pub fn decode_bytes(mut r: &[u8]) -> Option<Self> {
         let r = &mut r;
         let iteration = u64::decode(r)?;
@@ -70,6 +127,7 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
         let mut local_cur = Vec::with_capacity(np);
         let mut local_nxt = Vec::with_capacity(np);
         let mut frontier = Vec::with_capacity(np);
+        let mut policy = Vec::with_capacity(np);
         for _ in 0..np {
             values.push(Vec::<V>::decode(r)?);
             halted.push(Vec::<bool>::decode(r)?);
@@ -77,8 +135,18 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
             local_cur.push(Vec::<(u32, Vec<M>)>::decode(r)?);
             local_nxt.push(Vec::<(u32, Vec<M>)>::decode(r)?);
             frontier.push(Vec::<u32>::decode(r)?);
+            policy.push(PolicyCheckpoint::decode(r)?);
         }
-        Some(Checkpoint { iteration, values, halted, inbox, local_cur, local_nxt, frontier })
+        Some(Checkpoint {
+            iteration,
+            values,
+            halted,
+            inbox,
+            local_cur,
+            local_nxt,
+            frontier,
+            policy,
+        })
     }
 
     /// Persist to `dir/ckpt_<iteration>.bin`.
@@ -142,6 +210,17 @@ mod tests {
             local_cur: vec![vec![], vec![(0, vec![5])]],
             local_nxt: vec![vec![(1, vec![6, 7])], vec![]],
             frontier: vec![vec![1, 0], vec![]],
+            policy: vec![
+                PolicyCheckpoint {
+                    run_local: true,
+                    cap: 16,
+                    boundary_in_local: true,
+                    preferred_boundary: true,
+                    carryover_streak: 1,
+                    clean_streak: 0,
+                },
+                PolicyCheckpoint { run_local: false, cap: 1, ..Default::default() },
+            ],
         }
     }
 
@@ -162,6 +241,9 @@ mod tests {
         assert_eq!(d.local_cur, vec![vec![], vec![(0, vec![5])]]);
         assert_eq!(d.local_nxt, vec![vec![(1, vec![6, 7])], vec![]]);
         assert_eq!(d.frontier, vec![vec![1, 0], vec![]], "insertion order kept");
+        assert_eq!(d.policy, c.policy, "scheduler state survives the roundtrip");
+        assert_eq!(d.policy[0].cap, 16);
+        assert!(!d.policy[1].run_local);
     }
 
     #[test]

@@ -11,13 +11,17 @@ use super::program::VertexProgram;
 /// them afterwards (destination may be any vertex id, not only a
 /// neighbor, as in Pregel).
 pub struct SendBuffer<M> {
+    /// (destination, message) pairs in send order.
     pub sends: Vec<(VertexId, M)>,
 }
 
 impl<M> SendBuffer<M> {
+    /// An empty buffer.
     pub fn new() -> Self {
         SendBuffer { sends: Vec::new() }
     }
+
+    /// Drop all queued sends, keeping the allocation.
     pub fn clear(&mut self) {
         self.sends.clear();
     }

@@ -21,22 +21,25 @@ use crate::graph::{DistGraph, PartGraph, VertexId};
 use crate::util::Codec;
 
 use super::messages::{MsgStore, Outbox};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
 use super::netsim::SuperstepClock;
 use super::program::{SourceCombine, VertexProgram};
 use super::state::{Frontier, PartitionRuntime};
 use super::worker::{
-    close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepTarget,
-    WorkerOut, WorkerScratch,
+    boundary_count, close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep,
+    SweepTarget, WorkerOut, WorkerScratch,
 };
 use super::{Aggregators, EngineConfig, RunResult};
 
 /// The graph-centric programming interface: a sequential algorithm over
 /// one partition per superstep.
 pub trait PartitionProgram: Sync {
+    /// Vertex value type.
     type V: Clone + Send + Sync + Codec;
+    /// Message type.
     type M: Clone + Send + Sync + Codec;
 
+    /// Initial vertex value, assigned before superstep 0.
     fn init(&self, vertex: VertexId, out_degree: u32) -> Self::V;
 
     /// One superstep of the sequential partition algorithm. Drain
@@ -57,9 +60,13 @@ pub trait PartitionProgram: Sync {
 
 /// Full-partition access handed to a [`PartitionProgram`].
 pub struct PartitionContext<'a, PP: PartitionProgram> {
+    /// This partition's topology + metadata.
     pub part: &'a PartGraph,
+    /// Current superstep counter.
     pub superstep: u64,
+    /// Vertex values by local index — mutate freely.
     pub values: &'a mut [PP::V],
+    /// voteToHalt flags by local index.
     pub halted: &'a mut [bool],
     cur: &'a mut MsgStore<PP::M>,
     nxt: &'a mut MsgStore<PP::M>,
@@ -158,6 +165,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
         .collect();
 
     let mut metrics = Metrics::default();
+    let mut trace = RunTrace::default();
     let mut clock = SuperstepClock::new();
     // the graph-centric interface has no aggregators; keep an empty
     // master set so the shared barrier fold applies unchanged
@@ -169,6 +177,11 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             let GpWorker { rt, outbox, scratch, marks } = w;
             outbox.reset();
             let scheduled = rt.begin_step();
+            let pt = PartitionStepTrace {
+                frontier: scheduled.len() as u64,
+                boundary_frontier: boundary_count(&dg.parts[p], &scheduled),
+                ..Default::default()
+            };
             let t0 = std::time::Instant::now();
             let (computations, local_messages);
             {
@@ -205,13 +218,21 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                 p,
                 outcome,
                 0,
+                pt,
             )
         });
 
-        let outboxes =
-            close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+        let outboxes = close_superstep(
+            outs,
+            &mut aggs,
+            &mut clock,
+            &cfg.net,
+            &mut metrics,
+            &mut trace,
+            |tp, tl, m| {
                 workers[tp as usize].rt.nxt.push_combined(tl as usize, m, combiner);
-            });
+            },
+        );
         for (w, ob) in workers.iter_mut().zip(outboxes) {
             w.outbox = ob;
         }
@@ -231,7 +252,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
 
     let values =
         super::gather_values_owned(dg, workers.into_iter().map(|w| w.rt.values).collect());
-    RunResult { values, metrics }
+    RunResult { values, metrics, trace }
 }
 
 /// Adapter: run a vertex-centric [`VertexProgram`] under Giraph++
@@ -240,7 +261,9 @@ pub fn run_giraphpp<PP: PartitionProgram>(
 /// within the same superstep. The sweep itself is the shared worker body
 /// (`super::worker::Sweep` with `LocalRoute::ThisSweep`).
 pub struct VertexSweep<P: VertexProgram> {
+    /// The wrapped vertex-centric program.
     pub program: P,
+    /// Seed for per-vertex randomness.
     pub seed: u64,
 }
 

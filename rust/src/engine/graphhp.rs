@@ -27,6 +27,35 @@
 //! Distributed synchronization + communication happen once per global
 //! iteration — the whole point of the hybrid model.
 //!
+//! # The adaptive scheduler
+//!
+//! Under [`super::HybridPolicy::Adaptive`] the phase structure above is
+//! driven per partition and per iteration by the run's own telemetry
+//! ([`super::RunTrace`]). At every barrier the engine thread folds the
+//! workers' trace records in partition order and updates one
+//! per-partition policy (`PartitionPolicy`):
+//!
+//! - **pseudo-superstep cap** — doubles while the local frontier is
+//!   shrinking geometrically (the phase is converging: give it room to
+//!   finish in-memory, even when the cap truncated it), halves on a
+//!   carryover whose frontier had stopped shrinking (the phase is
+//!   burning sweeps without quiescing, stalling the barrier for every
+//!   other partition);
+//! - **boundary participation** — seeded from the partition's static
+//!   locality score; shed after two consecutive carryovers (boundary
+//!   work is thrashing the local phase), restored after two clean
+//!   iterations;
+//! - **local-phase skip** — the next iteration's local phase is skipped
+//!   entirely while the partition's frontier is boundary-dominated and
+//!   it ended the turn with zero local backlog (nothing scheduled, no
+//!   buffered in-partition mail), so a pure boundary relay partition
+//!   stops paying the per-iteration step transaction.
+//!
+//! Every decision is a pure function of the trace's deterministic
+//! counters — never of measured time — so threaded runs remain
+//! bit-for-bit identical to sequential ones
+//! (`tests/parallel_equivalence.rs` covers the adaptive policy too).
+//!
 //! The per-vertex body of all three sweeps (init / global / local) is
 //! the shared `super::worker::Sweep`; this file keeps only the phase
 //! structure and the hybrid routing policy. Partitions run as parallel
@@ -35,18 +64,141 @@
 use std::collections::BTreeSet;
 
 use crate::graph::{DistGraph, PartGraph};
+use crate::partition::stats::partition_localities;
 
 use super::aggregator::Aggregators;
+use super::checkpoint::PolicyCheckpoint;
 use super::messages::{MsgStore, Outbox};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
 use super::netsim::SuperstepClock;
 use super::program::VertexProgram;
 use super::state::{Frontier, PartitionRuntime};
 use super::worker::{
-    close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepOutcome,
-    SweepTarget, WorkerOut, WorkerScratch,
+    boundary_count, close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep,
+    SweepOutcome, SweepTarget, WorkerOut, WorkerScratch,
 };
-use super::{EngineConfig, RunResult};
+use super::{AdaptiveConfig, EngineConfig, HybridPolicy, RunResult};
+
+/// Per-partition scheduling state: what the worker reads for its next
+/// turn (`run_local` / `cap` / `boundary_in_local`) plus the counters
+/// the adaptive controller folds at each barrier. Static policies build
+/// one fixed instance per partition and never touch it again.
+///
+/// This IS the checkpoint type: checkpoints persist the policies
+/// verbatim, so there is no field-by-field conversion to drift out of
+/// sync — adding controller state automatically makes it recoverable
+/// (the `Codec` impl in `checkpoint.rs` is the one thing to extend).
+type PartitionPolicy = PolicyCheckpoint;
+
+impl PolicyCheckpoint {
+    /// Fixed policy (the `Static` variant): the paper's hand-tuned knobs.
+    fn fixed(boundary_in_local: bool, cap: u64) -> Self {
+        PartitionPolicy {
+            run_local: true,
+            cap,
+            boundary_in_local,
+            preferred_boundary: boundary_in_local,
+            carryover_streak: 0,
+            clean_streak: 0,
+        }
+    }
+
+    /// Initial adaptive state, seeded from the partition's static
+    /// locality score (`partition/stats.rs`). Degenerate configs
+    /// (`max_cap < min_cap`, zeros) are sanitized rather than panicking:
+    /// the floor wins, and `Limits::max_pseudo_supersteps` always
+    /// dominates.
+    fn initial(acfg: &AdaptiveConfig, locality: f64, limit_cap: u64) -> Self {
+        let boundary = locality >= acfg.locality_threshold;
+        let floor = acfg.min_cap.max(1);
+        let ceil = acfg.max_cap.max(floor);
+        PartitionPolicy {
+            run_local: true,
+            cap: acfg.initial_cap.clamp(floor, ceil).min(limit_cap),
+            boundary_in_local: boundary,
+            preferred_boundary: boundary,
+            carryover_streak: 0,
+            clean_streak: 0,
+        }
+    }
+
+    /// Fold one iteration's telemetry record into the policy — a pure
+    /// function of the deterministic counter fields (`compute_us` is
+    /// wall-clock and must never be read here).
+    fn adapt(&mut self, acfg: &AdaptiveConfig, t: &PartitionStepTrace, limit_cap: u64) {
+        // every path keeps the cap within [1, limit_cap]: the engine-level
+        // Limits::max_pseudo_supersteps always dominates the adaptive range
+        let grow = |cap: u64| cap.saturating_mul(2).min(acfg.max_cap).min(limit_cap).max(1);
+        if t.carryover {
+            // after a carryover `local_frontier_last` is the ROLLED-BACK
+            // worklist, so shrinkage is measurable from a single executed
+            // sweep — without this, cap 1 would be an absorbing state
+            // (one sweep can never satisfy a two-sweep shrink test and
+            // the cap could never grow back out)
+            let shrinking = t.pseudo_supersteps >= 1
+                && t.local_frontier_last * 2 <= t.local_frontier_first;
+            if shrinking {
+                // truncated while still converging: the cap was the only
+                // thing standing between this phase and quiescence —
+                // give it room instead of punishing it
+                self.cap = grow(self.cap);
+                self.carryover_streak = 0;
+            } else {
+                // truncated with a flat frontier: the phase is burning
+                // sweeps without converging and stalling the barrier for
+                // every other partition — halve the cap
+                self.cap = (self.cap / 2).max(acfg.min_cap.max(1)).min(limit_cap).max(1);
+                self.carryover_streak += 1;
+            }
+            self.clean_streak = 0;
+        } else {
+            // clean completion: grow the cap while the local frontier
+            // kept shrinking geometrically across the executed sweeps —
+            // more headroom converts future global iterations into
+            // in-memory pseudo-supersteps
+            let shrinking = t.pseudo_supersteps >= 2
+                && t.local_frontier_last * 2 <= t.local_frontier_first;
+            if shrinking {
+                self.cap = grow(self.cap);
+            }
+            self.carryover_streak = 0;
+            self.clean_streak = self.clean_streak.saturating_add(1);
+        }
+        if self.carryover_streak >= 2 {
+            self.boundary_in_local = false;
+        } else if self.clean_streak >= 2 {
+            self.boundary_in_local = self.preferred_boundary;
+        }
+        // skip the next local phase only when this turn proved there is
+        // nothing local to do (zero backlog) and the frontier is
+        // boundary-dominated; any backlog forces the phase back on, so a
+        // skipped partition can never strand carried-over work
+        self.run_local = !(t.local_backlog == 0
+            && t.frontier > 0
+            && t.boundary_frontier as f64 >= acfg.boundary_dominance * t.frontier as f64);
+    }
+}
+
+/// One policy per partition from the configured [`HybridPolicy`]:
+/// constant knobs for `Static`, locality-seeded initial state for
+/// `Adaptive`. Also used to rebuild policies on a restart-from-scratch
+/// recovery, so a restarted run begins from exactly the same state as a
+/// fresh one.
+fn build_policies(
+    hybrid: &HybridPolicy,
+    locality: &[f64],
+    limit_cap: u64,
+) -> Vec<PartitionPolicy> {
+    locality
+        .iter()
+        .map(|&score| match hybrid {
+            HybridPolicy::Static { boundary_in_local_phase, .. } => {
+                PartitionPolicy::fixed(*boundary_in_local_phase, limit_cap)
+            }
+            HybridPolicy::Adaptive(a) => PartitionPolicy::initial(a, score, limit_cap),
+        })
+        .collect()
+}
 
 /// Per-partition state of the hybrid engine: the shared
 /// [`PartitionRuntime`] carries the local-phase inboxes/frontier, plus
@@ -92,13 +244,22 @@ pub fn run_graphhp<P: VertexProgram>(
     let mut parts: Vec<HpPart<P>> =
         dg.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
     let mut metrics = Metrics::default();
+    let mut trace = RunTrace::default();
     let mut clock = SuperstepClock::new();
     let mut aggs = Aggregators::new(
         (0..program.num_aggregators()).map(|i| program.aggregator_op(i)).collect(),
     );
     let combiner = program.combiner();
     let source_combine = program.source_combine();
-    let boundary_in_local = cfg.hybrid.boundary_in_local_phase;
+
+    // ---- hybrid policy: fixed knobs or the adaptive controller ------
+    trace.partition_locality = partition_localities(dg).iter().map(|l| l.score()).collect();
+    let limit_cap = cfg.limits.max_pseudo_supersteps.max(1);
+    let (adaptive, async_local) = match &cfg.hybrid {
+        HybridPolicy::Static { async_local_messaging, .. } => (None, *async_local_messaging),
+        HybridPolicy::Adaptive(a) => (Some(a), a.async_local_messaging),
+    };
+    let mut policies = build_policies(&cfg.hybrid, &trace.partition_locality, limit_cap);
 
     let mut iteration: u64 = 0;
     let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
@@ -118,6 +279,7 @@ pub fn run_graphhp<P: VertexProgram>(
                 local_cur: parts.iter_mut().map(|hp| hp.rt.cur.export()).collect(),
                 local_nxt: parts.iter_mut().map(|hp| hp.rt.nxt.export()).collect(),
                 frontier: parts.iter().map(|hp| hp.rt.frontier.snapshot()).collect(),
+                policy: policies.clone(),
             };
             if let Some(dir) = &cfg.fault.checkpoint_dir {
                 let _ = ckpt.save(dir);
@@ -131,7 +293,10 @@ pub fn run_graphhp<P: VertexProgram>(
             match &last_ckpt {
                 Some(ckpt) => {
                     // worker lost: reassign its partitions and roll every
-                    // worker back to the latest consistent checkpoint
+                    // worker back to the latest consistent checkpoint —
+                    // including the scheduler state, so the replay runs
+                    // under exactly the policies the checkpointed run
+                    // had (not ones adapted by the aborted timeline)
                     for (p, hp) in parts.iter_mut().enumerate() {
                         let n = hp.rt.num_vertices();
                         hp.rt.values = ckpt.values[p].clone();
@@ -142,26 +307,40 @@ pub fn run_graphhp<P: VertexProgram>(
                         hp.gq_cur = MsgStore::restore(n, &ckpt.inbox[p]);
                         hp.gq_nxt = MsgStore::new(n);
                     }
+                    // cap floored at 1 defensively: a hand-edited on-disk
+                    // checkpoint with cap 0 would abort every local step
+                    policies = ckpt
+                        .policy
+                        .iter()
+                        .map(|pol| PolicyCheckpoint { cap: pol.cap.max(1), ..*pol })
+                        .collect();
                     iteration = ckpt.iteration;
                 }
                 None => {
-                    // no checkpoint yet: restart from scratch
+                    // no checkpoint yet: restart from scratch, scheduler
+                    // state included
                     parts = dg.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
+                    policies =
+                        build_policies(&cfg.hybrid, &trace.partition_locality, limit_cap);
                     iteration = 0;
                 }
             }
         }
 
+        let policies_ref = &policies;
         let outs = run_workers(cfg.parallelism, &mut parts, |p, hp| {
             let HpPart { rt, gq_cur, gq_nxt, outbox, scratch, marks } = hp;
             let part = &dg.parts[p];
+            let policy = &policies_ref[p];
+            let boundary_in_local = policy.boundary_in_local;
             outbox.reset();
             let mut wagg = aggs.clone();
             let t0 = std::time::Instant::now();
             let mut outcome = SweepOutcome::default();
             let mut steps: u64 = 0;
+            let mut pt = PartitionStepTrace::default();
 
-            let local_route = if cfg.hybrid.async_local_messaging {
+            let local_route = if async_local {
                 LocalRoute::ThisSweep
             } else {
                 LocalRoute::NextSweep
@@ -191,6 +370,8 @@ pub fn run_graphhp<P: VertexProgram>(
                 // boundary && !halted rule), participants in the next
                 // local phase (Reschedule::Participants).
                 let worklist: BTreeSet<u32> = (0..part.num_vertices() as u32).collect();
+                pt.frontier = worklist.len() as u64;
+                pt.boundary_frontier = part.num_boundary() as u64;
                 let oc = mk_sweep(LocalRoute::NextSweep, Reschedule::Participants).run(
                     worklist,
                     SweepTarget {
@@ -220,6 +401,8 @@ pub fn run_graphhp<P: VertexProgram>(
                         worklist.insert(lv as u32);
                     }
                 }
+                pt.frontier = worklist.len() as u64;
+                pt.boundary_frontier = boundary_count(part, &worklist);
                 let resched =
                     if boundary_in_local { Reschedule::Active } else { Reschedule::Never };
                 let oc = mk_sweep(LocalRoute::NextSweep, resched).run(
@@ -241,61 +424,104 @@ pub fn run_graphhp<P: VertexProgram>(
                 steps += 1;
 
                 // ---- local phase: pseudo-supersteps until quiescence --
-                // a cap of 0 would abort every phase before its first
-                // sweep (zero progress, spin to max_iterations): floor 1
-                let cap = cfg.limits.max_pseudo_supersteps.max(1);
-                let mut pseudo_steps: u64 = 0;
-                loop {
-                    let taken = rt.begin_step();
-                    let mut worklist: BTreeSet<u32> = taken.into_iter().collect();
-                    for lv in rt.cur.pending() {
-                        worklist.insert(lv);
-                    }
-                    if worklist.is_empty() {
+                // (or skipped wholesale by the adaptive scheduler when
+                // this partition proved boundary-dominated and backlog-
+                // free last iteration)
+                if policy.run_local {
+                    // a cap of 0 would abort every phase before its first
+                    // sweep (zero progress, spin to max_iterations):
+                    // PartitionPolicy keeps its cap floored at 1
+                    let cap = policy.cap;
+                    let mut pseudo_steps: u64 = 0;
+                    loop {
+                        let taken = rt.begin_step();
+                        let mut worklist: BTreeSet<u32> = taken.into_iter().collect();
+                        for lv in rt.cur.pending() {
+                            worklist.insert(lv);
+                        }
+                        if worklist.is_empty() {
+                            rt.commit_step();
+                            break;
+                        }
+                        if pseudo_steps >= cap {
+                            // cap hit with work remaining: roll the step
+                            // back so the frontier and in-flight mail
+                            // carry over to the next iteration's local
+                            // phase — nothing is dropped, nothing strands
+                            // in the wrong inbox. Record the rolled-back
+                            // worklist as the final frontier sample so
+                            // the controller can tell a converging
+                            // truncation from thrash even at cap 1.
+                            pt.local_frontier_last = worklist.len() as u64;
+                            rt.abort_step_carryover(worklist);
+                            pt.carryover = true;
+                            break;
+                        }
+                        pseudo_steps += 1;
+                        if pseudo_steps == 1 {
+                            pt.local_frontier_first = worklist.len() as u64;
+                        }
+                        pt.local_frontier_last = worklist.len() as u64;
+                        let oc = mk_sweep(local_route, Reschedule::Active).run(
+                            worklist,
+                            rt.sweep_target(),
+                            Some(&mut *gq_nxt),
+                            outbox,
+                            &mut wagg,
+                            scratch,
+                            marks,
+                        );
                         rt.commit_step();
-                        break;
+                        merge(&mut outcome, oc);
+                        steps += 1;
                     }
-                    if pseudo_steps >= cap {
-                        // cap hit with work remaining: roll the step back
-                        // so the frontier and in-flight mail carry over
-                        // to the next iteration's local phase — nothing
-                        // is dropped, nothing strands in the wrong inbox
-                        rt.abort_step_carryover(worklist);
-                        break;
-                    }
-                    pseudo_steps += 1;
-                    let oc = mk_sweep(local_route, Reschedule::Active).run(
-                        worklist,
-                        rt.sweep_target(),
-                        Some(&mut *gq_nxt),
-                        outbox,
-                        &mut wagg,
-                        scratch,
-                        marks,
-                    );
-                    rt.commit_step();
-                    merge(&mut outcome, oc);
-                    steps += 1;
+                    pt.pseudo_supersteps = pseudo_steps;
+                } else {
+                    pt.local_phase_skipped = true;
                 }
             }
+
+            // local work left at the end of the turn: the signal that
+            // gates the adaptive local-phase skip (and a carryover probe)
+            pt.local_backlog = rt.frontier.len() as u64
+                + rt.cur.total_messages() as u64
+                + rt.nxt.total_messages() as u64;
 
             // GraphHP's SourceCombine applies to messages buffered across
             // the iteration boundary (subsumed by a full combiner)
             outbox.seal(source_combine);
 
             let compute = cfg.net.scale_compute(t0.elapsed());
-            WorkerOut::new(std::mem::take(outbox), wagg, compute, p, outcome, steps)
+            WorkerOut::new(std::mem::take(outbox), wagg, compute, p, outcome, steps, pt)
         });
 
         // ---- barrier: one distributed synchronization per iteration;
         // remote mail lands with receiver-side combining
-        let outboxes =
-            close_superstep(outs, &mut aggs, &mut clock, &cfg.net, &mut metrics, |tp, tl, m| {
+        let outboxes = close_superstep(
+            outs,
+            &mut aggs,
+            &mut clock,
+            &cfg.net,
+            &mut metrics,
+            &mut trace,
+            |tp, tl, m| {
                 parts[tp as usize].gq_nxt.push_combined(tl as usize, m, combiner);
-            });
+            },
+        );
         for (hp, ob) in parts.iter_mut().zip(outboxes) {
             hp.outbox = ob;
         }
+
+        // ---- adaptive barrier update: fold the just-recorded counters
+        // into each partition's policy, in partition order on the engine
+        // thread — deterministic regardless of worker interleaving
+        if let Some(acfg) = adaptive {
+            let step = trace.steps.last().expect("barrier just recorded a step");
+            for (policy, ptrace) in policies.iter_mut().zip(&step.partitions) {
+                policy.adapt(acfg, ptrace, limit_cap);
+            }
+        }
+
         metrics.global_iterations += 1;
         iteration += 1;
 
@@ -315,7 +541,7 @@ pub fn run_graphhp<P: VertexProgram>(
 
     let values =
         super::gather_values_owned(dg, parts.into_iter().map(|hp| hp.rt.values).collect());
-    RunResult { values, metrics }
+    RunResult { values, metrics, trace }
 }
 
 #[cfg(test)]
@@ -387,7 +613,7 @@ mod tests {
         let a = hash_partition(&g, 3);
         let dg = DistGraph::new(&g, &a, 3);
         let mut cfg = EngineConfig::default();
-        cfg.hybrid.boundary_in_local_phase = false;
+        cfg.hybrid.set_boundary_in_local_phase(false);
         let r = run_graphhp(&MinLabel, &dg, &cfg);
         assert!(r.values.iter().all(|&v| v == 0), "label must reach all");
     }
@@ -398,7 +624,7 @@ mod tests {
         let a = hash_partition(&g, 3);
         let dg = DistGraph::new(&g, &a, 3);
         let mut cfg = EngineConfig::default();
-        cfg.hybrid.async_local_messaging = false;
+        cfg.hybrid.set_async_local_messaging(false);
         let r = run_graphhp(&MinLabel, &dg, &cfg);
         assert!(r.values.iter().all(|&v| v == 0));
     }
@@ -485,6 +711,193 @@ mod tests {
         );
     }
 
+    // ------------------------------------------------- adaptive policy
+
+    #[test]
+    fn adaptive_matches_static_fixed_point() {
+        let g = generators::connected(300, 120, 29);
+        let a = metis_partition(&g, 4, &MetisConfig::default());
+        let dg = DistGraph::new(&g, &a, 4);
+        let stat = run_graphhp(&MinLabel, &dg, &EngineConfig::default());
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid = super::super::HybridPolicy::adaptive();
+        let adp = run_graphhp(&MinLabel, &dg, &cfg);
+        assert_eq!(stat.values, adp.values, "confluent program: same fixed point");
+        assert!(adp.values.iter().all(|&v| v == 0));
+    }
+
+    #[test]
+    fn adaptive_trace_records_locality_and_steps() {
+        let g = generators::connected(200, 80, 31);
+        let a = hash_partition(&g, 4);
+        let dg = DistGraph::new(&g, &a, 4);
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid = super::super::HybridPolicy::adaptive();
+        let r = run_graphhp(&MinLabel, &dg, &cfg);
+        assert_eq!(r.trace.partition_locality.len(), 4);
+        assert!(r.trace.partition_locality.iter().all(|&s| (0.0..=1.0).contains(&s)));
+        assert_eq!(r.trace.iterations(), r.metrics.global_iterations);
+        for s in &r.trace.steps {
+            assert_eq!(s.partitions.len(), 4, "one record per partition per step");
+        }
+    }
+
+    /// CountTo needs `target` pseudo-supersteps per vertex; a tiny
+    /// initial cap forces carryovers, the controller halves/doubles
+    /// around them, and the run must still reach the exact fixed point.
+    #[test]
+    fn adaptive_cap_carryover_converges_exactly() {
+        let g = generators::connected(120, 50, 37);
+        let a = hash_partition(&g, 3);
+        let dg = DistGraph::new(&g, &a, 3);
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid = super::super::HybridPolicy::Adaptive(super::super::AdaptiveConfig {
+            initial_cap: 1,
+            ..Default::default()
+        });
+        cfg.limits.max_iterations = 300;
+        let r = run_graphhp(&CountTo { target: 12 }, &dg, &cfg);
+        assert!(r.values.iter().all(|&v| v == 12), "carryover must lose nothing");
+        assert!(r.metrics.global_iterations < 300, "no livelock");
+        assert!(
+            r.trace.carryover_events() > 0,
+            "a cap of 1 against 12 required sweeps must carry over at least once"
+        );
+    }
+
+    /// The controller's rules, exercised directly: grow the cap while
+    /// the local frontier shrinks geometrically (even across a
+    /// carryover), halve it on a flat-frontier carryover, shed boundary
+    /// participation after two consecutive thrashing carryovers and
+    /// restore it after two clean iterations, skip the local phase on a
+    /// backlog-free boundary-dominated frontier.
+    #[test]
+    fn adaptive_controller_rules() {
+        let acfg = super::super::AdaptiveConfig::default();
+        let mut pol = PartitionPolicy::initial(&acfg, 0.9, 1 << 20);
+        assert!(pol.boundary_in_local, "high locality starts boundary-in-local");
+        assert_eq!(pol.cap, 64);
+
+        // shrinking local frontier (100 -> 10 over 3 sweeps): cap doubles
+        let shrinking = PartitionStepTrace {
+            frontier: 10,
+            boundary_frontier: 1,
+            pseudo_supersteps: 3,
+            local_frontier_first: 100,
+            local_frontier_last: 10,
+            local_backlog: 5,
+            ..Default::default()
+        };
+        pol.adapt(&acfg, &shrinking, 1 << 20);
+        assert_eq!(pol.cap, 128);
+        assert!(pol.run_local);
+
+        // a carryover that was still shrinking: the cap grows instead of
+        // shrinking — the phase only needed more room
+        let converging_carry =
+            PartitionStepTrace { carryover: true, local_backlog: 50, ..shrinking.clone() };
+        pol.adapt(&acfg, &converging_carry, 1 << 20);
+        assert_eq!(pol.cap, 256, "shrinking carryover grows the cap");
+        assert!(pol.boundary_in_local);
+
+        // flat-frontier (thrashing) carryovers: cap halves each time,
+        // boundary participation sheds after two in a row
+        let thrash = PartitionStepTrace {
+            carryover: true,
+            pseudo_supersteps: 3,
+            local_frontier_first: 100,
+            local_frontier_last: 100,
+            local_backlog: 50,
+            frontier: 10,
+            boundary_frontier: 1,
+            ..Default::default()
+        };
+        pol.adapt(&acfg, &thrash, 1 << 20);
+        assert_eq!(pol.cap, 128);
+        assert!(pol.boundary_in_local, "one thrash is not yet a streak");
+        pol.adapt(&acfg, &thrash, 1 << 20);
+        assert_eq!(pol.cap, 64);
+        assert!(!pol.boundary_in_local, "two consecutive thrashes shed boundary work");
+
+        // two clean iterations: the locality-preferred setting returns
+        let clean = PartitionStepTrace { pseudo_supersteps: 1, ..Default::default() };
+        pol.adapt(&acfg, &clean, 1 << 20);
+        pol.adapt(&acfg, &clean, 1 << 20);
+        assert!(pol.boundary_in_local, "clean streak restores the preference");
+
+        // boundary-dominated frontier with zero backlog: skip the phase
+        let dominated = PartitionStepTrace {
+            frontier: 10,
+            boundary_frontier: 10,
+            local_backlog: 0,
+            ..Default::default()
+        };
+        pol.adapt(&acfg, &dominated, 1 << 20);
+        assert!(!pol.run_local, "boundary-dominated + no backlog => skip");
+        // any backlog re-enables it — carried-over work can never strand
+        let backlogged = PartitionStepTrace { local_backlog: 1, ..dominated.clone() };
+        pol.adapt(&acfg, &backlogged, 1 << 20);
+        assert!(pol.run_local, "backlog forces the local phase back on");
+
+        // cap 1 must not be absorbing: a single executed sweep whose
+        // rolled-back worklist halved still reads as converging, so the
+        // cap grows back out (regression: the old two-sweep shrink test
+        // could never pass at cap 1)
+        let mut stuck = PartitionPolicy::initial(&acfg, 0.9, 1 << 20);
+        stuck.cap = 1;
+        let one_sweep_converging = PartitionStepTrace {
+            carryover: true,
+            pseudo_supersteps: 1,
+            local_frontier_first: 100,
+            local_frontier_last: 40,
+            local_backlog: 40,
+            ..Default::default()
+        };
+        stuck.adapt(&acfg, &one_sweep_converging, 1 << 20);
+        assert_eq!(stuck.cap, 2, "cap 1 escapes via the rolled-back worklist sample");
+        stuck.adapt(&acfg, &one_sweep_converging, 1 << 20);
+        assert_eq!(stuck.cap, 4);
+
+        // the cap never leaves [min_cap, min(max_cap, limit)]
+        let mut low = PartitionPolicy::initial(&acfg, 0.0, 4);
+        assert_eq!(low.cap, 4, "limit clamps the initial cap");
+        assert!(!low.boundary_in_local, "low locality starts boundary-out");
+        for _ in 0..10 {
+            low.adapt(&acfg, &thrash, 4);
+        }
+        assert_eq!(low.cap, 1, "floored at min_cap");
+        for _ in 0..10 {
+            low.adapt(&acfg, &shrinking, 4);
+        }
+        assert_eq!(low.cap, 4, "clamped by the limits cap");
+    }
+
+    /// A fully boundary-dominated partition (alternating 2-partition
+    /// split of a path: every vertex has a remote in-edge) with zero
+    /// local backlog must get its local phase skipped by the scheduler.
+    #[test]
+    fn adaptive_skips_local_phase_when_boundary_dominated() {
+        let mut b = crate::graph::GraphBuilder::new(12);
+        for v in 0..11u32 {
+            b.add_undirected(v, v + 1, 1.0);
+        }
+        let g = b.build();
+        let assignment: Vec<u32> = (0..12).map(|v| v % 2).collect();
+        let dg = DistGraph::new(&g, &assignment, 2);
+        assert_eq!(dg.num_boundary(), 12, "alternating split: all boundary");
+        let mut cfg = EngineConfig::default();
+        cfg.hybrid = super::super::HybridPolicy::adaptive();
+        let r = run_graphhp(&MinLabel, &dg, &cfg);
+        assert!(r.values.iter().all(|&v| v == 0), "still correct");
+        assert!(
+            r.trace.skipped_local_phases() > 0,
+            "all-boundary partitions must skip local phases: {}",
+            r.trace.to_json()
+        );
+        // and the low locality seeds boundary_in_local = false
+        assert!(r.trace.partition_locality.iter().all(|&s| s < 0.5));
+    }
+
     /// Sync-mode local messaging takes the NextSweep route, which is the
     /// path that parks mail in `nxt` — exactly what the old cap break
     /// stranded. Cover it too.
@@ -494,7 +907,7 @@ mod tests {
         let a = hash_partition(&g, 3);
         let dg = DistGraph::new(&g, &a, 3);
         let mut cfg = EngineConfig::default();
-        cfg.hybrid.async_local_messaging = false;
+        cfg.hybrid.set_async_local_messaging(false);
         cfg.limits.max_pseudo_supersteps = 1;
         cfg.limits.max_iterations = 500;
         let r = run_graphhp(&MinLabel, &dg, &cfg);

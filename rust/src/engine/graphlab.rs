@@ -32,7 +32,7 @@ use std::time::Duration;
 
 use crate::graph::{DistGraph, VertexId};
 
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
 use super::netsim::SuperstepClock;
 use super::state::{FifoScheduler, Frontier};
 use super::worker::run_workers;
@@ -44,15 +44,18 @@ use super::{EngineConfig, RunResult};
 /// on parallel worker threads (values are read from a shared snapshot;
 /// accumulators stay worker-local).
 pub trait GasProgram: Sync {
+    /// Vertex value type.
     type V: Clone + Send + Sync;
     /// Gather accumulator.
     type G: Clone + Send;
 
+    /// Initial vertex value.
     fn init(&self, vertex: VertexId, out_degree: u32) -> Self::V;
 
     /// Contribution of in-neighbor `src` along an edge of weight `w`.
     fn gather(&self, src_value: &Self::V, src_out_degree: u32, w: f32) -> Self::G;
 
+    /// Combine two gather contributions (commutative + associative).
     fn merge(&self, a: Self::G, b: Self::G) -> Self::G;
 
     /// Apply the accumulated gather; return `true` when the change is
@@ -174,6 +177,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
     let mut values: Vec<P::V> =
         (0..nv).map(|v| program.init(v as VertexId, view.out_deg[v])).collect();
     let mut metrics = Metrics::default();
+    let mut trace = RunTrace::default();
     let mut clock = SuperstepClock::new();
 
     // the shared scheduling structure of the push engines doubles as
@@ -251,11 +255,32 @@ pub fn run_graphlab_sync<P: GasProgram>(
 
         // fold in partition order: disjoint value writes + deterministic
         // next-round scheduling
+        let mut step = StepTrace {
+            iteration: trace.steps.len() as u64,
+            partitions: Vec::with_capacity(num_parts),
+        };
         for (p, out) in outs.into_iter().enumerate() {
             let comm = Duration::from_secs_f64(
                 out.remote_gathers as f64 * cfg.gas.remote_gather_us * 1e-6,
             );
             clock.record_worker_at(p, out.compute, comm);
+            let boundary = by_part[p]
+                .iter()
+                .filter(|&&v| {
+                    let (pp, lv) = dg.location[v as usize];
+                    dg.parts[pp as usize].is_boundary[lv as usize]
+                })
+                .count() as u64;
+            step.partitions.push(PartitionStepTrace {
+                partition: p as u32,
+                frontier: by_part[p].len() as u64,
+                boundary_frontier: boundary,
+                // remote gathers are the pull model's cross-partition
+                // traffic analogue (the paper leaves M blank here)
+                network_messages: out.remote_gathers,
+                compute_us: out.compute.as_micros() as u64,
+                ..Default::default()
+            });
             for (v, newv, significant) in out.updates {
                 values[v as usize] = newv;
                 metrics.vertex_computations += 1;
@@ -266,13 +291,14 @@ pub fn run_graphlab_sync<P: GasProgram>(
                 }
             }
         }
+        trace.steps.push(step);
         clock.barrier(&cfg.net, &mut metrics);
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         rounds += 1;
     }
 
-    RunResult { values, metrics }
+    RunResult { values, metrics, trace }
 }
 
 /// Asynchronous GraphLab: FIFO vertex scheduler, immediate visibility,
@@ -341,7 +367,9 @@ pub fn run_graphlab_async<P: GasProgram>(
     // async has no superstep counter; report updates/nv as a pseudo count
     metrics.global_iterations = 0;
 
-    RunResult { values, metrics }
+    // async has no barriers either, so there is nothing to trace per
+    // superstep — the trace stays empty by design
+    RunResult { values, metrics, trace: RunTrace::default() }
 }
 
 #[cfg(test)]

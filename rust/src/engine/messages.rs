@@ -51,6 +51,7 @@ pub struct MsgStore<M> {
 }
 
 impl<M> MsgStore<M> {
+    /// An empty store for a partition of `n` local vertices.
     pub fn new(n: usize) -> Self {
         MsgStore {
             slots: Vec::new(),
@@ -122,6 +123,7 @@ impl<M> MsgStore<M> {
         }
     }
 
+    /// True when local vertex `lv` has pending messages.
     pub fn has_messages(&self, lv: usize) -> bool {
         self.flagged[lv]
     }
@@ -158,11 +160,14 @@ impl<M> MsgStore<M> {
         self.nonempty.clone()
     }
 
+    /// True when no vertex has pending messages (compacts the lazy
+    /// index).
     pub fn is_empty(&mut self) -> bool {
         self.nonempty.retain(|&lv| self.flagged[lv as usize]);
         self.nonempty.is_empty()
     }
 
+    /// Buffered message count across all vertices.
     pub fn total_messages(&self) -> usize {
         self.total
     }
@@ -173,6 +178,8 @@ impl<M> MsgStore<M> {
         self.slots.len()
     }
 
+    /// Drop every pending message, recycling the slots (checkpoint
+    /// recovery).
     pub fn clear(&mut self) {
         for lv in std::mem::take(&mut self.nonempty) {
             let lv = lv as usize;
@@ -259,6 +266,7 @@ impl<M> Default for Outbox<M> {
 }
 
 impl<M: Clone + Codec> Outbox<M> {
+    /// An empty outbox applying `combiner` sender-side at seal.
     pub fn new(combiner: Option<fn(M, M) -> M>) -> Self {
         Outbox { combiner, ..Outbox::default() }
     }
@@ -359,6 +367,7 @@ impl<M: Clone + Codec> Outbox<M> {
         self.len
     }
 
+    /// True when nothing is queued.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }

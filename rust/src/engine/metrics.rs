@@ -1,6 +1,25 @@
-//! Execution metrics: the three quantities the paper reports for every
-//! experiment (global iterations I, network messages M, time T) plus the
-//! compute/communication/synchronization decomposition of Figure 1.
+//! Execution metrics and superstep telemetry.
+//!
+//! Two layers of observability come out of every engine run:
+//!
+//! - [`Metrics`] — the run totals: the three quantities the paper
+//!   reports for every experiment (global iterations I, network
+//!   messages M, time T) plus the compute/communication/synchronization
+//!   decomposition of Figure 1.
+//! - [`RunTrace`] — the structured per-superstep / per-partition trace:
+//!   one [`StepTrace`] per barrier, one [`PartitionStepTrace`] per
+//!   worker turn, recording frontier occupancy, boundary composition,
+//!   pseudo-superstep counts, local-vs-network message split, carryover
+//!   events and per-worker compute time. The trace is what the adaptive
+//!   hybrid scheduler ([`super::HybridPolicy::Adaptive`]) consumes
+//!   online, and what `graphhp run --trace out.json` dumps for offline
+//!   tuning.
+//!
+//! Determinism contract: every **counter** field of the trace is a pure
+//! function of the computation (identical between sequential and
+//! threaded runs); the **timing** field (`compute_us`) is measured
+//! wall-clock and is reporting-only — the adaptive scheduler must never
+//! read it.
 
 use std::time::Duration;
 
@@ -79,6 +98,181 @@ impl Metrics {
     }
 }
 
+/// One partition's telemetry for one barrier-delimited worker turn.
+///
+/// All counter fields are deterministic (threaded ≡ sequential);
+/// `compute_us` is measured wall-clock and is **reporting-only** — no
+/// scheduling decision may depend on it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PartitionStepTrace {
+    /// Partition (= worker) index.
+    pub partition: u32,
+    /// Worklist size of the barrier-level sweep (the global phase for
+    /// GraphHP, the whole superstep for the BSP engines, the scheduled
+    /// set for Giraph++, the active set for GraphLab-sync rounds).
+    pub frontier: u64,
+    /// Boundary vertices (Definition 1) in that worklist.
+    pub boundary_frontier: u64,
+    /// Local-phase pseudo-supersteps executed this turn (GraphHP only;
+    /// 0 for the single-sweep engines).
+    pub pseudo_supersteps: u64,
+    /// Worklist size of the first local pseudo-superstep (0 when the
+    /// local phase did not run).
+    pub local_frontier_first: u64,
+    /// Final local frontier sample: the last executed pseudo-superstep's
+    /// worklist, or — after a carryover — the size of the rolled-back
+    /// worklist (so shrinkage is measurable even when only one sweep
+    /// ran before the cap hit).
+    pub local_frontier_last: u64,
+    /// Messages delivered in memory within the partition this turn.
+    pub local_messages: u64,
+    /// Messages this worker sent across the (simulated) network this
+    /// turn, after sender-side combining. (GraphLab-sync reports remote
+    /// gathers here — its cross-partition traffic analogue.)
+    pub network_messages: u64,
+    /// Local work left when the turn ended: scheduled frontier entries
+    /// plus buffered in-partition mail. Non-zero after a cap-truncated
+    /// (carryover) local phase; the adaptive scheduler only skips a
+    /// partition's local phase while this is 0.
+    pub local_backlog: u64,
+    /// The local phase hit the pseudo-superstep cap and was rolled back
+    /// with carryover (`PartitionRuntime::abort_step_carryover`).
+    pub carryover: bool,
+    /// The adaptive scheduler decided not to run the local phase at all
+    /// this iteration.
+    pub local_phase_skipped: bool,
+    /// Scaled compute time of this worker's turn in microseconds.
+    /// Wall-clock: varies run to run, never a policy input.
+    pub compute_us: u64,
+}
+
+/// Telemetry of one barrier synchronization across all partitions.
+#[derive(Clone, Debug, Default)]
+pub struct StepTrace {
+    /// Execution-order index of the barrier (0-based). After a simulated
+    /// failure recovery the re-executed iterations appear as additional
+    /// entries, so this counts barriers actually run, not logical
+    /// iteration numbers.
+    pub iteration: u64,
+    /// Per-partition records, in partition order.
+    pub partitions: Vec<PartitionStepTrace>,
+}
+
+/// Structured per-superstep / per-partition trace of one engine run.
+///
+/// Returned on every [`super::RunResult`]; dump it as JSON with
+/// [`RunTrace::to_json`] (the CLI's `--trace out.json`). The GraphHP
+/// engine also fills [`partition_locality`](Self::partition_locality)
+/// from [`crate::partition::stats::partition_localities`] — the static
+/// score that seeds the adaptive scheduler's initial per-partition
+/// state.
+///
+/// ```
+/// use graphhp::algorithms::Wcc;
+/// use graphhp::engine::{EngineKind, Runner};
+/// use graphhp::graph::generators;
+///
+/// let g = generators::connected(60, 30, 7);
+/// let r = Runner::new(&g).partitions(3).engine(EngineKind::GraphHP).run(&Wcc);
+/// assert_eq!(r.trace.iterations(), r.metrics.global_iterations);
+/// assert!(r.trace.to_json().contains("\"steps\""));
+/// ```
+///
+/// Memory: the trace keeps one [`PartitionStepTrace`] (~100 bytes) per
+/// partition per barrier for the whole run, so a run's trace footprint
+/// is `O(iterations × partitions)`. That is negligible for converging
+/// workloads; for deliberately huge iteration counts (the
+/// `max_iterations` safety valve defaults to 10⁶) bound the run or drop
+/// the trace early.
+#[derive(Clone, Debug, Default)]
+pub struct RunTrace {
+    /// Static locality score per partition (internal edges over total
+    /// incident edges, 1.0 = no cross-partition edge). Filled by the
+    /// GraphHP engine; empty for engines that don't consume it.
+    pub partition_locality: Vec<f64>,
+    /// One entry per barrier synchronization, in execution order.
+    pub steps: Vec<StepTrace>,
+}
+
+impl RunTrace {
+    /// Barriers recorded (equals `Metrics::global_iterations` for runs
+    /// without failure recovery).
+    pub fn iterations(&self) -> u64 {
+        self.steps.len() as u64
+    }
+
+    /// Total local-phase pseudo-supersteps across all steps/partitions.
+    pub fn pseudo_supersteps(&self) -> u64 {
+        self.per_partition_sum(|p| p.pseudo_supersteps)
+    }
+
+    /// Cap-truncated (carryover) local phases observed.
+    pub fn carryover_events(&self) -> u64 {
+        self.per_partition_sum(|p| u64::from(p.carryover))
+    }
+
+    /// Local phases the adaptive scheduler skipped.
+    pub fn skipped_local_phases(&self) -> u64 {
+        self.per_partition_sum(|p| u64::from(p.local_phase_skipped))
+    }
+
+    fn per_partition_sum(&self, f: impl Fn(&PartitionStepTrace) -> u64) -> u64 {
+        self.steps.iter().flat_map(|s| s.partitions.iter().map(&f)).sum()
+    }
+
+    /// Serialize the whole trace as JSON (hand-rolled — the offline
+    /// vendor set has no serde). Schema: `{"partition_locality": [..],
+    /// "steps": [{"iteration": n, "partitions": [{..counters..}]}]}`.
+    pub fn to_json(&self) -> String {
+        let mut out = String::with_capacity(256 + self.steps.len() * 128);
+        out.push_str("{\n  \"partition_locality\": [");
+        for (i, l) in self.partition_locality.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("{l}"));
+        }
+        out.push_str("],\n  \"steps\": [");
+        for (si, s) in self.steps.iter().enumerate() {
+            if si > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!("\n    {{\"iteration\": {}, \"partitions\": [", s.iteration));
+            for (pi, p) in s.partitions.iter().enumerate() {
+                if pi > 0 {
+                    out.push(',');
+                }
+                out.push_str(&format!(
+                    "\n      {{\"partition\": {}, \"frontier\": {}, \"boundary_frontier\": {}, \
+                     \"pseudo_supersteps\": {}, \"local_frontier_first\": {}, \
+                     \"local_frontier_last\": {}, \"local_messages\": {}, \
+                     \"network_messages\": {}, \"local_backlog\": {}, \"carryover\": {}, \
+                     \"local_phase_skipped\": {}, \"compute_us\": {}}}",
+                    p.partition,
+                    p.frontier,
+                    p.boundary_frontier,
+                    p.pseudo_supersteps,
+                    p.local_frontier_first,
+                    p.local_frontier_last,
+                    p.local_messages,
+                    p.network_messages,
+                    p.local_backlog,
+                    p.carryover,
+                    p.local_phase_skipped,
+                    p.compute_us,
+                ));
+            }
+            out.push_str("\n    ]}");
+        }
+        if self.steps.is_empty() {
+            out.push_str("]\n}\n");
+        } else {
+            out.push_str("\n  ]\n}\n");
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -102,5 +296,72 @@ mod tests {
         let m = Metrics::default();
         assert_eq!(m.sync_fraction(), 0.0);
         assert_eq!(m.overhead_fraction(), 0.0);
+    }
+
+    fn sample_trace() -> RunTrace {
+        RunTrace {
+            partition_locality: vec![0.75, 1.0],
+            steps: vec![
+                StepTrace {
+                    iteration: 0,
+                    partitions: vec![
+                        PartitionStepTrace {
+                            partition: 0,
+                            frontier: 5,
+                            boundary_frontier: 2,
+                            pseudo_supersteps: 3,
+                            carryover: true,
+                            ..Default::default()
+                        },
+                        PartitionStepTrace {
+                            partition: 1,
+                            frontier: 4,
+                            local_phase_skipped: true,
+                            ..Default::default()
+                        },
+                    ],
+                },
+                StepTrace {
+                    iteration: 1,
+                    partitions: vec![PartitionStepTrace {
+                        partition: 0,
+                        pseudo_supersteps: 2,
+                        ..Default::default()
+                    }],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn trace_summaries_count_across_steps_and_partitions() {
+        let t = sample_trace();
+        assert_eq!(t.iterations(), 2);
+        assert_eq!(t.pseudo_supersteps(), 5);
+        assert_eq!(t.carryover_events(), 1);
+        assert_eq!(t.skipped_local_phases(), 1);
+    }
+
+    #[test]
+    fn trace_json_contains_every_record() {
+        let j = sample_trace().to_json();
+        assert!(j.contains("\"partition_locality\": [0.75, 1]"), "{j}");
+        assert!(j.contains("\"iteration\": 1"), "{j}");
+        assert!(j.contains("\"carryover\": true"), "{j}");
+        assert!(j.contains("\"local_phase_skipped\": true"), "{j}");
+        // crude structural check: balanced braces/brackets
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(
+                j.matches(open).count(),
+                j.matches(close).count(),
+                "unbalanced {open}{close} in {j}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_trace_serializes() {
+        let j = RunTrace::default().to_json();
+        assert!(j.contains("\"steps\": []"), "{j}");
     }
 }

@@ -31,25 +31,10 @@
 //! ## Migration from the free functions
 //!
 //! The per-engine free functions still exist (the `Runner` delegates to
-//! them) but are no longer the public surface. Mapping:
-//!
-//! | old                                               | new                                                    |
-//! |---------------------------------------------------|--------------------------------------------------------|
-//! | `hama::run_hama(&p, &dg, &cfg)`                   | `Runner::from_dist(&dg).engine(EngineKind::Hama).run(&p)` |
-//! | `am_hama::run_am_hama(&p, &dg, &cfg)`             | `.engine(EngineKind::AmHama).run(&p)`                  |
-//! | `graphhp::run_graphhp(&p, &dg, &cfg)`             | `.engine(EngineKind::GraphHP).run(&p)`                 |
-//! | `giraphpp::run_giraphpp(&VertexSweep{..}, ..)`    | `.engine(EngineKind::GiraphPP).run(&p)` (auto-wrapped) |
-//! | `giraphpp::run_giraphpp(&pp, &dg, &cfg)`          | `.run_partition(&pp)`                                  |
-//! | `graphlab::run_graphlab_sync(&gp, &g, &a, k, ..)` | `.engine(EngineKind::GraphLabSync).run_gas(&gp)`       |
-//! | `graphlab::run_graphlab_async(&gp, ..)`           | `.engine(EngineKind::GraphLabAsync).run_gas(&gp)`      |
-//! | `EngineConfig { max_iterations, .. }`             | `.max_iterations(..)` / [`Limits`]                     |
-//! | `EngineConfig { boundary_in_local_phase, .. }`    | `.boundary_in_local_phase(..)` / [`HybridPolicy`]      |
-//! | `EngineConfig { checkpoint_interval, .. }`        | `.checkpoint_interval(..)` / [`FaultPolicy`]           |
-//! | `GraphLabCost` (separate argument)                | [`GasCost`], folded into `EngineConfig::gas`           |
-//! | *(new)* sequential partition loop                 | `.parallelism(..)` / `.threads(n)` / [`Parallelism`]   |
-//! | `Outbox::source_combine(policy)` + hash-order `drain()` | `Outbox::seal(policy)`, then destination-ordered `drain()` |
-//! | `begin_step()` alone (swap + frontier drain)      | step lifecycle: `begin_step` / `commit_step` / `abort_step_carryover` |
-//! | `Checkpoint { values, halted, inbox }`            | adds `local_cur` / `local_nxt` / `frontier` (local-phase carryover) |
+//! them) but are no longer the public surface. The full old → new
+//! mapping table lives in `docs/architecture.md` ("Migration map"),
+//! together with the layer map, the six-engine matrix, and the step
+//! lifecycle / message plane diagrams.
 //!
 //! # The message plane and step lifecycle
 //!
@@ -67,6 +52,18 @@
 //! (`begin_step`/`commit_step`/`abort_step_carryover`), which is what
 //! lets GraphHP's `max_pseudo_supersteps` cap truncate a local phase
 //! without losing frontier entries or in-flight mail.
+//!
+//! # Superstep telemetry and the adaptive scheduler
+//!
+//! Every run returns a [`RunTrace`] on its [`RunResult`]: one record
+//! per barrier per partition (frontier occupancy, boundary composition,
+//! pseudo-superstep counts, local-vs-network message split, carryover
+//! events, per-worker compute time). [`HybridPolicy::Adaptive`] feeds
+//! the trace back into the GraphHP engine online, deciding per
+//! partition and per iteration whether to run the local phase, how high
+//! to cap pseudo-supersteps, and whether boundary vertices join local
+//! phases — all from deterministic counters, so the parallel-equivalence
+//! guarantee below is preserved.
 //!
 //! # Parallel execution
 //!
@@ -121,7 +118,7 @@ pub(crate) mod worker;
 pub use aggregator::{AggOp, Aggregators};
 pub use context::VertexContext;
 pub use graphlab::GasCost;
-pub use metrics::Metrics;
+pub use metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
 pub use netsim::NetSimConfig;
 pub use program::{SourceCombine, VertexProgram};
 pub use runner::{Partitioner, Runner};
@@ -132,11 +129,17 @@ use crate::graph::DistGraph;
 /// also used for reporting.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum EngineKind {
+    /// Standard BSP (the Hama/Pregel baseline).
     Hama,
+    /// BSP with asynchronous in-memory messaging within a partition.
     AmHama,
+    /// The paper's hybrid global-phase / local-phase engine.
     GraphHP,
+    /// Graph-centric (Giraph++-style) engine.
     GiraphPP,
+    /// GraphLab-style synchronous pull (GAS) engine.
     GraphLabSync,
+    /// GraphLab-style asynchronous pull (GAS) engine.
     GraphLabAsync,
 }
 
@@ -251,20 +254,118 @@ impl Default for Limits {
     }
 }
 
-/// GraphHP hybrid-execution knobs (paper §4.2).
+/// GraphHP hybrid-execution policy (paper §4.2): fixed hand-tuned knobs
+/// or the telemetry-driven adaptive scheduler.
+///
+/// `Static` reproduces the paper's configuration exactly. `Adaptive`
+/// drives the same knobs **per partition and per iteration** from the
+/// run's own [`RunTrace`]: every decision is a pure function of the
+/// trace's deterministic counters, so threaded runs stay bit-for-bit
+/// equal to sequential (enforced by `tests/parallel_equivalence.rs`).
 #[derive(Clone, Copy, Debug)]
-pub struct HybridPolicy {
-    /// Do boundary vertices participate in local phases?
-    /// (paper §4.2 — activate for incremental computations).
-    pub boundary_in_local_phase: bool,
-    /// Asynchronous in-memory messaging within a (pseudo-)superstep
-    /// (paper §4.2 last ¶; always on for AM-Hama).
-    pub async_local_messaging: bool,
+pub enum HybridPolicy {
+    /// Fixed knobs, identical for every partition and iteration.
+    Static {
+        /// Do boundary vertices participate in local phases?
+        /// (paper §4.2 — activate for incremental computations).
+        boundary_in_local_phase: bool,
+        /// Asynchronous in-memory messaging within a (pseudo-)superstep
+        /// (paper §4.2 last ¶; always on for AM-Hama).
+        async_local_messaging: bool,
+    },
+    /// The adaptive scheduler: per partition, per iteration it decides
+    /// whether to run the local phase at all (skipped while the
+    /// partition's frontier is boundary-dominated and no local work is
+    /// backlogged), how high to set the pseudo-superstep cap (grows
+    /// while the local frontier shrinks geometrically, halves on a
+    /// carryover whose frontier had stopped shrinking), and whether
+    /// boundary vertices join local phases (seeded from the partition's
+    /// static locality score, shed while the local phase thrashes).
+    Adaptive(AdaptiveConfig),
 }
 
 impl Default for HybridPolicy {
     fn default() -> Self {
-        HybridPolicy { boundary_in_local_phase: true, async_local_messaging: true }
+        HybridPolicy::Static { boundary_in_local_phase: true, async_local_messaging: true }
+    }
+}
+
+impl HybridPolicy {
+    /// The adaptive scheduler with default tuning.
+    pub fn adaptive() -> HybridPolicy {
+        HybridPolicy::Adaptive(AdaptiveConfig::default())
+    }
+
+    /// True for the [`HybridPolicy::Adaptive`] variant.
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, HybridPolicy::Adaptive(_))
+    }
+
+    /// Pin "boundary vertices participate in local phases". Under
+    /// `Adaptive` this knob is per-partition, so pinning it falls back
+    /// to `Static` with the current async-messaging setting.
+    pub fn set_boundary_in_local_phase(&mut self, on: bool) {
+        match self {
+            HybridPolicy::Static { boundary_in_local_phase, .. } => {
+                *boundary_in_local_phase = on;
+            }
+            HybridPolicy::Adaptive(a) => {
+                let async_local_messaging = a.async_local_messaging;
+                *self = HybridPolicy::Static {
+                    boundary_in_local_phase: on,
+                    async_local_messaging,
+                };
+            }
+        }
+    }
+
+    /// Set asynchronous in-memory messaging (meaningful under both
+    /// variants — it is a message-visibility semantic, not a scheduling
+    /// decision).
+    pub fn set_async_local_messaging(&mut self, on: bool) {
+        match self {
+            HybridPolicy::Static { async_local_messaging, .. } => *async_local_messaging = on,
+            HybridPolicy::Adaptive(a) => a.async_local_messaging = on,
+        }
+    }
+}
+
+/// Tuning constants of the adaptive hybrid scheduler
+/// ([`HybridPolicy::Adaptive`]). All thresholds compare deterministic
+/// trace counters — wall-clock never feeds a decision.
+#[derive(Clone, Copy, Debug)]
+pub struct AdaptiveConfig {
+    /// Pseudo-superstep cap every partition starts from (the controller
+    /// grows it geometrically while the local frontier keeps shrinking).
+    pub initial_cap: u64,
+    /// Lower bound the per-partition cap never shrinks below (floored
+    /// at 1 — a local phase always makes progress).
+    pub min_cap: u64,
+    /// Upper bound the per-partition cap never grows beyond (also
+    /// clamped by [`Limits::max_pseudo_supersteps`]).
+    pub max_cap: u64,
+    /// A partition's frontier counts as boundary-dominated — making its
+    /// local phase skippable — when the boundary fraction reaches this.
+    pub boundary_dominance: f64,
+    /// Partitions whose static locality score
+    /// ([`crate::partition::PartitionLocality::score`]) is below this
+    /// start with boundary vertices excluded from local phases.
+    pub locality_threshold: f64,
+    /// Asynchronous in-memory messaging within (pseudo-)supersteps
+    /// (same semantic as the `Static` knob).
+    pub async_local_messaging: bool,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            initial_cap: 64,
+            min_cap: 1,
+            max_cap: 1 << 16,
+            boundary_dominance: 0.9,
+            locality_threshold: 0.5,
+            async_local_messaging: true,
+        }
     }
 }
 
@@ -284,6 +385,17 @@ pub struct FaultPolicy {
 /// Engine configuration shared by all engines, split into the
 /// builder-settable pieces the [`Runner`] exposes (fields irrelevant to
 /// an engine are ignored by it).
+///
+/// ```
+/// use graphhp::engine::{EngineConfig, HybridPolicy, Parallelism};
+///
+/// let mut cfg = EngineConfig::default();
+/// cfg.limits.max_iterations = 500;
+/// cfg.parallelism = Parallelism::Sequential;
+/// cfg.hybrid = HybridPolicy::adaptive();
+/// assert!(cfg.hybrid.is_adaptive());
+/// assert_eq!(cfg.limits.max_iterations, 500);
+/// ```
 #[derive(Clone, Debug)]
 pub struct EngineConfig {
     /// Iteration caps.
@@ -316,11 +428,18 @@ impl Default for EngineConfig {
     }
 }
 
-/// Result of an engine run: final vertex values (indexed by global vertex
-/// id) plus execution metrics.
+/// Result of an engine run: final vertex values (indexed by global
+/// vertex id), execution metrics, and the per-superstep telemetry
+/// trace.
 pub struct RunResult<V> {
+    /// Final vertex values, indexed by global vertex id.
     pub values: Vec<V>,
+    /// Run totals (the paper's I / M / T plus the overhead split).
     pub metrics: Metrics,
+    /// Structured per-superstep / per-partition telemetry
+    /// ([`RunTrace::to_json`] dumps it; the adaptive scheduler consumes
+    /// it online).
+    pub trace: RunTrace,
 }
 
 /// Gather per-partition values back into a global-id-indexed vector,

@@ -95,10 +95,14 @@ pub struct SuperstepClock {
 }
 
 impl SuperstepClock {
+    /// A clock with no worker records yet.
     pub fn new() -> Self {
         SuperstepClock { workers: Vec::new() }
     }
 
+    /// Append the next worker's costs in arrival order (sequential
+    /// engines; the parallel runtime uses
+    /// [`record_worker_at`](Self::record_worker_at) instead).
     pub fn record_worker(&mut self, compute: Duration, comm: Duration) {
         self.workers.push((compute, comm));
     }

@@ -26,7 +26,9 @@ use crate::partition::{hash_partition, metis_partition, range_partition, MetisCo
 
 use super::giraphpp::{run_giraphpp, PartitionProgram, VertexSweep};
 use super::graphlab::{run_graphlab_async, run_graphlab_sync, GasCost, GasProgram};
-use super::{EngineConfig, EngineKind, NetSimConfig, Parallelism, RunResult, VertexProgram};
+use super::{
+    EngineConfig, EngineKind, HybridPolicy, NetSimConfig, Parallelism, RunResult, VertexProgram,
+};
 
 /// How the [`Runner`] splits the graph across simulated workers.
 #[derive(Clone, Debug)]
@@ -63,6 +65,19 @@ enum Source<'g> {
 /// / [`Runner::run_gas`] / [`Runner::run_partition`] any number of
 /// times — the distributed view is built once and reused, so comparing
 /// engines never re-partitions.
+///
+/// ```
+/// use graphhp::algorithms::Wcc;
+/// use graphhp::engine::{EngineKind, Runner};
+/// use graphhp::graph::generators;
+///
+/// let g = generators::connected(80, 40, 3);
+/// let mut runner = Runner::new(&g).partitions(4).engine(EngineKind::GraphHP);
+/// let r = runner.run(&Wcc);
+/// assert!(r.values.iter().all(|&label| label == 0), "connected => one component");
+/// assert!(r.metrics.global_iterations >= 1);
+/// assert_eq!(r.trace.iterations(), r.metrics.global_iterations);
+/// ```
 pub struct Runner<'g> {
     source: Source<'g>,
     partitions: usize,
@@ -151,14 +166,32 @@ impl<'g> Runner<'g> {
     }
 
     /// GraphHP: do boundary vertices participate in local phases?
+    /// (Pins the knob, so an adaptive policy falls back to
+    /// [`HybridPolicy::Static`] — see
+    /// [`HybridPolicy::set_boundary_in_local_phase`].)
     pub fn boundary_in_local_phase(mut self, on: bool) -> Self {
-        self.cfg.hybrid.boundary_in_local_phase = on;
+        self.cfg.hybrid.set_boundary_in_local_phase(on);
         self
     }
 
     /// Asynchronous in-memory messaging inside (pseudo-)supersteps.
     pub fn async_local_messaging(mut self, on: bool) -> Self {
-        self.cfg.hybrid.async_local_messaging = on;
+        self.cfg.hybrid.set_async_local_messaging(on);
+        self
+    }
+
+    /// Replace the whole GraphHP hybrid policy — fixed knobs or the
+    /// telemetry-driven adaptive scheduler.
+    pub fn hybrid_policy(mut self, p: HybridPolicy) -> Self {
+        self.cfg.hybrid = p;
+        self
+    }
+
+    /// Shorthand for `.hybrid_policy(HybridPolicy::adaptive())`: drive
+    /// the local-phase schedule per partition from the run's own
+    /// telemetry (see [`HybridPolicy::Adaptive`]).
+    pub fn adaptive_policy(mut self) -> Self {
+        self.cfg.hybrid = HybridPolicy::adaptive();
         self
     }
 
@@ -449,8 +482,43 @@ mod tests {
             .seed(99)
             .checkpoint_interval(Some(2));
         assert_eq!(runner.cfg().limits.max_iterations, 7);
-        assert!(!runner.cfg().hybrid.boundary_in_local_phase);
+        assert!(matches!(
+            runner.cfg().hybrid,
+            HybridPolicy::Static { boundary_in_local_phase: false, .. }
+        ));
         assert_eq!(runner.cfg().seed, 99);
         assert_eq!(runner.cfg().fault.checkpoint_interval, Some(2));
+    }
+
+    #[test]
+    fn adaptive_policy_setter_and_pinning_fallback() {
+        let g = generators::erdos_renyi(10, 20, 1);
+        let runner = Runner::new(&g).adaptive_policy();
+        assert!(runner.cfg().hybrid.is_adaptive());
+        // pinning a static knob falls back to Static, keeping the
+        // async-messaging setting
+        let runner = Runner::new(&g)
+            .adaptive_policy()
+            .async_local_messaging(false)
+            .boundary_in_local_phase(true);
+        assert!(matches!(
+            runner.cfg().hybrid,
+            HybridPolicy::Static {
+                boundary_in_local_phase: true,
+                async_local_messaging: false
+            }
+        ));
+    }
+
+    #[test]
+    fn adaptive_runner_run_matches_static_on_confluent_program() {
+        let g = generators::connected(180, 70, 13);
+        let mut stat = Runner::new(&g).partitions(4).engine(EngineKind::GraphHP);
+        let s = stat.run(&Wcc);
+        let adp = Runner::from_dist(stat.dist())
+            .engine(EngineKind::GraphHP)
+            .adaptive_policy()
+            .run(&Wcc);
+        assert_eq!(s.values, adp.values);
     }
 }

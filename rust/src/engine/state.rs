@@ -38,6 +38,7 @@ pub struct Frontier {
 }
 
 impl Frontier {
+    /// An empty frontier over `n` local vertices.
     pub fn new(n: usize) -> Self {
         Frontier { next: Vec::new(), flagged: vec![false; n] }
     }
@@ -58,8 +59,14 @@ impl Frontier {
         std::mem::take(&mut self.next)
     }
 
+    /// True when nothing is scheduled.
     pub fn is_empty(&self) -> bool {
         self.next.is_empty()
+    }
+
+    /// Number of scheduled vertices (telemetry: frontier occupancy).
+    pub fn len(&self) -> usize {
+        self.next.len()
     }
 
     /// Drop everything scheduled (checkpoint recovery).
@@ -96,6 +103,7 @@ pub struct FifoScheduler {
 }
 
 impl FifoScheduler {
+    /// An empty scheduler over `n` vertices.
     pub fn new(n: usize) -> Self {
         FifoScheduler { queue: VecDeque::new(), queued: vec![false; n] }
     }
@@ -105,6 +113,7 @@ impl FifoScheduler {
         FifoScheduler { queue: (0..n as u32).collect(), queued: vec![true; n] }
     }
 
+    /// Queue `v` unless it is already waiting.
     pub fn schedule(&mut self, v: u32) {
         if !self.queued[v as usize] {
             self.queued[v as usize] = true;
@@ -112,12 +121,14 @@ impl FifoScheduler {
         }
     }
 
+    /// Dequeue the next vertex, re-arming it for future scheduling.
     pub fn pop(&mut self) -> Option<u32> {
         let v = self.queue.pop_front()?;
         self.queued[v as usize] = false;
         Some(v)
     }
 
+    /// True when no vertex is queued.
     pub fn is_empty(&self) -> bool {
         self.queue.is_empty()
     }
@@ -168,6 +179,7 @@ impl<V, M> PartitionRuntime<V, M> {
         )
     }
 
+    /// Number of local vertices this runtime manages.
     pub fn num_vertices(&self) -> usize {
         self.values.len()
     }

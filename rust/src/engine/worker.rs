@@ -28,7 +28,7 @@ use crate::util::Codec;
 use super::aggregator::Aggregators;
 use super::context::{SendBuffer, VertexContext};
 use super::messages::{MsgStore, Outbox};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
 use super::netsim::{NetSimConfig, SuperstepClock, WorkerComm};
 use super::program::VertexProgram;
 use super::state::{Frontier, PartitionRuntime};
@@ -290,11 +290,16 @@ pub(crate) struct WorkerOut<M> {
     /// phases here; plain BSP engines report 0 and count the global
     /// superstep engine-side).
     pub supersteps: u64,
+    /// This turn's telemetry record. The engine fills the sweep-level
+    /// fields (frontier composition, pseudo-superstep counts, carryover
+    /// flags); [`WorkerOut::new`] fills the accounting fields it derives
+    /// itself (partition, message split, compute time).
+    pub trace: PartitionStepTrace,
 }
 
 impl<M: Clone + Codec> WorkerOut<M> {
     /// Package a finished worker turn: derive the wire accounting from
-    /// the sealed outbox.
+    /// the sealed outbox and complete the telemetry record.
     pub fn new(
         outbox: Outbox<M>,
         aggs: Aggregators,
@@ -302,12 +307,17 @@ impl<M: Clone + Codec> WorkerOut<M> {
         p: usize,
         outcome: SweepOutcome,
         supersteps: u64,
+        mut trace: PartitionStepTrace,
     ) -> Self {
         let comm = WorkerComm {
             messages: outbox.len() as u64,
             bytes: outbox.wire_bytes() as u64,
             peer_pairs: outbox.peer_count(p as u32) as u64,
         };
+        trace.partition = p as u32;
+        trace.network_messages = comm.messages;
+        trace.local_messages = outcome.local_messages;
+        trace.compute_us = compute.as_micros() as u64;
         WorkerOut {
             outbox,
             aggs,
@@ -316,8 +326,18 @@ impl<M: Clone + Codec> WorkerOut<M> {
             computations: outcome.computations,
             local_messages: outcome.local_messages,
             supersteps,
+            trace,
         }
     }
+}
+
+/// Count the boundary vertices (Definition 1) in a worklist — the
+/// telemetry's frontier-composition signal.
+pub(crate) fn boundary_count<'a>(
+    part: &PartGraph,
+    worklist: impl IntoIterator<Item = &'a u32>,
+) -> u64 {
+    worklist.into_iter().filter(|&&lv| part.is_boundary[lv as usize]).count() as u64
 }
 
 /// Balanced work split: chunk sizes for distributing `n` items over
@@ -384,17 +404,23 @@ where
 /// identical to a sequential one. `deliver` routes one cross-partition
 /// message `(dest_part, dest_local, msg)` into the destination's inbox
 /// (engines apply receiver-side combining here via
-/// [`MsgStore::push_combined`]). Returns the drained outboxes in
-/// partition order so engines can slot them back for reuse.
+/// [`MsgStore::push_combined`]). Appends one [`StepTrace`] (the workers'
+/// telemetry records in partition order) to `trace`. Returns the drained
+/// outboxes in partition order so engines can slot them back for reuse.
 pub(crate) fn close_superstep<M: Clone + Codec>(
     outs: Vec<WorkerOut<M>>,
     aggs: &mut Aggregators,
     clock: &mut SuperstepClock,
     net: &NetSimConfig,
     metrics: &mut Metrics,
+    trace: &mut RunTrace,
     mut deliver: impl FnMut(u32, u32, M),
 ) -> Vec<Outbox<M>> {
     let mut outboxes = Vec::with_capacity(outs.len());
+    let mut step = StepTrace {
+        iteration: trace.steps.len() as u64,
+        partitions: Vec::with_capacity(outs.len()),
+    };
     for (w, mut o) in outs.into_iter().enumerate() {
         metrics.network_messages += o.comm.messages;
         metrics.network_bytes += o.comm.bytes;
@@ -407,7 +433,9 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
         }
         outboxes.push(o.outbox);
         aggs.merge_current(&o.aggs);
+        step.partitions.push(std::mem::take(&mut o.trace));
     }
+    trace.steps.push(step);
     aggs.barrier();
     clock.barrier(net, metrics);
     outboxes

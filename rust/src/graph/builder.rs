@@ -9,10 +9,12 @@ pub struct GraphBuilder {
 }
 
 impl GraphBuilder {
+    /// A builder for a graph of `num_vertices` vertices, no edges yet.
     pub fn new(num_vertices: usize) -> Self {
         GraphBuilder { num_vertices, edges: Vec::new() }
     }
 
+    /// [`GraphBuilder::new`] with edge capacity pre-reserved.
     pub fn with_capacity(num_vertices: usize, num_edges: usize) -> Self {
         GraphBuilder { num_vertices, edges: Vec::with_capacity(num_edges) }
     }
@@ -30,6 +32,7 @@ impl GraphBuilder {
         self.add_edge(b, a, weight);
     }
 
+    /// Edges accumulated so far.
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }

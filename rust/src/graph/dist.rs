@@ -1,15 +1,20 @@
 //! Distributed (partitioned) view of a graph.
 //!
 //! [`DistGraph`] is built once from a [`Graph`] + a partition assignment
-//! and is what every engine executes over. It precomputes exactly the
-//! metadata the paper's platform keeps per worker (§5.1):
+//! and is what every engine executes over: each [`PartGraph`] is the
+//! read-only topology a worker owns, shared immutably across the
+//! parallel worker threads (`Parallelism::Threads`) while all mutable
+//! per-partition state lives in the engines' runtimes. It precomputes
+//! exactly the metadata the paper's platform keeps per worker (§5.1):
 //!
 //! - each vertex's partition and partition-local index;
 //! - per-edge location indicators (same-partition target + its local
 //!   index, or remote partition);
 //! - the local/boundary classification of Definition 1: a vertex is
-//!   **boundary** iff it has at least one in-edge whose source lives in a
-//!   different partition, else **local**.
+//!   **boundary** iff it has at least one in-edge whose source lives in
+//!   a different partition, else **local**. This is a static property of
+//!   the partitioning — engines (including the adaptive scheduler's
+//!   per-partition boundary decisions) consult it but never change it.
 
 use super::csr::{Graph, VertexId};
 
@@ -46,10 +51,12 @@ pub struct PartGraph {
 }
 
 impl PartGraph {
+    /// Vertices owned by this partition.
     pub fn num_vertices(&self) -> usize {
         self.global_ids.len()
     }
 
+    /// Out-edges of owned vertices (internal + cut).
     pub fn num_edges(&self) -> usize {
         self.edges.len()
     }
@@ -73,6 +80,8 @@ impl PartGraph {
 /// The fully-resolved distributed graph.
 #[derive(Clone, Debug)]
 pub struct DistGraph {
+    /// Per-partition subgraphs, indexed by partition id — the read-only
+    /// unit each parallel worker owns.
     pub parts: Vec<PartGraph>,
     /// Global vertex id -> (partition, local index).
     pub location: Vec<(u32, u32)>,
@@ -145,6 +154,7 @@ impl DistGraph {
         DistGraph { parts, location, num_vertices: nv, num_edges: g.num_edges() }
     }
 
+    /// Number of partitions (= simulated workers).
     pub fn num_parts(&self) -> usize {
         self.parts.len()
     }

@@ -14,6 +14,11 @@
 //! - [`delaunay_like`]: planar triangulation-style lattice, the
 //!   delaunay_n24 stand-in (Table 3);
 //! - [`erdos_renyi`]: plain G(n, m) used by tests and property harnesses.
+//!
+//! Every generator is a pure function of its arguments and seed
+//! (deterministic [`Rng`]), so the same workload is bit-identical on
+//! every host, every engine, and every `Parallelism` setting — the
+//! benches and equivalence suites depend on that.
 
 use super::builder::GraphBuilder;
 use super::csr::{Graph, VertexId};

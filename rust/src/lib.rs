@@ -35,12 +35,14 @@
 //! - [`graph`] — CSR graphs, partitioned distributed views, synthetic
 //!   workload generators standing in for the paper's datasets;
 //! - [`partition`] — hash and from-scratch multilevel (METIS-like)
-//!   partitioners;
+//!   partitioners, plus partition-quality and locality statistics;
 //! - [`engine`] — the [`engine::Runner`] session, the vertex-centric
-//!   programming interface ([`engine::VertexProgram`]) and five
-//!   execution engines: standard BSP (Hama), AM-Hama, **GraphHP**, a
+//!   programming interface ([`engine::VertexProgram`]), six execution
+//!   engines (standard BSP (Hama), AM-Hama, **GraphHP**, a
 //!   Giraph++-style graph-centric engine and GraphLab-style sync/async
-//!   engines, all over a simulated-cluster cost model;
+//!   engines) over a simulated-cluster cost model, per-superstep
+//!   telemetry ([`engine::RunTrace`]) and the telemetry-driven adaptive
+//!   hybrid scheduler ([`engine::HybridPolicy::Adaptive`]);
 //! - [`algorithms`] — SSSP, incremental & classic PageRank, bipartite
 //!   matching, WCC, greedy coloring as vertex programs (plus GAS forms
 //!   of PageRank/SSSP/WCC for the GraphLab engines);
@@ -49,8 +51,14 @@
 //!   and the dense local-phase accelerator built on it. Gated because it
 //!   binds to the `xla` crate, which must be vendored separately.
 //!
-//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `docs/architecture.md` for the layer map, engine matrix and
+//! migration table, `DESIGN.md` for the experiment index and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+// Every public item carries rustdoc; CI runs `cargo doc --no-deps` with
+// `RUSTDOCFLAGS="-D warnings"`, so an undocumented addition fails the
+// docs gate rather than rotting silently.
+#![warn(missing_docs)]
 
 pub mod algorithms;
 pub mod bench_support;

@@ -7,12 +7,18 @@
 //! graphhp run --graph g.bin --algo sssp --engine graphhp --parts 12 [--source 0]
 //! graphhp run --graph g.bin --algo pagerank --engine graphlab-sync --parts 12
 //! graphhp run --graph g.bin --algo wcc --parts 12 --threads 4
+//! graphhp run --graph g.bin --algo sssp --parts 12 --adaptive --trace out.json
 //! graphhp info --graph g.bin
 //! ```
 //!
 //! `--threads N` pins the worker parallelism (`0` = sequential; default:
 //! one OS thread per core). Results are bit-for-bit identical across
 //! thread counts — the knob only changes wall-clock.
+//!
+//! `--adaptive` switches GraphHP to the telemetry-driven adaptive hybrid
+//! scheduler (`HybridPolicy::Adaptive`); `--trace FILE` dumps the run's
+//! per-superstep/per-partition telemetry (`RunTrace`) as JSON for
+//! offline policy tuning.
 //!
 //! Execution goes through the `Runner` session; `--engine` accepts every
 //! `EngineKind` spelling (`hama|am-hama|graphhp|giraph++|graphlab-sync|
@@ -28,7 +34,9 @@ use graphhp::algorithms::{
     bipartite_matching::validate_matching, BipartiteMatching, GasPageRank, GasSssp, GasWcc,
     IncrementalPageRank, Sssp, Wcc,
 };
-use graphhp::engine::{EngineKind, Metrics, Parallelism, Partitioner, Runner};
+use graphhp::engine::{
+    EngineKind, HybridPolicy, Metrics, Parallelism, Partitioner, RunTrace, Runner,
+};
 use graphhp::graph::{generators, io, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
 
@@ -157,6 +165,15 @@ fn report(engine: &str, m: &Metrics) {
     );
 }
 
+/// Write the run's telemetry to the `--trace` file, if requested.
+fn dump_trace(flags: &HashMap<String, String>, trace: &RunTrace) -> Result<()> {
+    if let Some(path) = flags.get("trace") {
+        std::fs::write(path, trace.to_json()).with_context(|| format!("write {path}"))?;
+        println!("wrote trace to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let g = load_graph(get(flags, "graph")?)?;
     let (assignment, k) = make_partition(&g, flags)?;
@@ -175,6 +192,9 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             Parallelism::Threads(n)
         });
     }
+    if flags.contains_key("adaptive") {
+        runner = runner.hybrid_policy(HybridPolicy::adaptive());
+    }
 
     match algo {
         "sssp" => {
@@ -188,6 +208,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
                 r.values.iter().filter(|&&d| d < graphhp::algorithms::sssp::INF).count();
             println!("sssp: {reached}/{} vertices reached", r.values.len());
             report(engine, &r.metrics);
+            dump_trace(flags, &r.trace)?;
         }
         "pagerank" => {
             let tol: f64 = get_or(flags, "tolerance", "1e-4").parse()?;
@@ -201,6 +222,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             top.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
             println!("pagerank top-5: {:?}", &top[..5.min(top.len())]);
             report(engine, &r.metrics);
+            dump_trace(flags, &r.trace)?;
         }
         "wcc" => {
             let r = if kind.is_gas() { runner.run_gas(&GasWcc) } else { runner.run(&Wcc) };
@@ -209,6 +231,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             labels.dedup();
             println!("wcc: {} components", labels.len());
             report(engine, &r.metrics);
+            dump_trace(flags, &r.trace)?;
         }
         "bm" => {
             if kind.is_gas() {
@@ -220,6 +243,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
                 .map_err(|e| anyhow::anyhow!(e))?;
             println!("bm: maximal matching of size {size}");
             report(engine, &r.metrics);
+            dump_trace(flags, &r.trace)?;
         }
         other => bail!("unknown algo {other} (sssp|pagerank|wcc|bm)"),
     }

@@ -14,7 +14,7 @@ pub mod metis;
 pub mod stats;
 
 pub use metis::{metis_partition, MetisConfig};
-pub use stats::PartitionStats;
+pub use stats::{partition_localities, PartitionLocality, PartitionStats};
 
 use crate::graph::{Graph, VertexId};
 

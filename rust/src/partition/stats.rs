@@ -1,10 +1,13 @@
-//! Partition quality metrics: edge cut, balance, boundary-vertex ratio.
+//! Partition quality metrics: edge cut, balance, boundary-vertex ratio,
+//! and the per-partition locality scores that seed the adaptive hybrid
+//! scheduler ([`crate::engine::HybridPolicy::Adaptive`]).
 
-use crate::graph::{Graph, VertexId};
+use crate::graph::{DistGraph, Graph, VertexId};
 
 /// Quality summary of a partition assignment.
 #[derive(Clone, Debug, PartialEq)]
 pub struct PartitionStats {
+    /// Number of partitions the assignment targets.
     pub num_parts: usize,
     /// Directed edges whose endpoints lie in different partitions.
     pub edge_cut: usize,
@@ -20,7 +23,11 @@ pub struct PartitionStats {
 }
 
 impl PartitionStats {
-    /// Compute stats for `assignment` over `g`.
+    /// Compute stats for `assignment` over `g` — one sequential O(V+E)
+    /// analysis pass, independent of the (possibly threaded) engine
+    /// runtime. Boundary classification matches [`DistGraph`]'s
+    /// Definition 1 exactly: a vertex counts as boundary iff it has an
+    /// in-edge from another partition.
     pub fn compute(g: &Graph, assignment: &[u32], num_parts: usize) -> PartitionStats {
         assert_eq!(assignment.len(), g.num_vertices());
         let mut sizes = vec![0usize; num_parts];
@@ -50,6 +57,79 @@ impl PartitionStats {
             sizes,
         }
     }
+}
+
+/// Per-partition locality summary over a built [`DistGraph`] — the
+/// static signal that seeds the adaptive hybrid scheduler's initial
+/// per-partition state (high locality → boundary vertices join local
+/// phases; low locality → they sit out).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PartitionLocality {
+    /// Partition index.
+    pub partition: u32,
+    /// Vertices owned by the partition.
+    pub vertices: usize,
+    /// Boundary vertices (Definition 1) among them.
+    pub boundary_vertices: usize,
+    /// Edges with both endpoints inside the partition.
+    pub internal_edges: usize,
+    /// Out-edges leaving the partition.
+    pub cut_out: usize,
+    /// In-edges arriving from other partitions.
+    pub cut_in: usize,
+}
+
+impl PartitionLocality {
+    /// Locality score in `[0, 1]`: internal edges over all edges
+    /// incident to the partition (internal + outgoing cut + incoming
+    /// cut). An edgeless partition scores 1.0 — there is no
+    /// cross-partition traffic to pay for.
+    pub fn score(&self) -> f64 {
+        let total = self.internal_edges + self.cut_out + self.cut_in;
+        if total == 0 {
+            1.0
+        } else {
+            self.internal_edges as f64 / total as f64
+        }
+    }
+
+    /// Boundary vertices over owned vertices (0.0 for an empty
+    /// partition).
+    pub fn boundary_ratio(&self) -> f64 {
+        if self.vertices == 0 {
+            0.0
+        } else {
+            self.boundary_vertices as f64 / self.vertices as f64
+        }
+    }
+}
+
+/// Compute every partition's [`PartitionLocality`] in one O(V+E) pass
+/// over the distributed view, in partition order.
+pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
+    let mut out: Vec<PartitionLocality> = dg
+        .parts
+        .iter()
+        .map(|p| PartitionLocality {
+            partition: p.part,
+            vertices: p.num_vertices(),
+            boundary_vertices: p.num_boundary(),
+            internal_edges: 0,
+            cut_out: 0,
+            cut_in: 0,
+        })
+        .collect();
+    for p in &dg.parts {
+        for e in &p.edges {
+            if e.target_part == p.part {
+                out[p.part as usize].internal_edges += 1;
+            } else {
+                out[p.part as usize].cut_out += 1;
+                out[e.target_part as usize].cut_in += 1;
+            }
+        }
+    }
+    out
 }
 
 impl std::fmt::Display for PartitionStats {
@@ -98,5 +178,121 @@ mod tests {
         let dg = crate::graph::DistGraph::new(&g, &a, 5);
         assert_eq!(s.edge_cut, dg.edge_cut());
         assert_eq!(s.boundary_vertices, dg.num_boundary());
+    }
+
+    // ------------------------------------------- hand-built exact cases
+
+    /// 0 -> 1 -> 2 -> 3 (a directed path).
+    fn path4() -> Graph {
+        let mut b = crate::graph::GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 2, 1.0);
+        b.add_edge(2, 3, 1.0);
+        b.build()
+    }
+
+    #[test]
+    fn path_split_has_exact_cut_and_boundary() {
+        let g = path4();
+        // {0,1} | {2,3}: only edge 1->2 crosses; vertex 2 is boundary
+        let s = PartitionStats::compute(&g, &[0, 0, 1, 1], 2);
+        assert_eq!(s.edge_cut, 1);
+        assert_eq!(s.boundary_vertices, 1);
+        assert!((s.cut_fraction - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.sizes, vec![2, 2]);
+        assert_eq!(s.balance, 1.0);
+    }
+
+    #[test]
+    fn alternating_split_cuts_everything() {
+        let g = path4();
+        // {0,2} | {1,3}: every edge crosses; every target is boundary
+        let s = PartitionStats::compute(&g, &[0, 1, 0, 1], 2);
+        assert_eq!(s.edge_cut, 3);
+        assert_eq!(s.boundary_vertices, 3);
+        assert!((s.cut_fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_graph_stats_are_finite() {
+        let g = Graph { offsets: vec![0], targets: vec![], weights: vec![] };
+        let s = PartitionStats::compute(&g, &[], 3);
+        assert_eq!(s.edge_cut, 0);
+        assert_eq!(s.boundary_vertices, 0);
+        assert_eq!(s.balance, 1.0, "empty graph must not divide by zero");
+        assert_eq!(s.sizes, vec![0, 0, 0]);
+    }
+
+    #[test]
+    fn empty_partition_counts_as_zero_size() {
+        let g = path4();
+        // partition 1 of 3 owns nothing
+        let s = PartitionStats::compute(&g, &[0, 0, 2, 2], 3);
+        assert_eq!(s.sizes, vec![2, 0, 2]);
+        assert_eq!(s.edge_cut, 1);
+        assert!((s.balance - 1.5).abs() < 1e-12, "max 2 / avg 4/3");
+    }
+
+    // ------------------------------------------------ locality scores
+
+    #[test]
+    fn locality_exact_on_hand_built_split() {
+        let g = path4();
+        let dg = crate::graph::DistGraph::new(&g, &[0, 0, 1, 1], 2);
+        let loc = partition_localities(&dg);
+        assert_eq!(loc.len(), 2);
+        // partition 0: internal 0->1, cut_out 1->2, no cut_in
+        assert_eq!(loc[0].internal_edges, 1);
+        assert_eq!(loc[0].cut_out, 1);
+        assert_eq!(loc[0].cut_in, 0);
+        assert!((loc[0].score() - 0.5).abs() < 1e-12);
+        // partition 1: internal 2->3, cut_in 1->2
+        assert_eq!(loc[1].internal_edges, 1);
+        assert_eq!(loc[1].cut_out, 0);
+        assert_eq!(loc[1].cut_in, 1);
+        assert!((loc[1].score() - 0.5).abs() < 1e-12);
+        assert_eq!(loc[1].boundary_vertices, 1);
+        assert!((loc[1].boundary_ratio() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_partition_locality_is_one() {
+        let g = generators::erdos_renyi(40, 120, 9);
+        let dg = crate::graph::DistGraph::new(&g, &vec![0; 40], 1);
+        let loc = partition_localities(&dg);
+        assert_eq!(loc.len(), 1);
+        assert_eq!(loc[0].score(), 1.0);
+        assert_eq!(loc[0].cut_out + loc[0].cut_in, 0);
+        assert_eq!(loc[0].boundary_ratio(), 0.0);
+    }
+
+    #[test]
+    fn empty_partition_locality_is_neutral() {
+        let g = path4();
+        // all vertices in partition 0 of 2: partition 1 is empty
+        let dg = crate::graph::DistGraph::new(&g, &[0, 0, 0, 0], 2);
+        let loc = partition_localities(&dg);
+        assert_eq!(loc[1].vertices, 0);
+        assert_eq!(loc[1].score(), 1.0, "edgeless partition scores 1.0");
+        assert_eq!(loc[1].boundary_ratio(), 0.0);
+        assert_eq!(loc[0].score(), 1.0);
+    }
+
+    #[test]
+    fn locality_internal_plus_cut_covers_all_edges() {
+        let g = generators::powerlaw(400, 4, 5);
+        let a = hash_partition(&g, 4);
+        let dg = crate::graph::DistGraph::new(&g, &a, 4);
+        let loc = partition_localities(&dg);
+        let internal: usize = loc.iter().map(|l| l.internal_edges).sum();
+        let cut_out: usize = loc.iter().map(|l| l.cut_out).sum();
+        let cut_in: usize = loc.iter().map(|l| l.cut_in).sum();
+        assert_eq!(cut_out, cut_in, "every cut edge leaves one part and enters another");
+        assert_eq!(internal + cut_out, g.num_edges());
+        assert_eq!(cut_out, dg.edge_cut());
+        for l in &loc {
+            let s = l.score();
+            assert!((0.0..=1.0).contains(&s), "score {s} out of range");
+        }
     }
 }

@@ -19,6 +19,7 @@ use anyhow::{bail, Context, Result};
 /// Parameters of one AOT artifact, parsed from `artifacts/manifest.txt`.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ArtifactSpec {
+    /// Artifact base name (matches the `.hlo.txt` file stem).
     pub name: String,
     /// Densified tile edge (partition capacity).
     pub n: usize,
@@ -45,6 +46,7 @@ pub fn parse_manifest(text: &str) -> Result<Vec<ArtifactSpec>> {
 
 /// A compiled local-phase executable.
 pub struct LoadedPhase {
+    /// The manifest entry this executable was compiled from.
     pub spec: ArtifactSpec,
     exe: xla::PjRtLoadedExecutable,
 }
@@ -62,6 +64,7 @@ impl XlaRuntime {
         Ok(XlaRuntime { client, artifacts_dir: artifacts_dir.into() })
     }
 
+    /// PJRT platform name of the backing client (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }

@@ -7,6 +7,7 @@
 
 /// Encode/decode a value as little-endian bytes.
 pub trait Codec: Sized {
+    /// Append this value's encoding to `buf`.
     fn encode(&self, buf: &mut Vec<u8>);
     /// Decode from the front of `r`, advancing it. Returns None on
     /// truncated/malformed input.

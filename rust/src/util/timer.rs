@@ -17,6 +17,7 @@ impl Default for Stopwatch {
 }
 
 impl Stopwatch {
+    /// A stopped stopwatch at zero.
     pub fn new() -> Self {
         Stopwatch { acc: Duration::ZERO, started: None }
     }

@@ -52,8 +52,8 @@ impl CaseGen {
 
     fn config(&mut self) -> EngineConfig {
         let mut cfg = EngineConfig::default();
-        cfg.hybrid.boundary_in_local_phase = self.rng.chance(0.7);
-        cfg.hybrid.async_local_messaging = self.rng.chance(0.7);
+        cfg.hybrid.set_boundary_in_local_phase(self.rng.chance(0.7));
+        cfg.hybrid.set_async_local_messaging(self.rng.chance(0.7));
         cfg
     }
 }

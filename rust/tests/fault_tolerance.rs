@@ -96,6 +96,38 @@ fn recovery_preserves_cap_truncated_local_phase() {
 }
 
 #[test]
+fn adaptive_recovery_replays_clean_trajectory_exactly() {
+    // The checkpoint snapshots the adaptive scheduler's per-partition
+    // state (caps, streaks, skip flags) alongside the runtime state, so
+    // a recovered run replays the exact schedule of a clean run.
+    // PageRank's tolerance-truncated f64 values are trajectory-sensitive
+    // — stale (un-rolled-back) policy state would change the phase
+    // grouping and shift the values, which this test would catch at the
+    // bit level. A tight initial cap keeps the policies actively
+    // adapting around the failure point.
+    let g = generators::powerlaw(1_000, 4, 3);
+    let prog = IncrementalPageRank { tolerance: 1e-6 };
+    let adaptive = graphhp::engine::HybridPolicy::Adaptive(graphhp::engine::AdaptiveConfig {
+        initial_cap: 1,
+        ..Default::default()
+    });
+
+    let clean = runner(&g, 5).hybrid_policy(adaptive).run(&prog);
+    let rec = runner(&g, 5)
+        .hybrid_policy(adaptive)
+        .checkpoint_interval(Some(2))
+        .inject_failure_at(Some(3))
+        .run(&prog);
+    assert_eq!(rec.metrics.recoveries, 1);
+    let bits = |vs: &[f64]| vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&clean.values),
+        bits(&rec.values),
+        "adaptive recovery must replay the clean trajectory bit-for-bit"
+    );
+}
+
+#[test]
 fn failure_after_convergence_is_harmless() {
     let g = generators::road(15, 15, 2);
     let r = runner(&g, 3)

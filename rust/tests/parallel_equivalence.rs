@@ -13,7 +13,8 @@
 use graphhp::algorithms::{GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
 use graphhp::engine::graphlab::GasProgram;
 use graphhp::engine::{
-    EngineConfig, EngineKind, Metrics, Parallelism, Runner, VertexContext, VertexProgram,
+    AdaptiveConfig, EngineConfig, EngineKind, HybridPolicy, Metrics, Parallelism, RunTrace,
+    Runner, VertexContext, VertexProgram,
 };
 use graphhp::graph::{generators, DistGraph, Graph};
 use graphhp::partition::{metis_partition, MetisConfig};
@@ -139,6 +140,76 @@ fn thread_count_never_changes_results() {
         .config(cfg_with(Parallelism::Threads(4)))
         .run_on(EngineKind::Hama, &Wcc);
     assert_eq!(solo_seq.values, solo_par.values);
+}
+
+/// Every deterministic counter of two traces must agree; the wall-clock
+/// field (`compute_us`) is explicitly excluded — it is the one
+/// reporting-only field and the adaptive scheduler never reads it.
+fn assert_trace_counters_equal(kind: EngineKind, algo: &str, seq: &RunTrace, par: &RunTrace) {
+    assert_eq!(
+        seq.partition_locality, par.partition_locality,
+        "{kind} {algo}: locality seeds"
+    );
+    assert_eq!(seq.steps.len(), par.steps.len(), "{kind} {algo}: step count");
+    for (s, p) in seq.steps.iter().zip(&par.steps) {
+        assert_eq!(s.iteration, p.iteration, "{kind} {algo}: step index");
+        assert_eq!(s.partitions.len(), p.partitions.len(), "{kind} {algo}: partitions");
+        for (a, b) in s.partitions.iter().zip(&p.partitions) {
+            let mut a = a.clone();
+            let mut b = b.clone();
+            a.compute_us = 0;
+            b.compute_us = 0;
+            assert_eq!(a, b, "{kind} {algo}: trace record step {}", s.iteration);
+        }
+    }
+}
+
+/// The adaptive hybrid scheduler must preserve the determinism
+/// contract: its decisions are pure functions of trace counters, so
+/// `Threads(n)` stays bit-for-bit identical to `Sequential` — values,
+/// metric counters, AND every per-step trace counter. A tight initial
+/// cap plus a hard `max_pseudo_supersteps` limit forces the whole
+/// decision surface (carryover shrink, geometric growth, boundary
+/// shedding, local-phase skips) to actually execute.
+#[test]
+fn adaptive_policy_threads_bit_identical_to_sequential() {
+    let adaptive = HybridPolicy::Adaptive(AdaptiveConfig {
+        initial_cap: 2,
+        ..Default::default()
+    });
+    let cases: Vec<(Graph, usize)> = vec![
+        (generators::connected(300, 150, 7), 4),
+        (generators::powerlaw(400, 4, 11), 6),
+        (generators::road(18, 18, 3), 9),
+    ];
+    for (g, k) in &cases {
+        let dg = dist(g, *k);
+        let mk_cfg = |par: Parallelism| {
+            let mut cfg = cfg_with(par);
+            cfg.hybrid = adaptive;
+            cfg.limits.max_pseudo_supersteps = 6;
+            cfg
+        };
+        macro_rules! check {
+            ($algo:literal, $prog:expr, $bits:expr) => {{
+                let prog = $prog;
+                let seq = Runner::from_dist(&dg)
+                    .config(mk_cfg(Parallelism::Sequential))
+                    .run_on(EngineKind::GraphHP, &prog);
+                let par = Runner::from_dist(&dg)
+                    .config(mk_cfg(Parallelism::Threads(4)))
+                    .run_on(EngineKind::GraphHP, &prog);
+                for (i, (a, b)) in seq.values.iter().zip(&par.values).enumerate() {
+                    assert_eq!($bits(a), $bits(b), "adaptive {} v{i}", $algo);
+                }
+                assert_counts_equal(EngineKind::GraphHP, $algo, &seq.metrics, &par.metrics);
+                assert_trace_counters_equal(EngineKind::GraphHP, $algo, &seq.trace, &par.trace);
+            }};
+        }
+        check!("pagerank", IncrementalPageRank { tolerance: 1e-7 }, |v: &f64| v.to_bits());
+        check!("sssp", Sssp { source: 1 }, |v: &f32| v.to_bits());
+        check!("wcc", Wcc, |v: &u32| *v);
+    }
 }
 
 /// A vertex program that panics inside a worker thread: the panic must
