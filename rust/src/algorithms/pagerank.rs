@@ -160,7 +160,11 @@ impl PartitionProgram for GiraphPPPageRank {
     }
 
     fn compute_partition(&self, ctx: &mut PartitionContext<'_, Self>) {
-        let n = ctx.part.num_vertices();
+        // the partition topology outlives the context borrow, so edge
+        // iteration can interleave with `ctx.send` without copying the
+        // edge list out per vertex
+        let part = ctx.part;
+        let n = part.num_vertices();
         // pending[lv]: accumulated undelivered delta for this superstep
         let mut pending = vec![0.0f64; n];
         if ctx.superstep == 0 {
@@ -186,12 +190,11 @@ impl PartitionProgram for GiraphPPPageRank {
             }
             computations += 1;
             ctx.values[lv] += delta;
-            let deg = ctx.part.out_degree[lv];
+            let deg = part.out_degree[lv];
             if delta > self.tolerance && deg > 0 {
                 let share = DAMPING * delta / deg as f64;
-                let edges: Vec<crate::graph::Edge> = ctx.part.out_edges(lv).to_vec();
-                for e in edges {
-                    if e.target_part == ctx.part.part {
+                for e in part.out_edges(lv) {
+                    if e.target_part == part.part {
                         let tl = e.target_local as usize;
                         if tl > lv {
                             pending[tl] += share; // same-sweep visibility

@@ -14,8 +14,6 @@
 //! `super::worker`; workers run in parallel per
 //! [`super::EngineConfig::parallelism`].
 
-use std::collections::BTreeSet;
-
 use crate::graph::DistGraph;
 
 use super::aggregator::Aggregators;
@@ -63,14 +61,15 @@ pub fn run_am_hama<P: VertexProgram>(
 
             // Vertices are processed in local-index order; in-memory
             // messages can still reach vertices later in the order this
-            // same superstep (the worklist accepts insertions ahead of
-            // the cursor). The frontier alone seeds it: every delivery
-            // into `nxt` is paired with a schedule, so cur's pending set
-            // is always a subset of the frontier.
-            let worklist: BTreeSet<u32> = ws.rt.begin_step().into_iter().collect();
+            // same superstep (the pooled sorted worklist accepts
+            // insertions ahead of the cursor, exactly like the former
+            // per-sweep BTreeSet). The frontier alone seeds it: every
+            // delivery into `nxt` is paired with a schedule, so cur's
+            // pending set is always a subset of the frontier.
+            ws.rt.begin_step_into(&mut ws.scratch.worklist);
             let pt = PartitionStepTrace {
-                frontier: worklist.len() as u64,
-                boundary_frontier: boundary_count(&dg.parts[p], &worklist),
+                frontier: ws.scratch.worklist.len() as u64,
+                boundary_frontier: boundary_count(&dg.parts[p], ws.scratch.worklist.as_slice()),
                 ..Default::default()
             };
             let sweep = Sweep {
@@ -86,7 +85,6 @@ pub fn run_am_hama<P: VertexProgram>(
                 boundary_in_local: true,
             };
             let outcome = sweep.run(
-                worklist,
                 ws.rt.sweep_target(),
                 None,
                 &mut ws.outbox,

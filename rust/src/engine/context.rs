@@ -1,7 +1,7 @@
 //! The per-vertex compute context: what a `Compute()` invocation can see
 //! and do (paper §3).
 
-use crate::graph::{Edge, PartGraph, VertexId};
+use crate::graph::{Edge, EdgeRoute, Edges, PartGraph, VertexId};
 use crate::util::Rng;
 
 use super::aggregator::Aggregators;
@@ -10,9 +10,17 @@ use super::program::VertexProgram;
 /// Sends collected during one `compute` invocation; the engine routes
 /// them afterwards (destination may be any vertex id, not only a
 /// neighbor, as in Pregel).
+///
+/// Entries are **pre-resolved routes**: edge-directed sends
+/// ([`VertexContext::send_to_neighbors`] /
+/// [`VertexContext::send_along_edges`]) copy the edge's precomputed
+/// [`EdgeRoute`] location indicator (§5.1) and never consult the global
+/// location table; only the arbitrary-destination
+/// [`VertexContext::send`] resolves its route — once, at enqueue. The
+/// sweep loop then routes each entry with no per-message lookup.
 pub struct SendBuffer<M> {
-    /// (destination, message) pairs in send order.
-    pub sends: Vec<(VertexId, M)>,
+    /// `(resolved destination route, message)` pairs in send order.
+    pub sends: Vec<(EdgeRoute, M)>,
 }
 
 impl<M> SendBuffer<M> {
@@ -47,6 +55,10 @@ pub struct VertexContext<'a, P: VertexProgram> {
     pub(crate) out: &'a mut SendBuffer<P::M>,
     pub(crate) aggregators: &'a mut Aggregators,
     pub(crate) seed: u64,
+    /// Global vertex id -> (partition, local index) — consulted only by
+    /// the arbitrary-destination [`send`](Self::send); edge-directed
+    /// sends use the edges' precomputed routes instead.
+    pub(crate) location: &'a [(u32, u32)],
 }
 
 impl<'a, P: VertexProgram> VertexContext<'a, P> {
@@ -87,7 +99,7 @@ impl<'a, P: VertexProgram> VertexContext<'a, P> {
     }
 
     /// Out-edges of this vertex (targets + weights + location hints).
-    pub fn edges(&self) -> &[Edge] {
+    pub fn edges(&self) -> Edges<'a> {
         self.part.out_edges(self.lv)
     }
 
@@ -102,29 +114,33 @@ impl<'a, P: VertexProgram> VertexContext<'a, P> {
         self.part.is_boundary[self.lv]
     }
 
-    /// `sendMessage(dest, msg)` — dest may be any vertex.
+    /// `sendMessage(dest, msg)` — dest may be any vertex. The route is
+    /// resolved here, once, so the sweep loop pays no per-message
+    /// location lookup.
     pub fn send(&mut self, dest: VertexId, msg: P::M) {
-        self.out.sends.push((dest, msg));
+        let (tp, tl) = self.location[dest as usize];
+        self.out.sends.push((EdgeRoute::new(tp, tl), msg));
     }
 
-    /// Send `msg` along every out-edge.
+    /// Send `msg` along every out-edge: streams the partition's
+    /// precomputed route column directly — no location lookup, no
+    /// intermediate allocation.
     pub fn send_to_neighbors(&mut self, msg: P::M) {
-        // routed by the engine; we just record (target, msg) pairs
-        let targets: Vec<VertexId> =
-            self.part.out_edges(self.lv).iter().map(|e| e.target).collect();
-        for t in targets {
-            self.out.sends.push((t, msg.clone()));
+        let part = self.part;
+        for &route in part.out_edges(self.lv).routes() {
+            self.out.sends.push((route, msg.clone()));
         }
     }
 
     /// Send one message per out-edge, computed from the edge (no
-    /// intermediate allocation — the hot path of SSSP/PageRank).
+    /// intermediate allocation — the hot path of SSSP/PageRank). The
+    /// edge's precomputed route is copied into the send, so delivery
+    /// needs no location lookup either.
     pub fn send_along_edges(&mut self, f: impl Fn(&Edge) -> Option<P::M>) {
-        let (s, e) = (self.part.offsets[self.lv], self.part.offsets[self.lv + 1]);
-        for i in s..e {
-            let edge = self.part.edges[i];
-            if let Some(m) = f(&edge) {
-                self.out.sends.push((edge.target, m));
+        let part = self.part;
+        for e in part.out_edges(self.lv) {
+            if let Some(m) = f(&e) {
+                self.out.sends.push((e.route(), m));
             }
         }
     }
@@ -150,5 +166,95 @@ impl<'a, P: VertexProgram> VertexContext<'a, P> {
         Rng::new(self.seed)
             .derive(self.vertex_id() as u64)
             .derive(self.superstep.wrapping_add(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DistGraph, GraphBuilder};
+
+    struct Probe;
+    impl VertexProgram for Probe {
+        type V = u32;
+        type M = u64;
+        fn init(&self, _v: VertexId, _d: u32) -> u32 {
+            0
+        }
+        fn compute(&self, _ctx: &mut VertexContext<'_, Self>) {}
+    }
+
+    /// 0 -> 1 (same partition), 0 -> 2 and 0 -> 3 (remote partition).
+    fn two_part_graph() -> DistGraph {
+        let mut b = GraphBuilder::new(4);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(0, 2, 2.0);
+        b.add_edge(0, 3, 3.0);
+        let g = b.build();
+        DistGraph::new(&g, &[0, 0, 1, 1], 2)
+    }
+
+    /// Drive `f` against a context for local vertex 0 of partition 0
+    /// with the given location table, returning the resolved sends as
+    /// `(dest_part, dest_local, msg)`.
+    fn collect_sends(
+        dg: &DistGraph,
+        location: &[(u32, u32)],
+        f: impl FnOnce(&mut VertexContext<'_, Probe>),
+    ) -> Vec<(u32, u32, u64)> {
+        let mut value = 0u32;
+        let mut halted = false;
+        let mut out = SendBuffer::new();
+        let mut aggs = Aggregators::new(Vec::new());
+        let mut ctx = VertexContext::<Probe> {
+            part: &dg.parts[0],
+            lv: 0,
+            superstep: 1,
+            value: &mut value,
+            messages: &[],
+            halted: &mut halted,
+            out: &mut out,
+            aggregators: &mut aggs,
+            seed: 1,
+            location,
+        };
+        f(&mut ctx);
+        out.sends.iter().map(|&(r, m)| (r.part(), r.local(), m)).collect()
+    }
+
+    /// The acceptance contract of the resolved-route send plane: the
+    /// location table handed to the context is EMPTY, so any
+    /// `dg.location` consultation would panic — edge-directed sends must
+    /// resolve purely from the edges' precomputed routes, and the buffer
+    /// must contain the fully-resolved `(part, local)` destinations.
+    #[test]
+    fn edge_directed_sends_resolve_without_location_lookup() {
+        let dg = two_part_graph();
+        let sends = collect_sends(&dg, &[], |ctx| ctx.send_to_neighbors(7));
+        assert_eq!(sends, vec![(0, 1, 7), (1, 0, 7), (1, 1, 7)]);
+        let sends =
+            collect_sends(&dg, &[], |ctx| ctx.send_along_edges(|e| Some(e.weight as u64)));
+        assert_eq!(sends, vec![(0, 1, 1), (1, 0, 2), (1, 1, 3)]);
+    }
+
+    /// `send_to_neighbors` must deliver exactly what the equivalent
+    /// `send_along_edges` delivers: same routes, same order, same count
+    /// (the former per-call `Vec<VertexId>` collection is gone).
+    #[test]
+    fn send_to_neighbors_matches_send_along_edges_delivery() {
+        let dg = two_part_graph();
+        let a = collect_sends(&dg, &[], |ctx| ctx.send_to_neighbors(9));
+        let b = collect_sends(&dg, &[], |ctx| ctx.send_along_edges(|_| Some(9)));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), dg.parts[0].out_degree[0] as usize);
+    }
+
+    /// Arbitrary-destination `send` resolves through the location table
+    /// once, at enqueue.
+    #[test]
+    fn arbitrary_send_resolves_once_at_enqueue() {
+        let dg = two_part_graph();
+        let sends = collect_sends(&dg, &dg.location, |ctx| ctx.send(3, 42));
+        assert_eq!(sends, vec![(1, 1, 42)]);
     }
 }

@@ -15,8 +15,6 @@
 //! [`VertexSweep`] adapter runs any [`VertexProgram`] under those
 //! single-sweep semantics via the shared `super::worker::Sweep` body.
 
-use std::collections::BTreeSet;
-
 use crate::graph::{DistGraph, PartGraph, VertexId};
 use crate::util::Codec;
 
@@ -282,14 +280,19 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
     fn compute_partition(&self, ctx: &mut PartitionContext<'_, Self>) {
         let n = ctx.part.num_vertices();
         // worklist: scheduled vertices + vertices with mail (plus every
-        // vertex at the initialization superstep)
-        let mut worklist: BTreeSet<u32> = ctx.scheduled.iter().copied().collect();
-        for lv in ctx.cur.pending() {
-            worklist.insert(lv);
+        // vertex at the initialization superstep), seeded into the
+        // pooled sorted worklist — same ascending drain as the former
+        // per-superstep BTreeSet, no allocation at steady state
+        ctx.scratch.worklist.begin(n);
+        for &lv in ctx.scheduled {
+            ctx.scratch.worklist.schedule(lv);
+        }
+        for &lv in ctx.cur.pending_sorted() {
+            ctx.scratch.worklist.schedule(lv);
         }
         if ctx.superstep == 0 {
             for lv in 0..n as u32 {
-                worklist.insert(lv);
+                ctx.scratch.worklist.schedule(lv);
             }
         }
         let sweep = Sweep {
@@ -308,7 +311,6 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
         // graph-centric interface
         let mut wagg = Aggregators::new(Vec::new());
         let outcome = sweep.run(
-            worklist,
             SweepTarget {
                 values: &mut *ctx.values,
                 halted: &mut *ctx.halted,

@@ -61,8 +61,6 @@
 //! structure and the hybrid routing policy. Partitions run as parallel
 //! workers per [`super::EngineConfig::parallelism`].
 
-use std::collections::BTreeSet;
-
 use crate::graph::{DistGraph, PartGraph};
 use crate::partition::stats::partition_localities;
 
@@ -369,11 +367,13 @@ pub fn run_graphhp<P: VertexProgram>(
                 // ones in the next global phase (picked up by the
                 // boundary && !halted rule), participants in the next
                 // local phase (Reschedule::Participants).
-                let worklist: BTreeSet<u32> = (0..part.num_vertices() as u32).collect();
-                pt.frontier = worklist.len() as u64;
+                scratch.worklist.begin(part.num_vertices());
+                for lv in 0..part.num_vertices() as u32 {
+                    scratch.worklist.schedule(lv);
+                }
+                pt.frontier = scratch.worklist.len() as u64;
                 pt.boundary_frontier = part.num_boundary() as u64;
                 let oc = mk_sweep(LocalRoute::NextSweep, Reschedule::Participants).run(
-                    worklist,
                     SweepTarget {
                         values: &mut rt.values,
                         halted: &mut rt.halted,
@@ -395,18 +395,20 @@ pub fn run_graphhp<P: VertexProgram>(
                 // plus unhalted boundary vertices; an unhalted boundary
                 // participant continues in the local phase iff boundary
                 // vertices take part in it
-                let mut worklist: BTreeSet<u32> = gq_cur.pending().into_iter().collect();
+                scratch.worklist.begin(part.num_vertices());
+                for &lv in gq_cur.pending_sorted() {
+                    scratch.worklist.schedule(lv);
+                }
                 for lv in 0..part.num_vertices() {
                     if part.is_boundary[lv] && !rt.halted[lv] {
-                        worklist.insert(lv as u32);
+                        scratch.worklist.schedule(lv as u32);
                     }
                 }
-                pt.frontier = worklist.len() as u64;
-                pt.boundary_frontier = boundary_count(part, &worklist);
+                pt.frontier = scratch.worklist.len() as u64;
+                pt.boundary_frontier = boundary_count(part, scratch.worklist.as_slice());
                 let resched =
                     if boundary_in_local { Reschedule::Active } else { Reschedule::Never };
                 let oc = mk_sweep(LocalRoute::NextSweep, resched).run(
-                    worklist,
                     SweepTarget {
                         values: &mut rt.values,
                         halted: &mut rt.halted,
@@ -434,12 +436,11 @@ pub fn run_graphhp<P: VertexProgram>(
                     let cap = policy.cap;
                     let mut pseudo_steps: u64 = 0;
                     loop {
-                        let taken = rt.begin_step();
-                        let mut worklist: BTreeSet<u32> = taken.into_iter().collect();
-                        for lv in rt.cur.pending() {
-                            worklist.insert(lv);
+                        rt.begin_step_into(&mut scratch.worklist);
+                        for &lv in rt.cur.pending_sorted() {
+                            scratch.worklist.schedule(lv);
                         }
-                        if worklist.is_empty() {
+                        if scratch.worklist.is_empty() {
                             rt.commit_step();
                             break;
                         }
@@ -452,18 +453,19 @@ pub fn run_graphhp<P: VertexProgram>(
                             // worklist as the final frontier sample so
                             // the controller can tell a converging
                             // truncation from thrash even at cap 1.
-                            pt.local_frontier_last = worklist.len() as u64;
-                            rt.abort_step_carryover(worklist);
+                            pt.local_frontier_last = scratch.worklist.len() as u64;
+                            rt.abort_step_carryover(
+                                scratch.worklist.as_slice().iter().copied(),
+                            );
                             pt.carryover = true;
                             break;
                         }
                         pseudo_steps += 1;
                         if pseudo_steps == 1 {
-                            pt.local_frontier_first = worklist.len() as u64;
+                            pt.local_frontier_first = scratch.worklist.len() as u64;
                         }
-                        pt.local_frontier_last = worklist.len() as u64;
+                        pt.local_frontier_last = scratch.worklist.len() as u64;
                         let oc = mk_sweep(local_route, Reschedule::Active).run(
-                            worklist,
                             rt.sweep_target(),
                             Some(&mut *gq_nxt),
                             outbox,

@@ -12,8 +12,6 @@
 //! `super::worker`; workers run in parallel per
 //! [`super::EngineConfig::parallelism`].
 
-use std::collections::BTreeSet;
-
 use crate::graph::DistGraph;
 
 use super::aggregator::Aggregators;
@@ -62,11 +60,13 @@ pub fn run_hama<P: VertexProgram>(
 
             // the frontier alone seeds the worklist: every delivery into
             // `nxt` (barrier or in-sweep) is paired with a schedule, so
-            // cur's pending set is always a subset of the frontier
-            let worklist: BTreeSet<u32> = ws.rt.begin_step().into_iter().collect();
+            // cur's pending set is always a subset of the frontier. It
+            // drains into the pooled sorted worklist — same ascending
+            // order a fresh BTreeSet gave, no per-sweep allocation.
+            ws.rt.begin_step_into(&mut ws.scratch.worklist);
             let pt = PartitionStepTrace {
-                frontier: worklist.len() as u64,
-                boundary_frontier: boundary_count(&dg.parts[p], &worklist),
+                frontier: ws.scratch.worklist.len() as u64,
+                boundary_frontier: boundary_count(&dg.parts[p], ws.scratch.worklist.as_slice()),
                 ..Default::default()
             };
             let sweep = Sweep {
@@ -82,7 +82,6 @@ pub fn run_hama<P: VertexProgram>(
                 boundary_in_local: true,
             };
             let outcome = sweep.run(
-                worklist,
                 ws.rt.sweep_target(),
                 None,
                 &mut ws.outbox,
@@ -247,6 +246,68 @@ mod tests {
         let dg = DistGraph::new(&g, &hash_partition(&g, 3), 3);
         let r = run_hama(&CountAgg, &dg, &EngineConfig::default());
         assert!(r.values.iter().all(|&v| v == 25.0), "{:?}", &r.values[..5]);
+    }
+
+    /// Satellite regression for the resolved-route refactor: a program
+    /// flooding via `send_to_neighbors` must produce byte-for-byte the
+    /// same run as the identical program using `send_along_edges` —
+    /// same values, same network/local message counts, same iterations.
+    #[test]
+    fn send_to_neighbors_and_send_along_edges_identical_delivery() {
+        struct ViaNeighbors;
+        impl VertexProgram for ViaNeighbors {
+            type V = u32;
+            type M = u32;
+            fn init(&self, v: VertexId, _d: u32) -> u32 {
+                v
+            }
+            fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+                let mut best = *ctx.value();
+                if ctx.superstep() == 0 {
+                    ctx.send_to_neighbors(best);
+                } else if let Some(&m) = ctx.messages().iter().min() {
+                    if m < best {
+                        best = m;
+                        ctx.set_value(best);
+                        ctx.send_to_neighbors(best);
+                    }
+                }
+                ctx.vote_to_halt();
+            }
+        }
+        struct ViaEdges;
+        impl VertexProgram for ViaEdges {
+            type V = u32;
+            type M = u32;
+            fn init(&self, v: VertexId, _d: u32) -> u32 {
+                v
+            }
+            fn compute(&self, ctx: &mut VertexContext<'_, Self>) {
+                let mut best = *ctx.value();
+                if ctx.superstep() == 0 {
+                    ctx.send_along_edges(|_| Some(best));
+                } else if let Some(&m) = ctx.messages().iter().min() {
+                    if m < best {
+                        best = m;
+                        ctx.set_value(best);
+                        ctx.send_along_edges(|_| Some(best));
+                    }
+                }
+                ctx.vote_to_halt();
+            }
+        }
+        let g = generators::connected(200, 80, 29);
+        let dg = DistGraph::new(&g, &hash_partition(&g, 4), 4);
+        let cfg = EngineConfig::default();
+        let a = run_hama(&ViaNeighbors, &dg, &cfg);
+        let b = run_hama(&ViaEdges, &dg, &cfg);
+        assert_eq!(a.values, b.values);
+        assert_eq!(a.metrics.network_messages, b.metrics.network_messages);
+        assert_eq!(a.metrics.network_bytes, b.metrics.network_bytes);
+        assert_eq!(a.metrics.local_messages, b.metrics.local_messages);
+        assert_eq!(a.metrics.vertex_computations, b.metrics.vertex_computations);
+        assert_eq!(a.metrics.global_iterations, b.metrics.global_iterations);
+        assert!(a.metrics.network_messages > 0, "the flood actually sent mail");
     }
 
     #[test]

@@ -154,10 +154,17 @@ impl<M> MsgStore<M> {
     /// Local vertices with pending messages (sorted, deduplicated —
     /// lazy cleanup can leave stale duplicates in the index).
     pub fn pending(&mut self) -> Vec<u32> {
+        self.pending_sorted().to_vec()
+    }
+
+    /// [`pending`](Self::pending) without the copy: compacts the lazy
+    /// index in place and returns it as a sorted, deduplicated slice —
+    /// the allocation-free form the sweep-seeding hot paths use.
+    pub fn pending_sorted(&mut self) -> &[u32] {
         self.nonempty.retain(|&lv| self.flagged[lv as usize]);
         self.nonempty.sort_unstable();
         self.nonempty.dedup();
-        self.nonempty.clone()
+        &self.nonempty
     }
 
     /// True when no vertex has pending messages (compacts the lazy

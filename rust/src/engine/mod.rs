@@ -469,7 +469,7 @@ pub(crate) fn gather_values<V: Clone>(dg: &DistGraph, parts: &[Vec<V>]) -> Vec<V
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::graph::{DistGraph, Graph, PartGraph};
+    use crate::graph::{DistGraph, Graph};
 
     fn path2() -> Graph {
         // 0 -> 1
@@ -517,21 +517,12 @@ mod tests {
     #[test]
     #[should_panic(expected = "vertex missing from every partition")]
     fn gather_panics_on_uncovered_vertex() {
-        // hand-build an inconsistent DistGraph: claims 2 vertices but
-        // only vertex 0 is owned by any partition
-        let dg = DistGraph {
-            parts: vec![PartGraph {
-                part: 0,
-                global_ids: vec![0],
-                offsets: vec![0, 0],
-                edges: vec![],
-                is_boundary: vec![false],
-                out_degree: vec![0],
-            }],
-            location: vec![(0, 0), (0, 1)],
-            num_vertices: 2,
-            num_edges: 0,
-        };
+        // tamper a consistent single-vertex DistGraph into claiming 2
+        // vertices while only vertex 0 is owned by any partition
+        let g = Graph { offsets: vec![0, 0], targets: vec![], weights: vec![] };
+        let mut dg = DistGraph::new(&g, &[0], 1);
+        dg.num_vertices = 2;
+        dg.location.push((0, 1));
         let _ = gather_values(&dg, &[vec![1u32]]);
     }
 }

@@ -93,6 +93,7 @@ impl<'p, P: VertexProgram> VertexProgram for &'p P {
             out: &mut *ctx.out,
             aggregators: &mut *ctx.aggregators,
             seed: ctx.seed,
+            location: ctx.location,
         };
         (**self).compute(&mut inner);
     }

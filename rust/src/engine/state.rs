@@ -27,7 +27,7 @@ use crate::graph::{DistGraph, PartGraph};
 
 use super::messages::MsgStore;
 use super::program::VertexProgram;
-use super::worker::SweepTarget;
+use super::worker::{SweepTarget, Worklist};
 
 /// A deduplicated "compute next (pseudo-)superstep" set: O(1) schedule
 /// via a membership bitmap, drained in insertion order.
@@ -57,6 +57,18 @@ impl Frontier {
             self.flagged[lv as usize] = false;
         }
         std::mem::take(&mut self.next)
+    }
+
+    /// Drain the scheduled set into a sweep worklist, keeping this
+    /// frontier's buffer (unlike [`take`](Self::take), which surrenders
+    /// it and reallocates on the next schedule) — the allocation-free
+    /// path the engines' steady-state sweeps use.
+    pub(crate) fn drain_into(&mut self, wl: &mut Worklist) {
+        for &lv in &self.next {
+            self.flagged[lv as usize] = false;
+            wl.schedule(lv);
+        }
+        self.next.clear();
     }
 
     /// True when nothing is scheduled.
@@ -201,6 +213,19 @@ impl<V, M> PartitionRuntime<V, M> {
         self.frontier.take()
     }
 
+    /// [`begin_step`](Self::begin_step), pooled: swap the message stores
+    /// and drain the frontier straight into `wl` (re-armed here for this
+    /// partition), so opening a step allocates nothing at steady state.
+    /// Pairs with `commit_step`/`abort_step_carryover` exactly like
+    /// `begin_step`.
+    pub(crate) fn begin_step_into(&mut self, wl: &mut Worklist) {
+        assert!(!self.step_open, "begin_step on an already-open step");
+        self.step_open = true;
+        std::mem::swap(&mut self.cur, &mut self.nxt);
+        wl.begin(self.num_vertices());
+        self.frontier.drain_into(wl);
+    }
+
     /// Close a step whose sweep executed.
     pub fn commit_step(&mut self) {
         assert!(self.step_open, "commit_step without begin_step");
@@ -300,6 +325,31 @@ mod tests {
         rt.nxt.push(1, 9);
         let _ = rt.begin_step();
         assert!(rt.cur.has_messages(1));
+        rt.commit_step();
+    }
+
+    #[test]
+    fn begin_step_into_drains_frontier_into_pooled_worklist() {
+        let g = generators::erdos_renyi(6, 10, 4);
+        let dg = DistGraph::new(&g, &vec![0; 6], 1);
+        let mut rt = PartitionRuntime::new(&Noop, &dg.parts[0]);
+        let mut wl = Worklist::default();
+        rt.schedule_next(4);
+        rt.schedule_next(1);
+        rt.schedule_next(4);
+        rt.nxt.push(1, 9);
+        rt.begin_step_into(&mut wl);
+        assert!(rt.frontier.is_empty());
+        assert!(rt.cur.has_messages(1), "mail swapped in for this step");
+        assert_eq!(wl.len(), 2);
+        assert_eq!(wl.pop_first(), Some(1), "ascending drain");
+        assert_eq!(wl.pop_first(), Some(4));
+        rt.commit_step();
+        // the pooled worklist re-arms for the next step
+        rt.schedule_next(3);
+        rt.begin_step_into(&mut wl);
+        assert_eq!(wl.pop_first(), Some(3));
+        assert_eq!(wl.pop_first(), None);
         rt.commit_step();
     }
 

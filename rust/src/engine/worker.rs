@@ -8,6 +8,13 @@
 //! implementation of that body; the engine files keep only their policy
 //! and phases.
 //!
+//! The sweep's drain order is owned by [`Worklist`] — a pooled sorted
+//! worklist that reproduces the drain semantics of a fresh
+//! `BTreeSet<u32>` (ascending `pop_first`, deduplicated inserts,
+//! mid-sweep insertions landing in sorted position) with zero
+//! steady-state allocation; it lives in [`WorkerScratch`] next to the
+//! message and send buffers.
+//!
 //! [`run_workers`] executes one worker per partition, either on the
 //! calling thread or multiplexed onto scoped OS threads
 //! ([`Parallelism::Threads`]). Workers are shared-nothing within a
@@ -19,7 +26,6 @@
 //! run is bit-for-bit identical to a sequential one — the determinism
 //! contract `tests/parallel_equivalence.rs` enforces.
 
-use std::collections::BTreeSet;
 use std::time::Duration;
 
 use crate::graph::{DistGraph, PartGraph};
@@ -34,15 +40,136 @@ use super::program::VertexProgram;
 use super::state::{Frontier, PartitionRuntime};
 use super::Parallelism;
 
+/// A pooled sorted worklist: the sweep's "which vertex next" structure.
+///
+/// Reproduces `BTreeSet<u32>` drain semantics *exactly* — ascending-id
+/// [`pop_first`](Self::pop_first) order, deduplicated
+/// [`schedule`](Self::schedule), and mid-sweep insertions that land in
+/// their sorted position even when they are smaller than the next seeded
+/// entry — without the per-sweep node allocations of a fresh tree.
+/// Seeds accumulate unsorted in a flat buffer; the first pop sorts it
+/// once and drains it behind a cursor; later insertions go to a small
+/// descending-sorted `pending` stack whose minimum pops from the back in
+/// O(1). A membership bitmap keeps `schedule` O(1) and duplicate-free
+/// across both buffers.
+///
+/// All three buffers are pooled in [`WorkerScratch`]:
+/// [`begin`](Self::begin) re-arms the worklist for the next sweep
+/// keeping every allocation, so steady-state sweeps allocate nothing.
+#[derive(Default)]
+pub(crate) struct Worklist {
+    /// Seed entries; sorted ascending at the first pop, drained by
+    /// `cursor`.
+    items: Vec<u32>,
+    cursor: usize,
+    /// Mid-sweep insertions, sorted descending (minimum at the back).
+    pending: Vec<u32>,
+    /// `member[v]` iff `v` is queued and not yet popped.
+    member: Vec<bool>,
+    /// Set at the first pop; later schedules go through `pending`.
+    sorted: bool,
+}
+
+impl Worklist {
+    /// Re-arm for a sweep over a partition of `n` vertices: clears any
+    /// leftover entries (an aborted/carried-over sweep may leave some)
+    /// and their membership flags, keeping all buffer capacity.
+    pub fn begin(&mut self, n: usize) {
+        for &v in &self.items[self.cursor..] {
+            self.member[v as usize] = false;
+        }
+        for &v in &self.pending {
+            self.member[v as usize] = false;
+        }
+        self.items.clear();
+        self.pending.clear();
+        self.cursor = 0;
+        self.sorted = false;
+        if self.member.len() < n {
+            self.member.resize(n, false);
+        }
+    }
+
+    /// Queue local vertex `v` unless it is already queued (BTreeSet
+    /// `insert` semantics). Before the first pop this seeds the sweep;
+    /// afterwards the entry lands in its sorted drain position, even
+    /// ahead of already-seeded larger ids.
+    pub fn schedule(&mut self, v: u32) {
+        if self.member[v as usize] {
+            return;
+        }
+        self.member[v as usize] = true;
+        if !self.sorted {
+            self.items.push(v);
+        } else {
+            let pos = self.pending.partition_point(|&x| x > v);
+            self.pending.insert(pos, v);
+        }
+    }
+
+    /// Remove and return the smallest queued id (BTreeSet `pop_first`
+    /// semantics).
+    pub fn pop_first(&mut self) -> Option<u32> {
+        if !self.sorted {
+            self.items.sort_unstable();
+            self.sorted = true;
+        }
+        let seeded = self.items.get(self.cursor).copied();
+        let inserted = self.pending.last().copied();
+        let v = match (seeded, inserted) {
+            // equal heads are impossible: `member` dedups across buffers
+            (Some(a), Some(b)) if b < a => {
+                self.pending.pop();
+                b
+            }
+            (Some(a), _) => {
+                self.cursor += 1;
+                a
+            }
+            (None, Some(b)) => {
+                self.pending.pop();
+                b
+            }
+            (None, None) => return None,
+        };
+        self.member[v as usize] = false;
+        Some(v)
+    }
+
+    /// Queued entries not yet popped.
+    pub fn len(&self) -> usize {
+        self.items.len() - self.cursor + self.pending.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The seeded entries, only valid before the first pop (seed order,
+    /// unsorted) — for frontier-composition telemetry and carryover.
+    pub fn as_slice(&self) -> &[u32] {
+        debug_assert!(!self.sorted, "as_slice after the sweep started draining");
+        &self.items
+    }
+}
+
 /// Per-worker scratch buffers reused across vertices and sweeps.
 pub(crate) struct WorkerScratch<M> {
     pub msg_buf: Vec<M>,
     pub send_buf: SendBuffer<M>,
+    /// The pooled sweep worklist, seeded by the engine before each
+    /// [`Sweep::run`].
+    pub worklist: Worklist,
 }
 
 impl<M> WorkerScratch<M> {
     pub fn new() -> Self {
-        WorkerScratch { msg_buf: Vec::new(), send_buf: SendBuffer::new() }
+        WorkerScratch {
+            msg_buf: Vec::new(),
+            send_buf: SendBuffer::new(),
+            worklist: Worklist::default(),
+        }
     }
 }
 
@@ -150,12 +277,16 @@ pub(crate) struct Sweep<'a, P: VertexProgram> {
 }
 
 impl<'a, P: VertexProgram> Sweep<'a, P> {
-    /// Run the sweep. `deferred` is GraphHP's next-global-phase inbox for
-    /// messages to non-participating boundary vertices (None elsewhere).
-    #[allow(clippy::too_many_arguments)]
+    /// Run the sweep over `scratch.worklist` (seeded by the engine).
+    /// `deferred` is GraphHP's next-global-phase inbox for messages to
+    /// non-participating boundary vertices (None elsewhere).
+    ///
+    /// Routing reads each send's pre-resolved [`crate::graph::EdgeRoute`]
+    /// straight out of the [`SendBuffer`] — the location table is never
+    /// consulted here (edge-directed sends copied the edge's precomputed
+    /// route; arbitrary sends resolved at enqueue).
     pub fn run(
         &self,
-        mut worklist: BTreeSet<u32>,
         tgt: SweepTarget<'_, P::V, P::M>,
         mut deferred: Option<&mut MsgStore<P::M>>,
         outbox: &mut Outbox<P::M>,
@@ -166,7 +297,7 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
         let mut out = SweepOutcome::default();
         marks.begin_sweep();
         let SweepTarget { values, halted, cur, nxt, mut frontier } = tgt;
-        while let Some(lv32) = worklist.pop_first() {
+        while let Some(lv32) = scratch.worklist.pop_first() {
             let lv = lv32 as usize;
             marks.mark(lv);
             cur.take_into(lv, &mut scratch.msg_buf);
@@ -188,13 +319,14 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
                     out: &mut scratch.send_buf,
                     aggregators: &mut *wagg,
                     seed: self.seed,
+                    location: &self.dg.location,
                 };
                 self.program.compute(&mut ctx);
             }
             out.computations += 1;
             let src_gid = self.part.global_ids[lv];
-            for (target, m) in scratch.send_buf.sends.drain(..) {
-                let (tp, tl) = self.dg.location[target as usize];
+            for (route, m) in scratch.send_buf.sends.drain(..) {
+                let (tp, tl) = route.unpack();
                 if tp as usize != self.p || self.route == LocalRoute::Network {
                     outbox.push(tp, tl, src_gid, m);
                     continue;
@@ -215,7 +347,7 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
                 {
                     // receiver still to run this sweep: deliver now
                     cur.push_combined(tl, m, self.combiner);
-                    worklist.insert(tl as u32);
+                    scratch.worklist.schedule(tl as u32);
                 } else {
                     nxt.push_combined(tl, m, self.combiner);
                     if let Some(f) = frontier.as_deref_mut() {
@@ -444,6 +576,109 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
+    use std::collections::BTreeSet;
+
+    /// Property-style test: drive random schedule/drain/mid-sweep-insert
+    /// sequences against a `BTreeSet` reference model and require the
+    /// identical pop order. One pooled `Worklist` is reused across every
+    /// round (including rounds abandoned mid-drain) to also prove
+    /// `begin` fully re-arms leftover state.
+    #[test]
+    fn worklist_matches_btreeset_reference_model() {
+        let mut rng = Rng::new(0xB7EE);
+        let mut wl = Worklist::default();
+        for round in 0..300u32 {
+            let n = 1 + rng.index(96);
+            let mut model: BTreeSet<u32> = BTreeSet::new();
+            wl.begin(n);
+            // seed phase: random schedules, duplicates included
+            for _ in 0..rng.index(2 * n + 1) {
+                let v = rng.index(n) as u32;
+                wl.schedule(v);
+                model.insert(v);
+            }
+            assert_eq!(wl.len(), model.len(), "round {round}: seed size");
+            // drain phase with interleaved mid-sweep insertions (some
+            // smaller than everything already popped, some duplicates of
+            // queued entries, some re-inserts of popped ids)
+            let abandon_at = if round % 7 == 3 { Some(rng.index(n)) } else { None };
+            let mut pops = 0usize;
+            loop {
+                if rng.index(3) == 0 {
+                    let v = rng.index(n) as u32;
+                    wl.schedule(v);
+                    model.insert(v);
+                }
+                if Some(pops) == abandon_at {
+                    // leave the worklist mid-drain: the next begin()
+                    // must clear the leftovers
+                    break;
+                }
+                let got = wl.pop_first();
+                let want = model.pop_first();
+                assert_eq!(got, want, "round {round}, pop {pops}");
+                if got.is_none() {
+                    break;
+                }
+                pops += 1;
+            }
+        }
+    }
+
+    /// The exact mid-sweep case the ThisSweep route relies on: an id
+    /// smaller than the drain cursor, never seeded, scheduled mid-sweep,
+    /// must pop next — just like `BTreeSet::pop_first` would yield it.
+    #[test]
+    fn worklist_mid_sweep_insert_of_smaller_id_pops_next() {
+        let mut wl = Worklist::default();
+        wl.begin(16);
+        wl.schedule(5);
+        wl.schedule(10);
+        assert_eq!(wl.pop_first(), Some(5));
+        wl.schedule(3); // smaller than the already-popped 5
+        assert_eq!(wl.pop_first(), Some(3));
+        wl.schedule(7);
+        wl.schedule(7); // duplicate: no-op
+        assert_eq!(wl.len(), 2);
+        assert_eq!(wl.pop_first(), Some(7));
+        assert_eq!(wl.pop_first(), Some(10));
+        assert_eq!(wl.pop_first(), None);
+        assert!(wl.is_empty());
+    }
+
+    #[test]
+    fn worklist_schedule_dedups_against_seeded_entries() {
+        let mut wl = Worklist::default();
+        wl.begin(8);
+        wl.schedule(4);
+        wl.schedule(1);
+        wl.schedule(4); // already seeded: no-op
+        assert_eq!(wl.len(), 2);
+        assert_eq!(wl.as_slice(), &[4, 1], "seed order before the first pop");
+        assert_eq!(wl.pop_first(), Some(1));
+        wl.schedule(4); // still queued: no-op
+        assert_eq!(wl.pop_first(), Some(4));
+        assert_eq!(wl.pop_first(), None);
+    }
+
+    #[test]
+    fn worklist_begin_clears_abandoned_entries() {
+        let mut wl = Worklist::default();
+        wl.begin(8);
+        wl.schedule(2);
+        wl.schedule(6);
+        assert_eq!(wl.pop_first(), Some(2));
+        wl.schedule(1); // pending entry
+        // abandon with 6 seeded and 1 pending, then re-arm
+        wl.begin(8);
+        assert!(wl.is_empty());
+        wl.schedule(6);
+        wl.schedule(1);
+        assert_eq!(wl.len(), 2, "abandoned membership flags must be cleared");
+        assert_eq!(wl.pop_first(), Some(1));
+        assert_eq!(wl.pop_first(), Some(6));
+    }
 
     #[test]
     fn processed_marks_reset_per_sweep() {

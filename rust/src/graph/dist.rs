@@ -9,16 +9,69 @@
 //!
 //! - each vertex's partition and partition-local index;
 //! - per-edge location indicators (same-partition target + its local
-//!   index, or remote partition);
+//!   index, or remote partition), packed as one-word [`EdgeRoute`]s;
 //! - the local/boundary classification of Definition 1: a vertex is
 //!   **boundary** iff it has at least one in-edge whose source lives in
 //!   a different partition, else **local**. This is a static property of
 //!   the partitioning — engines (including the adaptive scheduler's
-//!   per-partition boundary decisions) consult it but never change it.
+//!   per-partition boundary decisions) consult it but never change it;
+//! - the per-partition boundary-vertex and internal-edge counts, so the
+//!   telemetry/stats queries on barrier paths are O(1) instead of
+//!   rescanning the partition.
+//!
+//! # Edge storage: structure-of-arrays
+//!
+//! A partition's out-edges live in three parallel arrays —
+//! [`PartGraph::targets`], [`PartGraph::routes`], [`PartGraph::weights`]
+//! — instead of one `Vec` of 16-byte edge records. The per-vertex sweep
+//! loop is the platform's hottest code (it runs once per vertex per
+//! pseudo-superstep), and its dominant consumers each touch only a
+//! subset of the edge fields: `send_to_neighbors` streams routes alone,
+//! weight-less programs (PageRank, WCC) never load `weights`, and the
+//! partition-stats passes read only `routes`. The SoA split lets each
+//! consumer stream exactly the words it needs. [`PartGraph::out_edges`]
+//! still hands out an [`Edge`]-view iterator so edge-generic code reads
+//! as before.
 
 use super::csr::{Graph, VertexId};
 
-/// One out-edge inside a partition, with the location indicator resolved.
+/// Packed location indicator of an edge target (§5.1): the destination
+/// partition in the high 32 bits, the destination's partition-local
+/// index in the low 32. One aligned load resolves a message route with
+/// no global-table lookup.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct EdgeRoute(u64);
+
+impl EdgeRoute {
+    /// Pack a `(partition, local index)` pair.
+    #[inline]
+    pub fn new(part: u32, local: u32) -> Self {
+        EdgeRoute(((part as u64) << 32) | local as u64)
+    }
+
+    /// Destination partition.
+    #[inline]
+    pub fn part(self) -> u32 {
+        (self.0 >> 32) as u32
+    }
+
+    /// Destination's index within its partition's vertex array.
+    #[inline]
+    pub fn local(self) -> u32 {
+        self.0 as u32
+    }
+
+    /// Unpack into `(partition, local index)`.
+    #[inline]
+    pub fn unpack(self) -> (u32, u32) {
+        (self.part(), self.local())
+    }
+}
+
+/// One out-edge inside a partition, with the location indicator
+/// resolved — the *view* type assembled on demand from the SoA arrays
+/// ([`PartGraph::targets`] / [`PartGraph::routes`] /
+/// [`PartGraph::weights`]) by [`Edges`].
 #[derive(Clone, Copy, Debug)]
 pub struct Edge {
     /// Global id of the target vertex.
@@ -31,6 +84,121 @@ pub struct Edge {
     pub weight: f32,
 }
 
+impl Edge {
+    /// The edge's packed location indicator.
+    #[inline]
+    pub fn route(&self) -> EdgeRoute {
+        EdgeRoute::new(self.target_part, self.target_local)
+    }
+}
+
+/// Borrowed view of one vertex's out-edges over the SoA arrays.
+///
+/// Iterates as [`Edge`] values (`for e in part.out_edges(lv)` or
+/// `.iter()`); the raw [`targets`](Self::targets),
+/// [`routes`](Self::routes) and [`weights`](Self::weights) slices are
+/// exposed so hot paths can stream only the columns they touch.
+#[derive(Clone, Copy, Debug)]
+pub struct Edges<'a> {
+    targets: &'a [VertexId],
+    routes: &'a [EdgeRoute],
+    weights: &'a [f32],
+}
+
+impl<'a> Edges<'a> {
+    /// Number of edges in the view.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.targets.len()
+    }
+
+    /// True when the vertex has no out-edges.
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.targets.is_empty()
+    }
+
+    /// Assemble the `i`-th edge view (panics if out of range).
+    #[inline]
+    pub fn get(&self, i: usize) -> Edge {
+        let r = self.routes[i];
+        Edge {
+            target: self.targets[i],
+            target_part: r.part(),
+            target_local: r.local(),
+            weight: self.weights[i],
+        }
+    }
+
+    /// Global target ids (the `targets` column).
+    #[inline]
+    pub fn targets(&self) -> &'a [VertexId] {
+        self.targets
+    }
+
+    /// Packed location indicators (the `routes` column).
+    #[inline]
+    pub fn routes(&self) -> &'a [EdgeRoute] {
+        self.routes
+    }
+
+    /// Edge weights (the `weights` column).
+    #[inline]
+    pub fn weights(&self) -> &'a [f32] {
+        self.weights
+    }
+
+    /// Iterate the edges as assembled [`Edge`] views.
+    #[inline]
+    pub fn iter(&self) -> EdgesIter<'a> {
+        EdgesIter {
+            targets: self.targets.iter(),
+            routes: self.routes.iter(),
+            weights: self.weights.iter(),
+        }
+    }
+}
+
+impl<'a> IntoIterator for Edges<'a> {
+    type Item = Edge;
+    type IntoIter = EdgesIter<'a>;
+
+    fn into_iter(self) -> EdgesIter<'a> {
+        self.iter()
+    }
+}
+
+/// Iterator over an [`Edges`] view, yielding [`Edge`] values assembled
+/// from the parallel columns.
+pub struct EdgesIter<'a> {
+    targets: std::slice::Iter<'a, VertexId>,
+    routes: std::slice::Iter<'a, EdgeRoute>,
+    weights: std::slice::Iter<'a, f32>,
+}
+
+impl Iterator for EdgesIter<'_> {
+    type Item = Edge;
+
+    #[inline]
+    fn next(&mut self) -> Option<Edge> {
+        let &target = self.targets.next()?;
+        let &route = self.routes.next().expect("routes column in sync");
+        let &weight = self.weights.next().expect("weights column in sync");
+        Some(Edge {
+            target,
+            target_part: route.part(),
+            target_local: route.local(),
+            weight,
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.targets.size_hint()
+    }
+}
+
+impl ExactSizeIterator for EdgesIter<'_> {}
+
 /// One partition of the distributed graph (the unit a worker owns).
 #[derive(Clone, Debug)]
 pub struct PartGraph {
@@ -38,16 +206,24 @@ pub struct PartGraph {
     pub part: u32,
     /// Global ids of the vertices owned by this partition.
     pub global_ids: Vec<VertexId>,
-    /// CSR offsets over `edges`, indexed by local vertex index.
+    /// CSR offsets over the edge columns, indexed by local vertex index.
     pub offsets: Vec<usize>,
-    /// Out-edges of owned vertices with resolved locations.
-    pub edges: Vec<Edge>,
+    /// Global target id of every out-edge (SoA column).
+    pub targets: Vec<VertexId>,
+    /// Packed location indicator of every out-edge (SoA column).
+    pub routes: Vec<EdgeRoute>,
+    /// Weight of every out-edge (SoA column).
+    pub weights: Vec<f32>,
     /// Definition 1 classification: `true` iff the vertex has an in-edge
     /// from another partition.
     pub is_boundary: Vec<bool>,
     /// Global out-degree of each owned vertex (same as local CSR degree,
     /// kept for O(1) access in vertex programs).
     pub out_degree: Vec<u32>,
+    /// Precomputed count of `true` entries in `is_boundary`.
+    boundary_vertices: usize,
+    /// Precomputed count of edges whose target stays in this partition.
+    internal_edges: usize,
 }
 
 impl PartGraph {
@@ -58,22 +234,30 @@ impl PartGraph {
 
     /// Out-edges of owned vertices (internal + cut).
     pub fn num_edges(&self) -> usize {
-        self.edges.len()
+        self.targets.len()
     }
 
-    /// Out-edges of local vertex `lv`.
-    pub fn out_edges(&self, lv: usize) -> &[Edge] {
-        &self.edges[self.offsets[lv]..self.offsets[lv + 1]]
+    /// Out-edges of local vertex `lv` as a SoA view.
+    #[inline]
+    pub fn out_edges(&self, lv: usize) -> Edges<'_> {
+        let (s, e) = (self.offsets[lv], self.offsets[lv + 1]);
+        Edges {
+            targets: &self.targets[s..e],
+            routes: &self.routes[s..e],
+            weights: &self.weights[s..e],
+        }
     }
 
-    /// Number of boundary vertices.
+    /// Number of boundary vertices — precomputed at
+    /// [`DistGraph::new`] time, O(1).
     pub fn num_boundary(&self) -> usize {
-        self.is_boundary.iter().filter(|&&b| b).count()
+        self.boundary_vertices
     }
 
-    /// Number of internal (same-partition) edges.
+    /// Number of internal (same-partition) edges — precomputed at
+    /// [`DistGraph::new`] time, O(1).
     pub fn num_internal_edges(&self) -> usize {
-        self.edges.iter().filter(|e| e.target_part == self.part).count()
+        self.internal_edges
     }
 }
 
@@ -115,9 +299,13 @@ impl DistGraph {
                 part: p as u32,
                 global_ids: Vec::with_capacity(counts[p] as usize),
                 offsets: vec![0],
-                edges: Vec::new(),
+                targets: Vec::new(),
+                routes: Vec::new(),
+                weights: Vec::new(),
                 is_boundary: Vec::new(),
                 out_degree: Vec::new(),
+                boundary_vertices: 0,
+                internal_edges: 0,
             })
             .collect();
 
@@ -128,9 +316,14 @@ impl DistGraph {
             let (ts, ws) = g.out_edges(v);
             for (&t, &w) in ts.iter().zip(ws) {
                 let (tp, tl) = location[t as usize];
-                part.edges.push(Edge { target: t, target_part: tp, target_local: tl, weight: w });
+                part.targets.push(t);
+                part.routes.push(EdgeRoute::new(tp, tl));
+                part.weights.push(w);
+                if tp == p {
+                    part.internal_edges += 1;
+                }
             }
-            part.offsets.push(part.edges.len());
+            part.offsets.push(part.targets.len());
             part.out_degree.push(ts.len() as u32);
             part.is_boundary.push(false);
         }
@@ -139,9 +332,9 @@ impl DistGraph {
         // (A vertex with an in-edge from a remote partition is boundary.)
         let mut boundary = vec![false; nv];
         for part in &parts {
-            for e in &part.edges {
-                if e.target_part != part.part {
-                    boundary[e.target as usize] = true;
+            for (&t, r) in part.targets.iter().zip(&part.routes) {
+                if r.part() != part.part {
+                    boundary[t as usize] = true;
                 }
             }
         }
@@ -149,6 +342,7 @@ impl DistGraph {
             for (i, &gid) in part.global_ids.iter().enumerate() {
                 part.is_boundary[i] = boundary[gid as usize];
             }
+            part.boundary_vertices = part.is_boundary.iter().filter(|&&b| b).count();
         }
 
         DistGraph { parts, location, num_vertices: nv, num_edges: g.num_edges() }
@@ -159,15 +353,13 @@ impl DistGraph {
         self.parts.len()
     }
 
-    /// Total number of cross-partition edges.
+    /// Total number of cross-partition edges (O(parts): derived from the
+    /// precomputed internal-edge counts).
     pub fn edge_cut(&self) -> usize {
-        self.parts
-            .iter()
-            .map(|p| p.edges.iter().filter(|e| e.target_part != p.part).count())
-            .sum()
+        self.parts.iter().map(|p| p.num_edges() - p.num_internal_edges()).sum()
     }
 
-    /// Total number of boundary vertices.
+    /// Total number of boundary vertices (O(parts)).
     pub fn num_boundary(&self) -> usize {
         self.parts.iter().map(|p| p.num_boundary()).sum()
     }
@@ -204,6 +396,16 @@ mod tests {
     }
 
     #[test]
+    fn edge_route_pack_roundtrip() {
+        for (p, l) in [(0u32, 0u32), (1, 0), (0, 1), (7, 123_456), (u32::MAX, u32::MAX)] {
+            let r = EdgeRoute::new(p, l);
+            assert_eq!(r.part(), p);
+            assert_eq!(r.local(), l);
+            assert_eq!(r.unpack(), (p, l));
+        }
+    }
+
+    #[test]
     fn partitioning_preserves_structure() {
         let g = path4();
         let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
@@ -218,11 +420,34 @@ mod tests {
     fn location_indicators_resolved() {
         let g = path4();
         let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
-        let e = &dg.parts[0].out_edges(1)[0]; // edge 1 -> 2
+        let edges = dg.parts[0].out_edges(1); // edge 1 -> 2
+        assert_eq!(edges.len(), 1);
+        let e = edges.get(0);
         assert_eq!(e.target, 2);
         assert_eq!(e.target_part, 1);
         assert_eq!(e.target_local, 0);
+        assert_eq!(e.route(), EdgeRoute::new(1, 0));
         assert_eq!(dg.location[3], (1, 1));
+    }
+
+    #[test]
+    fn soa_columns_agree_with_edge_views() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 1, 0, 1], 2);
+        for part in &dg.parts {
+            for lv in 0..part.num_vertices() {
+                let edges = part.out_edges(lv);
+                assert_eq!(edges.targets().len(), edges.len());
+                assert_eq!(edges.routes().len(), edges.len());
+                assert_eq!(edges.weights().len(), edges.len());
+                for (i, e) in edges.iter().enumerate() {
+                    assert_eq!(e.target, edges.targets()[i]);
+                    assert_eq!(e.route(), edges.routes()[i]);
+                    assert_eq!(e.weight, edges.weights()[i]);
+                    assert_eq!(dg.location[e.target as usize], e.route().unpack());
+                }
+            }
+        }
     }
 
     #[test]
@@ -235,6 +460,33 @@ mod tests {
         assert!(dg.parts[1].is_boundary[0]); // v2: in-edge from remote v1
         assert!(!dg.parts[1].is_boundary[1]); // v3: in-edge from v2, same part
         assert_eq!(dg.num_boundary(), 1);
+    }
+
+    #[test]
+    fn precomputed_counts_match_rescans() {
+        let g = crate::graph::generators::powerlaw(300, 4, 17);
+        let a = crate::partition::hash_partition(&g, 5);
+        let dg = DistGraph::new(&g, &a, 5);
+        for p in &dg.parts {
+            assert_eq!(
+                p.num_boundary(),
+                p.is_boundary.iter().filter(|&&b| b).count(),
+                "partition {}: boundary count",
+                p.part
+            );
+            assert_eq!(
+                p.num_internal_edges(),
+                p.routes.iter().filter(|r| r.part() == p.part).count(),
+                "partition {}: internal edges",
+                p.part
+            );
+        }
+        let brute_cut: usize = dg
+            .parts
+            .iter()
+            .map(|p| p.routes.iter().filter(|r| r.part() != p.part).count())
+            .sum();
+        assert_eq!(dg.edge_cut(), brute_cut);
     }
 
     #[test]

@@ -10,4 +10,4 @@ pub mod io;
 
 pub use builder::GraphBuilder;
 pub use csr::{Graph, VertexId};
-pub use dist::{DistGraph, Edge, PartGraph};
+pub use dist::{DistGraph, Edge, EdgeRoute, Edges, EdgesIter, PartGraph};

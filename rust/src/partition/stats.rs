@@ -104,8 +104,10 @@ impl PartitionLocality {
     }
 }
 
-/// Compute every partition's [`PartitionLocality`] in one O(V+E) pass
-/// over the distributed view, in partition order.
+/// Compute every partition's [`PartitionLocality`], in partition order.
+/// Vertex/boundary/internal/cut-out counts come straight from the
+/// counts precomputed at [`DistGraph::new`] time; only the incoming-cut
+/// tally needs a pass, and it streams the SoA route column alone.
 pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
     let mut out: Vec<PartitionLocality> = dg
         .parts
@@ -114,18 +116,16 @@ pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
             partition: p.part,
             vertices: p.num_vertices(),
             boundary_vertices: p.num_boundary(),
-            internal_edges: 0,
-            cut_out: 0,
+            internal_edges: p.num_internal_edges(),
+            cut_out: p.num_edges() - p.num_internal_edges(),
             cut_in: 0,
         })
         .collect();
     for p in &dg.parts {
-        for e in &p.edges {
-            if e.target_part == p.part {
-                out[p.part as usize].internal_edges += 1;
-            } else {
-                out[p.part as usize].cut_out += 1;
-                out[e.target_part as usize].cut_in += 1;
+        for r in &p.routes {
+            let tp = r.part();
+            if tp != p.part {
+                out[tp as usize].cut_in += 1;
             }
         }
     }

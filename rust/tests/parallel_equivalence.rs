@@ -59,6 +59,7 @@ where
         assert_eq!(bits(a), bits(b), "{kind} {algo}: v{i} differs between modes");
     }
     assert_counts_equal(kind, algo, &seq.metrics, &par.metrics);
+    assert_trace_counters_equal(kind, algo, &seq.trace, &par.trace);
 }
 
 /// GAS analogue of [`check_vertex`].
@@ -79,11 +80,15 @@ where
         assert_eq!(bits(a), bits(b), "{kind} {algo}: v{i} differs between modes");
     }
     assert_counts_equal(kind, algo, &seq.metrics, &par.metrics);
+    assert_trace_counters_equal(kind, algo, &seq.trace, &par.trace);
 }
 
 /// Threads(4) ≡ Sequential on all six kinds for PageRank, SSSP and WCC,
 /// across several graph shapes and partition counts (including more
-/// partitions than threads and an empty partition or two).
+/// partitions than threads and an empty partition or two). Values,
+/// metric counters AND every per-step trace counter must match — the
+/// pooled sorted worklist and resolved-route send plane must reproduce
+/// the original `BTreeSet` sweep order bit-for-bit.
 #[test]
 fn threads_bit_identical_to_sequential_on_all_six_kinds() {
     let cases: Vec<(Graph, usize)> = vec![
