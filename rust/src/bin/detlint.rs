@@ -1,0 +1,76 @@
+//! `detlint` — run the determinism-contract lint over `rust/src`.
+//!
+//! ```text
+//! cargo run --bin detlint              # human-readable report
+//! cargo run --bin detlint -- --json    # machine-readable report
+//! cargo run --bin detlint -- --root path/to/src
+//! ```
+//!
+//! Exit status: 0 clean, 1 findings, 2 usage or I/O error. CI runs this
+//! in the `lint` job; see `docs/architecture.md` ("Correctness
+//! tooling") for the rules and the `allow` annotation syntax.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use graphhp::lint;
+
+const USAGE: &str = "usage: detlint [--json] [--root DIR]\n\
+  --json      machine-readable report on stdout\n\
+  --root DIR  source tree to scan (default: this crate's src/)";
+
+fn main() -> ExitCode {
+    let mut json = false;
+    let mut root: Option<PathBuf> = None;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--json" => json = true,
+            "--root" => match args.next() {
+                Some(d) => root = Some(PathBuf::from(d)),
+                None => {
+                    eprintln!("detlint: --root needs a directory\n{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("detlint: unknown argument `{other}`\n{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+    let root =
+        root.unwrap_or_else(|| PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src")));
+
+    match lint::lint_tree(&root) {
+        Err(e) => {
+            eprintln!("detlint: {}: {e}", root.display());
+            ExitCode::from(2)
+        }
+        Ok(findings) => {
+            if json {
+                println!("{}", lint::to_json(&findings));
+            } else if findings.is_empty() {
+                println!("detlint: clean ({})", root.display());
+            } else {
+                for f in &findings {
+                    println!("{f}");
+                }
+                println!(
+                    "detlint: {} finding(s) — suppress with \
+                     `// detlint: allow(<rule>) — <reason>` on the offending line",
+                    findings.len()
+                );
+            }
+            if findings.is_empty() {
+                ExitCode::SUCCESS
+            } else {
+                ExitCode::FAILURE
+            }
+        }
+    }
+}

@@ -57,6 +57,8 @@ pub fn run_am_hama<P: VertexProgram>(
         let outs = run_workers(cfg.parallelism, &mut workers, |p, ws| {
             ws.outbox.reset();
             let mut wagg = aggs.clone();
+            // detlint: allow(wall-clock) — compute_us probe: measures this
+            // worker's sweep for telemetry/netsim only, never feeds results.
             let t0 = std::time::Instant::now();
 
             // Vertices are processed in local-index order; in-memory
@@ -113,6 +115,9 @@ pub fn run_am_hama<P: VertexProgram>(
         );
         for (ws, ob) in workers.iter_mut().zip(outboxes) {
             ws.outbox = ob;
+            // debug sanitizer: step closed, inboxes/frontier intact
+            // after delivery (no-op in release builds)
+            super::invariants::check_runtime(&ws.rt);
         }
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;

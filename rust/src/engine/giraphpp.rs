@@ -180,6 +180,8 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                 boundary_frontier: boundary_count(&dg.parts[p], &scheduled),
                 ..Default::default()
             };
+            // detlint: allow(wall-clock) — compute_us probe: measures this
+            // worker's sweep for telemetry/netsim only, never feeds results.
             let t0 = std::time::Instant::now();
             let (computations, local_messages);
             {
@@ -233,6 +235,9 @@ pub fn run_giraphpp<PP: PartitionProgram>(
         );
         for (w, ob) in workers.iter_mut().zip(outboxes) {
             w.outbox = ob;
+            // debug sanitizer: step closed, inboxes/frontier intact
+            // after delivery (no-op in release builds)
+            super::invariants::check_runtime(&w.rt);
         }
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;

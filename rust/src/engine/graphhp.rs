@@ -333,6 +333,8 @@ pub fn run_graphhp<P: VertexProgram>(
             let boundary_in_local = policy.boundary_in_local;
             outbox.reset();
             let mut wagg = aggs.clone();
+            // detlint: allow(wall-clock) — compute_us probe: measures this
+            // worker's sweep for telemetry/netsim only, never feeds results.
             let t0 = std::time::Instant::now();
             let mut outcome = SweepOutcome::default();
             let mut steps: u64 = 0;
@@ -440,6 +442,10 @@ pub fn run_graphhp<P: VertexProgram>(
                         for &lv in rt.cur.pending_sorted() {
                             scratch.worklist.schedule(lv);
                         }
+                        // debug sanitizer: seeded pseudo-superstep worklist
+                        // sorted/deduped before the sweep drains it (no-op
+                        // in release builds)
+                        super::invariants::check_worklist(&scratch.worklist);
                         if scratch.worklist.is_empty() {
                             rt.commit_step();
                             break;
@@ -512,6 +518,14 @@ pub fn run_graphhp<P: VertexProgram>(
         );
         for (hp, ob) in parts.iter_mut().zip(outboxes) {
             hp.outbox = ob;
+            // debug sanitizer: after the iteration barrier the local
+            // runtime must be step-closed and every inbox arena — the
+            // per-partition pair plus both global-phase stores that
+            // buffer cross-partition mail — internally consistent
+            // (no-op in release builds)
+            super::invariants::check_runtime(&hp.rt);
+            super::invariants::check_msgstore(&hp.gq_cur, "gq_cur");
+            super::invariants::check_msgstore(&hp.gq_nxt, "gq_nxt");
         }
 
         // ---- adaptive barrier update: fold the just-recorded counters

@@ -221,6 +221,8 @@ pub fn run_graphlab_sync<P: GasProgram>(
         let view_ref = &view;
         let snap = &snapshot;
         let outs = run_workers(cfg.parallelism, &mut by_part, |p, list| {
+            // detlint: allow(wall-clock) — compute_us probe: measures this
+            // worker's sweep for telemetry/netsim only, never feeds results.
             let t0 = std::time::Instant::now();
             let mut updates = Vec::with_capacity(list.len());
             let mut remote_gathers = 0u64;
@@ -296,6 +298,9 @@ pub fn run_graphlab_sync<P: GasProgram>(
             }
         }
         trace.steps.push(step);
+        // debug sanitizer: round scheduler membership flags consistent
+        // after scatter re-scheduling (no-op in release builds)
+        super::invariants::check_frontier(&frontier);
         clock.barrier(&cfg.net, &mut metrics);
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
@@ -331,7 +336,13 @@ pub fn run_graphlab_async<P: GasProgram>(
     let mut metrics = Metrics::default();
 
     let mut sched = FifoScheduler::seeded(nv);
+    // debug sanitizer: seeded FIFO queue/flag consistency (no-op in
+    // release builds)
+    super::invariants::check_fifo(&sched);
     let mut updates = 0u64;
+    // detlint: allow(wall-clock) — compute_us probe: measures the whole
+    // sequential async run for the parallel-time model, never feeds
+    // results.
     let t0 = std::time::Instant::now();
     let max_updates = cfg.limits.max_iterations.saturating_mul(nv as u64);
 
@@ -357,6 +368,9 @@ pub fn run_graphlab_async<P: GasProgram>(
             break;
         }
     }
+    // debug sanitizer: drained scheduler left no stale queued flags
+    // (no-op in release builds)
+    super::invariants::check_fifo(&sched);
 
     // simulated parallel time: sequential work / effective workers, plus
     // per-update lock+scheduling overhead

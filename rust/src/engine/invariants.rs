@@ -1,0 +1,563 @@
+//! Debug-build invariant sanitizers for the determinism-critical state.
+//!
+//! Every function here validates one of the structural contracts the
+//! sequential/threaded-equivalence argument rests on, and panics with a
+//! message starting `invariant violated:` naming the broken invariant:
+//!
+//! - [`check_msgstore`] — MsgStore arena integrity: FIFO chains are
+//!   acyclic and carry payloads, the free list is disjoint from live
+//!   slots, the flag/index/total accounting matches the chains, and
+//!   `free + live == arena_slots()`;
+//! - [`check_worklist`] — the pooled worklist's sorted/dedup contract
+//!   (ascending drain region, descending pending stack, membership
+//!   bitmap in sync across both buffers);
+//! - [`check_outbox_sealed`] — an outbox reaching the barrier is sealed
+//!   and destination-ordered with correct length accounting;
+//! - [`check_frontier`] / [`check_fifo`] — schedule-set dedup contracts;
+//! - [`check_runtime`] — a partition runtime at a barrier: step closed,
+//!   both inboxes valid, frontier valid, parallel arrays in sync;
+//! - [`check_edge_routes`] — `EdgeRoute` columns agree with the global
+//!   location table (validated once at `DistGraph::new`).
+//!
+//! The validators are compiled **only** under
+//! `#[cfg(any(test, debug_assertions))]`; release builds get inline
+//! no-op stubs, so the barrier hot paths carry zero cost there
+//! ([`ENABLED`] tells which flavor is active). They run at every
+//! engine's barrier (`close_superstep` plus each engine's
+//! delivery fold) and inside the GraphHP local phase, so any test run —
+//! including the `parallel_equivalence` oracle — sweeps them across all
+//! six engines.
+
+use crate::graph::DistGraph;
+
+use super::messages::{MsgStore, Outbox, NIL};
+use super::state::{FifoScheduler, Frontier, PartitionRuntime};
+use super::worker::Worklist;
+
+/// True when this build compiles the real validators (tests and debug
+/// builds); false when they are no-op stubs (release).
+pub(crate) const ENABLED: bool = cfg!(any(test, debug_assertions));
+
+/// Validate a [`MsgStore`]'s arena: free-list/chain disjointness,
+/// acyclicity, payload liveness, and all three accounting structures
+/// (`flagged`, `nonempty`, `total`). `what` labels the store in panic
+/// messages (e.g. `"cur"`, `"gq_nxt"`).
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_msgstore<M>(s: &MsgStore<M>, what: &str) {
+    let nslots = s.slots.len();
+    let n = s.head.len();
+    assert!(
+        s.tail.len() == n && s.flagged.len() == n,
+        "invariant violated: MsgStore({what}) parallel arrays out of sync"
+    );
+
+    // walk the free list: in-bounds, acyclic, every slot payload-free
+    let mut on_free = vec![false; nslots];
+    let mut free_count = 0usize;
+    let mut cur = s.free;
+    while cur != NIL {
+        let i = cur as usize;
+        assert!(
+            i < nslots,
+            "invariant violated: MsgStore({what}) free list points past the arena"
+        );
+        assert!(
+            !on_free[i],
+            "invariant violated: MsgStore({what}) free list cycles at slot {i}"
+        );
+        assert!(
+            s.slots[i].0.is_none(),
+            "invariant violated: MsgStore({what}) free list touches a live slot ({i})"
+        );
+        on_free[i] = true;
+        free_count += 1;
+        cur = s.slots[i].1;
+    }
+
+    // walk every chain: acyclic, disjoint from the free list and from
+    // other chains, payloads present, tail terminates the chain
+    let mut on_chain = vec![false; nslots];
+    let mut live_count = 0usize;
+    let mut in_index = vec![false; n];
+    for &lv in &s.nonempty {
+        if (lv as usize) < n {
+            in_index[lv as usize] = true;
+        }
+    }
+    for lv in 0..n {
+        let h = s.head[lv];
+        assert_eq!(
+            h != NIL,
+            s.flagged[lv],
+            "invariant violated: MsgStore({what}) flag disagrees with chain at vertex {lv}"
+        );
+        if s.flagged[lv] {
+            assert!(
+                in_index[lv],
+                "invariant violated: MsgStore({what}) nonempty index lost flagged vertex {lv}"
+            );
+        }
+        let mut last = NIL;
+        let mut cur = h;
+        while cur != NIL {
+            let i = cur as usize;
+            assert!(
+                i < nslots,
+                "invariant violated: MsgStore({what}) chain of vertex {lv} points past the arena"
+            );
+            assert!(
+                !on_chain[i] && !on_free[i],
+                "invariant violated: MsgStore({what}) chain structure corrupt at vertex {lv} \
+                 (cycle, shared slot, or link into the free list)"
+            );
+            assert!(
+                s.slots[i].0.is_some(),
+                "invariant violated: MsgStore({what}) live chain slot {i} has no payload"
+            );
+            on_chain[i] = true;
+            live_count += 1;
+            last = cur;
+            cur = s.slots[i].1;
+        }
+        if h != NIL {
+            assert_eq!(
+                s.tail[lv], last,
+                "invariant violated: MsgStore({what}) tail does not terminate the chain of vertex {lv}"
+            );
+        }
+    }
+    assert_eq!(
+        live_count, s.total,
+        "invariant violated: MsgStore({what}) message count out of sync with the chains"
+    );
+    assert_eq!(
+        free_count + live_count,
+        nslots,
+        "invariant violated: MsgStore({what}) arena accounting broken: free + live != arena_slots"
+    );
+}
+
+/// Validate the pooled [`Worklist`]'s sorted/dedup contract: the drain
+/// region ascends (once sorted), the pending stack descends, and the
+/// membership bitmap agrees exactly with the union of both buffers.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_worklist(wl: &Worklist) {
+    assert!(
+        wl.cursor <= wl.items.len(),
+        "invariant violated: Worklist cursor past the seed buffer"
+    );
+    if !wl.sorted {
+        assert!(
+            wl.pending.is_empty(),
+            "invariant violated: Worklist pending entries before the first pop"
+        );
+    } else {
+        assert!(
+            wl.items[wl.cursor..].windows(2).all(|w| w[0] < w[1]),
+            "invariant violated: Worklist drain region not strictly ascending"
+        );
+    }
+    assert!(
+        wl.pending.windows(2).all(|w| w[0] > w[1]),
+        "invariant violated: Worklist pending stack not strictly descending"
+    );
+    let mut queued = 0usize;
+    for &v in wl.items[wl.cursor..].iter().chain(&wl.pending) {
+        assert!(
+            wl.member.get(v as usize).copied().unwrap_or(false),
+            "invariant violated: Worklist queued entry {v} lost its membership flag"
+        );
+        queued += 1;
+    }
+    let set = wl.member.iter().filter(|&&b| b).count();
+    assert_eq!(
+        set, queued,
+        "invariant violated: Worklist membership bitmap out of sync \
+         (duplicate or ghost entries)"
+    );
+}
+
+/// Validate an [`Outbox`] arriving at the barrier: it must have been
+/// sealed (the seal is what orders batches and applies combining — an
+/// unsealed drain would deliver in raw push order), every batch must be
+/// `dest_local`-ordered, and `len` must match the batch contents.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_outbox_sealed<M>(o: &Outbox<M>) {
+    assert!(
+        o.sealed,
+        "invariant violated: Outbox reached the barrier without seal \
+         (drain order would be push order, not (dest_part, dest_local))"
+    );
+    let mut count = 0usize;
+    for b in &o.batches {
+        assert!(
+            b.windows(2).all(|w| w[0].0 <= w[1].0),
+            "invariant violated: Outbox batch not destination-ordered after seal"
+        );
+        count += b.len();
+    }
+    assert_eq!(
+        count, o.len,
+        "invariant violated: Outbox length accounting disagrees with its batches"
+    );
+}
+
+/// Validate a [`Frontier`]'s dedup contract: no vertex scheduled twice,
+/// flags agree with the scheduled set.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_frontier(f: &Frontier) {
+    let mut seen = vec![false; f.flagged.len()];
+    for &lv in &f.next {
+        let i = lv as usize;
+        assert!(
+            i < f.flagged.len(),
+            "invariant violated: Frontier entry {lv} out of range"
+        );
+        assert!(
+            !seen[i],
+            "invariant violated: Frontier vertex {lv} scheduled twice"
+        );
+        assert!(
+            f.flagged[i],
+            "invariant violated: Frontier entry {lv} lost its flag"
+        );
+        seen[i] = true;
+    }
+    let set = f.flagged.iter().filter(|&&b| b).count();
+    assert_eq!(
+        set,
+        f.next.len(),
+        "invariant violated: Frontier flags out of sync with the scheduled set"
+    );
+}
+
+/// Validate a [`FifoScheduler`]'s dedup contract (GraphLab async).
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_fifo(s: &FifoScheduler) {
+    let mut seen = vec![false; s.queued.len()];
+    for &v in &s.queue {
+        let i = v as usize;
+        assert!(
+            i < s.queued.len(),
+            "invariant violated: FifoScheduler entry {v} out of range"
+        );
+        assert!(
+            !seen[i],
+            "invariant violated: FifoScheduler vertex {v} queued twice"
+        );
+        assert!(
+            s.queued[i],
+            "invariant violated: FifoScheduler entry {v} lost its queued flag"
+        );
+        seen[i] = true;
+    }
+    let set = s.queued.iter().filter(|&&b| b).count();
+    assert_eq!(
+        set,
+        s.queue.len(),
+        "invariant violated: FifoScheduler flags out of sync with the queue"
+    );
+}
+
+/// Validate a [`PartitionRuntime`] at a barrier: the step transaction is
+/// closed, the parallel per-vertex arrays agree, and both inboxes and
+/// the frontier hold their invariants.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_runtime<V, M>(rt: &PartitionRuntime<V, M>) {
+    assert!(
+        !rt.step_open,
+        "invariant violated: barrier crossed with an open step \
+         (begin_step without commit_step/abort_step_carryover)"
+    );
+    let n = rt.values.len();
+    assert!(
+        rt.halted.len() == n && rt.frontier.flagged.len() == n,
+        "invariant violated: PartitionRuntime parallel arrays out of sync"
+    );
+    check_msgstore(&rt.cur, "cur");
+    check_msgstore(&rt.nxt, "nxt");
+    check_frontier(&rt.frontier);
+}
+
+/// Validate the [`DistGraph`]'s routing metadata once at construction:
+/// every `EdgeRoute` column entry agrees with the global location table,
+/// the location table round-trips through `global_ids`, the CSR offsets
+/// are monotonic over columns of equal length, and the precomputed
+/// boundary/internal counts match a rescan.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_edge_routes(dg: &DistGraph) {
+    assert_eq!(
+        dg.location.len(),
+        dg.num_vertices,
+        "invariant violated: location table length != vertex count"
+    );
+    let mut vertices = 0usize;
+    for part in &dg.parts {
+        let nv = part.num_vertices();
+        vertices += nv;
+        let ne = part.targets.len();
+        assert!(
+            part.routes.len() == ne && part.weights.len() == ne,
+            "invariant violated: partition {} SoA edge columns out of sync",
+            part.part
+        );
+        assert!(
+            part.offsets.len() == nv + 1
+                && part.offsets[0] == 0
+                && part.offsets[nv] == ne
+                && part.offsets.windows(2).all(|w| w[0] <= w[1]),
+            "invariant violated: partition {} CSR offsets not monotonic over its edges",
+            part.part
+        );
+        for (lv, &gid) in part.global_ids.iter().enumerate() {
+            assert_eq!(
+                dg.location[gid as usize],
+                (part.part, lv as u32),
+                "invariant violated: location table points at the wrong vertex \
+                 (partition {}, local {lv})",
+                part.part
+            );
+        }
+        let mut internal = 0usize;
+        for (i, (&t, r)) in part.targets.iter().zip(&part.routes).enumerate() {
+            assert_eq!(
+                r.unpack(),
+                dg.location[t as usize],
+                "invariant violated: EdgeRoute column disagrees with the location \
+                 table (partition {}, edge {i})",
+                part.part
+            );
+            if r.part() == part.part {
+                internal += 1;
+            }
+        }
+        assert_eq!(
+            internal,
+            part.num_internal_edges(),
+            "invariant violated: partition {} precomputed internal-edge count stale",
+            part.part
+        );
+        assert_eq!(
+            part.is_boundary.iter().filter(|&&b| b).count(),
+            part.num_boundary(),
+            "invariant violated: partition {} precomputed boundary count stale",
+            part.part
+        );
+    }
+    assert_eq!(
+        vertices, dg.num_vertices,
+        "invariant violated: partition vertex counts do not sum to the graph"
+    );
+}
+
+// Release builds: inline no-op stubs — the barrier paths pay nothing.
+#[cfg(not(any(test, debug_assertions)))]
+mod stubs {
+    use super::*;
+
+    #[inline(always)]
+    pub(crate) fn check_msgstore<M>(_s: &MsgStore<M>, _what: &str) {}
+    #[inline(always)]
+    pub(crate) fn check_worklist(_wl: &Worklist) {}
+    #[inline(always)]
+    pub(crate) fn check_outbox_sealed<M>(_o: &Outbox<M>) {}
+    #[inline(always)]
+    pub(crate) fn check_frontier(_f: &Frontier) {}
+    #[inline(always)]
+    pub(crate) fn check_fifo(_s: &FifoScheduler) {}
+    #[inline(always)]
+    pub(crate) fn check_runtime<V, M>(_rt: &PartitionRuntime<V, M>) {}
+    #[inline(always)]
+    pub(crate) fn check_edge_routes(_dg: &DistGraph) {}
+}
+#[cfg(not(any(test, debug_assertions)))]
+pub(crate) use stubs::*;
+
+#[cfg(test)]
+mod tests {
+    use super::super::messages::{MsgStore, Outbox};
+    use super::super::program::SourceCombine;
+    use super::super::state::{FifoScheduler, Frontier};
+    use super::super::worker::Worklist;
+    use super::*;
+    use crate::graph::{generators, EdgeRoute};
+    use crate::partition::hash_partition;
+
+    #[test]
+    fn sanitizers_are_gated_to_test_and_debug_builds() {
+        // under `cargo test` the `test` cfg is on, so the real
+        // validators must be compiled in — including `--release` test
+        // runs; plain `cargo build --release` (CI's build-test job)
+        // compiles the no-op stub module instead
+        assert!(ENABLED);
+        assert_eq!(ENABLED, cfg!(any(test, debug_assertions)));
+    }
+
+    #[test]
+    fn healthy_structures_pass() {
+        let mut s: MsgStore<u32> = MsgStore::new(4);
+        let mut buf = Vec::new();
+        for round in 0..10 {
+            s.push(1, round);
+            s.push(3, round);
+            s.push(1, round + 1);
+            check_msgstore(&s, "healthy");
+            s.take_into(1, &mut buf);
+            check_msgstore(&s, "healthy");
+            s.take_into(3, &mut buf);
+        }
+        check_msgstore(&s, "healthy");
+
+        let mut wl = Worklist::default();
+        wl.begin(8);
+        wl.schedule(5);
+        wl.schedule(2);
+        check_worklist(&wl);
+        assert_eq!(wl.pop_first(), Some(2));
+        wl.schedule(1); // pending entry mid-drain
+        wl.schedule(7);
+        check_worklist(&wl);
+
+        let mut o: Outbox<u32> = Outbox::new(None);
+        o.push(1, 9, 0, 10);
+        o.push(1, 4, 0, 11);
+        o.seal(SourceCombine::KeepAll);
+        check_outbox_sealed(&o);
+
+        let mut f = Frontier::new(4);
+        f.schedule(2);
+        f.schedule(0);
+        check_frontier(&f);
+
+        let fifo = FifoScheduler::seeded(3);
+        check_fifo(&fifo);
+    }
+
+    #[test]
+    #[should_panic(expected = "chain structure corrupt")]
+    fn corrupted_msgstore_chain_cycle_is_caught() {
+        let mut s: MsgStore<u32> = MsgStore::new(2);
+        s.push(0, 1); // slot 0
+        s.push(0, 2); // slot 1, chain 0 -> 1
+        s.slots[1].1 = 0; // tail links back to the head: cycle
+        check_msgstore(&s, "test");
+    }
+
+    #[test]
+    #[should_panic(expected = "free list touches a live slot")]
+    fn free_list_overlapping_live_slot_is_caught() {
+        let mut s: MsgStore<u32> = MsgStore::new(2);
+        s.push(0, 1);
+        let mut buf = Vec::new();
+        s.take_into(0, &mut buf); // slot 0 returns to the free list
+        s.slots[0].0 = Some(7); // resurrect the freed slot's payload
+        check_msgstore(&s, "test");
+    }
+
+    #[test]
+    #[should_panic(expected = "message count out of sync")]
+    fn msgstore_total_drift_is_caught() {
+        let mut s: MsgStore<u32> = MsgStore::new(2);
+        s.push(1, 5);
+        s.total += 1;
+        check_msgstore(&s, "test");
+    }
+
+    #[test]
+    #[should_panic(expected = "nonempty index lost flagged vertex")]
+    fn msgstore_stale_index_losing_a_vertex_is_caught() {
+        let mut s: MsgStore<u32> = MsgStore::new(3);
+        s.push(2, 9);
+        s.nonempty.clear(); // the lazy index forgets the flagged vertex
+        check_msgstore(&s, "test");
+    }
+
+    #[test]
+    #[should_panic(expected = "lost its membership flag")]
+    fn worklist_membership_corruption_is_caught() {
+        let mut wl = Worklist::default();
+        wl.begin(8);
+        wl.schedule(3);
+        wl.schedule(5);
+        wl.member[3] = false;
+        check_worklist(&wl);
+    }
+
+    #[test]
+    #[should_panic(expected = "drain region not strictly ascending")]
+    fn unsorted_worklist_drain_region_is_caught() {
+        let mut wl = Worklist::default();
+        wl.begin(8);
+        wl.schedule(5);
+        wl.schedule(3); // seed buffer holds [5, 3]
+        wl.sorted = true; // claim it sorted without sorting
+        check_worklist(&wl);
+    }
+
+    #[test]
+    #[should_panic(expected = "pending stack not strictly descending")]
+    fn worklist_pending_order_corruption_is_caught() {
+        let mut wl = Worklist::default();
+        wl.begin(8);
+        wl.schedule(6);
+        assert_eq!(wl.pop_first(), Some(6));
+        wl.schedule(2);
+        wl.schedule(4); // pending is [4, 2] descending — now break it
+        wl.pending.swap(0, 1);
+        check_worklist(&wl);
+    }
+
+    #[test]
+    #[should_panic(expected = "Outbox reached the barrier without seal")]
+    fn unsealed_outbox_at_barrier_is_caught() {
+        let mut o: Outbox<u32> = Outbox::new(None);
+        o.push(1, 0, 7, 42);
+        check_outbox_sealed(&o);
+    }
+
+    #[test]
+    #[should_panic(expected = "batch not destination-ordered")]
+    fn unordered_sealed_batch_is_caught() {
+        let mut o: Outbox<u32> = Outbox::new(None);
+        o.push(1, 9, 7, 1);
+        o.push(1, 4, 7, 2);
+        o.sealed = true; // forge the seal without the ordering pass
+        check_outbox_sealed(&o);
+    }
+
+    #[test]
+    #[should_panic(expected = "scheduled twice")]
+    fn frontier_duplicate_entry_is_caught() {
+        let mut f = Frontier::new(4);
+        f.schedule(1);
+        f.next.push(1); // bypass the dedup flag
+        check_frontier(&f);
+    }
+
+    #[test]
+    #[should_panic(expected = "lost its queued flag")]
+    fn fifo_flag_corruption_is_caught() {
+        let mut s = FifoScheduler::seeded(3);
+        s.queued[0] = false;
+        check_fifo(&s);
+    }
+
+    #[test]
+    fn dist_graph_routes_validate_clean() {
+        let g = generators::powerlaw(200, 4, 11);
+        let a = hash_partition(&g, 4);
+        let dg = crate::graph::DistGraph::new(&g, &a, 4);
+        check_edge_routes(&dg); // also ran inside DistGraph::new
+    }
+
+    #[test]
+    #[should_panic(expected = "EdgeRoute column disagrees with the location table")]
+    fn tampered_edge_route_is_caught() {
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let mut dg = crate::graph::DistGraph::new(&g, &a, 3);
+        let part = dg.parts.iter_mut().find(|p| !p.routes.is_empty()).unwrap();
+        part.routes[0] = EdgeRoute::new(u32::MAX, u32::MAX);
+        check_edge_routes(&dg);
+    }
+}

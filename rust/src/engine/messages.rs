@@ -25,7 +25,7 @@ use crate::util::Codec;
 use super::program::SourceCombine;
 
 /// Sentinel for "no slot" in the arena chains.
-const NIL: u32 = u32::MAX;
+pub(crate) const NIL: u32 = u32::MAX;
 
 /// Per-partition incoming message queues backed by a flat slot arena.
 ///
@@ -37,17 +37,18 @@ const NIL: u32 = u32::MAX;
 pub struct MsgStore<M> {
     /// Flat message arena: `(payload, next slot in chain / free list)`.
     /// `payload` is `None` only for slots on the free list.
-    slots: Vec<(Option<M>, u32)>,
+    /// (`pub(crate)` for the debug sanitizers in `engine/invariants.rs`.)
+    pub(crate) slots: Vec<(Option<M>, u32)>,
     /// Free-list head.
-    free: u32,
+    pub(crate) free: u32,
     /// Per-vertex chain head (`NIL` = empty).
-    head: Vec<u32>,
+    pub(crate) head: Vec<u32>,
     /// Per-vertex chain tail, for O(1) FIFO append.
-    tail: Vec<u32>,
-    nonempty: Vec<u32>,
-    flagged: Vec<bool>,
+    pub(crate) tail: Vec<u32>,
+    pub(crate) nonempty: Vec<u32>,
+    pub(crate) flagged: Vec<bool>,
     /// Buffered message count (all vertices).
-    total: usize,
+    pub(crate) total: usize,
 }
 
 impl<M> MsgStore<M> {
@@ -116,6 +117,9 @@ impl<M> MsgStore<M> {
         match combiner {
             Some(f) if self.flagged[lv] => {
                 let t = self.tail[lv] as usize;
+                // detlint: allow(unwrap-hot-path) — a flagged vertex's tail
+                // slot is live by the arena invariant (checked by
+                // invariants::check_msgstore at every barrier).
                 let prev = self.slots[t].0.take().expect("tail slot occupied");
                 self.slots[t].0 = Some(f(prev, m));
             }
@@ -138,6 +142,8 @@ impl<M> MsgStore<M> {
         let mut s = self.head[lv];
         while s != NIL {
             let idx = s as usize;
+            // detlint: allow(unwrap-hot-path) — chain slots are live by the
+            // arena invariant (checked by invariants::check_msgstore).
             buf.push(self.slots[idx].0.take().expect("chain slot occupied"));
             let next = self.slots[idx].1;
             self.slots[idx].1 = self.free;
@@ -209,6 +215,8 @@ impl<M: Clone> MsgStore<M> {
                 let mut s = self.head[lv as usize];
                 while s != NIL {
                     let (m, next) = &self.slots[s as usize];
+                    // detlint: allow(unwrap-hot-path) — non-draining walk of a
+                    // live chain (checkpoint path); same arena invariant.
                     q.push(m.as_ref().expect("chain slot occupied").clone());
                     s = *next;
                 }
@@ -244,15 +252,19 @@ pub const MSG_WIRE_OVERHEAD: usize = 8;
 pub struct Outbox<M> {
     /// Per-destination-partition batches, indexed by partition (grown on
     /// demand): `(dest_local, src_gid, message)` in push order.
-    batches: Vec<Vec<(u32, VertexId, M)>>,
+    /// (`pub(crate)` for the debug sanitizers in `engine/invariants.rs`.)
+    pub(crate) batches: Vec<Vec<(u32, VertexId, M)>>,
     combiner: Option<fn(M, M) -> M>,
     /// Entry count; collapses to the combined count at `seal`.
-    len: usize,
-    sealed: bool,
+    pub(crate) len: usize,
+    pub(crate) sealed: bool,
     /// Scratch for the KeepLatest filter, reused across seals.
     keep: Vec<bool>,
     /// Scratch: last batch index per source within one destination run
     /// (membership only — hash order never reaches the output).
+    // detlint: allow(unordered-iter) — lookup-only scratch: written by
+    // insert, read by key; never iterated, so hash order cannot reach
+    // the sealed batch order.
     latest: HashMap<VertexId, usize>,
 }
 
@@ -267,6 +279,8 @@ impl<M> Default for Outbox<M> {
             len: 0,
             sealed: false,
             keep: Vec::new(),
+            // detlint: allow(unordered-iter) — constructing the
+            // lookup-only scratch declared above.
             latest: HashMap::new(),
         }
     }

@@ -107,6 +107,7 @@ pub mod giraphpp;
 pub mod graphhp;
 pub mod graphlab;
 pub mod hama;
+pub(crate) mod invariants;
 pub mod messages;
 pub mod metrics;
 pub mod netsim;

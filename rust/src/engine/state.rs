@@ -33,8 +33,9 @@ use super::worker::{SweepTarget, Worklist};
 /// via a membership bitmap, drained in insertion order.
 #[derive(Clone, Debug, Default)]
 pub struct Frontier {
-    next: Vec<u32>,
-    flagged: Vec<bool>,
+    // (`pub(crate)` for the debug sanitizers in `engine/invariants.rs`.)
+    pub(crate) next: Vec<u32>,
+    pub(crate) flagged: Vec<bool>,
 }
 
 impl Frontier {
@@ -110,8 +111,9 @@ impl Frontier {
 /// re-arms it for future scheduling.
 #[derive(Clone, Debug, Default)]
 pub struct FifoScheduler {
-    queue: VecDeque<u32>,
-    queued: Vec<bool>,
+    // (`pub(crate)` for the debug sanitizers in `engine/invariants.rs`.)
+    pub(crate) queue: VecDeque<u32>,
+    pub(crate) queued: Vec<bool>,
 }
 
 impl FifoScheduler {
@@ -161,7 +163,8 @@ pub struct PartitionRuntime<V, M> {
     pub frontier: Frontier,
     /// Step-lifecycle guard: a `begin_step` is open until `commit_step`
     /// or `abort_step_carryover` closes it.
-    step_open: bool,
+    /// (`pub(crate)` for the debug sanitizers in `engine/invariants.rs`.)
+    pub(crate) step_open: bool,
 }
 
 impl<V, M> PartitionRuntime<V, M> {

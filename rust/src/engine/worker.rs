@@ -60,14 +60,16 @@ use super::Parallelism;
 pub(crate) struct Worklist {
     /// Seed entries; sorted ascending at the first pop, drained by
     /// `cursor`.
-    items: Vec<u32>,
-    cursor: usize,
+    /// (Fields are `pub(crate)` for the debug sanitizers in
+    /// `engine/invariants.rs`.)
+    pub(crate) items: Vec<u32>,
+    pub(crate) cursor: usize,
     /// Mid-sweep insertions, sorted descending (minimum at the back).
-    pending: Vec<u32>,
+    pub(crate) pending: Vec<u32>,
     /// `member[v]` iff `v` is queued and not yet popped.
-    member: Vec<bool>,
+    pub(crate) member: Vec<bool>,
     /// Set at the first pop; later schedules go through `pending`.
-    sorted: bool,
+    pub(crate) sorted: bool,
 }
 
 impl Worklist {
@@ -528,6 +530,9 @@ where
             base += size;
         }
     });
+    // detlint: allow(unwrap-hot-path) — every chunk slot is written by
+    // exactly one scoped worker; the scope joined (or propagated a
+    // panic) before this line runs.
     results.into_iter().map(|r| r.expect("worker produced no output")).collect()
 }
 
@@ -554,6 +559,9 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
         partitions: Vec::with_capacity(outs.len()),
     };
     for (w, mut o) in outs.into_iter().enumerate() {
+        // debug sanitizer: an outbox reaching the barrier must be sealed
+        // and destination-ordered (no-op in release builds)
+        super::invariants::check_outbox_sealed(&o.outbox);
         metrics.network_messages += o.comm.messages;
         metrics.network_bytes += o.comm.bytes;
         metrics.local_messages += o.local_messages;

@@ -345,7 +345,12 @@ impl DistGraph {
             part.boundary_vertices = part.is_boundary.iter().filter(|&&b| b).count();
         }
 
-        DistGraph { parts, location, num_vertices: nv, num_edges: g.num_edges() }
+        let dg = DistGraph { parts, location, num_vertices: nv, num_edges: g.num_edges() };
+        // debug sanitizer: EdgeRoute columns vs location table, CSR
+        // offsets, precomputed counts — validated once per construction
+        // (no-op in release builds)
+        crate::engine::invariants::check_edge_routes(&dg);
+        dg
     }
 
     /// Number of partitions (= simulated workers).

@@ -64,6 +64,7 @@ pub mod algorithms;
 pub mod bench_support;
 pub mod engine;
 pub mod graph;
+pub mod lint;
 pub mod partition;
 #[cfg(feature = "xla")]
 pub mod runtime;

@@ -1,0 +1,307 @@
+//! `detlint` — the repo's determinism-contract linter.
+//!
+//! The whole platform rests on one oracle: a threaded run is bit-for-bit
+//! identical to a sequential one (`tests/parallel_equivalence.rs`). The
+//! conventions that make that hold — no hash-ordered iteration in the
+//! deterministic core, wall clocks only at reporting sites, every
+//! `begin_step` paired with a `commit_step`/`abort_step_carryover`,
+//! thread creation confined to the worker runtime, no panicking
+//! shortcuts in the hot path — used to live in doc comments. This module
+//! turns them into machine-checked rules over a lightweight line-wise
+//! tokenizer ([`scan`]); the `detlint` binary (`src/bin/detlint.rs`)
+//! runs them over `rust/src` and CI fails on any unannotated violation.
+//!
+//! # Rules
+//!
+//! | id | rule |
+//! |----|------|
+//! | `unordered-iter` | no `HashMap`/`HashSet` (or Fx variants) in `engine/`/`partition/` without a rationale, and no iteration over one anywhere in those modules |
+//! | `wall-clock` | `Instant::now`/`SystemTime` only at annotated reporting-only sites |
+//! | `step-pairing` | `.begin_step`/`.begin_step_into` lexically paired with `.commit_step`/`.abort_step_carryover` in the same function |
+//! | `thread-confinement` | thread creation (`thread::spawn`/`scope`/`Builder`) only in `engine/worker.rs` |
+//! | `unwrap-hot-path` | no `.unwrap()`/`.expect(` in `engine/{worker,messages,state}.rs` outside `#[cfg(test)]` |
+//! | `annotation` | every suppression names a known rule and carries a reason (never suppressible) |
+//!
+//! # Suppressing a finding
+//!
+//! ```text
+//! // detlint: allow(<rule>) — <reason>
+//! ```
+//!
+//! on the offending line or on its own comment line directly above.
+//! A reason is mandatory; an allow without one is inert and itself
+//! reported. `#[cfg(test)]` regions are exempt from every rule.
+//!
+//! # Adding a rule
+//!
+//! Add a file under `lint/` with a `check(&SourceFile, &mut Vec<Finding>)`,
+//! a [`RuleId`] variant + name, wire it into [`lint_source`], and prove
+//! it live with a fixture in `tests/detlint_rules.rs` (see
+//! `docs/architecture.md`, "Correctness tooling").
+
+use std::fmt;
+use std::path::Path;
+
+pub mod scan;
+
+mod step_pairing;
+mod thread_confinement;
+mod unordered_iter;
+mod unwrap_hot_path;
+mod wall_clock;
+
+/// Identifier of a determinism rule.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum RuleId {
+    /// R1: unordered hash containers / their iteration in the
+    /// deterministic core.
+    UnorderedIter,
+    /// R2: wall-clock reads outside annotated reporting sites.
+    WallClock,
+    /// R3: unpaired step lifecycle.
+    StepPairing,
+    /// R4: thread creation outside the worker runtime.
+    ThreadConfinement,
+    /// R5: `.unwrap()`/`.expect(` in hot-path modules.
+    UnwrapHotPath,
+    /// Meta: malformed/unknown suppression annotations (never
+    /// suppressible).
+    Annotation,
+}
+
+impl RuleId {
+    /// The five suppressible determinism rules, in report order.
+    pub const RULES: [RuleId; 5] = [
+        RuleId::UnorderedIter,
+        RuleId::WallClock,
+        RuleId::StepPairing,
+        RuleId::ThreadConfinement,
+        RuleId::UnwrapHotPath,
+    ];
+
+    /// The kebab-case name used in reports and `allow(...)` annotations.
+    pub fn name(self) -> &'static str {
+        match self {
+            RuleId::UnorderedIter => "unordered-iter",
+            RuleId::WallClock => "wall-clock",
+            RuleId::StepPairing => "step-pairing",
+            RuleId::ThreadConfinement => "thread-confinement",
+            RuleId::UnwrapHotPath => "unwrap-hot-path",
+            RuleId::Annotation => "annotation",
+        }
+    }
+}
+
+impl fmt::Display for RuleId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One rule violation.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Which rule fired.
+    pub rule: RuleId,
+    /// Path relative to the scanned root, `/`-separated.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Human-readable description.
+    pub message: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.rule, self.message)
+    }
+}
+
+/// A scanned file plus the path predicates the rules dispatch on.
+pub(crate) struct SourceFile {
+    pub path: String,
+    pub scanned: scan::Scanned,
+}
+
+impl SourceFile {
+    /// True when the file lives under any of `dirs` (each given with a
+    /// trailing `/`, e.g. `"engine/"`), at any nesting level.
+    pub fn in_dirs(&self, dirs: &[&str]) -> bool {
+        dirs.iter().any(|d| {
+            self.path.starts_with(d) || self.path.contains(&format!("/{d}"))
+        })
+    }
+
+    /// True when the file's basename is `name` inside directory prefix
+    /// `dir` (e.g. `("engine/", "worker.rs")`).
+    pub fn is_file(&self, dir: &str, name: &str) -> bool {
+        let full = format!("{dir}{name}");
+        self.path == full || self.path.ends_with(&format!("/{full}"))
+    }
+}
+
+/// Lint one file's source text. `path` is the `/`-separated path
+/// relative to the scan root (e.g. `engine/messages.rs`) — the rules'
+/// scoping dispatches on it.
+pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
+    let file = SourceFile { path: path.replace('\\', "/"), scanned: scan::scan(text) };
+    let mut raw = Vec::new();
+    unordered_iter::check(&file, &mut raw);
+    wall_clock::check(&file, &mut raw);
+    step_pairing::check(&file, &mut raw);
+    thread_confinement::check(&file, &mut raw);
+    unwrap_hot_path::check(&file, &mut raw);
+
+    // apply suppressions: a finding survives unless its line carries a
+    // reasoned allow naming the rule
+    let mut findings: Vec<Finding> = raw
+        .into_iter()
+        .filter(|f| {
+            let allows = file
+                .scanned
+                .lines
+                .get(f.line.wrapping_sub(1))
+                .map(|l| l.allows.as_slice())
+                .unwrap_or(&[]);
+            !allows.iter().any(|a| a.reason_ok && a.name == f.rule.name())
+        })
+        .collect();
+
+    // validate the annotations themselves (never suppressible)
+    let known: Vec<&str> = RuleId::RULES.iter().map(|r| r.name()).collect();
+    for line in &file.scanned.lines {
+        for a in &line.allows {
+            if !known.contains(&a.name.as_str()) {
+                findings.push(Finding {
+                    rule: RuleId::Annotation,
+                    path: file.path.clone(),
+                    line: a.line,
+                    message: format!(
+                        "allow({}) names no known rule (rules: {})",
+                        a.name,
+                        known.join(", ")
+                    ),
+                });
+            } else if !a.reason_ok {
+                findings.push(Finding {
+                    rule: RuleId::Annotation,
+                    path: file.path.clone(),
+                    line: a.line,
+                    message: format!(
+                        "allow({}) has no reason — write `// detlint: allow({}) — <why>`",
+                        a.name, a.name
+                    ),
+                });
+            }
+        }
+    }
+
+    findings.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    findings
+}
+
+/// Recursively collect the `.rs` files under `root` in sorted order.
+fn collect_rs(root: &Path, dir: &Path, out: &mut Vec<(String, std::path::PathBuf)>) -> std::io::Result<()> {
+    let mut entries: Vec<_> =
+        std::fs::read_dir(dir)?.collect::<Result<Vec<_>, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            collect_rs(root, &p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, p));
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (deterministic file order),
+/// returning the surviving findings sorted by `(path, line, rule)`.
+pub fn lint_tree(root: &Path) -> std::io::Result<Vec<Finding>> {
+    let mut files = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    let mut findings = Vec::new();
+    for (rel, path) in files {
+        let text = std::fs::read_to_string(&path)?;
+        findings.extend(lint_source(&rel, &text));
+    }
+    findings.sort_by(|a, b| {
+        (a.path.as_str(), a.line, a.rule).cmp(&(b.path.as_str(), b.line, b.rule))
+    });
+    Ok(findings)
+}
+
+/// Escape a string for inclusion in a JSON string literal.
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render findings as the `--json` machine-readable report.
+pub fn to_json(findings: &[Finding]) -> String {
+    let mut s = String::from("{\"findings\":[");
+    for (i, f) in findings.iter().enumerate() {
+        if i > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"rule\":\"{}\",\"path\":\"{}\",\"line\":{},\"message\":\"{}\"}}",
+            f.rule,
+            json_escape(&f.path),
+            f.line,
+            json_escape(&f.message)
+        ));
+    }
+    s.push_str(&format!("],\"count\":{}}}", findings.len()));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn annotation_rule_flags_unknown_and_reasonless() {
+        let src = "let a = 1; // detlint: allow(no-such-rule) — whatever\nlet b = 2; // detlint: allow(wall-clock)\n";
+        let f = lint_source("engine/x.rs", src);
+        assert_eq!(f.len(), 2);
+        assert!(f.iter().all(|x| x.rule == RuleId::Annotation));
+        assert_eq!(f[0].line, 1);
+        assert_eq!(f[1].line, 2);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let f = vec![Finding {
+            rule: RuleId::WallClock,
+            path: "engine/x.rs".into(),
+            line: 3,
+            message: "a \"quoted\" message".into(),
+        }];
+        let j = to_json(&f);
+        assert!(j.contains("\"rule\":\"wall-clock\""));
+        assert!(j.contains("\"line\":3"));
+        assert!(j.contains("\\\"quoted\\\""));
+        assert!(j.ends_with("\"count\":1}"));
+        assert_eq!(to_json(&[]), "{\"findings\":[],\"count\":0}");
+    }
+}

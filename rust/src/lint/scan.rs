@@ -1,0 +1,358 @@
+//! The line-wise tokenizer behind every `detlint` rule.
+//!
+//! Rules never look at raw source: [`scan`] first *blanks* everything
+//! that is not code — `//` and nested `/* */` comments, string/byte
+//! string literals (including multi-line ones) and char literals — so a
+//! pattern like `HashMap` inside a doc comment or an assert message can
+//! never trip a rule. While blanking it also extracts
+//! `detlint: allow(<rule>) — <reason>` annotations from the comment
+//! text, tracks `#[cfg(test)]`/`#[test]` regions by brace depth, and
+//! records the brace depth at the start of every line for the rules
+//! that need lexical structure (function pairing).
+
+/// One inline suppression, parsed out of a comment.
+#[derive(Clone, Debug)]
+pub struct Allow {
+    /// Rule name inside `allow(...)`.
+    pub name: String,
+    /// 1-based line the annotation was written on (not the line it
+    /// applies to — a comment-line annotation applies to the next code
+    /// line).
+    pub line: usize,
+    /// True when a non-empty reason follows the closing parenthesis.
+    /// Reason-less allows are inert and reported as findings.
+    pub reason_ok: bool,
+}
+
+/// One physical source line after blanking.
+#[derive(Clone, Debug)]
+pub struct Line {
+    /// The line with comments and string/char literals replaced by
+    /// spaces; braces, identifiers and punctuation survive verbatim.
+    pub code: String,
+    /// Brace depth at the start of the line.
+    pub depth_start: usize,
+    /// True inside a `#[cfg(test)]` / `#[test]` region (the attribute
+    /// line, the braced body, and the closing brace line).
+    pub in_test: bool,
+    /// Suppressions applying to this line (same-line annotations plus
+    /// any carried down from comment-only lines above).
+    pub allows: Vec<Allow>,
+}
+
+/// A whole file, scanned.
+#[derive(Debug, Default)]
+pub struct Scanned {
+    /// Blanked lines, index 0 = line 1.
+    pub lines: Vec<Line>,
+}
+
+/// True for characters that can appear in a Rust identifier.
+pub fn is_ident_char(c: u8) -> bool {
+    c == b'_' || c.is_ascii_alphanumeric()
+}
+
+/// Byte offsets of `pat` in `code` where the preceding character is not
+/// part of an identifier (so `HashMap` does not match `MyHashMapLike`'s
+/// prefix; the *following* character is the caller's business since most
+/// patterns end in punctuation).
+pub fn find_unbound(code: &str, pat: &str) -> Vec<usize> {
+    let mut hits = Vec::new();
+    let bytes = code.as_bytes();
+    let need_bound = pat.as_bytes().first().is_some_and(|&c| is_ident_char(c));
+    let mut from = 0;
+    while let Some(rel) = code[from..].find(pat) {
+        let at = from + rel;
+        let bounded = !need_bound || at == 0 || !is_ident_char(bytes[at - 1]);
+        if bounded {
+            hits.push(at);
+        }
+        from = at + pat.len().max(1);
+    }
+    hits
+}
+
+/// Lexer mode carried across lines.
+enum Mode {
+    Code,
+    /// Inside `/* */`, with nesting depth.
+    Block(u32),
+    /// Inside a (possibly multi-line) string literal.
+    Str,
+}
+
+/// Blank one line under the current mode. Returns the blanked code and
+/// the comment text seen on this line (for annotation parsing).
+fn blank_line(raw: &str, mode: &mut Mode) -> (String, String) {
+    let b = raw.as_bytes();
+    let mut code = String::with_capacity(raw.len());
+    let mut comment = String::new();
+    let mut i = 0;
+    while i < b.len() {
+        match mode {
+            Mode::Block(depth) => {
+                if b[i] == b'*' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    *depth -= 1;
+                    if *depth == 0 {
+                        *mode = Mode::Code;
+                    }
+                    code.push_str("  ");
+                    i += 2;
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    *depth += 1;
+                    code.push_str("  ");
+                    i += 2;
+                } else {
+                    comment.push(b[i] as char);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Str => {
+                if b[i] == b'\\' {
+                    code.push_str("  ");
+                    i += 2; // skip the escaped character too
+                } else if b[i] == b'"' {
+                    *mode = Mode::Code;
+                    code.push(' ');
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            Mode::Code => {
+                if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'/' {
+                    // line comment: the rest of the line is comment text
+                    comment.push_str(&raw[i + 2..]);
+                    for _ in i..b.len() {
+                        code.push(' ');
+                    }
+                    i = b.len();
+                } else if b[i] == b'/' && i + 1 < b.len() && b[i + 1] == b'*' {
+                    *mode = Mode::Block(1);
+                    code.push_str("  ");
+                    i += 2;
+                } else if b[i] == b'"' {
+                    *mode = Mode::Str;
+                    code.push(' ');
+                    i += 1;
+                } else if b[i] == b'\'' {
+                    // char literal vs lifetime: a backslash or a closing
+                    // quote two characters ahead means char literal
+                    if i + 1 < b.len() && b[i + 1] == b'\\' {
+                        // escaped char literal: skip to the closing quote
+                        let mut j = i + 3; // past '\x
+                        while j < b.len() && b[j] != b'\'' {
+                            j += 1;
+                        }
+                        let end = (j + 1).min(b.len());
+                        for _ in i..end {
+                            code.push(' ');
+                        }
+                        i = end;
+                    } else if i + 2 < b.len() && b[i + 2] == b'\'' {
+                        code.push_str("   ");
+                        i += 3;
+                    } else {
+                        // lifetime: keep the tick, it breaks no rule
+                        code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    code.push(b[i] as char);
+                    i += 1;
+                }
+            }
+        }
+    }
+    (code, comment)
+}
+
+/// Parse every `detlint: allow(<rule>) <reason>` out of one line's
+/// comment text. A "name" that is not plain kebab-case (e.g. the
+/// `<rule>` placeholder this very sentence uses) is documentation, not
+/// an annotation attempt, and is ignored.
+fn parse_allows(comment: &str, line_no: usize) -> Vec<Allow> {
+    const MARK: &str = "detlint: allow(";
+    let mut out = Vec::new();
+    let mut from = 0;
+    while let Some(rel) = comment[from..].find(MARK) {
+        let name_start = from + rel + MARK.len();
+        let Some(close_rel) = comment[name_start..].find(')') else {
+            break;
+        };
+        let name = comment[name_start..name_start + close_rel].trim().to_string();
+        if name.is_empty()
+            || !name.bytes().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit() || c == b'-')
+        {
+            from = name_start + close_rel + 1;
+            continue;
+        }
+        let rest = &comment[name_start + close_rel + 1..];
+        // the reason is whatever follows, minus connective punctuation;
+        // it must actually say something
+        let reason = rest
+            .trim_start_matches([' ', '\t', ':', '-', '—', '–'])
+            .split("detlint: allow(")
+            .next()
+            .unwrap_or("")
+            .trim();
+        out.push(Allow { name, line: line_no, reason_ok: reason.len() >= 3 });
+        from = name_start + close_rel + 1;
+    }
+    out
+}
+
+/// True when the blanked line carries a `#[cfg(test)]`-like or
+/// `#[test]` attribute.
+fn has_test_attr(code: &str) -> bool {
+    code.contains("#[cfg(test)")
+        || code.contains("#[cfg(any(test")
+        || code.contains("#[cfg(all(test")
+        || code.contains("#[test]")
+}
+
+/// Scan a whole file: blank every line, attach suppressions, and mark
+/// test regions.
+pub fn scan(text: &str) -> Scanned {
+    let mut mode = Mode::Code;
+    let mut lines = Vec::new();
+    let mut pending_allows: Vec<Allow> = Vec::new();
+    let mut depth = 0usize;
+    // Some(d): inside a test region that closes when depth returns to d
+    let mut test_close: Option<usize> = None;
+    // a test attribute was seen and its item has not opened a brace yet
+    let mut pending_attr = false;
+
+    for (idx, raw) in text.lines().enumerate() {
+        let line_no = idx + 1;
+        let (code, comment) = blank_line(raw, &mut mode);
+        let own_allows = parse_allows(&comment, line_no);
+        let has_code = !code.trim().is_empty();
+
+        if has_test_attr(&code) {
+            pending_attr = true;
+        }
+        let mut in_test = test_close.is_some() || pending_attr;
+        let depth_start = depth;
+        let mut net = 0i64;
+        for &c in code.as_bytes() {
+            if c == b'{' {
+                if pending_attr && test_close.is_none() {
+                    test_close = Some(depth);
+                    in_test = true;
+                }
+                pending_attr = false;
+                depth += 1;
+                net += 1;
+            } else if c == b'}' {
+                depth = depth.saturating_sub(1);
+                net -= 1;
+                if test_close == Some(depth) {
+                    test_close = None;
+                    in_test = true; // the closing-brace line is still test
+                }
+            }
+        }
+        // attribute on a braceless item (`#[cfg(test)] mod tests;`,
+        // `#[cfg(test)] use ...;`): consumed by that single line
+        if pending_attr && has_code && net == 0 && code.trim_end().ends_with(';') {
+            pending_attr = false;
+        }
+
+        let allows = if has_code {
+            let mut a = std::mem::take(&mut pending_allows);
+            a.extend(own_allows);
+            a
+        } else {
+            pending_allows.extend(own_allows);
+            Vec::new()
+        };
+        lines.push(Line { code, depth_start, in_test, allows });
+    }
+    Scanned { lines }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn comments_and_strings_are_blanked() {
+        let s = scan("let x = \"HashMap\"; // HashMap here\nlet y = 1; /* HashMap */ let z = 2;\n");
+        assert!(!s.lines[0].code.contains("HashMap"));
+        assert!(s.lines[0].code.contains("let x ="));
+        assert!(!s.lines[1].code.contains("HashMap"));
+        assert!(s.lines[1].code.contains("let z = 2;"));
+    }
+
+    #[test]
+    fn multi_line_block_comment_and_string() {
+        let s = scan("/* a\nHashMap\n*/ let a = 1;\nlet s = \"x\ny\"; let b = 2;\n");
+        assert!(!s.lines[1].code.contains("HashMap"));
+        assert!(s.lines[2].code.contains("let a = 1;"));
+        assert!(s.lines[3].code.contains("let b = 2;"));
+        assert!(!s.lines[3].code.contains('y'));
+    }
+
+    #[test]
+    fn char_literals_blank_but_lifetimes_survive() {
+        let s = scan("s.push('{'); f::<'a>(x); let c = '\\n';\n");
+        assert_eq!(s.lines[0].depth_start, 0, "brace inside char literal is not code");
+        assert!(s.lines[0].code.contains("f::<'a>(x);"));
+        let s2 = scan("if c == '{' {\n}\n");
+        assert_eq!(s2.lines[1].depth_start, 1, "only the real brace counts");
+    }
+
+    #[test]
+    fn doc_placeholder_is_not_an_annotation() {
+        // documentation quoting the syntax must not register an allow
+        let s = scan("// the syntax is `detlint: allow(<rule>) — <reason>`\nlet x = 1;\n");
+        assert!(s.lines[1].allows.is_empty());
+        let s2 = scan("let x = 1; // detlint: allow(WallClock) — wrong case\n");
+        assert!(s2.lines[0].allows.is_empty());
+    }
+
+    #[test]
+    fn allow_parses_name_and_requires_reason() {
+        let s = scan("let x = 1; // detlint: allow(wall-clock) — reporting only\n");
+        let a = &s.lines[0].allows[0];
+        assert_eq!(a.name, "wall-clock");
+        assert!(a.reason_ok);
+        let s2 = scan("let x = 1; // detlint: allow(wall-clock)\n");
+        assert!(!s2.lines[0].allows[0].reason_ok, "bare allow has no reason");
+    }
+
+    #[test]
+    fn comment_line_allow_applies_to_next_code_line() {
+        let s = scan("// detlint: allow(unordered-iter) — membership only\n// more prose\nlet m = 1;\n");
+        assert!(s.lines[0].allows.is_empty());
+        assert_eq!(s.lines[2].allows.len(), 1);
+        assert_eq!(s.lines[2].allows[0].line, 1, "original annotation line preserved");
+    }
+
+    #[test]
+    fn cfg_test_region_tracked_by_depth() {
+        let src = "fn live() {}\n#[cfg(test)]\nmod tests {\n    fn t() {\n        x();\n    }\n}\nfn live2() {}\n";
+        let s = scan(src);
+        assert!(!s.lines[0].in_test);
+        assert!(s.lines[1].in_test, "attribute line");
+        assert!(s.lines[4].in_test, "body");
+        assert!(s.lines[6].in_test, "closing brace");
+        assert!(!s.lines[7].in_test, "code after the region");
+    }
+
+    #[test]
+    fn cfg_test_on_braceless_item_does_not_leak() {
+        let s = scan("#[cfg(test)]\nuse foo::bar;\nfn live() {\n    x();\n}\n");
+        assert!(s.lines[1].in_test);
+        assert!(!s.lines[3].in_test, "region must not leak past the `;` item");
+    }
+
+    #[test]
+    fn find_unbound_respects_identifier_boundaries() {
+        assert_eq!(find_unbound("MyHashMap HashMap", "HashMap"), vec![10]);
+        assert_eq!(find_unbound("x.iter() fruiter()", ".iter("), vec![1]);
+    }
+}

@@ -1,0 +1,120 @@
+//! R3 `step-pairing` — every step opened is lexically closed.
+//!
+//! A `.begin_step(` / `.begin_step_into(` swaps a partition's inbox
+//! pair and drains its frontier; until a `.commit_step(` or
+//! `.abort_step_carryover(` closes the transaction, the runtime is
+//! mid-step and a barrier would observe torn state (the exact livelock
+//! PR 3's lifecycle refactor fixed). The contract is *lexical*: the
+//! function that opens a step must contain a closer. The rule tracks
+//! function frames by brace depth and fires at every opener in a frame
+//! with zero closers.
+//!
+//! Scope: `engine/` and `partition/`. Runtime assertions already catch
+//! dynamic misuse (`step_open`); this rule catches the paths tests never
+//! execute.
+
+use super::{Finding, RuleId, SourceFile};
+
+const OPENER: &str = ".begin_step"; // prefix-matches .begin_step_into too
+const CLOSERS: [&str; 2] = [".commit_step", ".abort_step_carryover"];
+
+struct Frame {
+    /// Brace depth *outside* the function body: the frame ends when a
+    /// `}` returns the depth to this value.
+    close_depth: usize,
+    /// Lines of openers seen in this frame (not in inner frames).
+    opens: Vec<usize>,
+    closes: usize,
+}
+
+pub(crate) fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_dirs(&["engine/", "partition/"]) {
+        return;
+    }
+    let mut depth = 0usize;
+    let mut frames: Vec<Frame> = Vec::new();
+    // between a `fn` keyword and its body brace; cancelled by `;`/`,` at
+    // signature top level (trait method declarations, fn-pointer types)
+    let mut pending_fn = false;
+    let mut sig_nest = 0i64;
+
+    let mut finalize = |f: Frame, out: &mut Vec<Finding>| {
+        if !f.opens.is_empty() && f.closes == 0 {
+            for line in f.opens {
+                out.push(Finding {
+                    rule: RuleId::StepPairing,
+                    path: file.path.clone(),
+                    line,
+                    message: "begin_step with no commit_step/abort_step_carryover \
+                              in the same function — the step transaction leaks \
+                              past the function that opened it"
+                        .into(),
+                });
+            }
+        }
+    };
+
+    for (idx, line) in file.scanned.lines.iter().enumerate() {
+        let code = line.code.as_bytes();
+        let text = &line.code;
+        let mut i = 0;
+        while i < code.len() {
+            let b = code[i];
+            if b == b'{' {
+                if pending_fn {
+                    frames.push(Frame { close_depth: depth, opens: Vec::new(), closes: 0 });
+                    pending_fn = false;
+                }
+                depth += 1;
+                i += 1;
+            } else if b == b'}' {
+                depth = depth.saturating_sub(1);
+                if frames.last().is_some_and(|f| f.close_depth == depth) {
+                    if let Some(f) = frames.pop() {
+                        finalize(f, out);
+                    }
+                }
+                i += 1;
+            } else if pending_fn && (b == b'(' || b == b'[' || b == b'<') {
+                sig_nest += 1;
+                i += 1;
+            } else if pending_fn && (b == b')' || b == b']') {
+                sig_nest -= 1;
+                i += 1;
+            } else if pending_fn && b == b'>' {
+                // not the arrow's `>`
+                if i == 0 || code[i - 1] != b'-' {
+                    sig_nest -= 1;
+                }
+                i += 1;
+            } else if pending_fn && (b == b';' || b == b',') && sig_nest <= 0 {
+                // braceless declaration or fn-pointer type: no body
+                pending_fn = false;
+                i += 1;
+            } else if text[i..].starts_with("fn")
+                && (i == 0 || !super::scan::is_ident_char(code[i - 1]))
+                && !code.get(i + 2).is_some_and(|&c| super::scan::is_ident_char(c))
+            {
+                pending_fn = true;
+                sig_nest = 0;
+                i += 2;
+            } else if !line.in_test && text[i..].starts_with(OPENER) {
+                if let Some(f) = frames.last_mut() {
+                    f.opens.push(idx + 1);
+                }
+                i += OPENER.len();
+            } else if !line.in_test && CLOSERS.iter().any(|c| text[i..].starts_with(c)) {
+                if let Some(f) = frames.last_mut() {
+                    f.closes += 1;
+                }
+                i += 1;
+            } else {
+                i += 1;
+            }
+        }
+    }
+    // unterminated frames at EOF (truncated fixtures) still report
+    while let Some(f) = frames.pop() {
+        finalize(f, out);
+    }
+}

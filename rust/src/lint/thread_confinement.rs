@@ -1,0 +1,35 @@
+//! R4 `thread-confinement` — thread creation lives in one file.
+//!
+//! The sequential/threaded equivalence argument is local to
+//! `engine/worker.rs`: workers are shared-nothing within a superstep and
+//! the barrier folds their outputs in partition order. A thread spawned
+//! anywhere else has no such argument and silently widens the trusted
+//! surface, so `thread::spawn` / `thread::scope` / `thread::Builder`
+//! outside `engine/worker.rs` (tests exempt) is a violation.
+
+use super::{Finding, RuleId, SourceFile};
+
+const PATTERNS: [&str; 3] = ["thread::spawn", "thread::scope", "thread::Builder"];
+
+pub(crate) fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if file.is_file("engine/", "worker.rs") {
+        return;
+    }
+    for (idx, line) in file.scanned.lines.iter().enumerate() {
+        if line.in_test || line.code.trim_start().starts_with("use ") {
+            continue;
+        }
+        if let Some(p) = PATTERNS.iter().find(|p| line.code.contains(*p)) {
+            out.push(Finding {
+                rule: RuleId::ThreadConfinement,
+                path: file.path.clone(),
+                line: idx + 1,
+                message: format!(
+                    "{p} outside engine/worker.rs — thread creation is confined to \
+                     the worker runtime, where the partition-order barrier makes \
+                     parallelism deterministic"
+                ),
+            });
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! R1 `unordered-iter` — no unordered hash containers in the
+//! deterministic core.
+//!
+//! Scope: `engine/` and `partition/`. Two kinds of sites fire:
+//!
+//! - **declarations** of `HashMap`/`HashSet` (and the `FxHashMap`/
+//!   `FxHashSet` variants): any type mention or constructor. A
+//!   membership-only container is legitimate (`Outbox::latest`) but must
+//!   say so in an `allow` — hash order silently reaching an output is
+//!   exactly the bug class PR 3 fixed.
+//! - **iteration** over a container declared in the same file:
+//!   `.iter()`, `.iter_mut()`, `.into_iter()`, `.keys()`, `.values()`,
+//!   `.values_mut()`, `.drain(`, `.retain(`, and `for ... in <name>`.
+//!   Iteration is flagged even when the declaration carries an allow —
+//!   the declaration's rationale ("membership only") does not extend to
+//!   iterating it.
+
+use super::scan::{find_unbound, is_ident_char};
+use super::{Finding, RuleId, SourceFile};
+
+const CONTAINERS: [&str; 4] = ["HashMap", "HashSet", "FxHashMap", "FxHashSet"];
+const ITER_METHODS: [&str; 8] = [
+    ".iter()",
+    ".iter_mut()",
+    ".into_iter()",
+    ".keys()",
+    ".values()",
+    ".values_mut()",
+    ".drain(",
+    ".retain(",
+];
+
+/// Extract the name a declaration line binds: `let [mut] NAME` or a
+/// struct-field / parameter `NAME:` at the start of the trimmed line.
+fn bound_name(code: &str) -> Option<String> {
+    let t = code.trim_start();
+    if let Some(rest) = t.strip_prefix("let ") {
+        let rest = rest.strip_prefix("mut ").unwrap_or(rest);
+        let name: String =
+            rest.bytes().take_while(|&c| is_ident_char(c)).map(char::from).collect();
+        return (!name.is_empty()).then_some(name);
+    }
+    let t = t.strip_prefix("pub(crate) ").unwrap_or(t);
+    let t = t.strip_prefix("pub ").unwrap_or(t);
+    let name: String =
+        t.bytes().take_while(|&c| is_ident_char(c)).map(char::from).collect();
+    if !name.is_empty() && t[name.len()..].starts_with(':') && !t[name.len()..].starts_with("::") {
+        return Some(name);
+    }
+    None
+}
+
+/// The identifier iterated by a `for ... in <expr>` line, if the
+/// expression is a plain (possibly `self.`-qualified, possibly borrowed)
+/// name.
+fn for_loop_target(code: &str) -> Option<String> {
+    let for_at = find_unbound(code, "for ").into_iter().next()?;
+    let in_at = code[for_at..].find(" in ")? + for_at + 4;
+    let mut expr = code[in_at..].trim_start();
+    for p in ["&mut ", "&", "*"] {
+        expr = expr.strip_prefix(p).unwrap_or(expr);
+    }
+    expr = expr.strip_prefix("self.").unwrap_or(expr);
+    let name: String =
+        expr.bytes().take_while(|&c| is_ident_char(c)).map(char::from).collect();
+    // only a bare name (optionally followed by the loop body brace):
+    // `for x in map.values()` is caught by the method patterns instead
+    let rest = expr[name.len()..].trim_start();
+    (!name.is_empty() && (rest.is_empty() || rest.starts_with('{'))).then_some(name)
+}
+
+pub(crate) fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_dirs(&["engine/", "partition/"]) {
+        return;
+    }
+    let mut names: Vec<String> = Vec::new();
+    for (idx, line) in file.scanned.lines.iter().enumerate() {
+        if line.in_test || line.code.trim_start().starts_with("use ") {
+            continue;
+        }
+        let code = &line.code;
+        let mentioned = CONTAINERS
+            .iter()
+            .find(|c| find_unbound(code, c).iter().any(|&at| {
+                // a genuine container reference: `HashMap<`, `HashMap::`
+                let after = &code[at + c.len()..];
+                after.starts_with('<') || after.starts_with("::")
+            }));
+        if let Some(c) = mentioned {
+            if let Some(n) = bound_name(code) {
+                if !names.contains(&n) {
+                    names.push(n);
+                }
+            }
+            out.push(Finding {
+                rule: RuleId::UnorderedIter,
+                path: file.path.clone(),
+                line: idx + 1,
+                message: format!(
+                    "{c} in a deterministic module — iteration order is \
+                     hasher-dependent; if membership/lookup-only, annotate why"
+                ),
+            });
+        }
+        // iteration over a tracked container
+        for n in &names {
+            let method_hit = ITER_METHODS
+                .iter()
+                .any(|m| !find_unbound(code, &format!("{n}{m}")).is_empty());
+            let for_hit = for_loop_target(code).as_deref() == Some(n.as_str());
+            if method_hit || for_hit {
+                out.push(Finding {
+                    rule: RuleId::UnorderedIter,
+                    path: file.path.clone(),
+                    line: idx + 1,
+                    message: format!(
+                        "iteration over unordered container `{n}` — order depends \
+                         on the hasher and breaks sequential/threaded equivalence"
+                    ),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,42 @@
+//! R5 `unwrap-hot-path` — no panicking shortcuts in the hot path.
+//!
+//! `engine/worker.rs`, `engine/messages.rs` and `engine/state.rs` run
+//! inside every sweep of every engine; a `.unwrap()`/`.expect(` there is
+//! a latent abort on a path the tests may never drive. Invariants that
+//! genuinely cannot fail are allowed, but must say so
+//! (`allow(unwrap-hot-path)` + the argument) — and the debug sanitizers
+//! (`engine/invariants.rs`) cross-check the arena/worklist invariants
+//! those arguments rely on.
+
+use super::{Finding, RuleId, SourceFile};
+
+const HOT_FILES: [&str; 3] = ["worker.rs", "messages.rs", "state.rs"];
+
+pub(crate) fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !HOT_FILES.iter().any(|f| file.is_file("engine/", f)) {
+        return;
+    }
+    for (idx, line) in file.scanned.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let pat = if line.code.contains(".unwrap()") {
+            Some(".unwrap()")
+        } else if line.code.contains(".expect(") {
+            Some(".expect(")
+        } else {
+            None
+        };
+        if let Some(p) = pat {
+            out.push(Finding {
+                rule: RuleId::UnwrapHotPath,
+                path: file.path.clone(),
+                line: idx + 1,
+                message: format!(
+                    "{p} in a hot-path module — a sweep-path panic aborts the run; \
+                     justify the invariant or handle the None/Err"
+                ),
+            });
+        }
+    }
+}

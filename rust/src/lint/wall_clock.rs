@@ -1,0 +1,43 @@
+//! R2 `wall-clock` — wall-clock reads only at annotated reporting sites.
+//!
+//! The engines' results and scheduling decisions must be functions of
+//! the graph and the program alone; real time may only be *measured*
+//! for telemetry (the per-engine `compute_us` probes, the
+//! [`crate::util::Stopwatch`]). Any `Instant::now` / `SystemTime` read
+//! therefore needs an `allow(wall-clock)` stating it is reporting-only.
+//!
+//! Scope: everything except `runtime/` — the XLA/PJRT accelerator layer
+//! is feature-gated off the deterministic comparison path and times
+//! device execution.
+
+use super::scan::find_unbound;
+use super::{Finding, RuleId, SourceFile};
+
+pub(crate) fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if file.in_dirs(&["runtime/"]) {
+        return;
+    }
+    for (idx, line) in file.scanned.lines.iter().enumerate() {
+        if line.in_test || line.code.trim_start().starts_with("use ") {
+            continue;
+        }
+        let pat = if !find_unbound(&line.code, "Instant::now").is_empty() {
+            Some("Instant::now")
+        } else if !find_unbound(&line.code, "SystemTime").is_empty() {
+            Some("SystemTime")
+        } else {
+            None
+        };
+        if let Some(p) = pat {
+            out.push(Finding {
+                rule: RuleId::WallClock,
+                path: file.path.clone(),
+                line: idx + 1,
+                message: format!(
+                    "{p} read — wall clocks must stay reporting-only; results and \
+                     scheduling may not depend on real time"
+                ),
+            });
+        }
+    }
+}

@@ -24,6 +24,8 @@ impl Stopwatch {
 
     /// Start (or restart) the running segment.
     pub fn start(&mut self) {
+        // detlint: allow(wall-clock) — the stopwatch exists to report
+        // wall time; callers only feed its totals into metrics output.
         self.started = Some(Instant::now());
     }
 

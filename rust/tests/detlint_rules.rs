@@ -1,0 +1,240 @@
+//! Liveness fixtures for the `detlint` determinism rules.
+//!
+//! Each rule R1–R5 gets one known-bad snippet proving the rule actually
+//! fires — at the right line, with the right rule id — plus checks that
+//! suppression annotations and path scoping behave. The final test runs
+//! the linter over this crate's real `src/` tree and requires zero
+//! findings: the repo must stay clean under its own contract.
+
+use graphhp::lint::{lint_source, lint_tree, Finding, RuleId};
+
+/// Assert exactly one finding of `rule` at `line` (ignoring none else).
+fn assert_fires(findings: &[Finding], rule: RuleId, line: usize) {
+    let hits: Vec<_> = findings.iter().filter(|f| f.rule == rule).collect();
+    assert_eq!(
+        hits.len(),
+        1,
+        "expected exactly one {rule} finding, got {:?}",
+        findings
+    );
+    assert_eq!(hits[0].line, line, "wrong line for {rule}: {:?}", hits[0]);
+}
+
+// ---- R1: unordered-iter ------------------------------------------------
+
+#[test]
+fn r1_hash_container_decl_in_engine_fires() {
+    let src = "use std::collections::HashMap;\n\
+               struct S {\n\
+                   index: HashMap<u32, u32>,\n\
+               }\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::UnorderedIter, 3);
+}
+
+#[test]
+fn r1_iteration_over_tracked_container_fires() {
+    let src = "fn f() {\n\
+                   let mut seen: HashMap<u32, u32> = HashMap::new();\n\
+                   for (k, v) in &seen {\n\
+                       use_it(k, v);\n\
+                   }\n\
+               }\n";
+    let f = lint_source("partition/fake.rs", src);
+    // line 2: the declaration; line 3: the iteration — both fire, and
+    // annotating the declaration alone would NOT silence the iteration
+    assert_eq!(
+        f.iter().filter(|x| x.rule == RuleId::UnorderedIter).count(),
+        2,
+        "decl and iteration are independent findings: {f:?}"
+    );
+    assert!(f.iter().any(|x| x.rule == RuleId::UnorderedIter && x.line == 3));
+}
+
+#[test]
+fn r1_method_iteration_fires() {
+    let src = "fn f(seen: &mut S) {\n\
+                   let mut live: HashSet<u32> = HashSet::new();\n\
+                   let v: Vec<_> = live.iter().collect();\n\
+               }\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert!(
+        f.iter().any(|x| x.rule == RuleId::UnorderedIter && x.line == 3),
+        "{f:?}"
+    );
+}
+
+#[test]
+fn r1_is_scoped_to_engine_and_partition() {
+    let src = "struct S { index: HashMap<u32, u32> }\n";
+    assert!(
+        lint_source("util/fake.rs", src).is_empty(),
+        "util/ is outside the deterministic core"
+    );
+    assert!(!lint_source("engine/nested/fake.rs", src).is_empty());
+}
+
+// ---- R2: wall-clock ----------------------------------------------------
+
+#[test]
+fn r2_wall_clock_read_fires() {
+    let src = "fn f() {\n    let t0 = std::time::Instant::now();\n}\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::WallClock, 2);
+
+    let sys = "fn f() -> u64 {\n    let t = SystemTime::now();\n    0\n}\n";
+    let f = lint_source("util/fake.rs", sys);
+    assert_fires(&f, RuleId::WallClock, 2);
+}
+
+#[test]
+fn r2_runtime_module_is_exempt() {
+    let src = "fn f() {\n    let t0 = std::time::Instant::now();\n}\n";
+    assert!(
+        lint_source("runtime/fake.rs", src).is_empty(),
+        "runtime/ is xla-gated accelerator code, outside the contract"
+    );
+}
+
+// ---- R3: step-pairing --------------------------------------------------
+
+#[test]
+fn r3_unpaired_begin_step_fires() {
+    let src = "fn f(rt: &mut Rt) {\n\
+                   rt.begin_step();\n\
+                   do_work();\n\
+               }\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::StepPairing, 2);
+}
+
+#[test]
+fn r3_paired_begin_step_is_clean() {
+    let commit = "fn f(rt: &mut Rt) {\n\
+                      rt.begin_step();\n\
+                      rt.commit_step();\n\
+                  }\n";
+    assert!(lint_source("engine/fake.rs", commit).is_empty());
+
+    let abort = "fn f(rt: &mut Rt, wl: &mut Worklist) {\n\
+                     rt.begin_step_into(wl);\n\
+                     rt.abort_step_carryover(wl.as_slice().iter().copied());\n\
+                 }\n";
+    assert!(lint_source("engine/fake.rs", abort).is_empty());
+}
+
+#[test]
+fn r3_closer_in_nested_block_still_pairs() {
+    // the pairing is per-function, not per-block: a commit inside a
+    // loop/if in the same fn satisfies the opener
+    let src = "fn f(rt: &mut Rt) {\n\
+                   loop {\n\
+                       rt.begin_step();\n\
+                       if done() {\n\
+                           rt.commit_step();\n\
+                           break;\n\
+                       }\n\
+                       rt.commit_step();\n\
+                   }\n\
+               }\n";
+    assert!(lint_source("engine/fake.rs", src).is_empty());
+}
+
+// ---- R4: thread-confinement -------------------------------------------
+
+#[test]
+fn r4_thread_spawn_outside_worker_fires() {
+    let src = "fn f() {\n    std::thread::spawn(|| {});\n}\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::ThreadConfinement, 2);
+}
+
+#[test]
+fn r4_worker_rs_is_exempt() {
+    let src = "fn f() {\n    std::thread::scope(|s| {});\n}\n";
+    assert!(
+        lint_source("engine/worker.rs", src).is_empty(),
+        "worker.rs is the one sanctioned threading site"
+    );
+}
+
+// ---- R5: unwrap-hot-path ----------------------------------------------
+
+#[test]
+fn r5_unwrap_in_hot_module_fires() {
+    let src = "fn f(o: Option<u32>) -> u32 {\n    o.unwrap()\n}\n";
+    let f = lint_source("engine/messages.rs", src);
+    assert_fires(&f, RuleId::UnwrapHotPath, 2);
+
+    let exp = "fn f(o: Option<u32>) -> u32 {\n    o.expect(\"present\")\n}\n";
+    let f = lint_source("engine/state.rs", exp);
+    assert_fires(&f, RuleId::UnwrapHotPath, 2);
+}
+
+#[test]
+fn r5_scoped_to_hot_files_and_test_code() {
+    let src = "fn f(o: Option<u32>) -> u32 {\n    o.unwrap()\n}\n";
+    assert!(
+        lint_source("engine/hama.rs", src).is_empty(),
+        "only worker/messages/state are hot-path files"
+    );
+    let test_src = "#[cfg(test)]\nmod tests {\n    fn f(o: Option<u32>) -> u32 {\n        o.unwrap()\n    }\n}\n";
+    assert!(lint_source("engine/messages.rs", test_src).is_empty());
+}
+
+// ---- suppression annotations ------------------------------------------
+
+#[test]
+fn reasoned_allow_suppresses_same_line() {
+    let src = "fn f() {\n    let t0 = Instant::now(); // detlint: allow(wall-clock) — telemetry probe\n}\n";
+    assert!(lint_source("engine/fake.rs", src).is_empty());
+}
+
+#[test]
+fn reasoned_allow_on_comment_line_suppresses_next_code_line() {
+    let src = "fn f() {\n\
+                   // detlint: allow(wall-clock) — telemetry probe: feeds\n\
+                   // metrics only, never results.\n\
+                   let t0 = Instant::now();\n\
+               }\n";
+    assert!(lint_source("engine/fake.rs", src).is_empty());
+}
+
+#[test]
+fn allow_for_a_different_rule_does_not_suppress() {
+    let src = "fn f() {\n    let t0 = Instant::now(); // detlint: allow(unordered-iter) — wrong rule\n}\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert!(f.iter().any(|x| x.rule == RuleId::WallClock), "{f:?}");
+}
+
+#[test]
+fn reasonless_allow_is_inert_and_reported() {
+    let src = "fn f() {\n    let t0 = Instant::now(); // detlint: allow(wall-clock)\n}\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert!(f.iter().any(|x| x.rule == RuleId::WallClock), "inert: {f:?}");
+    assert!(f.iter().any(|x| x.rule == RuleId::Annotation), "reported: {f:?}");
+}
+
+#[test]
+fn unknown_rule_name_is_reported() {
+    let src = "let a = 1; // detlint: allow(made-up) — reason text\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::Annotation, 1);
+}
+
+// ---- the real tree ----------------------------------------------------
+
+#[test]
+fn repo_source_tree_is_clean() {
+    let root = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let findings = lint_tree(&root).expect("scan src tree");
+    assert!(
+        findings.is_empty(),
+        "detlint found unannotated violations in src/:\n{}",
+        findings
+            .iter()
+            .map(|f| f.to_string())
+            .collect::<Vec<_>>()
+            .join("\n")
+    );
+}
