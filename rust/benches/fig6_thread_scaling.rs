@@ -31,8 +31,16 @@ fn main() {
         &format!("one worker per partition on 1..{cores} OS threads, one host"),
     );
 
-    let g = generators::powerlaw(30_000, 5, 7);
+    // GRAPHHP_BENCH_SCALE=small|medium|large — CI keeps the historical
+    // small workload; large is the 10M+-edge bandwidth-bound regime.
+    let scale = bs::bench_scale();
+    let g = scale.pick(
+        generators::powerlaw(30_000, 5, 7),
+        generators::web(1 << 18, 8, 7),
+        generators::rmat(20, 16, 7),
+    );
     let parts = 12;
+    println!("scale={} ({} vertices, {} edges)", scale.name(), g.num_vertices(), g.num_edges());
     let prog = IncrementalPageRank { tolerance: 1e-4 };
 
     let mut threads = vec![1usize];
@@ -73,6 +81,26 @@ fn main() {
             xs.push(t);
             walls.push(wall.as_secs_f64());
             computes.push(r.metrics.compute_time.as_secs_f64());
+        }
+        // opt-in work-stealing: intra-sweep chunked parallelism —
+        // run-to-run deterministic, PageRank values within f64 epsilon
+        // of sequential (tests/layout_equivalence.rs pins the contract)
+        for &t in &threads {
+            runner = runner.parallelism(Parallelism::WorkStealing(t));
+            let t0 = Instant::now();
+            let r = runner.run(&prog);
+            let wall = t0.elapsed();
+            let close = r
+                .values
+                .iter()
+                .zip(&base.values)
+                .all(|(a, b)| (a - b).abs() <= 1e-6 * b.abs().max(1.0));
+            println!(
+                "  steal={t:<3}         wall {:>8.3}s   compute/worker {:>8.3}s   {}",
+                wall.as_secs_f64(),
+                r.metrics.compute_time.as_secs_f64(),
+                if close { "≈ sequential (ε) ✓" } else { "RESULTS DIVERGED ✗" }
+            );
         }
         bs::series(&format!("{kind} wall(s)"), &xs, &walls);
         bs::series(&format!("{kind} compute(s)"), &xs, &computes);

@@ -89,6 +89,7 @@ fn bench_engine(g: &graphhp::graph::Graph, parts: usize, kind: EngineKind, par: 
     let mode = match par {
         Parallelism::Sequential => "sequential".to_string(),
         Parallelism::Threads(n) => format!("threads={n}"),
+        Parallelism::WorkStealing(n) => format!("steal={n}"),
     };
     let (short_steps, long_steps) = (10u64, 30u64);
     let short = sample(g, parts, kind, par, short_steps);
@@ -121,14 +122,24 @@ fn main() {
         "synthetic web graph at the fig5 small scale, ClassicPageRank at two \
          superstep budgets (differential steady-state measurement)",
     );
-    let (n, deg, seed, parts) = (20_000usize, 5usize, 7u64, 12usize);
-    let g = generators::powerlaw(n, deg, seed);
+    // GRAPHHP_BENCH_SCALE=small|medium|large — CI keeps the historical
+    // small workload; large is the 10M+-edge bandwidth-bound regime.
+    let scale = bs::bench_scale();
+    let parts = 12usize;
+    let g = scale.pick(
+        generators::powerlaw(20_000, 5, 7),
+        generators::web(1 << 18, 8, 7),
+        generators::rmat(20, 16, 7),
+    );
     println!(
-        "-- {} vertices, {} edges, {parts} partitions\n",
+        "-- scale={} {} vertices, {} edges, {parts} partitions\n",
+        scale.name(),
         g.num_vertices(),
         g.num_edges()
     );
-    for par in [Parallelism::Sequential, Parallelism::Threads(4)] {
+    for par in
+        [Parallelism::Sequential, Parallelism::Threads(4), Parallelism::WorkStealing(4)]
+    {
         for kind in [EngineKind::Hama, EngineKind::AmHama, EngineKind::GraphHP] {
             bench_engine(&g, parts, kind, par);
         }

@@ -74,6 +74,46 @@ pub fn scale_note(paper_workload: &str, ours: &str) {
     println!(" compare SHAPES: who wins, by what factor, where crossovers fall)\n");
 }
 
+/// Workload size selected by the `GRAPHHP_BENCH_SCALE` environment
+/// variable — `small` (default, CI-friendly seconds-scale runs),
+/// `medium` (~1-2M edges), or `large` (10M+ edges, the bandwidth-bound
+/// regime the degree-sorted/compressed layouts and
+/// `Parallelism::WorkStealing` target). Benches keep their historical
+/// workloads at `small` so existing numbers stay comparable.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BenchScale {
+    Small,
+    Medium,
+    Large,
+}
+
+impl BenchScale {
+    /// Pick the value for the current scale.
+    pub fn pick<T>(self, small: T, medium: T, large: T) -> T {
+        match self {
+            BenchScale::Small => small,
+            BenchScale::Medium => medium,
+            BenchScale::Large => large,
+        }
+    }
+
+    /// Lower-case name (matches the env-var spelling).
+    pub fn name(self) -> &'static str {
+        self.pick("small", "medium", "large")
+    }
+}
+
+/// Read `GRAPHHP_BENCH_SCALE` (unset → `Small`; unknown values panic so
+/// typos fail loudly instead of silently benchmarking the wrong size).
+pub fn bench_scale() -> BenchScale {
+    match std::env::var("GRAPHHP_BENCH_SCALE").as_deref() {
+        Err(_) | Ok("") | Ok("small") => BenchScale::Small,
+        Ok("medium") => BenchScale::Medium,
+        Ok("large") => BenchScale::Large,
+        Ok(other) => panic!("GRAPHHP_BENCH_SCALE={other:?}: use small|medium|large"),
+    }
+}
+
 /// Quick check helper: expected ordering of two metrics with a margin.
 pub fn expect_less(label: &str, a: u64, b: u64) {
     if a < b {

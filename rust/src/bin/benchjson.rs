@@ -1,0 +1,274 @@
+//! `benchjson` — machine-readable sweep-throughput benchmark.
+//!
+//! Runs the fig6/fig9 sweep workloads (fixed-superstep ClassicPageRank)
+//! across engines × memory layouts × parallelism modes and emits one
+//! schema-stable JSON document: sweeps/sec (and per core), bytes/edge of
+//! the built edge columns, and allocations/superstep. The committed
+//! `BENCH_sweep_scaling.json` at the repository root is this tool's
+//! output format (see its `provenance` field for how it was produced).
+//!
+//! ```text
+//! cargo run --release --bin benchjson                 # JSON on stdout
+//! cargo run --release --bin benchjson -- --out b.json
+//! cargo run --release --bin benchjson -- --quick      # CI smoke scale
+//! GRAPHHP_BENCH_SCALE=large cargo run --release --bin benchjson
+//! ```
+//!
+//! Schema (version 1) — field order is fixed; additions bump the
+//! version:
+//!
+//! ```text
+//! { schema_version, suite, provenance, measured, bench_scale,
+//!   host_threads, supersteps,
+//!   graphs: [ { name, vertices, edges, partitions,
+//!     layouts: [ { layout, edge_column_bytes, bytes_per_edge } ],
+//!     runs: [ { engine, layout, mode, cores, wall_seconds,
+//!               supersteps, sweeps, sweeps_per_sec,
+//!               sweeps_per_sec_per_core, allocs_per_superstep } ] } ] }
+//! ```
+//!
+//! Every workload is a pure function of its seed, so two runs on the
+//! same host differ only in the timing fields.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::fmt::Write as _;
+use std::process::ExitCode;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use graphhp::algorithms::ClassicPageRank;
+use graphhp::bench_support as bs;
+use graphhp::engine::{EngineKind, Parallelism, Partitioner, Runner};
+use graphhp::graph::{generators, Graph, GraphLayout};
+use graphhp::partition::{metis_partition, MetisConfig};
+
+/// Counts allocator calls (same probe as `fig9_sweep_hotpath`).
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+const USAGE: &str = "usage: benchjson [--out FILE] [--quick]\n\
+  --out FILE  write the JSON document to FILE (default: stdout)\n\
+  --quick     CI smoke scale: fewer supersteps and parallelism modes\n\
+  env: GRAPHHP_BENCH_SCALE=small|medium|large selects the graph sizes";
+
+fn mode_name(par: Parallelism) -> String {
+    match par {
+        Parallelism::Sequential => "sequential".to_string(),
+        Parallelism::Threads(n) => format!("threads={n}"),
+        Parallelism::WorkStealing(n) => format!("steal={n}"),
+    }
+}
+
+fn mode_cores(par: Parallelism) -> usize {
+    match par {
+        Parallelism::Sequential => 1,
+        Parallelism::Threads(n) | Parallelism::WorkStealing(n) => n.max(1),
+    }
+}
+
+struct RunRow {
+    engine: String,
+    layout: &'static str,
+    mode: String,
+    cores: usize,
+    wall_seconds: f64,
+    supersteps: u64,
+    sweeps: u64,
+    allocs: u64,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn main() -> ExitCode {
+    let mut out_path: Option<String> = None;
+    let mut quick = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--out" => match args.next() {
+                Some(p) => out_path = Some(p),
+                None => {
+                    eprintln!("{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quick" => quick = true,
+            _ => {
+                eprintln!("{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    let scale = bs::bench_scale();
+    let parts = 12usize;
+    let supersteps: u64 = if quick { 5 } else { 20 };
+    // two graph scales minimum at every BenchScale (acceptance contract)
+    let graphs: Vec<(&str, Graph)> = scale.pick(
+        vec![
+            ("powerlaw-20k-d5", generators::powerlaw(20_000, 5, 7)),
+            ("web-65k-d8", generators::web(1 << 16, 8, 7)),
+        ],
+        vec![
+            ("web-262k-d8", generators::web(1 << 18, 8, 7)),
+            ("rmat-s16-e8", generators::rmat(16, 8, 7)),
+        ],
+        vec![
+            ("rmat-s20-e16", generators::rmat(20, 16, 7)),
+            ("web-2m-d8", generators::web(1 << 21, 8, 7)),
+        ],
+    );
+    let modes: Vec<Parallelism> = if quick {
+        vec![Parallelism::Sequential, Parallelism::Threads(2), Parallelism::WorkStealing(2)]
+    } else {
+        vec![
+            Parallelism::Sequential,
+            Parallelism::Threads(2),
+            Parallelism::Threads(4),
+            Parallelism::WorkStealing(2),
+            Parallelism::WorkStealing(4),
+        ]
+    };
+    let layouts: [(&str, GraphLayout); 2] =
+        [("soa", GraphLayout::default()), ("packed", GraphLayout::packed())];
+    let engines = [EngineKind::Hama, EngineKind::GraphHP];
+    let host_threads =
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+
+    let mut doc = String::new();
+    doc.push_str("{\n");
+    let _ = writeln!(doc, "  \"schema_version\": 1,");
+    let _ = writeln!(doc, "  \"suite\": \"sweep_scaling\",");
+    let _ = writeln!(
+        doc,
+        "  \"provenance\": \"benchjson v{} ({}, {} supersteps)\",",
+        env!("CARGO_PKG_VERSION"),
+        if quick { "quick" } else { "full" },
+        supersteps,
+    );
+    let _ = writeln!(doc, "  \"measured\": true,");
+    let _ = writeln!(doc, "  \"bench_scale\": \"{}\",", scale.name());
+    let _ = writeln!(doc, "  \"host_threads\": {host_threads},");
+    let _ = writeln!(doc, "  \"supersteps\": {supersteps},");
+    doc.push_str("  \"graphs\": [\n");
+
+    let prog = ClassicPageRank { supersteps };
+    for (gi, (name, g)) in graphs.iter().enumerate() {
+        eprintln!("benchjson: {name} ({} vertices, {} edges)", g.num_vertices(), g.num_edges());
+        let assignment = metis_partition(g, parts, &MetisConfig::default());
+        doc.push_str("    {\n");
+        let _ = writeln!(doc, "      \"name\": \"{}\",", json_escape(name));
+        let _ = writeln!(doc, "      \"vertices\": {},", g.num_vertices());
+        let _ = writeln!(doc, "      \"edges\": {},", g.num_edges());
+        let _ = writeln!(doc, "      \"partitions\": {parts},");
+        doc.push_str("      \"layouts\": [\n");
+        let mut rows: Vec<RunRow> = Vec::new();
+        for (li, (lname, layout)) in layouts.iter().enumerate() {
+            let mut runner = Runner::new(g)
+                .partitions(parts)
+                .partitioner(Partitioner::Explicit(assignment.clone()))
+                .layout(*layout);
+            let dg = runner.dist();
+            let bytes = dg.edge_column_bytes();
+            let _ = writeln!(
+                doc,
+                "        {{ \"layout\": \"{lname}\", \"edge_column_bytes\": {bytes}, \
+                 \"bytes_per_edge\": {:.3} }}{}",
+                bytes as f64 / g.num_edges().max(1) as f64,
+                if li + 1 < layouts.len() { "," } else { "" },
+            );
+            for kind in engines {
+                for &par in &modes {
+                    runner = runner.engine(kind).parallelism(par);
+                    let a0 = ALLOC_CALLS.load(Ordering::Relaxed);
+                    // detlint: allow(wall-clock) — benchmark harness:
+                    // measures run wall-clock for the JSON report only,
+                    // never feeds results or scheduling.
+                    let t0 = Instant::now();
+                    let r = runner.run(&prog);
+                    let wall = t0.elapsed();
+                    let a1 = ALLOC_CALLS.load(Ordering::Relaxed);
+                    rows.push(RunRow {
+                        engine: kind.to_string(),
+                        layout: lname,
+                        mode: mode_name(par),
+                        cores: mode_cores(par),
+                        wall_seconds: wall.as_secs_f64(),
+                        supersteps: r.metrics.supersteps_total,
+                        sweeps: r.metrics.vertex_computations,
+                        allocs: a1 - a0,
+                    });
+                }
+            }
+        }
+        doc.push_str("      ],\n");
+        doc.push_str("      \"runs\": [\n");
+        for (ri, row) in rows.iter().enumerate() {
+            let rate = row.sweeps as f64 / row.wall_seconds.max(1e-9);
+            let _ = writeln!(
+                doc,
+                "        {{ \"engine\": \"{}\", \"layout\": \"{}\", \"mode\": \"{}\", \
+                 \"cores\": {}, \"wall_seconds\": {:.6}, \"supersteps\": {}, \
+                 \"sweeps\": {}, \"sweeps_per_sec\": {:.0}, \
+                 \"sweeps_per_sec_per_core\": {:.0}, \"allocs_per_superstep\": {:.1} }}{}",
+                json_escape(&row.engine),
+                row.layout,
+                row.mode,
+                row.cores,
+                row.wall_seconds,
+                row.supersteps,
+                row.sweeps,
+                rate,
+                rate / row.cores as f64,
+                row.allocs as f64 / row.supersteps.max(1) as f64,
+                if ri + 1 < rows.len() { "," } else { "" },
+            );
+        }
+        doc.push_str("      ]\n");
+        let _ = writeln!(doc, "    }}{}", if gi + 1 < graphs.len() { "," } else { "" });
+    }
+    doc.push_str("  ]\n}\n");
+
+    match out_path {
+        Some(p) => {
+            if let Err(e) = std::fs::write(&p, &doc) {
+                eprintln!("benchjson: write {p}: {e}");
+                return ExitCode::from(2);
+            }
+            eprintln!("benchjson: wrote {p}");
+        }
+        None => print!("{doc}"),
+    }
+    ExitCode::SUCCESS
+}

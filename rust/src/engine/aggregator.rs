@@ -86,6 +86,18 @@ impl Aggregators {
             self.current[i] = self.ops[i].fold(self.current[i], other.current[i]);
         }
     }
+
+    /// A scratch copy for a parallel worker: same ops, same visible
+    /// `previous` values (so `aggregated()` reads are unchanged), but
+    /// `current` reset to identities — its partials fold back into the
+    /// master with [`merge_current`](Self::merge_current).
+    pub fn fresh(&self) -> Aggregators {
+        Aggregators {
+            ops: self.ops.clone(),
+            current: self.ops.iter().map(|o| o.identity()).collect(),
+            previous: self.previous.clone(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -109,6 +121,20 @@ mod tests {
         a.barrier();
         assert_eq!(a.previous(0), 0.0);
         assert_eq!(a.previous(1), f64::INFINITY);
+    }
+
+    #[test]
+    fn fresh_keeps_previous_but_resets_current() {
+        let mut master = Aggregators::new(vec![AggOp::Sum]);
+        master.submit(0, 2.0);
+        master.barrier(); // previous = 2.0
+        master.submit(0, 5.0); // pending in current
+        let f = master.fresh();
+        assert_eq!(f.previous(0), 2.0, "scratch copy sees the reduced value");
+        // merging the untouched scratch back must not duplicate the 5.0
+        master.merge_current(&f);
+        master.barrier();
+        assert_eq!(master.previous(0), 5.0);
     }
 
     #[test]

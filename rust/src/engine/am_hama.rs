@@ -85,6 +85,7 @@ pub fn run_am_hama<P: VertexProgram>(
                 route: LocalRoute::ThisSweep,
                 reschedule: Reschedule::Active,
                 boundary_in_local: true,
+                steal_threads: cfg.parallelism.steal_threads(),
             };
             let outcome = sweep.run(
                 ws.rt.sweep_target(),

@@ -123,11 +123,12 @@ impl<'a, P: VertexProgram> VertexContext<'a, P> {
     }
 
     /// Send `msg` along every out-edge: streams the partition's
-    /// precomputed route column directly — no location lookup, no
-    /// intermediate allocation.
+    /// precomputed routes directly (the raw column on SoA storage, a
+    /// route-only decode on compressed storage) — no location lookup,
+    /// no intermediate allocation.
     pub fn send_to_neighbors(&mut self, msg: P::M) {
         let part = self.part;
-        for &route in part.out_edges(self.lv).routes() {
+        for route in part.out_edges(self.lv).route_iter() {
             self.out.sends.push((route, msg.clone()));
         }
     }

@@ -81,6 +81,9 @@ pub struct PartitionContext<'a, PP: PartitionProgram> {
     combiner: Option<fn(PP::M, PP::M) -> PP::M>,
     dg: &'a DistGraph,
     p: usize,
+    /// [`Parallelism::WorkStealing`] thread count (0 = deterministic
+    /// sweep body), forwarded to [`VertexSweep`]'s inner [`Sweep`].
+    steal_threads: usize,
     computations: u64,
     local_messages: u64,
 }
@@ -200,6 +203,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                     combiner,
                     dg,
                     p,
+                    steal_threads: cfg.parallelism.steal_threads(),
                     computations: 0,
                     local_messages: 0,
                 };
@@ -311,6 +315,7 @@ impl<P: VertexProgram> PartitionProgram for VertexSweep<P> {
             route: LocalRoute::ThisSweep,
             reschedule: Reschedule::Active,
             boundary_in_local: true,
+            steal_threads: ctx.steal_threads,
         };
         // the vertex-centric aggregator mechanism is not part of the
         // graph-centric interface

@@ -356,6 +356,7 @@ pub fn run_graphhp<P: VertexProgram>(
                 route,
                 reschedule,
                 boundary_in_local,
+                steal_threads: cfg.parallelism.steal_threads(),
             };
             let merge = |outcome: &mut SweepOutcome, oc: SweepOutcome| {
                 outcome.computations += oc.computations;

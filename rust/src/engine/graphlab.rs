@@ -122,9 +122,10 @@ impl GasView {
             let (p, lv) = dg.location[v];
             let part = &dg.parts[p as usize];
             out_deg[v] = part.out_degree[lv as usize];
-            // counting pass: stream only the SoA target column
-            for &t in part.out_edges(lv as usize).targets() {
-                in_count[t as usize] += 1;
+            // counting pass: stream targets only (raw column on SoA
+            // storage, streaming decode on compressed storage)
+            for e in part.out_edges(lv as usize) {
+                in_count[e.target as usize] += 1;
             }
         }
         let mut in_offsets = vec![0usize; nv + 1];
@@ -143,15 +144,14 @@ impl GasView {
             let (p, lv) = dg.location[v];
             let part = &dg.parts[p as usize];
             let mut oc = out_offsets[v];
-            // pull-view build needs targets + weights only — the route
-            // column stays untouched
-            let edges = part.out_edges(lv as usize);
-            for (&target, &weight) in edges.targets().iter().zip(edges.weights()) {
-                let t = target as usize;
+            // pull-view build needs targets + weights only; the edge
+            // iterator works over both storage modes
+            for e in part.out_edges(lv as usize) {
+                let t = e.target as usize;
                 in_src[in_cursor[t]] = v as VertexId;
-                in_w[in_cursor[t]] = weight;
+                in_w[in_cursor[t]] = e.weight;
                 in_cursor[t] += 1;
-                out_targets[oc] = target;
+                out_targets[oc] = e.target;
                 oc += 1;
             }
         }

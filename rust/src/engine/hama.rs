@@ -82,6 +82,7 @@ pub fn run_hama<P: VertexProgram>(
                 route: LocalRoute::Network,
                 reschedule: Reschedule::Active,
                 boundary_in_local: true,
+                steal_threads: cfg.parallelism.steal_threads(),
             };
             let outcome = sweep.run(
                 ws.rt.sweep_target(),

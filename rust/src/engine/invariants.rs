@@ -16,8 +16,11 @@
 //! - [`check_frontier`] / [`check_fifo`] — schedule-set dedup contracts;
 //! - [`check_runtime`] — a partition runtime at a barrier: step closed,
 //!   both inboxes valid, frontier valid, parallel arrays in sync;
-//! - [`check_edge_routes`] — `EdgeRoute` columns agree with the global
-//!   location table (validated once at `DistGraph::new`).
+//! - [`check_edge_routes`] — edge routes (raw columns or compressed
+//!   blocks, streamed through the `Edges` view) agree with the global
+//!   location table, the vertex-layout permutation is bijective
+//!   ([`check_vertex_layout`]), and compressed byte blocks are
+//!   well-formed (validated once at `DistGraph::new`).
 //!
 //! The validators are compiled **only** under
 //! `#[cfg(any(test, debug_assertions))]`; release builds get inline
@@ -280,9 +283,12 @@ pub(crate) fn check_runtime<V, M>(rt: &PartitionRuntime<V, M>) {
 }
 
 /// Validate the [`DistGraph`]'s routing metadata once at construction:
-/// every `EdgeRoute` column entry agrees with the global location table,
-/// the location table round-trips through `global_ids`, the CSR offsets
-/// are monotonic over columns of equal length, and the precomputed
+/// every edge's route (streamed through the storage-mode-agnostic
+/// [`crate::graph::Edges`] view, so compressed blocks are decode-checked
+/// too) agrees with the global location table, the location table
+/// round-trips through `global_ids`, the CSR offsets are monotonic, the
+/// vertex-layout permutation is a bijection consistent with both, the
+/// compressed byte blocks are well-formed, and the precomputed
 /// boundary/internal counts match a rescan.
 #[cfg(any(test, debug_assertions))]
 pub(crate) fn check_edge_routes(dg: &DistGraph) {
@@ -295,10 +301,39 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
     for part in &dg.parts {
         let nv = part.num_vertices();
         vertices += nv;
-        let ne = part.targets.len();
+        let ne = part.num_edges();
+        if part.is_compressed() {
+            assert!(
+                part.targets.is_empty() && part.routes.is_empty(),
+                "invariant violated: partition {} keeps raw columns alongside \
+                 compressed blocks",
+                part.part
+            );
+            assert!(
+                part.packed_offsets.len() == nv + 1
+                    && part.packed_offsets[0] == 0
+                    && part.packed_offsets[nv] == part.packed.len()
+                    && part.packed_offsets.windows(2).all(|w| w[0] <= w[1]),
+                "invariant violated: partition {} packed-block offsets not monotonic \
+                 over its byte stream",
+                part.part
+            );
+        } else {
+            assert!(
+                part.targets.len() == ne && part.routes.len() == ne,
+                "invariant violated: partition {} SoA edge columns out of sync",
+                part.part
+            );
+            assert!(
+                part.packed.is_empty() && part.packed_offsets.is_empty(),
+                "invariant violated: partition {} carries packed bytes without \
+                 being compressed",
+                part.part
+            );
+        }
         assert!(
-            part.routes.len() == ne && part.weights.len() == ne,
-            "invariant violated: partition {} SoA edge columns out of sync",
+            part.weights.len() == ne,
+            "invariant violated: partition {} weights column out of sync",
             part.part
         );
         assert!(
@@ -309,6 +344,7 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
             "invariant violated: partition {} CSR offsets not monotonic over its edges",
             part.part
         );
+        check_vertex_layout(part);
         for (lv, &gid) in part.global_ids.iter().enumerate() {
             assert_eq!(
                 dg.location[gid as usize],
@@ -319,16 +355,26 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
             );
         }
         let mut internal = 0usize;
-        for (i, (&t, r)) in part.targets.iter().zip(&part.routes).enumerate() {
+        for lv in 0..nv {
+            let edges = part.out_edges(lv);
             assert_eq!(
-                r.unpack(),
-                dg.location[t as usize],
-                "invariant violated: EdgeRoute column disagrees with the location \
-                 table (partition {}, edge {i})",
+                edges.len(),
+                part.out_degree[lv] as usize,
+                "invariant violated: partition {} local {lv} edge view length \
+                 disagrees with out_degree",
                 part.part
             );
-            if r.part() == part.part {
-                internal += 1;
+            for (i, e) in edges.iter().enumerate() {
+                assert_eq!(
+                    e.route().unpack(),
+                    dg.location[e.target as usize],
+                    "invariant violated: edge route disagrees with the location \
+                     table (partition {}, local {lv}, edge {i})",
+                    part.part
+                );
+                if e.target_part == part.part {
+                    internal += 1;
+                }
             }
         }
         assert_eq!(
@@ -350,6 +396,47 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
     );
 }
 
+/// Validate one partition's [`crate::graph::VertexLayout`]: identity is
+/// represented by empty vectors; a materialized permutation must have
+/// both directions of length `nv` and be mutually inverse bijections.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_vertex_layout(part: &crate::graph::PartGraph) {
+    let lay = &part.layout;
+    if lay.is_identity() {
+        assert!(
+            lay.fwd.is_empty() && lay.inv.is_empty(),
+            "invariant violated: partition {} identity layout carries a \
+             half-materialized permutation",
+            part.part
+        );
+        return;
+    }
+    let nv = part.num_vertices();
+    assert!(
+        lay.fwd.len() == nv && lay.inv.len() == nv,
+        "invariant violated: partition {} layout permutation length != vertex count",
+        part.part
+    );
+    let mut seen = vec![false; nv];
+    for local in 0..nv as u32 {
+        let rank = lay.to_natural(local);
+        assert!(
+            (rank as usize) < nv && !seen[rank as usize],
+            "invariant violated: partition {} layout inv is not a permutation \
+             (local {local})",
+            part.part
+        );
+        seen[rank as usize] = true;
+        assert_eq!(
+            lay.to_local(rank),
+            local,
+            "invariant violated: partition {} layout fwd/inv are not inverse \
+             (local {local})",
+            part.part
+        );
+    }
+}
+
 // Release builds: inline no-op stubs — the barrier paths pay nothing.
 #[cfg(not(any(test, debug_assertions)))]
 mod stubs {
@@ -369,6 +456,8 @@ mod stubs {
     pub(crate) fn check_runtime<V, M>(_rt: &PartitionRuntime<V, M>) {}
     #[inline(always)]
     pub(crate) fn check_edge_routes(_dg: &DistGraph) {}
+    #[inline(always)]
+    pub(crate) fn check_vertex_layout(_part: &crate::graph::PartGraph) {}
 }
 #[cfg(not(any(test, debug_assertions)))]
 pub(crate) use stubs::*;
@@ -551,13 +640,56 @@ mod tests {
     }
 
     #[test]
-    #[should_panic(expected = "EdgeRoute column disagrees with the location table")]
+    fn dist_graph_layout_and_compression_validate_clean() {
+        use crate::graph::{GraphLayout, LayoutPolicy};
+        let g = generators::powerlaw(200, 4, 11);
+        let a = hash_partition(&g, 4);
+        for layout in [
+            GraphLayout::degree_sorted(),
+            GraphLayout { policy: LayoutPolicy::Identity, compress_edges: true },
+            GraphLayout::packed(),
+        ] {
+            let dg = crate::graph::DistGraph::with_layout(&g, &a, 4, layout);
+            check_edge_routes(&dg); // also ran inside with_layout
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "edge route disagrees with the location table")]
     fn tampered_edge_route_is_caught() {
         let g = generators::powerlaw(100, 3, 7);
         let a = hash_partition(&g, 3);
         let mut dg = crate::graph::DistGraph::new(&g, &a, 3);
         let part = dg.parts.iter_mut().find(|p| !p.routes.is_empty()).unwrap();
         part.routes[0] = EdgeRoute::new(u32::MAX, u32::MAX);
+        check_edge_routes(&dg);
+    }
+
+    #[test]
+    #[should_panic(expected = "layout fwd/inv are not inverse")]
+    fn tampered_layout_permutation_is_caught() {
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let mut dg =
+            crate::graph::DistGraph::with_layout(&g, &a, 3, crate::graph::GraphLayout::degree_sorted());
+        let part = dg.parts.iter_mut().find(|p| p.num_vertices() >= 2).unwrap();
+        part.layout.fwd.swap(0, 1); // fwd no longer inverts inv
+        check_vertex_layout(part);
+    }
+
+    #[test]
+    #[should_panic(expected = "packed-block offsets not monotonic")]
+    fn truncated_packed_stream_is_caught() {
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let mut dg = crate::graph::DistGraph::with_layout(
+            &g,
+            &a,
+            3,
+            crate::graph::GraphLayout { policy: crate::graph::LayoutPolicy::Identity, compress_edges: true },
+        );
+        let part = dg.parts.iter_mut().find(|p| p.num_edges() > 0).unwrap();
+        part.packed.pop(); // final block offset now points past the bytes
         check_edge_routes(&dg);
     }
 }

@@ -305,10 +305,18 @@ impl<M: Clone + Codec> Outbox<M> {
     }
 
     /// Close the outbox for this superstep: order every batch by
-    /// destination vertex (stable, so same-destination messages keep
-    /// push order) and apply sender-side combining — the full combiner
-    /// when the program has one, else the GraphHP `SourceCombine`
-    /// policy (keep the latest message per (source, destination) pair).
+    /// `(destination vertex, source gid)` (stable, so a source's
+    /// repeated messages to one destination keep push order) and apply
+    /// sender-side combining — the full combiner when the program has
+    /// one, else the GraphHP `SourceCombine` policy (keep the latest
+    /// message per (source, destination) pair).
+    ///
+    /// Sorting by source gid as well makes the sealed order — and hence
+    /// every barrier-side fold — independent of the sender partition's
+    /// *vertex layout*: a degree-sorted partition pushes in a permuted
+    /// sweep order, but the sealed batch is the same. (Under the
+    /// identity layout the secondary key is a no-op: push order within
+    /// a destination is already ascending source gid.)
     ///
     /// After sealing, [`drain`](Self::drain) yields messages in
     /// `(dest_part, dest_local)` order — deterministic by construction,
@@ -317,10 +325,11 @@ impl<M: Clone + Codec> Outbox<M> {
         assert!(!self.sealed, "Outbox sealed twice in one superstep");
         self.sealed = true;
         for batch in &mut self.batches {
-            batch.sort_by_key(|&(l, _, _)| l); // stable sort
+            batch.sort_by_key(|&(l, s, _)| (l, s)); // stable sort
             if let Some(f) = self.combiner {
-                // fold each destination run in push order; entries past
-                // the write cursor are consumed and truncated below
+                // fold each destination run in the sealed (source-gid)
+                // order; entries past the write cursor are consumed and
+                // truncated below
                 let mut w = 0usize;
                 let mut r = 0usize;
                 while r < batch.len() {
@@ -582,6 +591,28 @@ mod tests {
         sorted.sort_unstable();
         assert_eq!(keys, sorted, "drain must be (dest_part, dest_local)-ordered");
         assert_eq!(keys, vec![(0, 4), (0, 9), (1, 0), (2, 1), (2, 5)]);
+    }
+
+    #[test]
+    fn outbox_seal_order_is_independent_of_push_order() {
+        // the layout-invariance contract: a degree-sorted sender sweeps
+        // (and hence pushes) in a permuted order, but the sealed batch —
+        // and therefore every barrier-side fold — must be identical
+        let pushes = [(1u32, 3u32, 7u32, 10u32), (1, 3, 5, 20), (1, 2, 9, 30), (2, 0, 5, 40)];
+        let mut fwd: Outbox<u32> = Outbox::new(None);
+        for &(p, l, s, m) in &pushes {
+            fwd.push(p, l, s, m);
+        }
+        fwd.seal(SourceCombine::KeepAll);
+        let a: Vec<_> = fwd.drain().collect();
+        let mut rev: Outbox<u32> = Outbox::new(None);
+        for &(p, l, s, m) in pushes.iter().rev() {
+            rev.push(p, l, s, m);
+        }
+        rev.seal(SourceCombine::KeepAll);
+        let b: Vec<_> = rev.drain().collect();
+        assert_eq!(a, b);
+        assert_eq!(a, vec![(1, 2, 30), (1, 3, 20), (1, 3, 10), (2, 0, 40)]);
     }
 
     #[test]

@@ -213,6 +213,21 @@ impl std::str::FromStr for EngineKind {
 /// message/iteration counts for every engine — workers are
 /// shared-nothing within a superstep and the barrier folds their
 /// outputs in partition order. Only wall-clock changes.
+///
+/// `WorkStealing(n)` is the opt-in third mode for skewed or
+/// few-partition runs where one straggler partition idles the pool: it
+/// keeps the partition loop sequential but parallelizes *inside* each
+/// sweep — the sorted worklist is pre-drained, split into fixed-size
+/// chunks, and the chunks are claimed by `n` scoped threads through an
+/// atomic counter. Only **thread assignment** is relaxed: results are
+/// applied and messages routed in chunk (= ascending vertex) order, so
+/// a WorkStealing run is deterministic run-to-run. It differs from
+/// `Sequential` in exactly one semantic: same-sweep (`ThisSweep`) local
+/// messages are deferred to the next sweep (Jacobi instead of
+/// Gauss-Seidel), so min/max-fixpoint programs (SSSP, WCC) converge to
+/// the *identical* values while floating-point-sum programs (PageRank)
+/// converge within epsilon — `tests/layout_equivalence.rs` is the
+/// oracle.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Parallelism {
     /// One worker after another on the calling thread.
@@ -220,6 +235,11 @@ pub enum Parallelism {
     /// One worker per partition, multiplexed onto up to N scoped OS
     /// threads (`std::thread::scope`).
     Threads(usize),
+    /// Sequential partition loop with N scoped threads claiming
+    /// fixed-size chunks of each partition's sorted worklist through an
+    /// atomic counter (deterministic apply order; see above for the
+    /// exact-vs-epsilon contract).
+    WorkStealing(usize),
 }
 
 impl Parallelism {
@@ -228,6 +248,16 @@ impl Parallelism {
         Parallelism::Threads(
             std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
         )
+    }
+
+    /// Threads stealing chunks *within* each sweep: `n` for
+    /// `WorkStealing(n)`, 0 otherwise (engines pass this straight to the
+    /// sweep core).
+    pub fn steal_threads(&self) -> usize {
+        match *self {
+            Parallelism::WorkStealing(n) => n,
+            _ => 0,
+        }
     }
 }
 

@@ -21,7 +21,7 @@
 //! }
 //! ```
 
-use crate::graph::{DistGraph, Graph};
+use crate::graph::{DistGraph, Graph, GraphLayout};
 use crate::partition::{hash_partition, metis_partition, range_partition, MetisConfig};
 
 use super::giraphpp::{run_giraphpp, PartitionProgram, VertexSweep};
@@ -82,6 +82,7 @@ pub struct Runner<'g> {
     source: Source<'g>,
     partitions: usize,
     partitioner: Partitioner,
+    layout: GraphLayout,
     engine: EngineKind,
     cfg: EngineConfig,
     built: Option<DistGraph>,
@@ -96,6 +97,7 @@ impl<'g> Runner<'g> {
             source: Source::Graph(graph),
             partitions: 4,
             partitioner: Partitioner::default(),
+            layout: GraphLayout::default(),
             engine: EngineKind::GraphHP,
             cfg: EngineConfig::default(),
             built: None,
@@ -109,6 +111,7 @@ impl<'g> Runner<'g> {
             source: Source::Dist(dg),
             partitions: dg.num_parts(),
             partitioner: Partitioner::default(),
+            layout: dg.layout,
             engine: EngineKind::GraphHP,
             cfg: EngineConfig::default(),
             built: None,
@@ -139,6 +142,24 @@ impl<'g> Runner<'g> {
         self.partitioner = Partitioner::Explicit(a);
         self.built = None;
         self
+    }
+
+    /// Physical memory layout of the distributed view: local-index
+    /// naming policy plus edge-column compression (see [`GraphLayout`]).
+    /// Purely internal — user-visible vertex ids and gathered results
+    /// are identical across layouts. Ignored for [`Runner::from_dist`]
+    /// sessions, where the layout is baked into the pre-built view.
+    pub fn layout(mut self, l: GraphLayout) -> Self {
+        self.layout = l;
+        self.built = None;
+        self
+    }
+
+    /// Shorthand for `.layout(GraphLayout::packed())`: degree-sorted
+    /// vertex naming + compressed edge columns, the bandwidth-lean
+    /// configuration.
+    pub fn packed_layout(self) -> Self {
+        self.layout(GraphLayout::packed())
     }
 
     /// Engine to dispatch to (default [`EngineKind::GraphHP`]).
@@ -223,6 +244,15 @@ impl<'g> Runner<'g> {
         self
     }
 
+    /// Shorthand for `.parallelism(Parallelism::WorkStealing(n))` — the
+    /// opt-in intra-sweep work-stealing mode (run-to-run deterministic;
+    /// see [`Parallelism::WorkStealing`] for the equivalence contract).
+    pub fn steal(mut self, n: usize) -> Self {
+        assert!(n > 0, "steal threads must be > 0 (use Parallelism::Sequential)");
+        self.cfg.parallelism = Parallelism::WorkStealing(n);
+        self
+    }
+
     /// Seed for per-vertex randomness.
     pub fn seed(mut self, s: u64) -> Self {
         self.cfg.seed = s;
@@ -288,7 +318,8 @@ impl<'g> Runner<'g> {
                             a.clone()
                         }
                     };
-                    self.built = Some(DistGraph::new(g, &assignment, self.partitions));
+                    self.built =
+                        Some(DistGraph::with_layout(g, &assignment, self.partitions, self.layout));
                 }
                 self.built.as_ref().expect("just built")
             }

@@ -276,6 +276,11 @@ pub(crate) struct Sweep<'a, P: VertexProgram> {
     /// Read by `Reschedule::Participants` and the deferred-inbox routing;
     /// engines without the hybrid split pass `true` (neutral).
     pub boundary_in_local: bool,
+    /// `> 0`: run this sweep through [`Sweep::run_stealing`] with that
+    /// many worker threads ([`Parallelism::WorkStealing`]); `0`: the
+    /// deterministic single-thread body. Engines pass
+    /// `cfg.parallelism.steal_threads()`.
+    pub steal_threads: usize,
 }
 
 impl<'a, P: VertexProgram> Sweep<'a, P> {
@@ -296,6 +301,9 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
         scratch: &mut WorkerScratch<P::M>,
         marks: &mut ProcessedMarks,
     ) -> SweepOutcome {
+        if self.steal_threads > 0 {
+            return self.run_stealing(tgt, deferred, outbox, wagg, scratch, marks);
+        }
         let mut out = SweepOutcome::default();
         marks.begin_sweep();
         let SweepTarget { values, halted, cur, nxt, mut frontier } = tgt;
@@ -368,6 +376,198 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
                 if resched {
                     if let Some(f) = frontier.as_deref_mut() {
                         f.schedule(lv);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// The work-stealing sweep body ([`Parallelism::WorkStealing`]).
+    ///
+    /// Three phases:
+    ///
+    /// 1. **Pre-drain (serial).** Pop the whole worklist in ascending
+    ///    order, move each vertex's mail into one flat buffer, and apply
+    ///    the halted-skip/reactivate rule. The surviving vertices form a
+    ///    fixed batch — nothing scheduled mid-sweep can join it.
+    /// 2. **Compute (parallel).** The batch is cut into
+    ///    [`STEAL_CHUNK`]-sized chunks claimed from an atomic counter by
+    ///    scoped threads. Each chunk computes against a *copy* of its
+    ///    vertex values with a fresh aggregator scratch
+    ///    ([`Aggregators::fresh`]) and buffers its sends — shared state
+    ///    is only ever read.
+    /// 3. **Apply (serial).** Chunk outputs are sorted by chunk index —
+    ///    i.e. ascending vertex order, the exact order phase 1 drained —
+    ///    and applied one vertex at a time through the same routing code
+    ///    path as the deterministic body.
+    ///
+    /// The one semantic difference from [`Sweep::run`]: a
+    /// [`LocalRoute::ThisSweep`] message cannot be delivered into the
+    /// running sweep (its receiver may already be computing on another
+    /// thread), so it always lands in `nxt` — Gauss-Seidel relaxes to
+    /// Jacobi. Convergence is unaffected; `tests/layout_equivalence.rs`
+    /// pins the contract (exact for min-fold programs, epsilon for
+    /// floating-point sums).
+    fn run_stealing(
+        &self,
+        tgt: SweepTarget<'_, P::V, P::M>,
+        mut deferred: Option<&mut MsgStore<P::M>>,
+        outbox: &mut Outbox<P::M>,
+        wagg: &mut Aggregators,
+        scratch: &mut WorkerScratch<P::M>,
+        marks: &mut ProcessedMarks,
+    ) -> SweepOutcome {
+        /// Vertices per steal unit: small enough to balance skewed
+        /// degree distributions, large enough to amortize the claim.
+        const STEAL_CHUNK: usize = 128;
+
+        let mut out = SweepOutcome::default();
+        marks.begin_sweep();
+        let SweepTarget { values, halted, cur, nxt, mut frontier } = tgt;
+
+        // ---- phase 1: serial pre-drain into a fixed batch ------------
+        // (lv, start..end into `msgs`) per surviving vertex
+        let mut batch: Vec<(u32, u32, u32)> = Vec::new();
+        let mut msgs: Vec<P::M> = Vec::new();
+        while let Some(lv32) = scratch.worklist.pop_first() {
+            let lv = lv32 as usize;
+            marks.mark(lv);
+            let start = msgs.len() as u32;
+            cur.take_into(lv, &mut scratch.msg_buf);
+            if halted[lv] {
+                if scratch.msg_buf.is_empty() {
+                    continue; // halted, no mail: stays inactive
+                }
+                halted[lv] = false; // a message reactivates (§4.1)
+            }
+            msgs.append(&mut scratch.msg_buf);
+            batch.push((lv32, start, msgs.len() as u32));
+        }
+
+        // ---- phase 2: parallel chunked compute -----------------------
+        struct ChunkOut<V, M> {
+            idx: usize,
+            /// `(lv, new value, halted vote, send count)` in batch order.
+            verts: Vec<(u32, V, bool, u32)>,
+            /// Flat sends; each vertex owns the next `send count` pairs.
+            sends: Vec<(crate::graph::EdgeRoute, M)>,
+            aggs: Aggregators,
+        }
+        let num_chunks = batch.len().div_ceil(STEAL_CHUNK);
+        let threads = self.steal_threads.min(num_chunks.max(1));
+        let values_ro: &[P::V] = values;
+        let batch_ro: &[(u32, u32, u32)] = &batch;
+        let msgs_ro: &[P::M] = &msgs;
+        let agg_template: &Aggregators = wagg;
+        let claim = std::sync::atomic::AtomicUsize::new(0);
+        let mut chunk_outs: Vec<ChunkOut<P::V, P::M>> =
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = (0..threads)
+                    .map(|_| {
+                        scope.spawn(|| {
+                            let mut outs: Vec<ChunkOut<P::V, P::M>> = Vec::new();
+                            let mut send_buf = SendBuffer::new();
+                            loop {
+                                let idx = claim.fetch_add(
+                                    1,
+                                    std::sync::atomic::Ordering::Relaxed,
+                                );
+                                if idx >= num_chunks {
+                                    return outs;
+                                }
+                                let lo = idx * STEAL_CHUNK;
+                                let hi = (lo + STEAL_CHUNK).min(batch_ro.len());
+                                let mut co = ChunkOut {
+                                    idx,
+                                    verts: Vec::with_capacity(hi - lo),
+                                    sends: Vec::new(),
+                                    aggs: agg_template.fresh(),
+                                };
+                                for &(lv32, start, end) in &batch_ro[lo..hi] {
+                                    let lv = lv32 as usize;
+                                    let mut value = values_ro[lv].clone();
+                                    let mut vote_halt = false;
+                                    send_buf.clear();
+                                    let mut ctx = VertexContext::<P> {
+                                        part: self.part,
+                                        lv,
+                                        superstep: self.superstep,
+                                        value: &mut value,
+                                        messages: &msgs_ro
+                                            [start as usize..end as usize],
+                                        halted: &mut vote_halt,
+                                        out: &mut send_buf,
+                                        aggregators: &mut co.aggs,
+                                        seed: self.seed,
+                                        location: &self.dg.location,
+                                    };
+                                    self.program.compute(&mut ctx);
+                                    let nsends = send_buf.sends.len() as u32;
+                                    co.sends.extend(send_buf.sends.drain(..));
+                                    co.verts.push((lv32, value, vote_halt, nsends));
+                                }
+                                outs.push(co);
+                            }
+                        })
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    // detlint: allow(unwrap-hot-path) — a stealing worker
+                    // only returns by exhausting the claim counter; a
+                    // panic inside it re-raises here, matching the
+                    // deterministic body's abort semantics.
+                    .flat_map(|h| h.join().expect("stealing worker panicked"))
+                    .collect()
+            });
+        chunk_outs.sort_unstable_by_key(|c| c.idx);
+
+        // ---- phase 3: serial apply in chunk (= ascending vertex) order
+        for co in chunk_outs {
+            wagg.merge_current(&co.aggs);
+            let mut sends = co.sends.into_iter();
+            for (lv32, value, vote_halt, nsends) in co.verts {
+                let lv = lv32 as usize;
+                values[lv] = value;
+                halted[lv] = vote_halt;
+                out.computations += 1;
+                let src_gid = self.part.global_ids[lv];
+                for (route, m) in sends.by_ref().take(nsends as usize) {
+                    let (tp, tl) = route.unpack();
+                    if tp as usize != self.p || self.route == LocalRoute::Network {
+                        outbox.push(tp, tl, src_gid, m);
+                        continue;
+                    }
+                    let tl = tl as usize;
+                    out.local_messages += 1;
+                    if !(self.boundary_in_local || !self.part.is_boundary[tl]) {
+                        if let Some(gq) = deferred.as_deref_mut() {
+                            // boundary vertex sitting out the local phase:
+                            // buffer for the next global phase (paper §4.2)
+                            gq.push_combined(tl, m, self.combiner);
+                            continue;
+                        }
+                    }
+                    // ThisSweep relaxed to next-sweep delivery (Jacobi):
+                    // the receiver may have computed concurrently
+                    nxt.push_combined(tl, m, self.combiner);
+                    if let Some(f) = frontier.as_deref_mut() {
+                        f.schedule(tl);
+                    }
+                }
+                if !halted[lv] {
+                    let resched = match self.reschedule {
+                        Reschedule::Active => true,
+                        Reschedule::Participants => {
+                            self.boundary_in_local || !self.part.is_boundary[lv]
+                        }
+                        Reschedule::Never => false,
+                    };
+                    if resched {
+                        if let Some(f) = frontier.as_deref_mut() {
+                            f.schedule(lv);
+                        }
                     }
                 }
             }
@@ -499,6 +699,10 @@ where
     let threads = match par {
         Parallelism::Sequential => 1,
         Parallelism::Threads(n) => n.max(1).min(states.len().max(1)),
+        // work-stealing parallelizes *inside* each sweep
+        // ([`Sweep::run_stealing`]); the partition loop stays sequential
+        // so barrier folds keep their partition-order determinism.
+        Parallelism::WorkStealing(_) => 1,
     };
     if threads <= 1 {
         return states.iter_mut().enumerate().map(|(p, st)| f(p, st)).collect();

@@ -199,6 +199,64 @@ pub fn erdos_renyi(n: usize, m: usize, seed: u64) -> Graph {
     b.build()
 }
 
+/// R-MAT recursive-quadrant graph (Chakrabarti et al. 2004) with the
+/// Graph500 partition probabilities (a=0.57, b=0.19, c=0.19, d=0.05):
+/// `2^scale` vertices, `edge_factor` directed edges per vertex before
+/// deduplication. Each edge picks one of the four adjacency-matrix
+/// quadrants per bit level, which yields the heavy-tail degree
+/// distribution and community structure of real web/social graphs at
+/// any size — `rmat(20, 16, seed)` is ~16M generated edges, the 10M+
+/// regime the large bench scales use ([`crate::graph::GraphLayout`]
+/// compression and `Parallelism::WorkStealing` are bandwidth
+/// optimisations; they need graphs that exceed cache).
+///
+/// Self-loops are rerolled; duplicate edges are collapsed, so the built
+/// edge count lands a few percent under `n * edge_factor`. Pure function
+/// of `(scale, edge_factor, seed)` like every generator here.
+pub fn rmat(scale: u32, edge_factor: usize, seed: u64) -> Graph {
+    assert!((1..=30).contains(&scale), "rmat scale out of range");
+    let n = 1usize << scale;
+    let m = n * edge_factor;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, m);
+    const A: f64 = 0.57;
+    const B: f64 = 0.19;
+    const C: f64 = 0.19;
+    for _ in 0..m {
+        loop {
+            let (mut src, mut dst) = (0usize, 0usize);
+            for _ in 0..scale {
+                src <<= 1;
+                dst <<= 1;
+                let r = rng.f64();
+                if r < A {
+                    // top-left quadrant: both bits 0
+                } else if r < A + B {
+                    dst |= 1;
+                } else if r < A + B + C {
+                    src |= 1;
+                } else {
+                    src |= 1;
+                    dst |= 1;
+                }
+            }
+            if src != dst {
+                b.add_edge(src as VertexId, dst as VertexId, rng.f32_range(0.5, 5.0));
+                break;
+            }
+        }
+    }
+    b.dedup();
+    b.build()
+}
+
+/// Web-crawl stand-in at parametric scale: [`powerlaw_with_locality`]
+/// with crawl-like defaults (80% of links within a 256-id host window).
+/// `web(1 << 21, 8, seed)` is ~16M edges — the large bench scale.
+pub fn web(n: usize, avg_out: usize, seed: u64) -> Graph {
+    powerlaw_with_locality(n, avg_out, 0.8, 256, seed)
+}
+
 /// Random connected undirected graph: a random spanning tree plus `extra`
 /// random undirected edges. Used by tests that need reachability.
 pub fn connected(n: usize, extra: usize, seed: u64) -> Graph {
@@ -275,6 +333,28 @@ mod tests {
         let h = crate::partition::hash_partition(&g, 8);
         let sh = crate::partition::PartitionStats::compute(&g, &h, 8);
         assert!(s.edge_cut < sh.edge_cut, "metis {} vs hash {}", s.edge_cut, sh.edge_cut);
+    }
+
+    #[test]
+    fn rmat_shape_heavy_tail_and_determinism() {
+        let g = rmat(12, 8, 3);
+        g.validate().unwrap();
+        assert_eq!(g.num_vertices(), 1 << 12);
+        // dedup + self-loop rerolls trim a few percent off n*edge_factor
+        assert!(g.num_edges() > (1 << 12) * 6, "{}", g.num_edges());
+        assert!(g.num_edges() <= (1 << 12) * 8);
+        let max_out =
+            (0..g.num_vertices() as VertexId).map(|v| g.out_degree(v)).max().unwrap();
+        let avg = g.num_edges() as f64 / g.num_vertices() as f64;
+        assert!(max_out as f64 > 5.0 * avg, "max={max_out} avg={avg}");
+        assert_eq!(rmat(10, 4, 5), rmat(10, 4, 5));
+        assert_ne!(rmat(10, 4, 5), rmat(10, 4, 6));
+    }
+
+    #[test]
+    fn web_is_the_parametric_crawl_generator() {
+        assert_eq!(web(2000, 5, 11), powerlaw_with_locality(2000, 5, 0.8, 256, 11));
+        web(2000, 5, 11).validate().unwrap();
     }
 
     #[test]

@@ -10,4 +10,7 @@ pub mod io;
 
 pub use builder::GraphBuilder;
 pub use csr::{Graph, VertexId};
-pub use dist::{DistGraph, Edge, EdgeRoute, Edges, EdgesIter, PartGraph};
+pub use dist::{
+    DistGraph, Edge, EdgeRoute, Edges, EdgesIter, GraphLayout, LayoutPolicy, PartGraph,
+    RouteIter, VertexLayout,
+};

@@ -13,7 +13,11 @@
 //!
 //! `--threads N` pins the worker parallelism (`0` = sequential; default:
 //! one OS thread per core). Results are bit-for-bit identical across
-//! thread counts — the knob only changes wall-clock.
+//! thread counts — the knob only changes wall-clock. `--steal N` selects
+//! the opt-in work-stealing mode instead (`Parallelism::WorkStealing`):
+//! run-to-run deterministic, exact for min-fold programs, within
+//! floating-point epsilon for sum-based ones (see
+//! `docs/architecture.md`).
 //!
 //! `--adaptive` switches GraphHP to the telemetry-driven adaptive hybrid
 //! scheduler (`HybridPolicy::Adaptive`); `--trace FILE` dumps the run's
@@ -191,6 +195,11 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         } else {
             Parallelism::Threads(n)
         });
+    }
+    if let Some(t) = flags.get("steal") {
+        let n: usize = t.parse().with_context(|| format!("bad --steal {t}"))?;
+        anyhow::ensure!(n > 0, "--steal needs a thread count > 0");
+        runner = runner.parallelism(Parallelism::WorkStealing(n));
     }
     if flags.contains_key("adaptive") {
         runner = runner.hybrid_policy(HybridPolicy::adaptive());

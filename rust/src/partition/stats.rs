@@ -107,7 +107,8 @@ impl PartitionLocality {
 /// Compute every partition's [`PartitionLocality`], in partition order.
 /// Vertex/boundary/internal/cut-out counts come straight from the
 /// counts precomputed at [`DistGraph::new`] time; only the incoming-cut
-/// tally needs a pass, and it streams the SoA route column alone.
+/// tally needs a pass, and it streams the routes alone (the raw SoA
+/// column, or a route-only decode on compressed storage).
 pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
     let mut out: Vec<PartitionLocality> = dg
         .parts
@@ -122,10 +123,12 @@ pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
         })
         .collect();
     for p in &dg.parts {
-        for r in &p.routes {
-            let tp = r.part();
-            if tp != p.part {
-                out[tp as usize].cut_in += 1;
+        for lv in 0..p.num_vertices() {
+            for r in p.out_edges(lv).route_iter() {
+                let tp = r.part();
+                if tp != p.part {
+                    out[tp as usize].cut_in += 1;
+                }
             }
         }
     }

@@ -127,6 +127,51 @@ impl<T: Codec> Codec for Vec<T> {
     }
 }
 
+/// Append `v` as a LEB128-style varint: 7 payload bits per byte, the
+/// high bit set on every byte except the last. Small values (the common
+/// case for delta-encoded edge columns) take one byte.
+#[inline]
+pub fn write_varint(buf: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        buf.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    buf.push(v as u8);
+}
+
+/// Decode one varint from `bytes` starting at `*pos`, advancing `*pos`
+/// past it. Panics on truncated input — the compressed edge columns are
+/// built and consumed inside one process, so malformed bytes are a bug,
+/// not an input condition.
+#[inline]
+pub fn read_varint(bytes: &[u8], pos: &mut usize) -> u64 {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = bytes[*pos];
+        *pos += 1;
+        v |= ((b & 0x7f) as u64) << shift;
+        if b & 0x80 == 0 {
+            return v;
+        }
+        shift += 7;
+        debug_assert!(shift < 64, "varint longer than 64 bits");
+    }
+}
+
+/// ZigZag-map a signed delta onto an unsigned varint payload so small
+/// negative deltas stay short: 0 -> 0, -1 -> 1, 1 -> 2, -2 -> 3, ...
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -173,5 +218,51 @@ mod tests {
         (u64::MAX).encode(&mut buf);
         let mut r = &buf[..];
         assert_eq!(Vec::<u32>::decode(&mut r), None);
+    }
+
+    #[test]
+    fn varint_roundtrip_and_length() {
+        let cases = [0u64, 1, 0x7f, 0x80, 0x3fff, 0x4000, 123_456_789, u64::MAX];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            write_varint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(read_varint(&buf, &mut pos), v);
+            assert_eq!(pos, buf.len());
+        }
+        let mut buf = Vec::new();
+        write_varint(&mut buf, 0x7f);
+        assert_eq!(buf.len(), 1);
+        write_varint(&mut buf, 0x80);
+        assert_eq!(buf.len(), 3);
+    }
+
+    #[test]
+    fn varint_sequence_decodes_in_order() {
+        let vals = [5u64, 0, 300, 1, u32::MAX as u64];
+        let mut buf = Vec::new();
+        for &v in &vals {
+            write_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(read_varint(&buf, &mut pos), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn zigzag_roundtrip_keeps_small_deltas_small() {
+        for v in [-1_000_000i64, -2, -1, 0, 1, 2, 1_000_000, i64::MIN, i64::MAX] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+        // |delta| < 64 stays a one-byte varint either direction
+        let mut buf = Vec::new();
+        write_varint(&mut buf, zigzag(-63));
+        write_varint(&mut buf, zigzag(63));
+        assert_eq!(buf.len(), 2);
     }
 }

@@ -1,0 +1,292 @@
+//! Equivalence contract of the physical memory layouts and the
+//! work-stealing mode (the bandwidth-bound sweep optimisations).
+//!
+//! Layouts ([`GraphLayout`]: identity/degree-sorted × SoA/compressed
+//! edge columns) are *internal* renamings — user-visible vertex ids and
+//! gathered results must not change:
+//!
+//! - min-fold programs (SSSP, WCC) are **bit-for-bit identical** across
+//!   every layout — the fold result is order-free;
+//! - floating-point-sum programs (PageRank) match within epsilon — the
+//!   sweep visits vertices in a different local order, so same-partition
+//!   f64 message folds associate differently;
+//! - within any one layout, `Threads(n)` stays **bit-for-bit** identical
+//!   to `Sequential` (the original determinism oracle, unchanged).
+//!
+//! [`Parallelism::WorkStealing`] relaxes only *thread assignment inside
+//! a sweep* (chunked atomic claiming, serial ordered apply):
+//!
+//! - SSSP/WCC: bit-for-bit equal values vs `Sequential`;
+//! - PageRank: within epsilon (chunk-local aggregator partials and the
+//!   ThisSweep→next-sweep Jacobi deferral reassociate f64 sums);
+//! - `WorkStealing(1)` ≡ `WorkStealing(n)` bit-for-bit, including every
+//!   metric counter — thread count must be unobservable.
+
+use graphhp::algorithms::{
+    GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc,
+};
+use graphhp::engine::{EngineConfig, EngineKind, Metrics, Parallelism, Runner};
+use graphhp::graph::{generators, DistGraph, Graph, GraphLayout, LayoutPolicy};
+use graphhp::partition::{metis_partition, MetisConfig};
+
+/// Every layout configuration, named for assertion messages.
+fn layouts() -> [(&'static str, GraphLayout); 4] {
+    [
+        ("identity", GraphLayout::default()),
+        ("degree-sorted", GraphLayout::degree_sorted()),
+        (
+            "identity+compressed",
+            GraphLayout { policy: LayoutPolicy::Identity, compress_edges: true },
+        ),
+        ("packed", GraphLayout::packed()),
+    ]
+}
+
+fn dist(g: &Graph, k: usize, layout: GraphLayout) -> DistGraph {
+    let a = metis_partition(g, k, &MetisConfig::default());
+    DistGraph::with_layout(g, &a, k, layout)
+}
+
+fn cfg_with(par: Parallelism) -> EngineConfig {
+    EngineConfig { parallelism: par, ..Default::default() }
+}
+
+fn graph_cases() -> Vec<(Graph, usize)> {
+    vec![
+        (generators::connected(300, 150, 7), 4),
+        (generators::powerlaw(400, 4, 11), 6),
+        (generators::road(18, 18, 3), 9),
+    ]
+}
+
+/// Relative closeness for the floating-point-sum comparisons.
+fn close(a: f64, b: f64, rtol: f64) -> bool {
+    (a - b).abs() <= rtol * b.abs().max(1.0)
+}
+
+fn run_vertex<P: graphhp::engine::VertexProgram>(
+    dg: &DistGraph,
+    kind: EngineKind,
+    par: Parallelism,
+    prog: &P,
+) -> graphhp::engine::RunResult<P::V> {
+    Runner::from_dist(dg).config(cfg_with(par)).run_on(kind, prog)
+}
+
+/// The deterministic counters that must agree when two runs are claimed
+/// bit-for-bit equivalent.
+fn assert_counts_equal(label: &str, a: &Metrics, b: &Metrics) {
+    assert_eq!(a.global_iterations, b.global_iterations, "{label}: iterations");
+    assert_eq!(a.supersteps_total, b.supersteps_total, "{label}: supersteps");
+    assert_eq!(a.network_messages, b.network_messages, "{label}: messages");
+    assert_eq!(a.network_bytes, b.network_bytes, "{label}: bytes");
+    assert_eq!(a.local_messages, b.local_messages, "{label}: local messages");
+    assert_eq!(a.vertex_computations, b.vertex_computations, "{label}: computations");
+}
+
+/// Degree-sorted and compressed layouts return the same user-visible
+/// results as the identity layout on all six engines: SSSP and WCC at
+/// the bit level, PageRank within epsilon.
+#[test]
+fn layouts_preserve_results_on_all_six_kinds() {
+    for (g, k) in &graph_cases() {
+        let base = dist(g, *k, GraphLayout::default());
+        for (lname, layout) in layouts().into_iter().skip(1) {
+            let dg = dist(g, *k, layout);
+            assert_eq!(dg.edge_cut(), base.edge_cut(), "{lname}: cut changed");
+            for kind in EngineKind::ALL {
+                let label = format!("{kind}/{lname}");
+                if kind.is_gas() {
+                    let s0 = Runner::from_dist(&base)
+                        .config(cfg_with(Parallelism::Sequential))
+                        .run_gas_on(kind, &GasSssp { source: 1 });
+                    let s1 = Runner::from_dist(&dg)
+                        .config(cfg_with(Parallelism::Sequential))
+                        .run_gas_on(kind, &GasSssp { source: 1 });
+                    assert_eq!(
+                        s0.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        s1.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{label}: sssp"
+                    );
+                    let w0 = Runner::from_dist(&base)
+                        .config(cfg_with(Parallelism::Sequential))
+                        .run_gas_on(kind, &GasWcc);
+                    let w1 = Runner::from_dist(&dg)
+                        .config(cfg_with(Parallelism::Sequential))
+                        .run_gas_on(kind, &GasWcc);
+                    assert_eq!(w0.values, w1.values, "{label}: wcc");
+                    let p0 = Runner::from_dist(&base)
+                        .config(cfg_with(Parallelism::Sequential))
+                        .run_gas_on(kind, &GasPageRank { tolerance: 1e-7 });
+                    let p1 = Runner::from_dist(&dg)
+                        .config(cfg_with(Parallelism::Sequential))
+                        .run_gas_on(kind, &GasPageRank { tolerance: 1e-7 });
+                    for (i, (a, b)) in p0.values.iter().zip(&p1.values).enumerate() {
+                        assert!(close(*a, *b, 1e-6), "{label}: pagerank v{i} {a} vs {b}");
+                    }
+                } else {
+                    let s0 =
+                        run_vertex(&base, kind, Parallelism::Sequential, &Sssp { source: 1 });
+                    let s1 =
+                        run_vertex(&dg, kind, Parallelism::Sequential, &Sssp { source: 1 });
+                    assert_eq!(
+                        s0.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        s1.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "{label}: sssp"
+                    );
+                    let w0 = run_vertex(&base, kind, Parallelism::Sequential, &Wcc);
+                    let w1 = run_vertex(&dg, kind, Parallelism::Sequential, &Wcc);
+                    assert_eq!(w0.values, w1.values, "{label}: wcc");
+                    let pr = IncrementalPageRank { tolerance: 1e-7 };
+                    let p0 = run_vertex(&base, kind, Parallelism::Sequential, &pr);
+                    let p1 = run_vertex(&dg, kind, Parallelism::Sequential, &pr);
+                    for (i, (a, b)) in p0.values.iter().zip(&p1.values).enumerate() {
+                        assert!(close(*a, *b, 1e-6), "{label}: pagerank v{i} {a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The original oracle, extended over every layout: within one layout,
+/// `Threads(4)` is bit-for-bit identical to `Sequential` — values and
+/// every deterministic metric counter.
+#[test]
+fn threads_stay_bit_identical_under_every_layout() {
+    let g = generators::powerlaw(400, 4, 11);
+    for (lname, layout) in layouts() {
+        let dg = dist(&g, 6, layout);
+        for kind in EngineKind::VERTEX_CENTRIC {
+            let label = format!("{kind}/{lname}");
+            let pr = IncrementalPageRank { tolerance: 1e-7 };
+            let seq = run_vertex(&dg, kind, Parallelism::Sequential, &pr);
+            let par = run_vertex(&dg, kind, Parallelism::Threads(4), &pr);
+            assert_eq!(
+                seq.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                par.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{label}: pagerank bits"
+            );
+            assert_counts_equal(&label, &seq.metrics, &par.metrics);
+            let seq = run_vertex(&dg, kind, Parallelism::Sequential, &Wcc);
+            let par = run_vertex(&dg, kind, Parallelism::Threads(4), &Wcc);
+            assert_eq!(seq.values, par.values, "{label}: wcc");
+            assert_counts_equal(&label, &seq.metrics, &par.metrics);
+        }
+    }
+}
+
+/// Work-stealing vs sequential: exact value equality for the min-fold
+/// programs on every vertex-centric engine, epsilon for PageRank.
+#[test]
+fn work_stealing_matches_sequential() {
+    for (g, k) in &graph_cases() {
+        let dg = dist(g, *k, GraphLayout::default());
+        for kind in EngineKind::VERTEX_CENTRIC {
+            let label = format!("{kind}/steal");
+            let s0 = run_vertex(&dg, kind, Parallelism::Sequential, &Sssp { source: 1 });
+            let s1 =
+                run_vertex(&dg, kind, Parallelism::WorkStealing(4), &Sssp { source: 1 });
+            assert_eq!(
+                s0.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                s1.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{label}: sssp"
+            );
+            let w0 = run_vertex(&dg, kind, Parallelism::Sequential, &Wcc);
+            let w1 = run_vertex(&dg, kind, Parallelism::WorkStealing(4), &Wcc);
+            assert_eq!(w0.values, w1.values, "{label}: wcc");
+            // PageRank: chunk-local aggregator partials and the Jacobi
+            // deferral reassociate f64 sums — epsilon, not bits
+            let pr = IncrementalPageRank { tolerance: 1e-7 };
+            let p0 = run_vertex(&dg, kind, Parallelism::Sequential, &pr);
+            let p1 = run_vertex(&dg, kind, Parallelism::WorkStealing(4), &pr);
+            for (i, (a, b)) in p0.values.iter().zip(&p1.values).enumerate() {
+                assert!(close(*a, *b, 1e-4), "{label}: pagerank v{i} {a} vs {b}");
+            }
+        }
+    }
+}
+
+/// The GAS engines have no intra-sweep stealing path; under
+/// `WorkStealing` they run their sequential partition loop, so results
+/// must equal `Sequential` at the bit level.
+#[test]
+fn work_stealing_on_gas_engines_is_sequential() {
+    let g = generators::connected(300, 150, 7);
+    let dg = dist(&g, 4, GraphLayout::default());
+    for kind in [EngineKind::GraphLabSync, EngineKind::GraphLabAsync] {
+        let s0 = Runner::from_dist(&dg)
+            .config(cfg_with(Parallelism::Sequential))
+            .run_gas_on(kind, &GasSssp { source: 1 });
+        let s1 = Runner::from_dist(&dg)
+            .config(cfg_with(Parallelism::WorkStealing(4)))
+            .run_gas_on(kind, &GasSssp { source: 1 });
+        assert_eq!(
+            s0.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            s1.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+            "{kind}: gas sssp under WorkStealing"
+        );
+        assert_counts_equal(&kind.to_string(), &s0.metrics, &s1.metrics);
+    }
+}
+
+/// The stealing thread count must be unobservable: `WorkStealing(1)` is
+/// bit-for-bit identical to `WorkStealing(4)` — values AND every
+/// deterministic counter — on every vertex-centric engine and layout.
+#[test]
+fn work_stealing_thread_count_is_unobservable() {
+    let g = generators::powerlaw(400, 4, 11);
+    for (lname, layout) in [("identity", GraphLayout::default()), ("packed", GraphLayout::packed())]
+    {
+        let dg = dist(&g, 6, layout);
+        for kind in EngineKind::VERTEX_CENTRIC {
+            let label = format!("{kind}/{lname}");
+            let pr = IncrementalPageRank { tolerance: 1e-7 };
+            let one = run_vertex(&dg, kind, Parallelism::WorkStealing(1), &pr);
+            let many = run_vertex(&dg, kind, Parallelism::WorkStealing(4), &pr);
+            assert_eq!(
+                one.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                many.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                "{label}: pagerank bits across steal counts"
+            );
+            assert_counts_equal(&label, &one.metrics, &many.metrics);
+            let one = run_vertex(&dg, kind, Parallelism::WorkStealing(1), &Wcc);
+            let many = run_vertex(&dg, kind, Parallelism::WorkStealing(4), &Wcc);
+            assert_eq!(one.values, many.values, "{label}: wcc across steal counts");
+            assert_counts_equal(&label, &one.metrics, &many.metrics);
+        }
+    }
+}
+
+/// Run-to-run determinism of work-stealing: two identical invocations
+/// produce identical bits (the claim counter races threads, but the
+/// ordered apply hides it).
+#[test]
+fn work_stealing_is_run_to_run_deterministic() {
+    let g = generators::road(18, 18, 3);
+    let dg = dist(&g, 9, GraphLayout::packed());
+    let pr = IncrementalPageRank { tolerance: 1e-7 };
+    let a = run_vertex(&dg, EngineKind::GraphHP, Parallelism::WorkStealing(4), &pr);
+    let b = run_vertex(&dg, EngineKind::GraphHP, Parallelism::WorkStealing(4), &pr);
+    assert_eq!(
+        a.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        b.values.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+        "two identical WorkStealing runs diverged"
+    );
+    assert_counts_equal("graphhp rerun", &a.metrics, &b.metrics);
+}
+
+/// The full stack composed: packed layout + work-stealing vs identity
+/// layout + sequential — the two extremes of the configuration space —
+/// agree exactly on WCC.
+#[test]
+fn packed_stealing_agrees_with_identity_sequential() {
+    let g = generators::connected(300, 150, 7);
+    let base = dist(&g, 4, GraphLayout::default());
+    let packed = dist(&g, 4, GraphLayout::packed());
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let b = run_vertex(&base, kind, Parallelism::Sequential, &Wcc);
+        let p = run_vertex(&packed, kind, Parallelism::WorkStealing(3), &Wcc);
+        assert_eq!(b.values, p.values, "{kind}: packed+steal vs identity+seq");
+    }
+}

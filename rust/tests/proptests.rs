@@ -343,3 +343,69 @@ fn netsim_costs_are_monotone() {
         assert!(cfg.comm_time(&more_bytes) > t);
     }
 }
+
+// --------------------------------------------- compressed edge columns
+
+/// Round-trip property of the varint-delta edge compression: for any
+/// random graph, partitioning, and local-index policy, the compressed
+/// columns decode to exactly the SoA columns — same `(target, route,
+/// weight)` stream per vertex, agreeing route-only iteration, agreeing
+/// random access — and the weights column stays directly addressable.
+#[test]
+fn prop_compressed_edge_columns_roundtrip() {
+    use graphhp::graph::{GraphLayout, LayoutPolicy};
+    let mut rng = Rng::new(0xED6E5);
+    for case in 0..40u32 {
+        let g = random_graph(&mut rng);
+        let k = 1 + rng.index(6);
+        let a = hash_partition(&g, k);
+        let policy = if rng.index(2) == 0 {
+            LayoutPolicy::Identity
+        } else {
+            LayoutPolicy::DegreeSorted
+        };
+        let soa =
+            DistGraph::with_layout(&g, &a, k, GraphLayout { policy, compress_edges: false });
+        let packed =
+            DistGraph::with_layout(&g, &a, k, GraphLayout { policy, compress_edges: true });
+        assert!(packed.parts.iter().all(|p| p.is_compressed() || p.num_edges() == 0));
+        for (ps, pp) in soa.parts.iter().zip(&packed.parts) {
+            assert_eq!(ps.num_vertices(), pp.num_vertices(), "case {case}");
+            for lv in 0..ps.num_vertices() {
+                let es = ps.out_edges(lv);
+                let ep = pp.out_edges(lv);
+                assert_eq!(es.len(), ep.len(), "case {case} lv {lv}: degree");
+                let want: Vec<(u32, u64, u32)> = es
+                    .iter()
+                    .map(|e| {
+                        (e.target, ((e.target_part as u64) << 32) | e.target_local as u64,
+                         e.weight.to_bits())
+                    })
+                    .collect();
+                let got: Vec<(u32, u64, u32)> = ep
+                    .iter()
+                    .map(|e| {
+                        (e.target, ((e.target_part as u64) << 32) | e.target_local as u64,
+                         e.weight.to_bits())
+                    })
+                    .collect();
+                assert_eq!(got, want, "case {case} lv {lv}: edge stream");
+                let r_want: Vec<(u32, u32)> =
+                    es.route_iter().map(|r| r.unpack()).collect();
+                let r_got: Vec<(u32, u32)> =
+                    ep.route_iter().map(|r| r.unpack()).collect();
+                assert_eq!(r_got, r_want, "case {case} lv {lv}: route stream");
+                assert_eq!(es.weights(), ep.weights(), "case {case} lv {lv}: weights");
+                if !want.is_empty() {
+                    let i = rng.index(want.len());
+                    let (a, b) = (es.get(i), ep.get(i));
+                    assert_eq!(
+                        (a.target, a.weight.to_bits()),
+                        (b.target, b.weight.to_bits()),
+                        "case {case} lv {lv}: random access at {i}"
+                    );
+                }
+            }
+        }
+    }
+}
