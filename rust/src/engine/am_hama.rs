@@ -17,12 +17,14 @@
 use crate::graph::DistGraph;
 
 use super::aggregator::Aggregators;
+use super::messages::Outbox;
 use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
+use super::migrate::{remap_runtimes, MigrationPlanner};
 use super::netsim::SuperstepClock;
 use super::program::{SourceCombine, VertexProgram};
 use super::worker::{
-    boundary_count, close_superstep, init_worker_states, run_workers, LocalRoute, Reschedule,
-    Sweep, WorkerOut,
+    boundary_count, close_superstep, init_worker_states, run_workers, LocalRoute,
+    ProcessedMarks, Reschedule, Sweep, WorkerOut, WorkerScratch, WorkerState,
 };
 use super::{EngineConfig, RunResult};
 
@@ -52,8 +54,11 @@ pub fn run_am_hama<P: VertexProgram>(
     }
 
     let mut superstep: u64 = 0;
+    let planner = cfg.repartition.map(MigrationPlanner::new);
+    let mut dg_owned: Option<Box<DistGraph>> = None;
 
     loop {
+        let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let outs = run_workers(cfg.parallelism, &mut workers, |p, ws| {
             ws.outbox.reset();
             let mut wagg = aggs.clone();
@@ -71,13 +76,13 @@ pub fn run_am_hama<P: VertexProgram>(
             ws.rt.begin_step_into(&mut ws.scratch.worklist);
             let pt = PartitionStepTrace {
                 frontier: ws.scratch.worklist.len() as u64,
-                boundary_frontier: boundary_count(&dg.parts[p], ws.scratch.worklist.as_slice()),
+                boundary_frontier: boundary_count(&dgr.parts[p], ws.scratch.worklist.as_slice()),
                 ..Default::default()
             };
             let sweep = Sweep {
                 program,
-                dg,
-                part: &dg.parts[p],
+                dg: dgr,
+                part: &dgr.parts[p],
                 p,
                 superstep,
                 seed: cfg.seed,
@@ -120,6 +125,38 @@ pub fn run_am_hama<P: VertexProgram>(
             // after delivery (no-op in release builds)
             super::invariants::check_runtime(&ws.rt);
         }
+
+        // ---- online repartitioning: every partition is step-closed and
+        // all barrier mail landed, so the plan applies atomically here
+        {
+            let step = trace.steps.last_mut().expect("barrier just recorded a step");
+            step.routing_epoch = dgr.routing.epoch;
+            let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, superstep));
+            if let Some(plan) = plan {
+                step.migrated = plan.len() as u64;
+                let new_dg = Box::new(dgr.apply_migration(&plan));
+                let rts = remap_runtimes(
+                    dgr,
+                    &new_dg,
+                    workers.drain(..).map(|ws| ws.rt).collect(),
+                    combiner,
+                );
+                workers = rts
+                    .into_iter()
+                    .map(|rt| {
+                        let n = rt.num_vertices();
+                        WorkerState {
+                            rt,
+                            scratch: WorkerScratch::new(),
+                            marks: ProcessedMarks::new(n),
+                            outbox: Outbox::new(combiner),
+                        }
+                    })
+                    .collect();
+                dg_owned = Some(new_dg);
+            }
+        }
+
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         superstep += 1;
@@ -130,8 +167,11 @@ pub fn run_am_hama<P: VertexProgram>(
         }
     }
 
+    // gather under the final routing epoch — migrated vertices read back
+    // from their current owners
+    let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     let values =
-        super::gather_values_owned(dg, workers.into_iter().map(|ws| ws.rt.values).collect());
+        super::gather_values_owned(dgr, workers.into_iter().map(|ws| ws.rt.values).collect());
     RunResult { values, metrics, trace }
 }
 

@@ -24,6 +24,7 @@ use std::path::Path;
 
 use anyhow::{Context, Result};
 
+use crate::graph::MigrationPlan;
 use crate::util::Codec;
 
 /// One partition's hybrid-scheduler state. This is the GraphHP engine's
@@ -95,6 +96,13 @@ pub struct Checkpoint<V, M> {
     /// Per partition: the hybrid-scheduler state (see
     /// [`PolicyCheckpoint`]).
     pub policy: Vec<PolicyCheckpoint>,
+    /// Every [`MigrationPlan`] applied before this snapshot, in epoch
+    /// order. Recovery replays the trajectory onto the pristine graph to
+    /// rebuild the exact routing geometry the per-partition arrays were
+    /// snapshotted under — the failure may have happened epochs ahead of
+    /// the checkpoint, and without the trajectory the array shapes would
+    /// not even line up.
+    pub migrations: Vec<MigrationPlan>,
 }
 
 impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
@@ -112,6 +120,7 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
             self.frontier[p].encode(&mut buf);
             self.policy[p].encode(&mut buf);
         }
+        self.migrations.encode(&mut buf);
         buf
     }
 
@@ -137,6 +146,7 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
             frontier.push(Vec::<u32>::decode(r)?);
             policy.push(PolicyCheckpoint::decode(r)?);
         }
+        let migrations = Vec::<MigrationPlan>::decode(r)?;
         Some(Checkpoint {
             iteration,
             values,
@@ -146,6 +156,7 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
             local_nxt,
             frontier,
             policy,
+            migrations,
         })
     }
 
@@ -221,6 +232,10 @@ mod tests {
                 },
                 PolicyCheckpoint { run_local: false, cap: 1, ..Default::default() },
             ],
+            migrations: vec![
+                MigrationPlan { epoch: 1, moves: vec![(2, 1), (5, 0)] },
+                MigrationPlan { epoch: 2, moves: vec![(3, 1)] },
+            ],
         }
     }
 
@@ -244,6 +259,11 @@ mod tests {
         assert_eq!(d.policy, c.policy, "scheduler state survives the roundtrip");
         assert_eq!(d.policy[0].cap, 16);
         assert!(!d.policy[1].run_local);
+        assert_eq!(
+            d.migrations, c.migrations,
+            "the applied-plan trajectory survives the roundtrip"
+        );
+        assert_eq!(d.migrations[1].epoch, 2);
     }
 
     #[test]

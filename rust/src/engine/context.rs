@@ -225,7 +225,7 @@ mod tests {
 
     /// The acceptance contract of the resolved-route send plane: the
     /// location table handed to the context is EMPTY, so any
-    /// `dg.location` consultation would panic — edge-directed sends must
+    /// `dg.routing.location` consultation would panic — edge-directed sends must
     /// resolve purely from the edges' precomputed routes, and the buffer
     /// must contain the fully-resolved `(part, local)` destinations.
     #[test]
@@ -255,7 +255,7 @@ mod tests {
     #[test]
     fn arbitrary_send_resolves_once_at_enqueue() {
         let dg = two_part_graph();
-        let sends = collect_sends(&dg, &dg.location, |ctx| ctx.send(3, 42));
+        let sends = collect_sends(&dg, &dg.routing.location, |ctx| ctx.send(3, 42));
         assert_eq!(sends, vec![(1, 1, 42)]);
     }
 }

@@ -20,6 +20,7 @@ use crate::util::Codec;
 
 use super::messages::{MsgStore, Outbox};
 use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
+use super::migrate::{remap_runtimes, MigrationPlanner};
 use super::netsim::SuperstepClock;
 use super::program::{SourceCombine, VertexProgram};
 use super::state::{Frontier, PartitionRuntime};
@@ -109,7 +110,7 @@ impl<'a, PP: PartitionProgram> PartitionContext<'a, PP> {
     /// the program has a combiner); remote destinations go through RPC
     /// at the barrier.
     pub fn send(&mut self, target: VertexId, m: PP::M) {
-        let (tp, tl) = self.dg.location[target as usize];
+        let (tp, tl) = self.dg.routing.location[target as usize];
         if tp as usize == self.p {
             self.local_messages += 1;
             self.nxt.push_combined(tl as usize, m, self.combiner);
@@ -172,15 +173,18 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     // master set so the shared barrier fold applies unchanged
     let mut aggs = Aggregators::new(Vec::new());
     let mut superstep: u64 = 0;
+    let planner = cfg.repartition.map(MigrationPlanner::new);
+    let mut dg_owned: Option<Box<DistGraph>> = None;
 
     loop {
+        let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let outs = run_workers(cfg.parallelism, &mut workers, |p, w| {
             let GpWorker { rt, outbox, scratch, marks } = w;
             outbox.reset();
             let scheduled = rt.begin_step();
             let pt = PartitionStepTrace {
                 frontier: scheduled.len() as u64,
-                boundary_frontier: boundary_count(&dg.parts[p], &scheduled),
+                boundary_frontier: boundary_count(&dgr.parts[p], &scheduled),
                 ..Default::default()
             };
             // detlint: allow(wall-clock) — compute_us probe: measures this
@@ -189,7 +193,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             let (computations, local_messages);
             {
                 let mut ctx = PartitionContext::<PP> {
-                    part: &dg.parts[p],
+                    part: &dgr.parts[p],
                     superstep,
                     values: &mut rt.values,
                     halted: &mut rt.halted,
@@ -201,7 +205,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                     scratch: &mut *scratch,
                     marks: &mut *marks,
                     combiner,
-                    dg,
+                    dg: dgr,
                     p,
                     steal_threads: cfg.parallelism.steal_threads(),
                     computations: 0,
@@ -243,6 +247,38 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             // after delivery (no-op in release builds)
             super::invariants::check_runtime(&w.rt);
         }
+
+        // ---- online repartitioning: every partition is step-closed and
+        // all barrier mail landed, so the plan applies atomically here
+        {
+            let step = trace.steps.last_mut().expect("barrier just recorded a step");
+            step.routing_epoch = dgr.routing.epoch;
+            let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, superstep));
+            if let Some(plan) = plan {
+                step.migrated = plan.len() as u64;
+                let new_dg = Box::new(dgr.apply_migration(&plan));
+                let rts = remap_runtimes(
+                    dgr,
+                    &new_dg,
+                    workers.drain(..).map(|w| w.rt).collect(),
+                    combiner,
+                );
+                workers = rts
+                    .into_iter()
+                    .map(|rt| {
+                        let n = rt.num_vertices();
+                        GpWorker {
+                            rt,
+                            outbox: Outbox::new(combiner),
+                            scratch: WorkerScratch::new(),
+                            marks: ProcessedMarks::new(n),
+                        }
+                    })
+                    .collect();
+                dg_owned = Some(new_dg);
+            }
+        }
+
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
         superstep += 1;
@@ -257,8 +293,11 @@ pub fn run_giraphpp<PP: PartitionProgram>(
         }
     }
 
+    // gather under the final routing epoch — migrated vertices read back
+    // from their current owners
+    let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     let values =
-        super::gather_values_owned(dg, workers.into_iter().map(|w| w.rt.values).collect());
+        super::gather_values_owned(dgr, workers.into_iter().map(|w| w.rt.values).collect());
     RunResult { values, metrics, trace }
 }
 

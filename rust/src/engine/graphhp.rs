@@ -56,18 +56,36 @@
 //! bit-for-bit identical to sequential ones
 //! (`tests/parallel_equivalence.rs` covers the adaptive policy too).
 //!
+//! # Online repartitioning
+//!
+//! Under [`super::EngineConfig::repartition`] the engine additionally
+//! runs the deterministic [`MigrationPlanner`] at each barrier: the
+//! just-recorded [`super::metrics::StepTrace`] counters pick a
+//! network-bound donor partition and a set of vertices whose out-edges
+//! favor a remote partition, and the plan is applied atomically while
+//! every partition is step-closed — `DistGraph::apply_migration`
+//! rebuilds the routing epoch, [`remap_runtimes`]/[`remap_stores`]
+//! forward values, halt flags, in-flight mail (both the local-phase
+//! inbox pair and the global-phase `gq` pair) and carryover frontier
+//! entries to each vertex's new owner. The applied-plan trajectory is
+//! part of every checkpoint, and recovery replays it onto the pristine
+//! graph to rebuild the checkpoint's geometry before restoring the
+//! per-partition arrays — so a recovered run is bit-for-bit the clean
+//! run, migrations included.
+//!
 //! The per-vertex body of all three sweeps (init / global / local) is
 //! the shared `super::worker::Sweep`; this file keeps only the phase
 //! structure and the hybrid routing policy. Partitions run as parallel
 //! workers per [`super::EngineConfig::parallelism`].
 
-use crate::graph::{DistGraph, PartGraph};
+use crate::graph::{DistGraph, MigrationPlan, PartGraph};
 use crate::partition::stats::partition_localities;
 
 use super::aggregator::Aggregators;
 use super::checkpoint::PolicyCheckpoint;
 use super::messages::{MsgStore, Outbox};
 use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
+use super::migrate::{remap_runtimes, remap_stores, MigrationPlanner};
 use super::netsim::SuperstepClock;
 use super::program::VertexProgram;
 use super::state::{Frontier, PartitionRuntime};
@@ -263,6 +281,13 @@ pub fn run_graphhp<P: VertexProgram>(
     let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
     let mut failure_pending = cfg.fault.inject_failure_at;
 
+    // ---- online repartitioning state: the migrated graph (None while
+    // still at epoch 0) and the applied-plan trajectory checkpoints
+    // persist so recovery can rebuild the geometry
+    let planner = cfg.repartition.map(MigrationPlanner::new);
+    let mut dg_owned: Option<Box<DistGraph>> = None;
+    let mut applied_plans: Vec<MigrationPlan> = Vec::new();
+
     loop {
         // ---- fault tolerance (paper §5.3) --------------------------
         if cfg.fault.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
@@ -278,6 +303,7 @@ pub fn run_graphhp<P: VertexProgram>(
                 local_nxt: parts.iter_mut().map(|hp| hp.rt.nxt.export()).collect(),
                 frontier: parts.iter().map(|hp| hp.rt.frontier.snapshot()).collect(),
                 policy: policies.clone(),
+                migrations: applied_plans.clone(),
             };
             if let Some(dir) = &cfg.fault.checkpoint_dir {
                 let _ = ckpt.save(dir);
@@ -294,7 +320,21 @@ pub fn run_graphhp<P: VertexProgram>(
                     // worker back to the latest consistent checkpoint —
                     // including the scheduler state, so the replay runs
                     // under exactly the policies the checkpointed run
-                    // had (not ones adapted by the aborted timeline)
+                    // had (not ones adapted by the aborted timeline).
+                    // Geometry first: the failure may have happened
+                    // epochs ahead of the checkpoint, so replay the
+                    // checkpointed migration trajectory onto the
+                    // pristine graph to rebuild the exact geometry the
+                    // per-partition arrays were snapshotted under.
+                    let mut rebuilt: Option<Box<DistGraph>> = None;
+                    for plan in &ckpt.migrations {
+                        let base: &DistGraph = rebuilt.as_deref().unwrap_or(dg);
+                        rebuilt = Some(Box::new(base.apply_migration(plan)));
+                    }
+                    dg_owned = rebuilt;
+                    applied_plans = ckpt.migrations.clone();
+                    let dgc: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
+                    parts = dgc.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
                     for (p, hp) in parts.iter_mut().enumerate() {
                         let n = hp.rt.num_vertices();
                         hp.rt.values = ckpt.values[p].clone();
@@ -315,8 +355,11 @@ pub fn run_graphhp<P: VertexProgram>(
                     iteration = ckpt.iteration;
                 }
                 None => {
-                    // no checkpoint yet: restart from scratch, scheduler
-                    // state included
+                    // no checkpoint yet: restart from scratch — scheduler
+                    // state and routing geometry included, so the rerun
+                    // re-plans its migrations from iteration 0
+                    dg_owned = None;
+                    applied_plans.clear();
                     parts = dg.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
                     policies =
                         build_policies(&cfg.hybrid, &trace.partition_locality, limit_cap);
@@ -325,10 +368,13 @@ pub fn run_graphhp<P: VertexProgram>(
             }
         }
 
+        // the current routing epoch's graph: pristine until the first
+        // applied migration, then the latest rebuilt geometry
+        let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let policies_ref = &policies;
         let outs = run_workers(cfg.parallelism, &mut parts, |p, hp| {
             let HpPart { rt, gq_cur, gq_nxt, outbox, scratch, marks } = hp;
-            let part = &dg.parts[p];
+            let part = &dgr.parts[p];
             let policy = &policies_ref[p];
             let boundary_in_local = policy.boundary_in_local;
             outbox.reset();
@@ -347,7 +393,7 @@ pub fn run_graphhp<P: VertexProgram>(
             };
             let mk_sweep = |route: LocalRoute, reschedule: Reschedule| Sweep {
                 program,
-                dg,
+                dg: dgr,
                 part,
                 p,
                 superstep: iteration,
@@ -539,6 +585,48 @@ pub fn run_graphhp<P: VertexProgram>(
             }
         }
 
+        // ---- online repartitioning: stamp this step's epoch, then fold
+        // its counters into a migration plan and apply it atomically —
+        // every partition is step-closed and all cross-partition mail
+        // already landed, so the whole live state is remappable
+        {
+            let step = trace.steps.last_mut().expect("barrier just recorded a step");
+            step.routing_epoch = dgr.routing.epoch;
+            let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, iteration));
+            if let Some(plan) = plan {
+                step.migrated = plan.len() as u64;
+                let new_dg = Box::new(dgr.apply_migration(&plan));
+                let mut rts = Vec::with_capacity(parts.len());
+                let mut gqc = Vec::with_capacity(parts.len());
+                let mut gqn = Vec::with_capacity(parts.len());
+                for hp in std::mem::take(&mut parts) {
+                    rts.push(hp.rt);
+                    gqc.push(hp.gq_cur);
+                    gqn.push(hp.gq_nxt);
+                }
+                let rts = remap_runtimes(dgr, &new_dg, rts, combiner);
+                let gqc = remap_stores(dgr, &new_dg, gqc, combiner);
+                let gqn = remap_stores(dgr, &new_dg, gqn, combiner);
+                parts = rts
+                    .into_iter()
+                    .zip(gqc.into_iter().zip(gqn))
+                    .map(|(rt, (gq_cur, gq_nxt))| {
+                        let n = rt.num_vertices();
+                        HpPart {
+                            rt,
+                            gq_cur,
+                            gq_nxt,
+                            outbox: Outbox::new(combiner),
+                            scratch: WorkerScratch::new(),
+                            marks: ProcessedMarks::new(n),
+                        }
+                    })
+                    .collect();
+                applied_plans.push(plan);
+                dg_owned = Some(new_dg);
+            }
+        }
+
         metrics.global_iterations += 1;
         iteration += 1;
 
@@ -556,8 +644,11 @@ pub fn run_graphhp<P: VertexProgram>(
         }
     }
 
+    // gather under the FINAL routing epoch — migrated vertices are read
+    // back from their current owners
+    let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     let values =
-        super::gather_values_owned(dg, parts.into_iter().map(|hp| hp.rt.values).collect());
+        super::gather_values_owned(dgr, parts.into_iter().map(|hp| hp.rt.values).collect());
     RunResult { values, metrics, trace }
 }
 
@@ -913,6 +1004,40 @@ mod tests {
         );
         // and the low locality seeds boundary_in_local = false
         assert!(r.trace.partition_locality.iter().all(|&s| s < 0.5));
+    }
+
+    // ------------------------------------------- online repartitioning
+
+    /// Migration on a hash-partitioned run (lots of cross-partition
+    /// traffic): the planner must fire, every applied plan must leave
+    /// the fixed point untouched, and the trace must record the epoch
+    /// trajectory.
+    #[test]
+    fn online_repartitioning_reaches_the_same_fixed_point() {
+        let g = generators::connected(300, 120, 41);
+        let a = hash_partition(&g, 4);
+        let dg = DistGraph::new(&g, &a, 4);
+        let stat = run_graphhp(&MinLabel, &dg, &EngineConfig::default());
+        let mut cfg = EngineConfig::default();
+        cfg.repartition = Some(super::super::RepartitionConfig::every_barrier());
+        let mig = run_graphhp(&MinLabel, &dg, &cfg);
+        assert_eq!(stat.values, mig.values, "migration must not change the fixed point");
+        assert!(
+            mig.trace.vertices_migrated() > 0,
+            "hash partitioning under every-barrier planning must move vertices"
+        );
+        // the epoch trajectory is monotone and advances exactly when a
+        // step migrated
+        let mut epoch = 0u64;
+        for s in &mig.trace.steps {
+            assert_eq!(s.routing_epoch, epoch, "iteration {}", s.iteration);
+            if s.migrated > 0 {
+                epoch += 1;
+            }
+        }
+        assert!(epoch > 0);
+        // the static run never leaves epoch 0 and never migrates
+        assert!(stat.trace.steps.iter().all(|s| s.routing_epoch == 0 && s.migrated == 0));
     }
 
     /// Sync-mode local messaging takes the NextSweep route, which is the

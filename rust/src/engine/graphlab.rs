@@ -27,12 +27,24 @@
 //! extra plumbing. Cross-partition gathers are charged as network reads
 //! in the simulated cluster clock; the paper leaves `M` blank for
 //! GraphLab, and so do our reports.
+//!
+//! # Online repartitioning
+//!
+//! The sync engine honors [`super::EngineConfig::repartition`]: at each
+//! round barrier the [`MigrationPlanner`] folds the round's trace (remote
+//! gathers play the network-message role) and an applied plan rebuilds
+//! the [`DistGraph`] and the pull-mode [`GasView`] for the next round.
+//! Values and the round scheduler are global-id indexed, so nothing else
+//! moves — results are bitwise identical to a static-partition run; only
+//! the simulated remote-gather accounting shifts. The async engine has
+//! no barriers and ignores `cfg.repartition` entirely.
 
 use std::time::Duration;
 
 use crate::graph::{DistGraph, VertexId};
 
 use super::metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
+use super::migrate::MigrationPlanner;
 use super::netsim::SuperstepClock;
 use super::state::{FifoScheduler, Frontier};
 use super::worker::run_workers;
@@ -117,9 +129,9 @@ impl GasView {
         let nv = dg.num_vertices;
         let mut out_deg = vec![0u32; nv];
         let mut in_count = vec![0usize; nv];
-        let part_of: Vec<u32> = dg.location.iter().map(|&(p, _)| p).collect();
+        let part_of: Vec<u32> = dg.routing.location.iter().map(|&(p, _)| p).collect();
         for v in 0..nv {
-            let (p, lv) = dg.location[v];
+            let (p, lv) = dg.routing.location[v];
             let part = &dg.parts[p as usize];
             out_deg[v] = part.out_degree[lv as usize];
             // counting pass: stream targets only (raw column on SoA
@@ -141,7 +153,7 @@ impl GasView {
         // walk sources in global id order: in-edges of every vertex end
         // up sorted by source, matching Graph::reversed()
         for v in 0..nv {
-            let (p, lv) = dg.location[v];
+            let (p, lv) = dg.routing.location[v];
             let part = &dg.parts[p as usize];
             let mut oc = out_offsets[v];
             // pull-view build needs targets + weights only; the edge
@@ -177,12 +189,14 @@ pub fn run_graphlab_sync<P: GasProgram>(
 ) -> RunResult<P::V> {
     let nv = dg.num_vertices;
     let num_parts = dg.num_parts();
-    let view = GasView::new(dg);
+    let mut view = GasView::new(dg);
     let mut values: Vec<P::V> =
         (0..nv).map(|v| program.init(v as VertexId, view.out_deg[v])).collect();
     let mut metrics = Metrics::default();
     let mut trace = RunTrace::default();
     let mut clock = SuperstepClock::new();
+    let planner = cfg.repartition.map(MigrationPlanner::new);
+    let mut dg_owned: Option<Box<DistGraph>> = None;
 
     // the shared scheduling structure of the push engines doubles as
     // GraphLab's round scheduler: rounds begin by draining it (the step
@@ -204,6 +218,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
         if rounds >= cfg.limits.max_iterations {
             break;
         }
+        let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let active = frontier.take();
         if active.is_empty() {
             break;
@@ -264,6 +279,9 @@ pub fn run_graphlab_sync<P: GasProgram>(
         let mut step = StepTrace {
             iteration: trace.steps.len() as u64,
             partitions: Vec::with_capacity(num_parts),
+            // routing_epoch/migrated are stamped below, once this
+            // round's migration decision is known
+            ..Default::default()
         };
         for (p, out) in outs.into_iter().enumerate() {
             let comm = Duration::from_secs_f64(
@@ -273,8 +291,8 @@ pub fn run_graphlab_sync<P: GasProgram>(
             let boundary = by_part[p]
                 .iter()
                 .filter(|&&v| {
-                    let (pp, lv) = dg.location[v as usize];
-                    dg.parts[pp as usize].is_boundary[lv as usize]
+                    let (pp, lv) = dgr.routing.location[v as usize];
+                    dgr.parts[pp as usize].is_boundary[lv as usize]
                 })
                 .count() as u64;
             step.partitions.push(PartitionStepTrace {
@@ -301,6 +319,22 @@ pub fn run_graphlab_sync<P: GasProgram>(
         // debug sanitizer: round scheduler membership flags consistent
         // after scatter re-scheduling (no-op in release builds)
         super::invariants::check_frontier(&frontier);
+
+        // ---- online repartitioning: values and the round scheduler are
+        // global-id indexed, so only the graph and the pull-mode view
+        // change hands — results stay bitwise identical
+        {
+            let step = trace.steps.last_mut().expect("round just recorded a step");
+            step.routing_epoch = dgr.routing.epoch;
+            let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, rounds));
+            if let Some(plan) = plan {
+                step.migrated = plan.len() as u64;
+                let new_dg = Box::new(dgr.apply_migration(&plan));
+                view = GasView::new(&new_dg);
+                dg_owned = Some(new_dg);
+            }
+        }
+
         clock.barrier(&cfg.net, &mut metrics);
         metrics.global_iterations += 1;
         metrics.supersteps_total += 1;
@@ -438,6 +472,23 @@ mod tests {
         assert!(s.metrics.global_iterations > 3);
         // async converges in fewer updates than sync total updates
         assert!(asy.metrics.vertex_computations < s.metrics.vertex_computations);
+    }
+
+    #[test]
+    fn sync_migration_is_bitwise_neutral() {
+        // values are global in GAS mode, so online repartitioning may
+        // only shift remote-gather accounting — never the fixed point
+        let g = generators::powerlaw(400, 4, 17);
+        let a = hash_partition(&g, 4);
+        let dg = crate::graph::DistGraph::new(&g, &a, 4);
+        let cfg = EngineConfig::default();
+        let mut mcfg = cfg.clone();
+        mcfg.repartition = Some(crate::engine::migrate::RepartitionConfig::every_barrier());
+        let stat = run_graphlab_sync(&GasPr { tol: 1e-7 }, &dg, &cfg);
+        let migr = run_graphlab_sync(&GasPr { tol: 1e-7 }, &dg, &mcfg);
+        assert_eq!(stat.values, migr.values);
+        assert!(migr.trace.vertices_migrated() > 0, "hash partition should trigger moves");
+        assert_eq!(stat.trace.vertices_migrated(), 0);
     }
 
     #[test]

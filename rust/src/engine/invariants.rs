@@ -20,7 +20,10 @@
 //!   blocks, streamed through the `Edges` view) agree with the global
 //!   location table, the vertex-layout permutation is bijective
 //!   ([`check_vertex_layout`]), and compressed byte blocks are
-//!   well-formed (validated once at `DistGraph::new`).
+//!   well-formed (validated once at `DistGraph::new` and again after
+//!   every applied migration);
+//! - [`check_migration_plan`] — a `MigrationPlan` about to be applied
+//!   is sorted, in-bounds, and free of duplicate or self-moves.
 //!
 //! The validators are compiled **only** under
 //! `#[cfg(any(test, debug_assertions))]`; release builds get inline
@@ -293,11 +296,17 @@ pub(crate) fn check_runtime<V, M>(rt: &PartitionRuntime<V, M>) {
 #[cfg(any(test, debug_assertions))]
 pub(crate) fn check_edge_routes(dg: &DistGraph) {
     assert_eq!(
-        dg.location.len(),
+        dg.routing.location.len(),
         dg.num_vertices,
         "invariant violated: location table length != vertex count"
     );
+    assert_eq!(
+        dg.routing.cut_in.len(),
+        dg.parts.len(),
+        "invariant violated: cut_in table length != partition count"
+    );
     let mut vertices = 0usize;
+    let mut cut_in = vec![0u64; dg.parts.len()];
     for part in &dg.parts {
         let nv = part.num_vertices();
         vertices += nv;
@@ -347,7 +356,7 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
         check_vertex_layout(part);
         for (lv, &gid) in part.global_ids.iter().enumerate() {
             assert_eq!(
-                dg.location[gid as usize],
+                dg.routing.location[gid as usize],
                 (part.part, lv as u32),
                 "invariant violated: location table points at the wrong vertex \
                  (partition {}, local {lv})",
@@ -367,13 +376,15 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
             for (i, e) in edges.iter().enumerate() {
                 assert_eq!(
                     e.route().unpack(),
-                    dg.location[e.target as usize],
+                    dg.routing.location[e.target as usize],
                     "invariant violated: edge route disagrees with the location \
                      table (partition {}, local {lv}, edge {i})",
                     part.part
                 );
                 if e.target_part == part.part {
                     internal += 1;
+                } else {
+                    cut_in[e.target_part as usize] += 1;
                 }
             }
         }
@@ -394,6 +405,43 @@ pub(crate) fn check_edge_routes(dg: &DistGraph) {
         vertices, dg.num_vertices,
         "invariant violated: partition vertex counts do not sum to the graph"
     );
+    assert_eq!(
+        cut_in, dg.routing.cut_in,
+        "invariant violated: precomputed cut_in tallies stale against an edge rescan"
+    );
+}
+
+/// Validate a [`MigrationPlan`] against the graph it is about to be
+/// applied to: moves are strictly ascending by global id (sorted, no
+/// duplicates), every vertex exists, every target partition exists, and
+/// no move is a self-move (the planner must never emit a no-op entry —
+/// it would inflate the `migrated` counter in [`super::metrics::StepTrace`]).
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_migration_plan(dg: &DistGraph, plan: &crate::graph::MigrationPlan) {
+    let np = dg.parts.len() as u32;
+    let mut prev: Option<crate::graph::VertexId> = None;
+    for &(gid, to) in &plan.moves {
+        assert!(
+            prev.map_or(true, |p| p < gid),
+            "invariant violated: migration plan moves not strictly ascending by \
+             vertex id (at vertex {gid})"
+        );
+        assert!(
+            (gid as usize) < dg.num_vertices,
+            "invariant violated: migration plan moves unknown vertex {gid}"
+        );
+        assert!(
+            to < np,
+            "invariant violated: migration plan sends vertex {gid} to \
+             nonexistent partition {to}"
+        );
+        assert_ne!(
+            to,
+            dg.routing.location[gid as usize].0,
+            "invariant violated: migration plan self-move for vertex {gid}"
+        );
+        prev = Some(gid);
+    }
 }
 
 /// Validate one partition's [`crate::graph::VertexLayout`]: identity is
@@ -456,6 +504,8 @@ mod stubs {
     pub(crate) fn check_runtime<V, M>(_rt: &PartitionRuntime<V, M>) {}
     #[inline(always)]
     pub(crate) fn check_edge_routes(_dg: &DistGraph) {}
+    #[inline(always)]
+    pub(crate) fn check_migration_plan(_dg: &DistGraph, _plan: &crate::graph::MigrationPlan) {}
     #[inline(always)]
     pub(crate) fn check_vertex_layout(_part: &crate::graph::PartGraph) {}
 }
@@ -652,6 +702,52 @@ mod tests {
             let dg = crate::graph::DistGraph::with_layout(&g, &a, 4, layout);
             check_edge_routes(&dg); // also ran inside with_layout
         }
+    }
+
+    #[test]
+    fn well_formed_migration_plan_passes() {
+        use crate::graph::MigrationPlan;
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let dg = crate::graph::DistGraph::new(&g, &a, 3);
+        let moves: Vec<_> = (0..5u32)
+            .map(|gid| (gid, (dg.routing.location[gid as usize].0 + 1) % 3))
+            .collect();
+        check_migration_plan(&dg, &MigrationPlan { epoch: 1, moves });
+        check_migration_plan(&dg, &MigrationPlan { epoch: 1, moves: Vec::new() });
+    }
+
+    #[test]
+    #[should_panic(expected = "moves not strictly ascending")]
+    fn unsorted_migration_plan_is_caught() {
+        use crate::graph::MigrationPlan;
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let dg = crate::graph::DistGraph::new(&g, &a, 3);
+        let to = |gid: u32| (dg.routing.location[gid as usize].0 + 1) % 3;
+        let plan = MigrationPlan { epoch: 1, moves: vec![(4, to(4)), (2, to(2))] };
+        check_migration_plan(&dg, &plan);
+    }
+
+    #[test]
+    #[should_panic(expected = "self-move")]
+    fn self_move_in_migration_plan_is_caught() {
+        use crate::graph::MigrationPlan;
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let dg = crate::graph::DistGraph::new(&g, &a, 3);
+        let here = dg.routing.location[0].0;
+        check_migration_plan(&dg, &MigrationPlan { epoch: 1, moves: vec![(0, here)] });
+    }
+
+    #[test]
+    #[should_panic(expected = "nonexistent partition")]
+    fn out_of_range_migration_target_is_caught() {
+        use crate::graph::MigrationPlan;
+        let g = generators::powerlaw(100, 3, 7);
+        let a = hash_partition(&g, 3);
+        let dg = crate::graph::DistGraph::new(&g, &a, 3);
+        check_migration_plan(&dg, &MigrationPlan { epoch: 1, moves: vec![(0, 9)] });
     }
 
     #[test]

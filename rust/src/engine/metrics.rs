@@ -154,6 +154,13 @@ pub struct StepTrace {
     /// entries, so this counts barriers actually run, not logical
     /// iteration numbers.
     pub iteration: u64,
+    /// The routing epoch this superstep executed under (0 unless online
+    /// repartitioning has applied a `MigrationPlan`).
+    pub routing_epoch: u64,
+    /// Vertices migrated by the plan applied at this barrier's close
+    /// (0 when no migration happened — deterministic counter, identical
+    /// between sequential and threaded runs).
+    pub migrated: u64,
     /// Per-partition records, in partition order.
     pub partitions: Vec<PartitionStepTrace>,
 }
@@ -216,6 +223,17 @@ impl RunTrace {
         self.per_partition_sum(|p| u64::from(p.local_phase_skipped))
     }
 
+    /// Total vertices migrated by online repartitioning across the run.
+    pub fn vertices_migrated(&self) -> u64 {
+        self.steps.iter().map(|s| s.migrated).sum()
+    }
+
+    /// The `migrated` counter of every barrier, in execution order — the
+    /// migration trajectory the equivalence/replay tests compare.
+    pub fn migration_trajectory(&self) -> Vec<u64> {
+        self.steps.iter().map(|s| s.migrated).collect()
+    }
+
     fn per_partition_sum(&self, f: impl Fn(&PartitionStepTrace) -> u64) -> u64 {
         self.steps.iter().flat_map(|s| s.partitions.iter().map(&f)).sum()
     }
@@ -237,7 +255,11 @@ impl RunTrace {
             if si > 0 {
                 out.push(',');
             }
-            out.push_str(&format!("\n    {{\"iteration\": {}, \"partitions\": [", s.iteration));
+            out.push_str(&format!(
+                "\n    {{\"iteration\": {}, \"routing_epoch\": {}, \"migrated\": {}, \
+                 \"partitions\": [",
+                s.iteration, s.routing_epoch, s.migrated
+            ));
             for (pi, p) in s.partitions.iter().enumerate() {
                 if pi > 0 {
                     out.push(',');
@@ -320,9 +342,12 @@ mod tests {
                             ..Default::default()
                         },
                     ],
+                    ..Default::default()
                 },
                 StepTrace {
                     iteration: 1,
+                    routing_epoch: 1,
+                    migrated: 3,
                     partitions: vec![PartitionStepTrace {
                         partition: 0,
                         pseudo_supersteps: 2,
@@ -340,6 +365,8 @@ mod tests {
         assert_eq!(t.pseudo_supersteps(), 5);
         assert_eq!(t.carryover_events(), 1);
         assert_eq!(t.skipped_local_phases(), 1);
+        assert_eq!(t.vertices_migrated(), 3);
+        assert_eq!(t.migration_trajectory(), vec![0, 3]);
     }
 
     #[test]
@@ -347,6 +374,8 @@ mod tests {
         let j = sample_trace().to_json();
         assert!(j.contains("\"partition_locality\": [0.75, 1]"), "{j}");
         assert!(j.contains("\"iteration\": 1"), "{j}");
+        assert!(j.contains("\"routing_epoch\": 1"), "{j}");
+        assert!(j.contains("\"migrated\": 3"), "{j}");
         assert!(j.contains("\"carryover\": true"), "{j}");
         assert!(j.contains("\"local_phase_skipped\": true"), "{j}");
         // crude structural check: balanced braces/brackets

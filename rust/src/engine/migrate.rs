@@ -1,0 +1,414 @@
+//! Online repartitioning: the telemetry-driven migration planner and
+//! the barrier-side state remapper.
+//!
+//! GraphHP's whole advantage is locality, yet the partition assignment
+//! is frozen at build time while the run's own [`RunTrace`] counters
+//! say, per barrier and per partition, exactly which partitions are
+//! boundary-dominated and network-bound. This module closes that loop
+//! (the Mizan-style dynamic-migration answer to runtime skew):
+//!
+//! 1. [`MigrationPlanner::plan`] folds the just-recorded
+//!    [`StepTrace`] at the barrier into a [`MigrationPlan`] — a pure
+//!    function of **deterministic counters only** (boundary occupancy
+//!    and the local/network message split; `compute_us` is wall-clock
+//!    and must never be read), so sequential and threaded runs plan
+//!    identical migrations and the sequential ≡ threaded bit-for-bit
+//!    guarantee survives.
+//! 2. The engine applies the plan atomically at the barrier:
+//!    [`DistGraph::apply_migration`] rebuilds every partition and the
+//!    routing epoch through the write-through construction path, and
+//!    [`remap_runtimes`] forwards all live per-partition state —
+//!    vertex values, halt flags, in-flight [`MsgStore`] mail (FIFO
+//!    order preserved) and carryover frontier entries — to each
+//!    vertex's new owner.
+//!
+//! Plans are [`Codec`](crate::util::Codec)-encodable pure data, so the
+//! GraphHP engine checkpoints the applied-plan trajectory and replays
+//! it bit-for-bit on recovery (the `PolicyCheckpoint` contract).
+//!
+//! [`RunTrace`]: super::RunTrace
+
+use crate::graph::{DistGraph, MigrationPlan, VertexId};
+
+use super::messages::MsgStore;
+use super::metrics::StepTrace;
+use super::state::PartitionRuntime;
+
+/// Tuning of the online repartitioner (`EngineConfig::repartition`).
+///
+/// Every knob feeds the deterministic planner only — there is no
+/// wall-clock input anywhere in the migration pipeline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RepartitionConfig {
+    /// Plan a migration every N barriers (the first candidate barrier
+    /// is iteration N-1). 0 disables planning outright.
+    pub interval: u64,
+    /// Upper bound on vertices moved per plan (also capped so the donor
+    /// partition always keeps at least one vertex).
+    pub max_moves: usize,
+}
+
+impl Default for RepartitionConfig {
+    fn default() -> Self {
+        RepartitionConfig { interval: 4, max_moves: 64 }
+    }
+}
+
+impl RepartitionConfig {
+    /// Plan at every barrier — the aggressive setting the equivalence
+    /// tests use so short runs still migrate.
+    pub fn every_barrier() -> Self {
+        RepartitionConfig { interval: 1, ..Default::default() }
+    }
+}
+
+/// Deterministic migration planner: folds one barrier's [`StepTrace`]
+/// counters plus the current routing epoch's topology into a
+/// [`MigrationPlan`].
+///
+/// Donor selection reads only counter fields (`network_messages`,
+/// `local_messages`, `boundary_frontier`); candidate scoring reads only
+/// the donor partition's route columns. Both are identical between
+/// sequential and threaded runs, so so is every plan.
+#[derive(Clone, Copy, Debug)]
+pub struct MigrationPlanner {
+    /// The planner's tuning.
+    pub config: RepartitionConfig,
+}
+
+impl MigrationPlanner {
+    /// A planner with the given tuning.
+    pub fn new(config: RepartitionConfig) -> Self {
+        MigrationPlanner { config }
+    }
+
+    /// Fold the barrier's trace into a plan, or None when this barrier
+    /// is off-interval, no partition qualifies as a donor, or no vertex
+    /// move would reduce the donor's share of the cut.
+    ///
+    /// Donor: among partitions whose turn was network-dominated
+    /// (`network_messages > local_messages`) with a non-empty boundary
+    /// frontier, the one with the most network messages (ties broken by
+    /// the smaller partition index). Candidates: the donor's vertices
+    /// whose out-edges favor one remote partition over staying
+    /// (`edges to best remote part > internal edges` — an out-edge-only
+    /// gain heuristic; in-edges would need a reverse scan). The
+    /// highest-gain candidates move, ties broken by ascending global
+    /// id, capped at [`RepartitionConfig::max_moves`] and at donor
+    /// size - 1 so no partition is emptied.
+    pub fn plan(
+        &self,
+        dg: &DistGraph,
+        step: &StepTrace,
+        iteration: u64,
+    ) -> Option<MigrationPlan> {
+        let np = dg.num_parts();
+        if np < 2 || self.config.interval == 0 || self.config.max_moves == 0 {
+            return None;
+        }
+        if (iteration + 1) % self.config.interval != 0 {
+            return None;
+        }
+
+        let mut donor: Option<(u64, usize)> = None;
+        for pt in &step.partitions {
+            if pt.network_messages > pt.local_messages && pt.boundary_frontier > 0 {
+                let p = pt.partition as usize;
+                let better = match donor {
+                    None => true,
+                    Some((best, bp)) => {
+                        pt.network_messages > best
+                            || (pt.network_messages == best && p < bp)
+                    }
+                };
+                if better {
+                    donor = Some((pt.network_messages, p));
+                }
+            }
+        }
+        let (_, donor) = donor?;
+        let part = &dg.parts[donor];
+        let n = part.num_vertices();
+        if n < 2 {
+            return None;
+        }
+
+        // Score every donor vertex: external out-edge counts per remote
+        // partition vs internal out-edges, via the route stream (works
+        // over raw and packed columns alike). `ext` is reset through the
+        // `touched` list so the scan is O(edges), not O(n * parts).
+        let mut ext = vec![0u64; np];
+        let mut touched: Vec<u32> = Vec::new();
+        let mut cands: Vec<(u64, VertexId, u32)> = Vec::new(); // (gain, gid, to)
+        for lv in 0..n {
+            let mut internal = 0u64;
+            for r in part.out_edges(lv).route_iter() {
+                let tp = r.part() as usize;
+                if tp == donor {
+                    internal += 1;
+                } else {
+                    if ext[tp] == 0 {
+                        touched.push(tp as u32);
+                    }
+                    ext[tp] += 1;
+                }
+            }
+            touched.sort_unstable();
+            let mut best: Option<(u64, u32)> = None;
+            for &q in &touched {
+                let c = ext[q as usize];
+                if best.map_or(true, |(bc, _)| c > bc) {
+                    best = Some((c, q));
+                }
+            }
+            if let Some((c, q)) = best {
+                if c > internal {
+                    cands.push((c - internal, part.global_ids[lv], q));
+                }
+            }
+            for q in touched.drain(..) {
+                ext[q as usize] = 0;
+            }
+        }
+        if cands.is_empty() {
+            return None;
+        }
+        cands.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        cands.truncate(self.config.max_moves.min(n - 1));
+        let mut moves: Vec<(VertexId, u32)> =
+            cands.into_iter().map(|(_, gid, q)| (gid, q)).collect();
+        moves.sort_unstable_by_key(|&(gid, _)| gid);
+        Some(MigrationPlan { epoch: dg.routing.epoch + 1, moves })
+    }
+}
+
+/// Forward every pending message of `stores` (one [`MsgStore`] per old
+/// partition, indexed by partition id) to the owners under the `new`
+/// epoch. Per-vertex FIFO order is preserved — a vertex's mail lives in
+/// exactly one old partition, and `export` walks it in queue order —
+/// and receiver-side combining is re-applied so a combined store stays
+/// one-message-per-vertex.
+pub(crate) fn remap_stores<M: Clone>(
+    old: &DistGraph,
+    new: &DistGraph,
+    mut stores: Vec<MsgStore<M>>,
+    combiner: Option<fn(M, M) -> M>,
+) -> Vec<MsgStore<M>> {
+    let mut out: Vec<MsgStore<M>> =
+        new.parts.iter().map(|p| MsgStore::new(p.num_vertices())).collect();
+    for (op, store) in stores.iter_mut().enumerate() {
+        for (lv, msgs) in store.export() {
+            let gid = old.parts[op].global_ids[lv as usize];
+            let (np, nl) = new.routing.location[gid as usize];
+            for m in msgs {
+                out[np as usize].push_combined(nl as usize, m, combiner);
+            }
+        }
+    }
+    out
+}
+
+/// Remap per-partition runtimes from the `old` geometry onto the `new`
+/// one at a barrier: vertex values and halt flags follow their global
+/// id to the new (partition, local) slot, in-flight `cur`/`nxt` mail is
+/// forwarded through [`remap_stores`], and carryover frontier entries
+/// are re-scheduled at each vertex's new owner (in ascending global-id
+/// order; sweeps sort their worklists, so this ordering is a
+/// determinism discipline, not a semantic requirement).
+///
+/// Callers must be at a barrier (no step open); the remapped runtimes
+/// come back with `step_open == false`.
+pub(crate) fn remap_runtimes<V: Clone, M: Clone>(
+    old: &DistGraph,
+    new: &DistGraph,
+    rts: Vec<PartitionRuntime<V, M>>,
+    combiner: Option<fn(M, M) -> M>,
+) -> Vec<PartitionRuntime<V, M>> {
+    let mut values_old = Vec::with_capacity(rts.len());
+    let mut halted_old = Vec::with_capacity(rts.len());
+    let mut cur_old = Vec::with_capacity(rts.len());
+    let mut nxt_old = Vec::with_capacity(rts.len());
+    let mut frontiers_old = Vec::with_capacity(rts.len());
+    for rt in rts {
+        values_old.push(rt.values);
+        halted_old.push(rt.halted);
+        cur_old.push(rt.cur);
+        nxt_old.push(rt.nxt);
+        frontiers_old.push(rt.frontier);
+    }
+
+    let mut out: Vec<PartitionRuntime<V, M>> = new
+        .parts
+        .iter()
+        .map(|part| {
+            let n = part.num_vertices();
+            let mut vals = Vec::with_capacity(n);
+            let mut halts = Vec::with_capacity(n);
+            for lv in 0..n {
+                let gid = part.global_ids[lv] as usize;
+                let (op, ol) = old.routing.location[gid];
+                vals.push(values_old[op as usize][ol as usize].clone());
+                halts.push(halted_old[op as usize][ol as usize]);
+            }
+            let mut rt = PartitionRuntime::from_values(vals);
+            rt.halted = halts;
+            rt
+        })
+        .collect();
+
+    let cur_new = remap_stores(old, new, cur_old, combiner);
+    let nxt_new = remap_stores(old, new, nxt_old, combiner);
+    for (p, (c, x)) in cur_new.into_iter().zip(nxt_new).enumerate() {
+        out[p].cur = c;
+        out[p].nxt = x;
+    }
+
+    let mut scheduled: Vec<VertexId> = Vec::new();
+    for (op, f) in frontiers_old.iter().enumerate() {
+        for &lv in &f.snapshot() {
+            scheduled.push(old.parts[op].global_ids[lv as usize]);
+        }
+    }
+    scheduled.sort_unstable();
+    for gid in scheduled {
+        let (np, nl) = new.routing.location[gid as usize];
+        out[np as usize].frontier.schedule(nl as usize);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::metrics::PartitionStepTrace;
+    use crate::graph::{DistGraph, Graph, GraphBuilder};
+
+    /// Two partitions, vertex 1 lives in p0 but all three of its edges
+    /// point into p1 — the canonical migration candidate.
+    fn misplaced() -> (Graph, DistGraph) {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(0, 1, 1.0);
+        b.add_edge(1, 3, 1.0);
+        b.add_edge(1, 4, 1.0);
+        b.add_edge(1, 5, 1.0);
+        b.add_edge(3, 4, 1.0);
+        let g = b.build();
+        let dg = DistGraph::new(&g, &[0, 0, 0, 1, 1, 1], 2);
+        (g, dg)
+    }
+
+    fn network_bound_step(parts: usize, donor: u32) -> StepTrace {
+        StepTrace {
+            iteration: 0,
+            partitions: (0..parts as u32)
+                .map(|p| PartitionStepTrace {
+                    partition: p,
+                    boundary_frontier: u64::from(p == donor),
+                    network_messages: if p == donor { 10 } else { 0 },
+                    local_messages: 1,
+                    ..Default::default()
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn planner_moves_the_misplaced_vertex() {
+        let (_, dg) = misplaced();
+        let planner = MigrationPlanner::new(RepartitionConfig::every_barrier());
+        let plan = planner.plan(&dg, &network_bound_step(2, 0), 0).expect("plan");
+        assert_eq!(plan.epoch, 1);
+        assert!(plan.moves.contains(&(1, 1)), "vertex 1 should move to p1: {:?}", plan.moves);
+        let m = dg.apply_migration(&plan);
+        assert!(m.edge_cut() < dg.edge_cut(), "migration must reduce the cut");
+    }
+
+    #[test]
+    fn planner_respects_interval_and_caps() {
+        let (_, dg) = misplaced();
+        let step = network_bound_step(2, 0);
+        let planner = MigrationPlanner::new(RepartitionConfig { interval: 4, max_moves: 64 });
+        assert!(planner.plan(&dg, &step, 0).is_none(), "iteration 0 is off-interval");
+        assert!(planner.plan(&dg, &step, 3).is_some(), "iteration 3 is the 4th barrier");
+        let capped = MigrationPlanner::new(RepartitionConfig { interval: 1, max_moves: 1 });
+        let plan = capped.plan(&dg, &step, 0).expect("plan");
+        assert_eq!(plan.len(), 1);
+        let off = MigrationPlanner::new(RepartitionConfig { interval: 0, max_moves: 64 });
+        assert!(off.plan(&dg, &step, 0).is_none(), "interval 0 disables planning");
+    }
+
+    #[test]
+    fn planner_is_a_pure_function_of_counters() {
+        let (_, dg) = misplaced();
+        let planner = MigrationPlanner::new(RepartitionConfig::every_barrier());
+        let a = planner.plan(&dg, &network_bound_step(2, 0), 0);
+        let b = planner.plan(&dg, &network_bound_step(2, 0), 0);
+        assert_eq!(a, b);
+        // a quiet step (no network dominance) plans nothing
+        let quiet = StepTrace {
+            partitions: vec![PartitionStepTrace::default(), PartitionStepTrace::default()],
+            ..Default::default()
+        };
+        assert!(planner.plan(&dg, &quiet, 0).is_none());
+    }
+
+    #[test]
+    fn remap_forwards_values_mail_and_frontier() {
+        let (_, dg) = misplaced();
+        let mut rts: Vec<PartitionRuntime<u32, u32>> = dg
+            .parts
+            .iter()
+            .map(|p| PartitionRuntime::from_values(p.global_ids.iter().map(|&g| g * 10).collect()))
+            .collect();
+        // vertex 1 (p0, local 1): halted, two FIFO messages, scheduled
+        rts[0].halted[1] = true;
+        rts[0].nxt.push(1, 7);
+        rts[0].nxt.push(1, 8);
+        rts[0].frontier.schedule(1);
+        // vertex 4 (p1, local 1): cur-mail that must stay in place
+        rts[1].cur.push(1, 9);
+
+        let plan = MigrationPlan { epoch: 1, moves: vec![(1, 1)] };
+        let new_dg = dg.apply_migration(&plan);
+        let mut out = remap_runtimes(&dg, &new_dg, rts, None);
+
+        let (np, nl) = new_dg.routing.location[1];
+        assert_eq!(np, 1);
+        assert_eq!(out[np as usize].values[nl as usize], 10);
+        assert!(out[np as usize].halted[nl as usize]);
+        let mut buf = Vec::new();
+        out[np as usize].nxt.take_into(nl as usize, &mut buf);
+        assert_eq!(buf, vec![7, 8], "FIFO mail order preserved across migration");
+        assert_eq!(out[np as usize].frontier.take(), vec![nl]);
+        // unmoved vertex 4 keeps its mail under the new epoch
+        let (p4, l4) = new_dg.routing.location[4];
+        out[p4 as usize].cur.take_into(l4 as usize, &mut buf);
+        assert_eq!(buf, vec![9]);
+        // every value still reachable at its new location
+        for v in 0..new_dg.num_vertices {
+            let (p, l) = new_dg.routing.location[v];
+            assert_eq!(out[p as usize].values[l as usize], v as u32 * 10);
+        }
+    }
+
+    #[test]
+    fn remap_applies_receiver_side_combining() {
+        let (_, dg) = misplaced();
+        let mut rts: Vec<PartitionRuntime<u32, u32>> = dg
+            .parts
+            .iter()
+            .map(|p| PartitionRuntime::from_values(vec![0; p.num_vertices()]))
+            .collect();
+        rts[0].nxt.push(1, 5);
+        rts[0].nxt.push(1, 3);
+        let plan = MigrationPlan { epoch: 1, moves: vec![(1, 1)] };
+        let new_dg = dg.apply_migration(&plan);
+        let min = |a: u32, b: u32| a.min(b);
+        let mut out = remap_runtimes(&dg, &new_dg, rts, Some(min));
+        let (np, nl) = new_dg.routing.location[1];
+        let mut buf = Vec::new();
+        out[np as usize].nxt.take_into(nl as usize, &mut buf);
+        assert_eq!(buf, vec![3], "combiner folds forwarded mail");
+    }
+}

@@ -110,6 +110,7 @@ pub mod hama;
 pub(crate) mod invariants;
 pub mod messages;
 pub mod metrics;
+pub mod migrate;
 pub mod netsim;
 pub mod program;
 pub mod runner;
@@ -120,6 +121,7 @@ pub use aggregator::{AggOp, Aggregators};
 pub use context::VertexContext;
 pub use graphlab::GasCost;
 pub use metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
+pub use migrate::{MigrationPlanner, RepartitionConfig};
 pub use netsim::NetSimConfig;
 pub use program::{SourceCombine, VertexProgram};
 pub use runner::{Partitioner, Runner};
@@ -443,6 +445,11 @@ pub struct EngineConfig {
     pub parallelism: Parallelism,
     /// Seed for per-vertex randomness (e.g. bipartite matching).
     pub seed: u64,
+    /// Online repartitioning: fold trace counters at each barrier into a
+    /// deterministic [`MigrationPlan`] and apply it before the next
+    /// superstep (None = static partitioning; GraphLab-async, which has
+    /// no barriers, ignores it).
+    pub repartition: Option<RepartitionConfig>,
 }
 
 impl Default for EngineConfig {
@@ -455,6 +462,7 @@ impl Default for EngineConfig {
             fault: FaultPolicy::default(),
             parallelism: Parallelism::default(),
             seed: 42,
+            repartition: None,
         }
     }
 }
@@ -553,7 +561,7 @@ mod tests {
         let g = Graph { offsets: vec![0, 0], targets: vec![], weights: vec![] };
         let mut dg = DistGraph::new(&g, &[0], 1);
         dg.num_vertices = 2;
-        dg.location.push((0, 1));
+        dg.routing.location.push((0, 1));
         let _ = gather_values(&dg, &[vec![1u32]]);
     }
 }

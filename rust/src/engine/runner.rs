@@ -27,7 +27,8 @@ use crate::partition::{hash_partition, metis_partition, range_partition, MetisCo
 use super::giraphpp::{run_giraphpp, PartitionProgram, VertexSweep};
 use super::graphlab::{run_graphlab_async, run_graphlab_sync, GasCost, GasProgram};
 use super::{
-    EngineConfig, EngineKind, HybridPolicy, NetSimConfig, Parallelism, RunResult, VertexProgram,
+    EngineConfig, EngineKind, HybridPolicy, NetSimConfig, Parallelism, RepartitionConfig,
+    RunResult, VertexProgram,
 };
 
 /// How the [`Runner`] splits the graph across simulated workers.
@@ -213,6 +214,16 @@ impl<'g> Runner<'g> {
     /// telemetry (see [`HybridPolicy::Adaptive`]).
     pub fn adaptive_policy(mut self) -> Self {
         self.cfg.hybrid = HybridPolicy::adaptive();
+        self
+    }
+
+    /// Telemetry-driven online repartitioning: at each barrier the
+    /// engine folds the superstep's trace through the deterministic
+    /// [`super::MigrationPlanner`] and may migrate vertices to a new
+    /// routing epoch (see [`RepartitionConfig`]). Off by default; the
+    /// async GraphLab engine has no barriers and ignores it.
+    pub fn repartition(mut self, rc: RepartitionConfig) -> Self {
+        self.cfg.repartition = Some(rc);
         self
     }
 
@@ -439,7 +450,7 @@ mod tests {
         let mut runner = Runner::new(&g).assignment(a.clone());
         let dg = runner.dist();
         assert_eq!(dg.num_parts(), 3);
-        for (v, &(p, _)) in dg.location.iter().enumerate() {
+        for (v, &(p, _)) in dg.routing.location.iter().enumerate() {
             assert_eq!(p, a[v], "vertex {v}");
         }
     }
@@ -511,8 +522,11 @@ mod tests {
             .max_iterations(7)
             .boundary_in_local_phase(false)
             .seed(99)
-            .checkpoint_interval(Some(2));
+            .checkpoint_interval(Some(2))
+            .repartition(RepartitionConfig { interval: 3, max_moves: 10 });
         assert_eq!(runner.cfg().limits.max_iterations, 7);
+        let rc = runner.cfg().repartition.as_ref().expect("repartition set");
+        assert_eq!((rc.interval, rc.max_moves), (3, 10));
         assert!(matches!(
             runner.cfg().hybrid,
             HybridPolicy::Static { boundary_in_local_phase: false, .. }

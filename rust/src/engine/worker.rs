@@ -329,7 +329,7 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
                     out: &mut scratch.send_buf,
                     aggregators: &mut *wagg,
                     seed: self.seed,
-                    location: &self.dg.location,
+                    location: &self.dg.routing.location,
                 };
                 self.program.compute(&mut ctx);
             }
@@ -500,7 +500,7 @@ impl<'a, P: VertexProgram> Sweep<'a, P> {
                                         out: &mut send_buf,
                                         aggregators: &mut co.aggs,
                                         seed: self.seed,
-                                        location: &self.dg.location,
+                                        location: &self.dg.routing.location,
                                     };
                                     self.program.compute(&mut ctx);
                                     let nsends = send_buf.sends.len() as u32;
@@ -761,6 +761,9 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
     let mut step = StepTrace {
         iteration: trace.steps.len() as u64,
         partitions: Vec::with_capacity(outs.len()),
+        // the engine stamps routing_epoch/migrated after the barrier,
+        // once its migration decision for this iteration is known
+        ..Default::default()
     };
     for (w, mut o) in outs.into_iter().enumerate() {
         // debug sanitizer: an outbox reaching the barrier must be sealed

@@ -56,9 +56,24 @@
 //! and `global_ids` are all written *through* the permutation, engines
 //! and `gather_values` need no translation step: local indices are
 //! simply born permuted.
+//!
+//! # Routing epochs
+//!
+//! All derived routing state — the global location table, the
+//! per-partition cut-in tallies, and (rebuilt together with them) every
+//! partition's `EdgeRoute` columns, boundary flags, precomputed counts
+//! and `VertexLayout` permutation — is versioned by a [`RoutingEpoch`].
+//! Epoch 0 is the build-time partitioning;
+//! [`DistGraph::apply_migration`] consumes a [`MigrationPlan`]
+//! (vertex → new partition) and produces the next epoch through the
+//! same write-through construction path `with_layout` uses, sourcing
+//! topology from the previous epoch's own partitions (a `DistGraph`
+//! does not retain its source [`Graph`]). Engines treat an epoch as
+//! immutable for the duration of a superstep and only swap epochs at a
+//! barrier.
 
 use super::csr::{Graph, VertexId};
-use crate::util::codec::{read_varint, unzigzag, write_varint, zigzag};
+use crate::util::codec::{read_varint, unzigzag, write_varint, zigzag, Codec};
 
 /// Packed location indicator of an edge target (§5.1): the destination
 /// partition in the high 32 bits, the destination's partition-local
@@ -179,12 +194,14 @@ impl VertexLayout {
 
     /// Descending-out-degree permutation over `gids` (a partition's
     /// members in ascending global-id order), ties broken by global id.
-    fn degree_sorted(gids: &[VertexId], g: &Graph) -> Self {
+    /// Degrees come through an accessor so the construction core can
+    /// source them from either a [`Graph`] or a previous routing epoch.
+    fn degree_sorted(gids: &[VertexId], degree_of: impl Fn(VertexId) -> u32) -> Self {
         let n = gids.len();
         let mut inv: Vec<u32> = (0..n as u32).collect();
         inv.sort_unstable_by_key(|&r| {
             let gid = gids[r as usize];
-            (std::cmp::Reverse(g.out_degree(gid)), gid)
+            (std::cmp::Reverse(degree_of(gid)), gid)
         });
         let mut fwd = vec![0u32; n];
         for (local, &rank) in inv.iter().enumerate() {
@@ -647,14 +664,79 @@ impl PartGraph {
     }
 }
 
+/// The versioned routing state of a [`DistGraph`] (see the module docs).
+///
+/// Everything an engine needs to route a message — and everything a
+/// migration must rewrite — hangs off one epoch: the global location
+/// table here, plus the per-partition projections rebuilt in lockstep
+/// with it (each [`PartGraph`]'s `EdgeRoute` columns — raw SoA or
+/// packed varint — boundary flags, precomputed boundary/internal
+/// counts, and `VertexLayout` permutation). The epoch number is bumped
+/// exactly once per applied [`MigrationPlan`], at a barrier; within a
+/// superstep the epoch is immutable and shared read-only across worker
+/// threads.
+#[derive(Clone, Debug)]
+pub struct RoutingEpoch {
+    /// Epoch counter: 0 at build time, +1 per applied migration.
+    pub epoch: u64,
+    /// Global vertex id -> (partition, local index).
+    pub location: Vec<(u32, u32)>,
+    /// Per-partition cut-in tallies: `cut_in[q]` = cross-partition edges
+    /// whose target lives in partition `q`. Maintained with the epoch so
+    /// `partition_localities` is O(parts) per barrier instead of a
+    /// full-graph route rescan.
+    pub cut_in: Vec<u64>,
+}
+
+/// A vertex-migration decision for one barrier: move each listed vertex
+/// to a new owning partition, producing routing epoch `epoch`.
+///
+/// Plans are pure data — deterministic functions of trace counters —
+/// so they can be checkpointed and replayed bit-for-bit on recovery
+/// (the same contract as `PolicyCheckpoint`). `moves` is sorted by
+/// global id and contains no duplicate vertices and no self-moves.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MigrationPlan {
+    /// The epoch this plan produces (= previous epoch + 1).
+    pub epoch: u64,
+    /// `(vertex global id, new partition)`, sorted by global id.
+    pub moves: Vec<(VertexId, u32)>,
+}
+
+impl MigrationPlan {
+    /// Number of vertices the plan moves.
+    pub fn len(&self) -> usize {
+        self.moves.len()
+    }
+
+    /// True when the plan moves nothing.
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+}
+
+impl Codec for MigrationPlan {
+    fn encode(&self, buf: &mut Vec<u8>) {
+        self.epoch.encode(buf);
+        self.moves.encode(buf);
+    }
+
+    fn decode(r: &mut &[u8]) -> Option<Self> {
+        let epoch = u64::decode(r)?;
+        let moves = Vec::<(VertexId, u32)>::decode(r)?;
+        Some(MigrationPlan { epoch, moves })
+    }
+}
+
 /// The fully-resolved distributed graph.
 #[derive(Clone, Debug)]
 pub struct DistGraph {
     /// Per-partition subgraphs, indexed by partition id — the read-only
     /// unit each parallel worker owns.
     pub parts: Vec<PartGraph>,
-    /// Global vertex id -> (partition, local index).
-    pub location: Vec<(u32, u32)>,
+    /// The current routing epoch (location table + cut tallies; the
+    /// per-partition route columns in `parts` are its projections).
+    pub routing: RoutingEpoch,
     /// Total vertex count.
     pub num_vertices: usize,
     /// Total edge count.
@@ -681,7 +763,44 @@ impl DistGraph {
         num_parts: usize,
         layout: GraphLayout,
     ) -> DistGraph {
-        let nv = g.num_vertices();
+        Self::build(
+            g.num_vertices(),
+            g.num_edges(),
+            assignment,
+            num_parts,
+            layout,
+            0,
+            |v| g.out_degree(v) as u32,
+            |v, emit| {
+                let (ts, ws) = g.out_edges(v);
+                for (&t, &w) in ts.iter().zip(ws) {
+                    emit(t, w);
+                }
+            },
+        )
+    }
+
+    /// Shared construction core behind [`with_layout`](Self::with_layout)
+    /// (epoch 0, topology from the source [`Graph`]) and
+    /// [`apply_migration`](Self::apply_migration) (epoch n+1, topology
+    /// from the previous epoch's own partitions — a `DistGraph` does not
+    /// retain its source graph). Topology arrives through two accessors:
+    /// `degree_of` (global out-degree, consulted only by the
+    /// degree-sorted layout) and `for_each_edge` (streams each vertex's
+    /// out-edges in order). Everything derived — location table, route
+    /// columns, boundary flags, counts, permutations, cut-in tallies —
+    /// is written through the permutation here and nowhere else.
+    #[allow(clippy::too_many_arguments)]
+    fn build(
+        nv: usize,
+        num_edges: usize,
+        assignment: &[u32],
+        num_parts: usize,
+        layout: GraphLayout,
+        epoch: u64,
+        degree_of: impl Fn(VertexId) -> u32,
+        for_each_edge: impl Fn(VertexId, &mut dyn FnMut(VertexId, f32)),
+    ) -> DistGraph {
         assert_eq!(assignment.len(), nv, "assignment length != num vertices");
         assert!(num_parts > 0);
 
@@ -698,7 +817,7 @@ impl DistGraph {
             .iter()
             .map(|gids| match layout.policy {
                 LayoutPolicy::Identity => VertexLayout::identity(),
-                LayoutPolicy::DegreeSorted => VertexLayout::degree_sorted(gids, g),
+                LayoutPolicy::DegreeSorted => VertexLayout::degree_sorted(gids, &degree_of),
             })
             .collect();
 
@@ -735,8 +854,8 @@ impl DistGraph {
                 for local in 0..n as u32 {
                     let gid = gids[part.layout.to_natural(local) as usize];
                     part.global_ids.push(gid);
-                    let (ts, ws) = g.out_edges(gid);
-                    for (&t, &w) in ts.iter().zip(ws) {
+                    let edges_before = part.weights.len();
+                    for_each_edge(gid, &mut |t, w| {
                         let (tp, tl) = location[t as usize];
                         part.targets.push(t);
                         part.routes.push(EdgeRoute::new(tp, tl));
@@ -744,9 +863,9 @@ impl DistGraph {
                         if tp == p as u32 {
                             part.internal_edges += 1;
                         }
-                    }
+                    });
                     part.offsets.push(part.targets.len());
-                    part.out_degree.push(ts.len() as u32);
+                    part.out_degree.push((part.weights.len() - edges_before) as u32);
                     part.is_boundary.push(false);
                 }
                 part
@@ -755,11 +874,15 @@ impl DistGraph {
 
         // Boundary classification: mark targets of cross-partition edges.
         // (A vertex with an in-edge from a remote partition is boundary.)
+        // The same streaming pass tallies the per-partition cut-in counts
+        // the routing epoch carries for O(parts) locality stats.
         let mut boundary = vec![false; nv];
+        let mut cut_in = vec![0u64; num_parts];
         for part in &parts {
             for (&t, r) in part.targets.iter().zip(&part.routes) {
                 if r.part() != part.part {
                     boundary[t as usize] = true;
+                    cut_in[r.part() as usize] += 1;
                 }
             }
         }
@@ -778,12 +901,74 @@ impl DistGraph {
             }
         }
 
-        let dg = DistGraph { parts, location, num_vertices: nv, num_edges: g.num_edges(), layout };
+        let dg = DistGraph {
+            parts,
+            routing: RoutingEpoch { epoch, location, cut_in },
+            num_vertices: nv,
+            num_edges,
+            layout,
+        };
         // debug sanitizer: edge views vs location table, CSR offsets,
         // permutation bijectivity, compressed-block decode, precomputed
         // counts — validated once per construction (no-op in release)
         crate::engine::invariants::check_edge_routes(&dg);
         dg
+    }
+
+    /// The current vertex -> partition assignment, derived from the
+    /// routing epoch's location table.
+    pub fn assignment(&self) -> Vec<u32> {
+        self.routing.location.iter().map(|&(p, _)| p).collect()
+    }
+
+    /// Global out-degree of `v`, resolved through the location table.
+    #[inline]
+    pub fn out_degree_of(&self, v: VertexId) -> u32 {
+        let (p, l) = self.routing.location[v as usize];
+        self.parts[p as usize].out_degree[l as usize]
+    }
+
+    /// Apply a [`MigrationPlan`] atomically, producing the next routing
+    /// epoch: every partition and all derived routing state — location
+    /// table, `EdgeRoute` columns (raw SoA or packed varint), boundary
+    /// flags, precomputed counts, cut-in tallies, and the `VertexLayout`
+    /// permutations — is rebuilt through the same write-through
+    /// construction path `with_layout` uses, under the moved assignment.
+    /// Topology is reconstructed from this graph's own partitions.
+    /// Debug builds validate the plan first (`check_migration_plan`) and
+    /// re-run `check_edge_routes` on the result.
+    ///
+    /// Engines call this only at a barrier, then remap runtime state
+    /// (values, mail, frontier) old-geometry -> new-geometry before the
+    /// next superstep opens.
+    pub fn apply_migration(&self, plan: &MigrationPlan) -> DistGraph {
+        assert_eq!(
+            plan.epoch,
+            self.routing.epoch + 1,
+            "migration plan targets epoch {} but the graph is at epoch {}",
+            plan.epoch,
+            self.routing.epoch
+        );
+        crate::engine::invariants::check_migration_plan(self, plan);
+        let mut assignment = self.assignment();
+        for &(gid, to) in &plan.moves {
+            assignment[gid as usize] = to;
+        }
+        Self::build(
+            self.num_vertices,
+            self.num_edges,
+            &assignment,
+            self.num_parts(),
+            self.layout,
+            plan.epoch,
+            |v| self.out_degree_of(v),
+            |v, emit| {
+                let (p, l) = self.routing.location[v as usize];
+                for e in self.parts[p as usize].out_edges(l as usize) {
+                    emit(e.target, e.weight);
+                }
+            },
+        )
     }
 
     /// Number of partitions (= simulated workers).
@@ -883,7 +1068,7 @@ mod tests {
         assert_eq!(e.target_part, 1);
         assert_eq!(e.target_local, 0);
         assert_eq!(e.route(), EdgeRoute::new(1, 0));
-        assert_eq!(dg.location[3], (1, 1));
+        assert_eq!(dg.routing.location[3], (1, 1));
     }
 
     #[test]
@@ -900,7 +1085,7 @@ mod tests {
                     assert_eq!(e.target, edges.targets()[i]);
                     assert_eq!(e.route(), edges.routes()[i]);
                     assert_eq!(e.weight, edges.weights()[i]);
-                    assert_eq!(dg.location[e.target as usize], e.route().unpack());
+                    assert_eq!(dg.routing.location[e.target as usize], e.route().unpack());
                 }
             }
         }
@@ -1016,7 +1201,7 @@ mod tests {
                 assert_eq!(p.layout.to_local(p.layout.to_natural(local)), local);
             }
             for (lv, &gid) in p.global_ids.iter().enumerate() {
-                assert_eq!(dg.location[gid as usize], (p.part, lv as u32));
+                assert_eq!(dg.routing.location[gid as usize], (p.part, lv as u32));
             }
         }
     }
@@ -1056,13 +1241,13 @@ mod tests {
             for p in &dg.parts {
                 for lv in 0..p.num_vertices() {
                     let gid = p.global_ids[lv];
-                    let (lp, ll) = dg.location[gid as usize];
+                    let (lp, ll) = dg.routing.location[gid as usize];
                     assert_eq!((lp, ll), (p.part, lv as u32), "{layout:?}");
                     for e in p.out_edges(lv) {
                         // routes resolve through the (permuted) location
                         // table in every layout
                         assert_eq!(
-                            dg.location[e.target as usize],
+                            dg.routing.location[e.target as usize],
                             e.route().unpack(),
                             "{layout:?}"
                         );
@@ -1153,5 +1338,117 @@ mod tests {
             let e = p.out_edges(lv);
             assert_eq!(e.weights().len(), e.len());
         }
+    }
+
+    // ---- routing epochs & migration ----
+
+    /// Sorted (src gid, dst gid, weight) edge multiset of a DistGraph —
+    /// the layout/epoch-independent description of the topology.
+    fn edge_multiset(dg: &DistGraph) -> Vec<(VertexId, VertexId, f32)> {
+        let mut es = Vec::new();
+        for p in &dg.parts {
+            for lv in 0..p.num_vertices() {
+                for e in p.out_edges(lv) {
+                    es.push((p.global_ids[lv], e.target, e.weight));
+                }
+            }
+        }
+        es.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        es
+    }
+
+    #[test]
+    fn apply_migration_rebuilds_routing_and_bumps_epoch() {
+        let g = crate::graph::generators::powerlaw(300, 4, 11);
+        let a = crate::partition::hash_partition(&g, 4);
+        for layout in all_layouts() {
+            let dg = DistGraph::with_layout(&g, &a, 4, layout);
+            assert_eq!(dg.routing.epoch, 0, "{layout:?}");
+            // move the first 10 vertices of partition 0 to partition 1
+            let mut moves: Vec<(VertexId, u32)> =
+                dg.parts[0].global_ids.iter().take(10).map(|&gid| (gid, 1u32)).collect();
+            moves.sort_unstable();
+            let plan = MigrationPlan { epoch: 1, moves: moves.clone() };
+            // apply_migration re-runs check_edge_routes internally, so a
+            // successful return already validates the rebuilt routes
+            let m = dg.apply_migration(&plan);
+            assert_eq!(m.routing.epoch, 1, "{layout:?}");
+            assert_eq!(m.num_vertices, dg.num_vertices);
+            assert_eq!(m.num_edges, dg.num_edges);
+            assert_eq!(m.parts[0].num_vertices(), dg.parts[0].num_vertices() - 10);
+            for &(gid, to) in &moves {
+                assert_eq!(m.routing.location[gid as usize].0, to, "{layout:?}");
+            }
+            let moved: std::collections::HashSet<VertexId> =
+                moves.iter().map(|&(gid, _)| gid).collect();
+            for v in 0..dg.num_vertices {
+                if !moved.contains(&(v as VertexId)) {
+                    assert_eq!(
+                        m.routing.location[v].0,
+                        dg.routing.location[v].0,
+                        "unmoved vertex {v} changed partition ({layout:?})"
+                    );
+                }
+            }
+            // topology is preserved as an edge multiset
+            assert_eq!(edge_multiset(&m), edge_multiset(&dg), "{layout:?}");
+            // chained migration keeps bumping the epoch
+            let back = MigrationPlan { epoch: 2, moves: moves.iter().map(|&(gid, _)| (gid, 0)).collect() };
+            let m2 = m.apply_migration(&back);
+            assert_eq!(m2.routing.epoch, 2, "{layout:?}");
+            assert_eq!(m2.assignment(), dg.assignment(), "{layout:?}");
+        }
+    }
+
+    #[test]
+    fn cut_in_tallies_match_route_rescan() {
+        let g = crate::graph::generators::powerlaw(400, 5, 31);
+        let a = crate::partition::hash_partition(&g, 5);
+        let dg = DistGraph::new(&g, &a, 5);
+        let mut expect = vec![0u64; 5];
+        for p in &dg.parts {
+            for lv in 0..p.num_vertices() {
+                for r in p.out_edges(lv).route_iter() {
+                    if r.part() != p.part {
+                        expect[r.part() as usize] += 1;
+                    }
+                }
+            }
+        }
+        assert_eq!(dg.routing.cut_in, expect);
+        assert_eq!(dg.routing.cut_in.iter().sum::<u64>() as usize, dg.edge_cut());
+    }
+
+    #[test]
+    fn migration_plan_codec_roundtrips() {
+        let plan = MigrationPlan { epoch: 3, moves: vec![(1, 2), (7, 0), (9, 4)] };
+        let mut buf = Vec::new();
+        plan.encode(&mut buf);
+        assert_eq!(buf.len(), plan.encoded_len());
+        let mut r = &buf[..];
+        assert_eq!(MigrationPlan::decode(&mut r), Some(plan));
+        assert!(r.is_empty());
+        let mut r = &buf[..buf.len() - 1];
+        assert_eq!(MigrationPlan::decode(&mut r), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "migration plan targets epoch")]
+    fn apply_migration_rejects_wrong_epoch() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
+        let plan = MigrationPlan { epoch: 5, moves: vec![(0, 1)] };
+        let _ = dg.apply_migration(&plan);
+    }
+
+    #[test]
+    fn empty_migration_is_an_epoch_bump() {
+        let g = path4();
+        let dg = DistGraph::new(&g, &[0, 0, 1, 1], 2);
+        let m = dg.apply_migration(&MigrationPlan { epoch: 1, moves: vec![] });
+        assert_eq!(m.routing.epoch, 1);
+        assert_eq!(m.routing.location, dg.routing.location);
+        assert_eq!(m.routing.cut_in, dg.routing.cut_in);
+        assert_eq!(m.edge_cut(), dg.edge_cut());
     }
 }

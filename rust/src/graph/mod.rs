@@ -11,6 +11,6 @@ pub mod io;
 pub use builder::GraphBuilder;
 pub use csr::{Graph, VertexId};
 pub use dist::{
-    DistGraph, Edge, EdgeRoute, Edges, EdgesIter, GraphLayout, LayoutPolicy, PartGraph,
-    RouteIter, VertexLayout,
+    DistGraph, Edge, EdgeRoute, Edges, EdgesIter, GraphLayout, LayoutPolicy, MigrationPlan,
+    PartGraph, RouteIter, RoutingEpoch, VertexLayout,
 };

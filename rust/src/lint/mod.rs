@@ -20,6 +20,7 @@
 //! | `step-pairing` | `.begin_step`/`.begin_step_into` lexically paired with `.commit_step`/`.abort_step_carryover` in the same function |
 //! | `thread-confinement` | thread creation (`thread::spawn`/`scope`/`Builder`) only in `engine/worker.rs` |
 //! | `unwrap-hot-path` | no `.unwrap()`/`.expect(` in `engine/{worker,messages,state}.rs` outside `#[cfg(test)]` |
+//! | `stale-route` | no `let` binding of `EdgeRoute`/location-table/route-column data before a `.commit_step` in the same function (routing state is epoch-scoped; `engine/worker.rs` is the sanctioned reader and exempt) |
 //! | `annotation` | every suppression names a known rule and carries a reason (never suppressible) |
 //!
 //! # Suppressing a finding
@@ -44,6 +45,7 @@ use std::path::Path;
 
 pub mod scan;
 
+mod stale_route;
 mod step_pairing;
 mod thread_confinement;
 mod unordered_iter;
@@ -64,19 +66,22 @@ pub enum RuleId {
     ThreadConfinement,
     /// R5: `.unwrap()`/`.expect(` in hot-path modules.
     UnwrapHotPath,
+    /// R6: route/location data cached across a `.commit_step` boundary.
+    StaleRoute,
     /// Meta: malformed/unknown suppression annotations (never
     /// suppressible).
     Annotation,
 }
 
 impl RuleId {
-    /// The five suppressible determinism rules, in report order.
-    pub const RULES: [RuleId; 5] = [
+    /// The six suppressible determinism rules, in report order.
+    pub const RULES: [RuleId; 6] = [
         RuleId::UnorderedIter,
         RuleId::WallClock,
         RuleId::StepPairing,
         RuleId::ThreadConfinement,
         RuleId::UnwrapHotPath,
+        RuleId::StaleRoute,
     ];
 
     /// The kebab-case name used in reports and `allow(...)` annotations.
@@ -87,6 +92,7 @@ impl RuleId {
             RuleId::StepPairing => "step-pairing",
             RuleId::ThreadConfinement => "thread-confinement",
             RuleId::UnwrapHotPath => "unwrap-hot-path",
+            RuleId::StaleRoute => "stale-route",
             RuleId::Annotation => "annotation",
         }
     }
@@ -151,6 +157,7 @@ pub fn lint_source(path: &str, text: &str) -> Vec<Finding> {
     step_pairing::check(&file, &mut raw);
     thread_confinement::check(&file, &mut raw);
     unwrap_hot_path::check(&file, &mut raw);
+    stale_route::check(&file, &mut raw);
 
     // apply suppressions: a finding survives unless its line carries a
     // reasoned allow naming the rule

@@ -1,0 +1,138 @@
+//! R6 `stale-route` — routing state must not be cached across a step
+//! commit.
+//!
+//! Since the routing-epoch refactor, every location-table entry,
+//! `EdgeRoute`, and route column is *epoch-scoped*: the online
+//! repartitioner may migrate vertices at the barrier that follows a
+//! `.commit_step`, rewriting `(partition, local)` coordinates and
+//! invalidating anything resolved under the old epoch. A binding like
+//!
+//! ```text
+//! let (tp, tl) = dg.routing.location[v as usize];
+//! ...
+//! rt.commit_step();            // barrier may migrate v here
+//! send(tp, tl, msg);           // stale — v may live elsewhere now
+//! ```
+//!
+//! is the exact bug class the epoch versioning exists to prevent. The
+//! rule fires on any `let` that binds route/location data lexically
+//! before a `.commit_step` in the same function frame (the conservative
+//! lexical analogue of "cached across the boundary" — re-read the
+//! table after the commit instead, or move the binding below it).
+//!
+//! Scope: `engine/` and `partition/`. `engine/worker.rs` is exempt —
+//! the sweep core *is* the sanctioned reader of route columns, and its
+//! bindings die with the sweep that owns them, strictly before the
+//! commit takes effect at the barrier.
+
+use super::scan::find_unbound;
+use super::{Finding, RuleId, SourceFile};
+
+const COMMIT: &str = ".commit_step";
+/// Identifier tokens (matched identifier-bounded on the left).
+const IDENT_TOKENS: [&str; 2] = ["EdgeRoute", "route_iter"];
+/// Field/method access tokens (matched as plain substrings).
+const ACCESS_TOKENS: [&str; 5] = [".location[", ".location.", ".routes[", ".routes.", ".route("];
+
+struct Frame {
+    /// Brace depth *outside* the function body: the frame ends when a
+    /// `}` returns the depth to this value.
+    close_depth: usize,
+    /// `let`-with-route-token lines seen in this frame that no commit
+    /// has flagged yet.
+    route_lets: Vec<usize>,
+}
+
+/// Does this (comment/string-scrubbed) line bind route or location data?
+fn binds_route_data(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    let has_let = find_unbound(code, "let")
+        .iter()
+        .any(|&at| !bytes.get(at + 3).is_some_and(|&c| super::scan::is_ident_char(c)));
+    if !has_let {
+        return false;
+    }
+    IDENT_TOKENS.iter().any(|t| !find_unbound(code, t).is_empty())
+        || ACCESS_TOKENS.iter().any(|t| code.contains(t))
+}
+
+pub(crate) fn check(file: &SourceFile, out: &mut Vec<Finding>) {
+    if !file.in_dirs(&["engine/", "partition/"]) || file.is_file("engine/", "worker.rs") {
+        return;
+    }
+    let mut depth = 0usize;
+    let mut frames: Vec<Frame> = Vec::new();
+    // between a `fn` keyword and its body brace; cancelled by `;`/`,` at
+    // signature top level (trait method declarations, fn-pointer types)
+    let mut pending_fn = false;
+    let mut sig_nest = 0i64;
+
+    for (idx, line) in file.scanned.lines.iter().enumerate() {
+        let code = line.code.as_bytes();
+        let text = &line.code;
+        if !line.in_test && binds_route_data(text) {
+            if let Some(f) = frames.last_mut() {
+                f.route_lets.push(idx + 1);
+            }
+        }
+        let mut i = 0;
+        while i < code.len() {
+            let b = code[i];
+            if b == b'{' {
+                if pending_fn {
+                    frames.push(Frame { close_depth: depth, route_lets: Vec::new() });
+                    pending_fn = false;
+                }
+                depth += 1;
+                i += 1;
+            } else if b == b'}' {
+                depth = depth.saturating_sub(1);
+                if frames.last().is_some_and(|f| f.close_depth == depth) {
+                    frames.pop();
+                }
+                i += 1;
+            } else if pending_fn && (b == b'(' || b == b'[' || b == b'<') {
+                sig_nest += 1;
+                i += 1;
+            } else if pending_fn && (b == b')' || b == b']') {
+                sig_nest -= 1;
+                i += 1;
+            } else if pending_fn && b == b'>' {
+                // not the arrow's `>`
+                if i == 0 || code[i - 1] != b'-' {
+                    sig_nest -= 1;
+                }
+                i += 1;
+            } else if pending_fn && (b == b';' || b == b',') && sig_nest <= 0 {
+                // braceless declaration or fn-pointer type: no body
+                pending_fn = false;
+                i += 1;
+            } else if text[i..].starts_with("fn")
+                && (i == 0 || !super::scan::is_ident_char(code[i - 1]))
+                && !code.get(i + 2).is_some_and(|&c| super::scan::is_ident_char(c))
+            {
+                pending_fn = true;
+                sig_nest = 0;
+                i += 2;
+            } else if !line.in_test && text[i..].starts_with(COMMIT) {
+                if let Some(f) = frames.last_mut() {
+                    for l in f.route_lets.drain(..) {
+                        out.push(Finding {
+                            rule: RuleId::StaleRoute,
+                            path: file.path.clone(),
+                            line: l,
+                            message: "route/location data bound before a .commit_step in \
+                                      the same function — routing state is epoch-scoped \
+                                      and the barrier may migrate vertices; re-read it \
+                                      from the post-commit RoutingEpoch instead"
+                                .into(),
+                        });
+                    }
+                }
+                i += COMMIT.len();
+            } else {
+                i += 1;
+            }
+        }
+    }
+}

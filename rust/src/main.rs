@@ -24,6 +24,12 @@
 //! per-superstep/per-partition telemetry (`RunTrace`) as JSON for
 //! offline policy tuning.
 //!
+//! `--repartition [N]` enables telemetry-driven online repartitioning:
+//! every N barriers (default 4) the engine folds the superstep trace
+//! through the deterministic `MigrationPlanner` and may migrate
+//! vertices off the most network-bound partition, bumping the routing
+//! epoch. Ignored by `graphlab-async` (no barriers).
+//!
 //! Execution goes through the `Runner` session; `--engine` accepts every
 //! `EngineKind` spelling (`hama|am-hama|graphhp|giraph++|graphlab-sync|
 //! graphlab-async` — the GraphLab engines run the GAS algorithm forms).
@@ -39,7 +45,8 @@ use graphhp::algorithms::{
     IncrementalPageRank, Sssp, Wcc,
 };
 use graphhp::engine::{
-    EngineKind, HybridPolicy, Metrics, Parallelism, Partitioner, RunTrace, Runner,
+    EngineKind, HybridPolicy, Metrics, Parallelism, Partitioner, RepartitionConfig, RunTrace,
+    Runner,
 };
 use graphhp::graph::{generators, io, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
@@ -203,6 +210,14 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     }
     if flags.contains_key("adaptive") {
         runner = runner.hybrid_policy(HybridPolicy::adaptive());
+    }
+    if let Some(v) = flags.get("repartition") {
+        let mut rc = RepartitionConfig::default();
+        if v != "true" {
+            rc.interval = v.parse().with_context(|| format!("bad --repartition {v}"))?;
+            anyhow::ensure!(rc.interval > 0, "--repartition needs an interval > 0");
+        }
+        runner = runner.repartition(rc);
     }
 
     match algo {

@@ -105,12 +105,16 @@ impl PartitionLocality {
 }
 
 /// Compute every partition's [`PartitionLocality`], in partition order.
-/// Vertex/boundary/internal/cut-out counts come straight from the
-/// counts precomputed at [`DistGraph::new`] time; only the incoming-cut
-/// tally needs a pass, and it streams the routes alone (the raw SoA
-/// column, or a route-only decode on compressed storage).
+/// O(parts) — no edge pass: vertex/boundary/internal/cut-out counts
+/// come straight from the per-partition counts precomputed at build
+/// time, and the incoming-cut tally reads the routing epoch's `cut_in`
+/// column, which [`DistGraph::apply_migration`] maintains in lockstep
+/// with the epoch. The adaptive scheduler and the online repartitioner
+/// can therefore re-seed at every barrier without rescanning routes.
+/// In debug builds the former full route rescan runs as an oracle
+/// against the precomputed tallies.
 pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
-    let mut out: Vec<PartitionLocality> = dg
+    let out: Vec<PartitionLocality> = dg
         .parts
         .iter()
         .map(|p| PartitionLocality {
@@ -119,20 +123,39 @@ pub fn partition_localities(dg: &DistGraph) -> Vec<PartitionLocality> {
             boundary_vertices: p.num_boundary(),
             internal_edges: p.num_internal_edges(),
             cut_out: p.num_edges() - p.num_internal_edges(),
-            cut_in: 0,
+            cut_in: dg.routing.cut_in[p.part as usize] as usize,
         })
         .collect();
+    #[cfg(debug_assertions)]
+    {
+        let oracle = rescan_cut_in(dg);
+        let got: Vec<usize> = out.iter().map(|l| l.cut_in).collect();
+        assert_eq!(
+            got, oracle,
+            "invariant violated: RoutingEpoch::cut_in tallies disagree with a route rescan"
+        );
+    }
+    out
+}
+
+/// The pre-epoch incoming-cut computation — one pass streaming the
+/// routes alone (raw SoA column, or route-only decode on compressed
+/// storage). Kept as the debug-build oracle for the incremental
+/// `RoutingEpoch::cut_in` column.
+#[cfg(debug_assertions)]
+fn rescan_cut_in(dg: &DistGraph) -> Vec<usize> {
+    let mut cut_in = vec![0usize; dg.parts.len()];
     for p in &dg.parts {
         for lv in 0..p.num_vertices() {
             for r in p.out_edges(lv).route_iter() {
                 let tp = r.part();
                 if tp != p.part {
-                    out[tp as usize].cut_in += 1;
+                    cut_in[tp as usize] += 1;
                 }
             }
         }
     }
-    out
+    cut_in
 }
 
 impl std::fmt::Display for PartitionStats {
@@ -279,6 +302,23 @@ mod tests {
         assert_eq!(loc[1].score(), 1.0, "edgeless partition scores 1.0");
         assert_eq!(loc[1].boundary_ratio(), 0.0);
         assert_eq!(loc[0].score(), 1.0);
+    }
+
+    #[test]
+    fn locality_stays_exact_across_migration() {
+        // the O(parts) path reads the routing epoch's cut_in column; a
+        // migrated view must report the same localities as a fresh
+        // build of the migrated assignment
+        let g = generators::powerlaw(300, 4, 5);
+        let a = hash_partition(&g, 3);
+        let dg = crate::graph::DistGraph::new(&g, &a, 3);
+        let plan = crate::graph::MigrationPlan {
+            epoch: 1,
+            moves: vec![(1, (a[1] + 1) % 3), (7, (a[7] + 1) % 3)],
+        };
+        let m = dg.apply_migration(&plan);
+        let fresh = crate::graph::DistGraph::new(&g, &m.assignment(), 3);
+        assert_eq!(partition_localities(&m), partition_localities(&fresh));
     }
 
     #[test]

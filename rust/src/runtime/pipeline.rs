@@ -157,14 +157,14 @@ pub fn run_sssp_accelerated(
     let mut dist: Vec<Vec<f32>> =
         dg.parts.iter().map(|p| vec![INF; p.num_vertices()]).collect();
     {
-        let (sp, sl) = dg.location[source as usize];
+        let (sp, sl) = dg.routing.location[source as usize];
         dist[sp as usize][sl as usize] = 0.0;
     }
     // track which vertices improved since last propagation, per partition
     let mut dirty: Vec<Vec<bool>> =
         dg.parts.iter().map(|p| vec![false; p.num_vertices()]).collect();
     {
-        let (sp, sl) = dg.location[source as usize];
+        let (sp, sl) = dg.routing.location[source as usize];
         dirty[sp as usize][sl as usize] = true;
     }
 

@@ -1,6 +1,6 @@
 //! Liveness fixtures for the `detlint` determinism rules.
 //!
-//! Each rule R1–R5 gets one known-bad snippet proving the rule actually
+//! Each rule R1–R6 gets one known-bad snippet proving the rule actually
 //! fires — at the right line, with the right rule id — plus checks that
 //! suppression annotations and path scoping behave. The final test runs
 //! the linter over this crate's real `src/` tree and requires zero
@@ -180,6 +180,90 @@ fn r5_scoped_to_hot_files_and_test_code() {
     );
     let test_src = "#[cfg(test)]\nmod tests {\n    fn f(o: Option<u32>) -> u32 {\n        o.unwrap()\n    }\n}\n";
     assert!(lint_source("engine/messages.rs", test_src).is_empty());
+}
+
+// ---- R6: stale-route ---------------------------------------------------
+
+#[test]
+fn r6_route_binding_before_commit_fires() {
+    let src = "fn f(rt: &mut Rt, dg: &DistGraph, v: usize) {\n\
+                   let (tp, tl) = dg.routing.location[v];\n\
+                   rt.begin_step();\n\
+                   rt.commit_step();\n\
+                   send(tp, tl);\n\
+               }\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::StaleRoute, 2);
+}
+
+#[test]
+fn r6_edge_route_and_route_iter_bindings_fire() {
+    let src = "fn f(rt: &mut Rt, part: &PartGraph) {\n\
+                   let r: EdgeRoute = part.routes[0];\n\
+                   rt.begin_step();\n\
+                   rt.commit_step();\n\
+               }\n";
+    let f = lint_source("engine/fake.rs", src);
+    assert_fires(&f, RuleId::StaleRoute, 2);
+
+    let src = "fn f(rt: &mut Rt, part: &PartGraph, lv: usize) {\n\
+                   let cached: Vec<_> = part.out_edges(lv).route_iter().collect();\n\
+                   rt.begin_step();\n\
+                   rt.commit_step();\n\
+               }\n";
+    let f = lint_source("partition/fake.rs", src);
+    assert_fires(&f, RuleId::StaleRoute, 2);
+}
+
+#[test]
+fn r6_binding_after_commit_is_clean() {
+    // re-reading the table AFTER the commit is exactly the sanctioned
+    // pattern — the binding observes the post-barrier epoch
+    let src = "fn f(rt: &mut Rt, dg: &DistGraph, v: usize) {\n\
+                   rt.begin_step();\n\
+                   rt.commit_step();\n\
+                   let (tp, tl) = dg.routing.location[v];\n\
+                   send(tp, tl);\n\
+               }\n";
+    assert!(lint_source("engine/fake.rs", src).is_empty());
+}
+
+#[test]
+fn r6_no_commit_in_frame_is_clean() {
+    // a pure reader (no step commit anywhere in the fn) never crosses
+    // an epoch boundary
+    let src = "fn resolve(dg: &DistGraph, v: usize) -> (u32, u32) {\n\
+                   let (tp, tl) = dg.routing.location[v];\n\
+                   (tp, tl)\n\
+               }\n";
+    assert!(lint_source("engine/fake.rs", src).is_empty());
+}
+
+#[test]
+fn r6_scoping_and_worker_exemption() {
+    let src = "fn f(rt: &mut Rt, dg: &DistGraph, v: usize) {\n\
+                   let (tp, tl) = dg.routing.location[v];\n\
+                   rt.begin_step();\n\
+                   rt.commit_step();\n\
+               }\n";
+    assert!(
+        lint_source("engine/worker.rs", src).is_empty(),
+        "the sweep core is the sanctioned route reader"
+    );
+    assert!(
+        lint_source("runtime/fake.rs", src).is_empty(),
+        "runtime/ is outside the deterministic core"
+    );
+}
+
+#[test]
+fn r6_reasoned_allow_suppresses() {
+    let src = "fn f(rt: &mut Rt, dg: &DistGraph, v: usize) {\n\
+                   let (tp, tl) = dg.routing.location[v]; // detlint: allow(stale-route) — consumed before the commit below\n\
+                   rt.begin_step();\n\
+                   rt.commit_step();\n\
+               }\n";
+    assert!(lint_source("engine/fake.rs", src).is_empty());
 }
 
 // ---- suppression annotations ------------------------------------------

@@ -6,6 +6,7 @@
 
 use graphhp::algorithms::{IncrementalPageRank, Sssp, Wcc};
 use graphhp::bench_support::runner;
+use graphhp::engine::{Partitioner, RepartitionConfig, RunTrace};
 use graphhp::graph::generators;
 
 #[test]
@@ -125,6 +126,51 @@ fn adaptive_recovery_replays_clean_trajectory_exactly() {
         bits(&rec.values),
         "adaptive recovery must replay the clean trajectory bit-for-bit"
     );
+}
+
+#[test]
+fn recovery_replays_checkpointed_migration_plans_exactly() {
+    // The checkpoint carries the applied MigrationPlan trajectory.
+    // Recovery replays those plans onto the pristine graph FIRST — the
+    // failure may strike epochs ahead of the checkpoint, and the
+    // snapshotted per-partition arrays only make sense under the
+    // geometry they were taken in — then restores the arrays, and the
+    // planner re-derives any post-checkpoint plans from the replayed
+    // deterministic counters. Values and the final routing epoch must
+    // match the clean run exactly.
+    let g = generators::connected(300, 120, 7);
+    let prog = Sssp { source: 0 };
+    let mk = || {
+        runner(&g, 4)
+            .partitioner(Partitioner::Hash) // poor locality => real migrations
+            .repartition(RepartitionConfig::every_barrier())
+    };
+
+    let clean = mk().run(&prog);
+    assert!(clean.trace.vertices_migrated() > 0, "need migrations to replay");
+    assert!(clean.metrics.global_iterations > 4, "need room to inject a failure");
+
+    let rec = mk().checkpoint_interval(Some(2)).inject_failure_at(Some(4)).run(&prog);
+    assert_eq!(rec.metrics.recoveries, 1);
+    let bits = |vs: &[f32]| vs.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+    assert_eq!(
+        bits(&clean.values),
+        bits(&rec.values),
+        "recovery under migration must replay the clean trajectory exactly"
+    );
+    // the replayed run must end on the same routing epoch: every plan —
+    // checkpointed or re-derived after rollback — matched the clean one
+    let final_epoch = |t: &RunTrace| {
+        t.steps.last().map_or(0, |s| s.routing_epoch + u64::from(s.migrated > 0))
+    };
+    assert_eq!(
+        final_epoch(&clean.trace),
+        final_epoch(&rec.trace),
+        "recovered run diverged from the checkpointed migration trajectory"
+    );
+    // rollback re-plans the rolled-back barriers, so the recovered
+    // trace can only record at least as many moves as the clean one
+    assert!(rec.trace.vertices_migrated() >= clean.trace.vertices_migrated());
 }
 
 #[test]

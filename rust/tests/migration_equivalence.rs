@@ -1,0 +1,170 @@
+//! Equivalence contract of telemetry-driven online repartitioning.
+//!
+//! Migration rewrites *where* vertices live, never *what* they compute:
+//! an engine run with [`RepartitionConfig`] enabled must reach the same
+//! fixed point as a static-partition run — bitwise for the min-fold
+//! programs (SSSP, WCC), within 1e-6 for floating-point-sum PageRank
+//! (migration reshuffles partition membership, which changes message
+//! timing but not the tolerance-bounded fixed point). Checked across
+//! all six engines.
+//!
+//! The determinism contract also survives: with migration on,
+//! `Parallelism::Threads(n)` stays bit-for-bit identical to
+//! `Sequential` — same values AND the same migration trajectory, since
+//! every plan is a pure function of deterministic trace counters
+//! (`compute_us` never feeds a decision). `check_edge_routes` +
+//! `check_migration_plan` run after every applied plan in these debug
+//! builds, so passing tests also certify post-migration geometry.
+
+use graphhp::algorithms::{GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
+use graphhp::engine::{EngineKind, Parallelism, RepartitionConfig, Runner};
+use graphhp::graph::{generators, DistGraph, Graph};
+use graphhp::partition::hash_partition;
+
+/// Hash-partitioned view: poor locality by construction, so the
+/// planner sees network-bound partitions and actually migrates.
+fn dist(g: &Graph, k: usize) -> DistGraph {
+    let a = hash_partition(g, k);
+    DistGraph::new(g, &a, k)
+}
+
+fn runner(dg: &DistGraph, migrate: bool) -> Runner<'_> {
+    let r = Runner::from_dist(dg).parallelism(Parallelism::Sequential);
+    if migrate {
+        r.repartition(RepartitionConfig::every_barrier())
+    } else {
+        r
+    }
+}
+
+// ---- static vs migrated: same fixed point ------------------------------
+
+#[test]
+fn sssp_bitwise_equal_across_vertex_engines() {
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let stat = runner(&dg, false).run_on(kind, &Sssp { source: 0 });
+        let migr = runner(&dg, true).run_on(kind, &Sssp { source: 0 });
+        assert_eq!(stat.values.len(), migr.values.len());
+        for (i, (a, b)) in stat.values.iter().zip(&migr.values).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind} sssp v{i}: {a} vs {b}");
+        }
+        assert_eq!(stat.trace.vertices_migrated(), 0, "{kind}: static run must not move");
+        assert!(migr.trace.vertices_migrated() > 0, "{kind}: hash partition should migrate");
+    }
+}
+
+#[test]
+fn wcc_bitwise_equal_across_vertex_engines() {
+    let g = generators::connected(250, 100, 11);
+    let dg = dist(&g, 4);
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let stat = runner(&dg, false).run_on(kind, &Wcc);
+        let migr = runner(&dg, true).run_on(kind, &Wcc);
+        assert_eq!(stat.values, migr.values, "{kind} wcc");
+        assert!(migr.trace.vertices_migrated() > 0, "{kind}: expected migrations");
+    }
+}
+
+#[test]
+fn pagerank_within_tolerance_across_vertex_engines() {
+    let g = generators::powerlaw(300, 4, 13);
+    let dg = dist(&g, 4);
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let prog = IncrementalPageRank { tolerance: 1e-9 };
+        let stat = runner(&dg, false).run_on(kind, &prog);
+        let migr = runner(&dg, true).run_on(kind, &prog);
+        for (i, (a, b)) in stat.values.iter().zip(&migr.values).enumerate() {
+            assert!((a - b).abs() < 1e-6, "{kind} pagerank v{i}: {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn gas_engines_static_vs_migrated() {
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+
+    // sync: values are global, so migration is exactly bitwise-neutral
+    let kind = EngineKind::GraphLabSync;
+    let stat = runner(&dg, false).run_gas_on(kind, &GasSssp { source: 0 });
+    let migr = runner(&dg, true).run_gas_on(kind, &GasSssp { source: 0 });
+    for (a, b) in stat.values.iter().zip(&migr.values) {
+        assert_eq!(a.to_bits(), b.to_bits(), "graphlab-sync sssp");
+    }
+    assert!(migr.trace.vertices_migrated() > 0, "sync engine should migrate");
+
+    let stat = runner(&dg, false).run_gas_on(kind, &GasWcc);
+    let migr = runner(&dg, true).run_gas_on(kind, &GasWcc);
+    assert_eq!(stat.values, migr.values, "graphlab-sync wcc");
+
+    let prog = GasPageRank { tolerance: 1e-9 };
+    let stat = runner(&dg, false).run_gas_on(kind, &prog);
+    let migr = runner(&dg, true).run_gas_on(kind, &prog);
+    for (a, b) in stat.values.iter().zip(&migr.values) {
+        assert!((a - b).abs() < 1e-6, "graphlab-sync pagerank: {a} vs {b}");
+    }
+
+    // async: no barriers — repartitioning is documented as ignored
+    let kind = EngineKind::GraphLabAsync;
+    let stat = runner(&dg, false).run_gas_on(kind, &GasWcc);
+    let migr = runner(&dg, true).run_gas_on(kind, &GasWcc);
+    assert_eq!(stat.values, migr.values, "graphlab-async wcc");
+    assert_eq!(migr.trace.vertices_migrated(), 0, "async has no barriers to migrate at");
+}
+
+// ---- determinism: threaded ≡ sequential with migration on --------------
+
+#[test]
+fn threads_match_sequential_with_migration_enabled() {
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let seq = Runner::from_dist(&dg)
+            .parallelism(Parallelism::Sequential)
+            .repartition(RepartitionConfig::every_barrier())
+            .run_on(kind, &Sssp { source: 0 });
+        let par = Runner::from_dist(&dg)
+            .parallelism(Parallelism::Threads(4))
+            .repartition(RepartitionConfig::every_barrier())
+            .run_on(kind, &Sssp { source: 0 });
+        for (i, (a, b)) in seq.values.iter().zip(&par.values).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind} v{i}: threaded diverged");
+        }
+        // the whole migration trajectory — not just the total — must be
+        // identical: every plan is a function of deterministic counters
+        assert_eq!(
+            seq.trace.migration_trajectory(),
+            par.trace.migration_trajectory(),
+            "{kind}: migration trajectory diverged between modes"
+        );
+        assert_eq!(seq.metrics.network_messages, par.metrics.network_messages, "{kind}");
+        assert!(seq.trace.vertices_migrated() > 0, "{kind}: vacuous without migrations");
+    }
+}
+
+// ---- interval semantics ------------------------------------------------
+
+#[test]
+fn interval_gates_when_plans_can_fire() {
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+    let r = Runner::from_dist(&dg)
+        .parallelism(Parallelism::Sequential)
+        .repartition(RepartitionConfig { interval: 3, max_moves: 64 })
+        .run_on(EngineKind::Hama, &Sssp { source: 0 });
+    for (i, &m) in r.trace.migration_trajectory().iter().enumerate() {
+        if (i as u64 + 1) % 3 != 0 {
+            assert_eq!(m, 0, "barrier {i}: plan fired off-interval");
+        }
+    }
+    // routing epoch advances exactly when a plan applied
+    let mut epoch = 0u64;
+    for s in &r.trace.steps {
+        assert_eq!(s.routing_epoch, epoch, "iteration {}", s.iteration);
+        if s.migrated > 0 {
+            epoch += 1;
+        }
+    }
+}

@@ -289,7 +289,7 @@ fn distgraph_preserves_all_edges_and_weights() {
                 for e in part.out_edges(lv) {
                     got.push((src, e.target, e.weight.to_bits()));
                     // location indicator must agree with the map
-                    assert_eq!(dg.location[e.target as usize], (e.target_part, e.target_local));
+                    assert_eq!(dg.routing.location[e.target as usize], (e.target_part, e.target_local));
                 }
             }
         }
