@@ -1,0 +1,357 @@
+//! `chaosjson` — machine-readable chaos stress report.
+//!
+//! Runs the recorded chaos matrix (engines × algorithms × schedules
+//! from `tests/chaos_suite.rs`) and emits one schema-stable JSON
+//! document per row: how many events the seeded schedule injected, how
+//! many were loss, whether the run converged, whether the fixpoint
+//! matched the clean baseline, and whether loss without checkpoints
+//! failed loudly. The committed `STRESS_chaos_results.json` at the
+//! repository root is this tool's output format (see its `provenance`
+//! field for how it was produced).
+//!
+//! ```text
+//! cargo run --release --bin chaosjson                 # JSON on stdout
+//! cargo run --release --bin chaosjson -- --out c.json
+//! cargo run --release --bin chaosjson -- --quick      # CI smoke scale
+//! ```
+//!
+//! Schema (version 1) — field order is fixed; additions bump the
+//! version:
+//!
+//! ```text
+//! { schema_version, suite, provenance, measured, quick,
+//!   graph: { name, vertices, edges, partitions },
+//!   rows: [ { engine, algo, schedule, seed, events, loss_events,
+//!             recoveries, converged, matched_clean, loud_failure,
+//!             error } ] }
+//! ```
+//!
+//! Every row is a pure function of its seed: two runs of this binary
+//! produce byte-identical `rows` (the determinism the chaos suite
+//! asserts), so the report doubles as a regression artifact.
+
+use std::fmt::Write as _;
+use std::process::ExitCode;
+
+use graphhp::algorithms::{GasWcc, IncrementalPageRank, Sssp, Wcc};
+use graphhp::bench_support::runner;
+use graphhp::engine::{ChaosPolicy, ChaosSchedule, ChaosTrace, EngineKind, Runner};
+use graphhp::graph::{generators, Graph};
+
+const USAGE: &str = "usage: chaosjson [--out FILE] [--quick]\n\
+  --out FILE  write the JSON document to FILE (default: stdout)\n\
+  --quick     CI smoke scale: smaller grid, SSSP/WCC only";
+
+struct ChaosRow {
+    engine: String,
+    algo: &'static str,
+    schedule: &'static str,
+    seed: u64,
+    events: u64,
+    loss_events: u64,
+    recoveries: u64,
+    converged: bool,
+    matched_clean: bool,
+    loud_failure: bool,
+    error: String,
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn trace_counts(t: &Option<ChaosTrace>) -> (u64, u64) {
+    match t {
+        Some(t) => (t.events.len() as u64, t.loss_events()),
+        None => (0, 0),
+    }
+}
+
+/// The kill-only schedule every engine must fail loudly on when no
+/// checkpoints are configured (graphlab-async excepted, by contract).
+fn kill_policy(seed: u64) -> ChaosPolicy {
+    ChaosPolicy { seed, schedule: ChaosSchedule { kill_at: vec![1], ..Default::default() } }
+}
+
+/// benign / stress+checkpoint / kill-no-checkpoint rows for one push
+/// engine and one algorithm. `matched` compares against the clean
+/// baseline with the algorithm's own tolerance.
+fn push_rows<P, F>(
+    rows: &mut Vec<ChaosRow>,
+    g: &Graph,
+    kind: EngineKind,
+    algo: &'static str,
+    base_seed: u64,
+    prog: &P,
+    matched: F,
+) where
+    P: graphhp::engine::VertexProgram,
+    F: Fn(&[P::V], &[P::V]) -> bool,
+{
+    let clean = runner(g, 4).engine(kind).run(prog);
+
+    let benign = runner(g, 4).engine(kind).chaos(ChaosPolicy::benign(base_seed)).run(prog);
+    let (events, loss) = trace_counts(&benign.chaos);
+    rows.push(ChaosRow {
+        engine: kind.to_string(),
+        algo,
+        schedule: "benign",
+        seed: base_seed,
+        events,
+        loss_events: loss,
+        recoveries: benign.metrics.recoveries,
+        converged: true,
+        matched_clean: matched(&clean.values, &benign.values),
+        loud_failure: false,
+        error: String::new(),
+    });
+
+    // checkpoint rollback is GraphHP's; the other push engines refuse
+    // loss outright (covered by the kill row below)
+    if matches!(kind, EngineKind::GraphHP) {
+        let stress = runner(g, 4)
+            .engine(kind)
+            .checkpoint_interval(Some(2))
+            .chaos(ChaosPolicy::stress(base_seed + 1))
+            .run(prog);
+        let (events, loss) = trace_counts(&stress.chaos);
+        rows.push(ChaosRow {
+            engine: kind.to_string(),
+            algo,
+            schedule: "stress+checkpoint",
+            seed: base_seed + 1,
+            events,
+            loss_events: loss,
+            recoveries: stress.metrics.recoveries,
+            converged: true,
+            matched_clean: matched(&clean.values, &stress.values),
+            loud_failure: false,
+            error: String::new(),
+        });
+    }
+
+    let killed = runner(g, 4).engine(kind).chaos(kill_policy(base_seed + 2)).try_run(prog);
+    let (loud, error) = match killed {
+        Ok(_) => (false, "kill without checkpoints converged silently".to_string()),
+        Err(e) => (e.starts_with("chaos:"), e),
+    };
+    rows.push(ChaosRow {
+        engine: kind.to_string(),
+        algo,
+        schedule: "kill-no-checkpoint",
+        seed: base_seed + 2,
+        events: 0,
+        loss_events: 0,
+        recoveries: 0,
+        converged: false,
+        matched_clean: false,
+        loud_failure: loud,
+        error,
+    });
+}
+
+/// The pull-engine rows: graphlab-sync must fail loudly on a kill and
+/// record an empty trace under benign chaos; graphlab-async is
+/// documented out of scope and runs chaos-free.
+fn gas_rows(rows: &mut Vec<ChaosRow>, g: &Graph, base_seed: u64) {
+    let sync = EngineKind::GraphLabSync;
+    let clean = Runner::new(g).partitions(4).engine(sync).run_gas(&GasWcc);
+    let benign = Runner::new(g)
+        .partitions(4)
+        .engine(sync)
+        .chaos(ChaosPolicy::benign(base_seed))
+        .run_gas(&GasWcc);
+    let (events, loss) = trace_counts(&benign.chaos);
+    rows.push(ChaosRow {
+        engine: sync.to_string(),
+        algo: "wcc",
+        schedule: "benign",
+        seed: base_seed,
+        events,
+        loss_events: loss,
+        recoveries: benign.metrics.recoveries,
+        converged: true,
+        matched_clean: clean.values == benign.values,
+        loud_failure: false,
+        error: String::new(),
+    });
+    let killed = Runner::new(g)
+        .partitions(4)
+        .engine(sync)
+        .chaos(kill_policy(base_seed + 1))
+        .try_run_gas(&GasWcc);
+    let (loud, error) = match killed {
+        Ok(_) => (false, "kill without checkpoints converged silently".to_string()),
+        Err(e) => (e.starts_with("chaos:"), e),
+    };
+    rows.push(ChaosRow {
+        engine: sync.to_string(),
+        algo: "wcc",
+        schedule: "kill-no-checkpoint",
+        seed: base_seed + 1,
+        events: 0,
+        loss_events: 0,
+        recoveries: 0,
+        converged: false,
+        matched_clean: false,
+        loud_failure: loud,
+        error,
+    });
+
+    let kind = EngineKind::GraphLabAsync;
+    let r = Runner::new(g)
+        .partitions(4)
+        .engine(kind)
+        .chaos(kill_policy(base_seed + 2))
+        .run_gas(&GasWcc);
+    rows.push(ChaosRow {
+        engine: kind.to_string(),
+        algo: "wcc",
+        schedule: "out-of-scope",
+        seed: base_seed + 2,
+        events: 0,
+        loss_events: 0,
+        recoveries: 0,
+        converged: true,
+        matched_clean: r.chaos.is_none() && clean.values == r.values,
+        loud_failure: false,
+        error: String::new(),
+    });
+}
+
+fn main() -> ExitCode {
+    let mut out_path: Option<String> = None;
+    let mut quick = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--out" => match args.next() {
+                Some(p) => out_path = Some(p),
+                None => {
+                    eprintln!("{USAGE}");
+                    return ExitCode::from(2);
+                }
+            },
+            "--quick" => quick = true,
+            _ => {
+                eprintln!("{USAGE}");
+                return ExitCode::from(2);
+            }
+        }
+    }
+
+    // long-diameter grid: every run outlives the stress kill (barrier 5)
+    let (gname, g) =
+        if quick { ("road-12x12", generators::road(12, 12, 9)) } else { ("road-20x20", generators::road(20, 20, 9)) };
+    let engines: Vec<EngineKind> = if quick {
+        vec![EngineKind::Hama, EngineKind::GraphHP]
+    } else {
+        EngineKind::VERTEX_CENTRIC.to_vec()
+    };
+
+    let mut rows: Vec<ChaosRow> = Vec::new();
+    for (ei, &kind) in engines.iter().enumerate() {
+        let base = 100 * (ei as u64 + 1);
+        eprintln!("chaosjson: {kind}");
+        push_rows(&mut rows, &g, kind, "sssp", base, &Sssp { source: 0 }, |a, b| {
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        });
+        push_rows(&mut rows, &g, kind, "wcc", base + 10, &Wcc, |a, b| a == b);
+        if !quick {
+            push_rows(
+                &mut rows,
+                &g,
+                kind,
+                "pagerank",
+                base + 20,
+                &IncrementalPageRank { tolerance: 1e-6 },
+                |a, b| a.iter().zip(b).all(|(x, y)| (x - y).abs() < 1e-6),
+            );
+        }
+    }
+    if !quick {
+        eprintln!("chaosjson: graphlab");
+        gas_rows(&mut rows, &g, 900);
+    }
+
+    let mut doc = String::new();
+    doc.push_str("{\n");
+    let _ = writeln!(doc, "  \"schema_version\": 1,");
+    let _ = writeln!(doc, "  \"suite\": \"chaos_stress\",");
+    let _ = writeln!(
+        doc,
+        "  \"provenance\": \"chaosjson v{} ({})\",",
+        env!("CARGO_PKG_VERSION"),
+        if quick { "quick" } else { "full" },
+    );
+    let _ = writeln!(doc, "  \"measured\": true,");
+    let _ = writeln!(doc, "  \"quick\": {quick},");
+    let _ = writeln!(
+        doc,
+        "  \"graph\": {{ \"name\": \"{}\", \"vertices\": {}, \"edges\": {}, \"partitions\": 4 }},",
+        gname,
+        g.num_vertices(),
+        g.num_edges(),
+    );
+    doc.push_str("  \"rows\": [\n");
+    for (ri, r) in rows.iter().enumerate() {
+        let _ = writeln!(
+            doc,
+            "    {{ \"engine\": \"{}\", \"algo\": \"{}\", \"schedule\": \"{}\", \
+             \"seed\": {}, \"events\": {}, \"loss_events\": {}, \"recoveries\": {}, \
+             \"converged\": {}, \"matched_clean\": {}, \"loud_failure\": {}, \
+             \"error\": \"{}\" }}{}",
+            json_escape(&r.engine),
+            r.algo,
+            r.schedule,
+            r.seed,
+            r.events,
+            r.loss_events,
+            r.recoveries,
+            r.converged,
+            r.matched_clean,
+            r.loud_failure,
+            json_escape(&r.error),
+            if ri + 1 < rows.len() { "," } else { "" },
+        );
+    }
+    doc.push_str("  ]\n}\n");
+
+    // the contract the chaos suite asserts, re-checked on the report
+    let bad: Vec<&ChaosRow> = rows
+        .iter()
+        .filter(|r| match r.schedule {
+            "kill-no-checkpoint" => !r.loud_failure,
+            _ => !r.matched_clean,
+        })
+        .collect();
+    for r in &bad {
+        eprintln!(
+            "chaosjson: CONTRACT VIOLATION {} {} {}: {}",
+            r.engine, r.algo, r.schedule, r.error
+        );
+    }
+
+    match out_path {
+        Some(p) => {
+            if let Err(e) = std::fs::write(&p, &doc) {
+                eprintln!("chaosjson: write {p}: {e}");
+                return ExitCode::from(2);
+            }
+            eprintln!("chaosjson: wrote {p}");
+        }
+        None => print!("{doc}"),
+    }
+    if bad.is_empty() { ExitCode::SUCCESS } else { ExitCode::from(1) }
+}

@@ -56,6 +56,7 @@ pub fn run_am_hama<P: VertexProgram>(
     let mut superstep: u64 = 0;
     let planner = cfg.repartition.map(MigrationPlanner::new);
     let mut dg_owned: Option<Box<DistGraph>> = None;
+    let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
 
     loop {
         let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
@@ -113,6 +114,7 @@ pub fn run_am_hama<P: VertexProgram>(
             &cfg.net,
             &mut metrics,
             &mut trace,
+            chaos_ctl.as_mut(),
             |tp, tl, m| {
                 let rt = &mut workers[tp as usize].rt;
                 rt.nxt.push_combined(tl as usize, m, combiner);
@@ -124,6 +126,12 @@ pub fn run_am_hama<P: VertexProgram>(
             // debug sanitizer: step closed, inboxes/frontier intact
             // after delivery (no-op in release builds)
             super::invariants::check_runtime(&ws.rt);
+        }
+
+        // ---- chaos: a loss event corrupted this barrier. AM-Hama has
+        // no checkpointing — refuse to continue on partial state.
+        if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
+            panic!("{}", super::chaos::no_checkpoint_panic("am-hama", &reason));
         }
 
         // ---- online repartitioning: every partition is step-closed and
@@ -172,7 +180,7 @@ pub fn run_am_hama<P: VertexProgram>(
     let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     let values =
         super::gather_values_owned(dgr, workers.into_iter().map(|ws| ws.rt.values).collect());
-    RunResult { values, metrics, trace }
+    RunResult { values, metrics, trace, chaos: chaos_ctl.map(|c| c.into_trace()) }
 }
 
 #[cfg(test)]

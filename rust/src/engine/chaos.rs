@@ -1,0 +1,663 @@
+//! Deterministic fault injection for the barrier delivery path.
+//!
+//! The simulated cluster is polite by default: `netsim.rs` *prices* the
+//! network but never misbehaves, and [`super::FaultPolicy::inject_failure_at`]
+//! kills exactly one worker at a clean iteration boundary. This module
+//! makes the transport hostile — and keeps every run bit-for-bit
+//! reproducible.
+//!
+//! # Model
+//!
+//! A [`ChaosPolicy`] (a seed plus a [`ChaosSchedule`]) is attached to
+//! [`super::EngineConfig::chaos`]. The engine builds one
+//! [`ChaosController`] per run and hands it to the shared barrier fold
+//! ([`super::worker::close_superstep`]), which consults it **between
+//! `Outbox::seal` and inbox push**: sender-side combining has already
+//! run, receiver-side combining has not, so injected events act on
+//! sealed per-destination batches exactly like a real transport acting
+//! on wire packets — combiner semantics are never violated.
+//!
+//! Every sealed batch (one sender partition → one destination partition,
+//! one barrier) gets a monotone sequence number and a verdict drawn from
+//! a per-barrier RNG stream (`Rng::new(seed).derive(superstep)`):
+//!
+//! - **benign events** — `Duplicate` (the receiver discards the second
+//!   copy by sequence number; delivered once) and `Reorder` (the
+//!   receiver reassembles the batch into its canonical
+//!   `(dest_local, src)` order before inbox push, which the sealed
+//!   batch already carries — delivery is order-insensitive by
+//!   construction). These are recorded in the trace and must not change
+//!   the fixpoint.
+//! - **loss events** — `Drop` (batch destroyed), `Delay` (batch held
+//!   past its barrier), `SplitHold` (batch held by an active network
+//!   partition window), `Kill` (worker killed at the barrier). A BSP
+//!   barrier cannot complete while acknowledged mail is missing, so the
+//!   transport detects every loss event *at the barrier it corrupts*
+//!   (sequence-number gap) and raises a pending-recovery flag. The
+//!   engine must then either roll every partition back to the last
+//!   checkpoint (GraphHP) or fail loudly (engines without
+//!   checkpointing) — never continue on partially-delivered state.
+//!   Held mail is **never delivered late**: the rolled-back timeline
+//!   regenerates it, which is what keeps recovery bit-identical to the
+//!   clean run.
+//!
+//! # Determinism contract
+//!
+//! All verdicts are drawn on the engine thread, during the barrier
+//! fold, in partition order — so `Parallelism::Sequential` and
+//! `Parallelism::Threads(n)` consume the RNG identically and the same
+//! seed always yields the same [`ChaosTrace`] (asserted by
+//! `tests/chaos_suite.rs`). Scheduling is keyed on the **monotone
+//! barrier counter** (`RunTrace::steps.len()`), which keeps advancing
+//! across rollbacks: a replayed iteration draws a *fresh* RNG stream
+//! and a consumed kill never re-fires, so recovery always makes
+//! progress. detlint rule R2 applies here: no wall-clock, ever — the
+//! only entropy source is the seeded [`Rng`].
+//!
+//! `max_loss_events` (default 64) bounds the total number of loss
+//! verdicts per run, so even a `drop_prob = 1.0` schedule with an
+//! unbounded window terminates: once the budget is spent the transport
+//! turns honest and the final replay runs clean from the last
+//! checkpoint.
+
+use crate::util::Rng;
+
+/// Sentinel partition id for events that are not tied to a single
+/// sender/receiver pair (kills, heals). Serialized as `null`.
+pub const NO_PART: u32 = u32::MAX;
+
+/// What the transport did to one sealed batch (or to a worker).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ChaosEventKind {
+    /// Batch destroyed in flight (loss).
+    Drop,
+    /// Batch held past its barrier; discarded on rollback (loss).
+    Delay,
+    /// Batch transmitted twice; receiver deduplicates by sequence
+    /// number, so exactly one copy is delivered (benign).
+    Duplicate,
+    /// Batch permuted in flight; receiver reassembles the canonical
+    /// `(dest_local, src)` order before inbox push (benign).
+    Reorder,
+    /// Batch held by an active network-partition window (loss).
+    SplitHold,
+    /// A network-partition window closed.
+    Heal,
+    /// Worker killed at the barrier (loss; generalizes
+    /// `inject_failure_at` to repeated failures).
+    Kill,
+    /// The engine rolled back to a checkpoint in response to a loss
+    /// event.
+    Recover,
+}
+
+impl ChaosEventKind {
+    /// Stable lowercase name used in the JSON trace.
+    pub fn name(self) -> &'static str {
+        match self {
+            ChaosEventKind::Drop => "drop",
+            ChaosEventKind::Delay => "delay",
+            ChaosEventKind::Duplicate => "duplicate",
+            ChaosEventKind::Reorder => "reorder",
+            ChaosEventKind::SplitHold => "split_hold",
+            ChaosEventKind::Heal => "heal",
+            ChaosEventKind::Kill => "kill",
+            ChaosEventKind::Recover => "recover",
+        }
+    }
+
+    /// Loss events corrupt the barrier and demand recovery; benign
+    /// events must leave the fixpoint untouched.
+    pub fn is_loss(self) -> bool {
+        matches!(
+            self,
+            ChaosEventKind::Drop
+                | ChaosEventKind::Delay
+                | ChaosEventKind::SplitHold
+                | ChaosEventKind::Kill
+        )
+    }
+}
+
+/// One injected event, recorded for replay.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChaosEvent {
+    /// Monotone barrier counter at injection time (counts barriers
+    /// actually run, including replayed iterations — see
+    /// [`super::StepTrace::iteration`]).
+    pub superstep: u64,
+    /// What happened.
+    pub kind: ChaosEventKind,
+    /// Sender partition, or [`NO_PART`] for kills/heals/recoveries.
+    pub from: u32,
+    /// Destination partition, or [`NO_PART`].
+    pub to: u32,
+    /// Messages in the affected batch (0 for kills/heals/recoveries).
+    pub messages: u64,
+    /// Monotone batch sequence number (0 for kills/heals/recoveries —
+    /// they are not tied to a batch).
+    pub batch: u64,
+}
+
+/// A network-partition window: from barrier `from` (inclusive) to
+/// barrier `heal_at` (exclusive), every batch crossing between `group`
+/// and its complement is held.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NetSplit {
+    /// First monotone barrier the split is active at.
+    pub from: u64,
+    /// Monotone barrier the split heals at (exclusive); a `Heal` event
+    /// is recorded once this barrier is reached.
+    pub heal_at: u64,
+    /// One side of the split (partition ids); the other side is the
+    /// complement. Batches within a side are unaffected.
+    pub group: Vec<u32>,
+}
+
+impl NetSplit {
+    fn active_at(&self, s: u64) -> bool {
+        self.from <= s && s < self.heal_at
+    }
+
+    fn severs(&self, from: u32, to: u32) -> bool {
+        self.group.contains(&from) != self.group.contains(&to)
+    }
+}
+
+/// What faults to inject, when, and between whom. All probabilities are
+/// per sealed batch; an empty `senders`/`receivers` group means "all
+/// partitions".
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosSchedule {
+    /// Probability a batch is destroyed in flight.
+    pub drop_prob: f64,
+    /// Probability a batch is held past its barrier.
+    pub delay_prob: f64,
+    /// How many barriers a delayed batch would arrive late by
+    /// (taxonomy only: synchronous recovery discards held mail and the
+    /// rolled-back timeline regenerates it).
+    pub delay_supersteps: u64,
+    /// Probability a batch is transmitted twice.
+    pub duplicate_prob: f64,
+    /// Probability a batch is permuted in flight.
+    pub reorder_prob: f64,
+    /// First monotone barrier events may fire at (inclusive).
+    pub from_superstep: u64,
+    /// Last monotone barrier events may fire at (exclusive).
+    pub until_superstep: u64,
+    /// Restrict probabilistic events to batches *from* these partitions
+    /// (empty = all).
+    pub senders: Vec<u32>,
+    /// Restrict probabilistic events to batches *to* these partitions
+    /// (empty = all).
+    pub receivers: Vec<u32>,
+    /// Monotone barriers at which a worker is killed (each entry fires
+    /// once; generalizes `inject_failure_at` to repeated failures).
+    pub kill_at: Vec<u64>,
+    /// Partition-then-heal windows.
+    pub splits: Vec<NetSplit>,
+    /// Hard cap on loss events per run — the termination backstop that
+    /// keeps even `drop_prob = 1.0` schedules convergent.
+    pub max_loss_events: u64,
+}
+
+impl Default for ChaosSchedule {
+    fn default() -> Self {
+        ChaosSchedule {
+            drop_prob: 0.0,
+            delay_prob: 0.0,
+            delay_supersteps: 1,
+            duplicate_prob: 0.0,
+            reorder_prob: 0.0,
+            from_superstep: 0,
+            until_superstep: u64::MAX,
+            senders: Vec::new(),
+            receivers: Vec::new(),
+            kill_at: Vec::new(),
+            splits: Vec::new(),
+            max_loss_events: 64,
+        }
+    }
+}
+
+/// Seed + schedule: everything needed to replay a chaos run.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosPolicy {
+    /// Root of the per-barrier RNG streams.
+    pub seed: u64,
+    /// What to inject.
+    pub schedule: ChaosSchedule,
+}
+
+impl ChaosPolicy {
+    /// A benign-only schedule: duplicates and reorders, no loss. Safe
+    /// on every engine (with or without checkpoints) — the fixpoint
+    /// must not move.
+    pub fn benign(seed: u64) -> Self {
+        ChaosPolicy {
+            seed,
+            schedule: ChaosSchedule {
+                duplicate_prob: 0.3,
+                reorder_prob: 0.3,
+                ..ChaosSchedule::default()
+            },
+        }
+    }
+
+    /// A lossy stress schedule: drops, delays, duplicates, reorders and
+    /// one mid-run kill inside a bounded window. Needs checkpointing to
+    /// survive.
+    pub fn stress(seed: u64) -> Self {
+        ChaosPolicy {
+            seed,
+            schedule: ChaosSchedule {
+                drop_prob: 0.10,
+                delay_prob: 0.05,
+                duplicate_prob: 0.10,
+                reorder_prob: 0.10,
+                from_superstep: 1,
+                until_superstep: 12,
+                kill_at: vec![5],
+                max_loss_events: 16,
+                ..ChaosSchedule::default()
+            },
+        }
+    }
+}
+
+/// Every injected event of one run, in injection order, keyed by the
+/// seed that reproduces it.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ChaosTrace {
+    /// The policy seed (replay key).
+    pub seed: u64,
+    /// Injected events in injection order (nondecreasing `superstep`).
+    pub events: Vec<ChaosEvent>,
+}
+
+impl ChaosTrace {
+    /// Events of a given kind.
+    pub fn count(&self, kind: ChaosEventKind) -> u64 {
+        self.events.iter().filter(|e| e.kind == kind).count() as u64
+    }
+
+    /// Loss events injected (each one forced a recovery or a loud
+    /// failure).
+    pub fn loss_events(&self) -> u64 {
+        self.events.iter().filter(|e| e.kind.is_loss()).count() as u64
+    }
+
+    /// Serialize as JSON (hand-rolled — the offline vendor set has no
+    /// serde). Schema: `{"seed": n, "events": [{"superstep": n,
+    /// "kind": "drop", "from": 0|null, "to": 1|null, "messages": n,
+    /// "batch": n}]}`.
+    pub fn to_json(&self) -> String {
+        fn part(p: u32) -> String {
+            if p == NO_PART { "null".to_string() } else { p.to_string() }
+        }
+        let mut out = String::with_capacity(64 + self.events.len() * 96);
+        out.push_str(&format!("{{\n  \"seed\": {},\n  \"events\": [", self.seed));
+        for (i, e) in self.events.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"superstep\": {}, \"kind\": \"{}\", \"from\": {}, \"to\": {}, \
+                 \"messages\": {}, \"batch\": {}}}",
+                e.superstep,
+                e.kind.name(),
+                part(e.from),
+                part(e.to),
+                e.messages,
+                e.batch
+            ));
+        }
+        if self.events.is_empty() {
+            out.push_str("]\n}\n");
+        } else {
+            out.push_str("\n  ]\n}\n");
+        }
+        out
+    }
+}
+
+/// Per-run fault-injection state machine. Built by the engine from
+/// [`super::EngineConfig::chaos`], consulted by the barrier fold for a
+/// per-batch verdict, polled by the engine after each barrier for a
+/// pending loss that demands recovery.
+#[derive(Clone, Debug)]
+pub struct ChaosController {
+    seed: u64,
+    sched: ChaosSchedule,
+    /// Current barrier's RNG stream (`Rng::new(seed).derive(superstep)`).
+    rng: Rng,
+    /// Monotone barrier counter of the barrier being folded.
+    superstep: u64,
+    /// Next unconsumed entry of the (sorted) kill list.
+    kill_cursor: usize,
+    /// Which splits have had their `Heal` event recorded.
+    healed: Vec<bool>,
+    /// Loss verdicts issued so far (bounded by `max_loss_events`).
+    loss_events: u64,
+    /// Monotone batch sequence counter.
+    batch_seq: u64,
+    /// Human-readable reason of the first unhandled loss event of the
+    /// current barrier; the engine must take it and recover (or die).
+    pending: Option<String>,
+    trace: ChaosTrace,
+}
+
+impl ChaosController {
+    /// Build a controller for one run.
+    pub fn new(policy: &ChaosPolicy) -> Self {
+        let mut sched = policy.schedule.clone();
+        sched.kill_at.sort_unstable();
+        let healed = vec![false; sched.splits.len()];
+        ChaosController {
+            seed: policy.seed,
+            rng: Rng::new(policy.seed),
+            sched,
+            superstep: 0,
+            kill_cursor: 0,
+            healed,
+            loss_events: 0,
+            batch_seq: 0,
+            pending: None,
+            trace: ChaosTrace { seed: policy.seed, events: Vec::new() },
+        }
+    }
+
+    /// Enter the barrier with monotone counter `superstep`: derive the
+    /// barrier's RNG stream and record `Heal` events for any split
+    /// whose window just closed.
+    pub(crate) fn begin_barrier(&mut self, superstep: u64) {
+        self.superstep = superstep;
+        self.rng = Rng::new(self.seed).derive(superstep);
+        for i in 0..self.sched.splits.len() {
+            if !self.healed[i] && self.sched.splits[i].heal_at <= superstep {
+                self.healed[i] = true;
+                self.record(ChaosEventKind::Heal, NO_PART, NO_PART, 0, 0);
+            }
+        }
+    }
+
+    /// Verdict for one sealed batch (`messages` combined messages from
+    /// partition `from` to partition `to`): `true` = deliver now,
+    /// `false` = the batch is lost (destroyed or held) and a recovery
+    /// is pending. Benign verdicts (duplicate/reorder) are recorded and
+    /// still deliver exactly one canonical copy.
+    pub(crate) fn judge(&mut self, from: u32, to: u32, messages: u64) -> bool {
+        let seq = self.batch_seq;
+        self.batch_seq += 1;
+        let s = self.superstep;
+        if !(self.sched.from_superstep <= s && s < self.sched.until_superstep) {
+            return true;
+        }
+        // an active split severs the link unconditionally (no RNG)
+        for i in 0..self.sched.splits.len() {
+            let sp = &self.sched.splits[i];
+            if sp.active_at(s) && sp.severs(from, to) && self.loss_budget_left() {
+                self.lose(ChaosEventKind::SplitHold, from, to, messages, seq);
+                return false;
+            }
+        }
+        if !group_has(&self.sched.senders, from) || !group_has(&self.sched.receivers, to) {
+            return true;
+        }
+        // fixed draw order per batch keeps the stream replayable
+        if self.rng.chance(self.sched.drop_prob) {
+            if self.loss_budget_left() {
+                self.lose(ChaosEventKind::Drop, from, to, messages, seq);
+                return false;
+            }
+        } else if self.rng.chance(self.sched.delay_prob) {
+            if self.loss_budget_left() {
+                self.lose(ChaosEventKind::Delay, from, to, messages, seq);
+                return false;
+            }
+        } else if self.rng.chance(self.sched.duplicate_prob) {
+            self.record(ChaosEventKind::Duplicate, from, to, messages, seq);
+        } else if self.rng.chance(self.sched.reorder_prob) {
+            self.record(ChaosEventKind::Reorder, from, to, messages, seq);
+        }
+        true
+    }
+
+    /// Leave the barrier: fire any kill scheduled at (or overtaken by)
+    /// the current counter. Each kill entry fires exactly once.
+    pub(crate) fn end_barrier(&mut self) {
+        while self.kill_cursor < self.sched.kill_at.len()
+            && self.sched.kill_at[self.kill_cursor] <= self.superstep
+        {
+            self.kill_cursor += 1;
+            self.loss_events += 1;
+            self.record(ChaosEventKind::Kill, NO_PART, NO_PART, 0, 0);
+            let s = self.superstep;
+            self.raise(format!("worker killed at barrier {s}"));
+        }
+    }
+
+    /// Take the pending loss reason, if any. The engine MUST respond:
+    /// roll back to the latest checkpoint (recording the rollback via
+    /// [`Self::note_recovery`]) or fail loudly. Continuing past a
+    /// pending loss silently corrupts the fixpoint.
+    pub(crate) fn take_pending(&mut self) -> Option<String> {
+        self.pending.take()
+    }
+
+    /// Record that the engine rolled back to a checkpoint in response
+    /// to a loss event.
+    pub(crate) fn note_recovery(&mut self) {
+        self.record(ChaosEventKind::Recover, NO_PART, NO_PART, 0, 0);
+    }
+
+    /// Finish the run and surrender the recorded trace.
+    pub fn into_trace(self) -> ChaosTrace {
+        super::invariants::check_chaos_trace(&self.trace);
+        self.trace
+    }
+
+    fn loss_budget_left(&self) -> bool {
+        self.loss_events < self.sched.max_loss_events
+    }
+
+    fn lose(&mut self, kind: ChaosEventKind, from: u32, to: u32, messages: u64, seq: u64) {
+        self.loss_events += 1;
+        self.record(kind, from, to, messages, seq);
+        let s = self.superstep;
+        let name = kind.name();
+        self.raise(format!(
+            "{name} of batch {seq} ({messages} messages, partition {from} -> {to}) \
+             detected at barrier {s}"
+        ));
+    }
+
+    fn raise(&mut self, reason: String) {
+        if self.pending.is_none() {
+            self.pending = Some(reason);
+        }
+    }
+
+    fn record(&mut self, kind: ChaosEventKind, from: u32, to: u32, messages: u64, batch: u64) {
+        self.trace.events.push(ChaosEvent {
+            superstep: self.superstep,
+            kind,
+            from,
+            to,
+            messages,
+            batch,
+        });
+    }
+}
+
+fn group_has(group: &[u32], p: u32) -> bool {
+    group.is_empty() || group.contains(&p)
+}
+
+/// The loud-failure message for engines that hit a loss event with no
+/// checkpoint to roll back to. Prefixed `chaos:` so tests can match it.
+pub(crate) fn no_checkpoint_panic(engine: &str, reason: &str) -> String {
+    format!(
+        "chaos: {reason} — the {engine} engine has no checkpoint to roll back to; \
+         refusing to converge to a silently wrong fixpoint \
+         (enable checkpointing or remove the lossy chaos schedule)"
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drive(policy: &ChaosPolicy, barriers: u64, parts: u32) -> (ChaosTrace, Vec<Option<String>>) {
+        let mut ctl = ChaosController::new(policy);
+        let mut pendings = Vec::new();
+        for s in 0..barriers {
+            ctl.begin_barrier(s);
+            for from in 0..parts {
+                for to in 0..parts {
+                    if from != to {
+                        ctl.judge(from, to, 10);
+                    }
+                }
+            }
+            ctl.end_barrier();
+            pendings.push(ctl.take_pending());
+        }
+        (ctl.into_trace(), pendings)
+    }
+
+    #[test]
+    fn same_seed_same_trace() {
+        let p = ChaosPolicy::stress(42);
+        let (a, _) = drive(&p, 20, 4);
+        let (b, _) = drive(&p, 20, 4);
+        assert_eq!(a, b);
+        assert!(!a.events.is_empty(), "stress schedule injected nothing");
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let (a, _) = drive(&ChaosPolicy::stress(1), 20, 4);
+        let (b, _) = drive(&ChaosPolicy::stress(2), 20, 4);
+        assert_ne!(a.events, b.events);
+    }
+
+    #[test]
+    fn window_confines_events() {
+        let mut p = ChaosPolicy::stress(7);
+        p.schedule.from_superstep = 3;
+        p.schedule.until_superstep = 6;
+        p.schedule.kill_at.clear();
+        p.schedule.drop_prob = 0.9;
+        p.schedule.max_loss_events = 1000;
+        let (t, _) = drive(&p, 20, 4);
+        assert!(!t.events.is_empty());
+        for e in &t.events {
+            assert!((3..6).contains(&e.superstep), "event outside window: {e:?}");
+        }
+    }
+
+    #[test]
+    fn loss_raises_pending_and_benign_does_not() {
+        let mut p = ChaosPolicy::benign(9);
+        let (t, pendings) = drive(&p, 10, 3);
+        assert!(t.count(ChaosEventKind::Duplicate) + t.count(ChaosEventKind::Reorder) > 0);
+        assert_eq!(t.loss_events(), 0);
+        assert!(pendings.iter().all(|x| x.is_none()));
+
+        p.schedule.drop_prob = 1.0;
+        p.schedule.max_loss_events = 3;
+        let (t, pendings) = drive(&p, 10, 3);
+        assert_eq!(t.count(ChaosEventKind::Drop), 3, "budget not honored: {t:?}");
+        assert!(pendings.iter().filter(|x| x.is_some()).count() >= 1);
+        let reason = pendings.iter().flatten().next().expect("pending reason");
+        assert!(reason.contains("drop"), "{reason}");
+    }
+
+    #[test]
+    fn kill_fires_once_per_entry() {
+        let mut p = ChaosPolicy { seed: 5, schedule: ChaosSchedule::default() };
+        p.schedule.kill_at = vec![2, 2, 5];
+        let (t, pendings) = drive(&p, 10, 2);
+        assert_eq!(t.count(ChaosEventKind::Kill), 3);
+        assert!(pendings[2].is_some() && pendings[5].is_some());
+        assert!(pendings[3].is_none() && pendings[6].is_none());
+    }
+
+    #[test]
+    fn split_holds_cross_batches_then_heals() {
+        let p = ChaosPolicy {
+            seed: 11,
+            schedule: ChaosSchedule {
+                splits: vec![NetSplit { from: 1, heal_at: 3, group: vec![0] }],
+                max_loss_events: 1000,
+                ..ChaosSchedule::default()
+            },
+        };
+        let (t, pendings) = drive(&p, 6, 3);
+        // barriers 1 and 2: partition 0 <-> {1,2} severed both ways
+        assert_eq!(t.count(ChaosEventKind::SplitHold), 2 * 4);
+        assert_eq!(t.count(ChaosEventKind::Heal), 1);
+        for e in &t.events {
+            if e.kind == ChaosEventKind::SplitHold {
+                assert!((e.from == 0) != (e.to == 0), "not a crossing batch: {e:?}");
+                assert!((1..3).contains(&e.superstep));
+            }
+        }
+        assert!(pendings[0].is_none() && pendings[3].is_none());
+        assert!(pendings[1].is_some() && pendings[2].is_some());
+    }
+
+    #[test]
+    fn group_restriction_filters_senders_and_receivers() {
+        let p = ChaosPolicy {
+            seed: 13,
+            schedule: ChaosSchedule {
+                drop_prob: 1.0,
+                senders: vec![0],
+                receivers: vec![2],
+                max_loss_events: 1000,
+                ..ChaosSchedule::default()
+            },
+        };
+        let (t, _) = drive(&p, 5, 3);
+        assert_eq!(t.count(ChaosEventKind::Drop), 5);
+        for e in &t.events {
+            assert_eq!((e.from, e.to), (0, 2), "event outside group: {e:?}");
+        }
+    }
+
+    #[test]
+    fn trace_json_is_balanced_and_complete() {
+        let (t, _) = drive(&ChaosPolicy::stress(3), 20, 4);
+        let j = t.to_json();
+        assert!(j.contains("\"seed\": 3"), "{j}");
+        for e in &t.events {
+            assert!(j.contains(&format!("\"{}\"", e.kind.name())), "{j}");
+        }
+        assert!(j.contains("\"from\": null"), "kill should serialize null parts: {j}");
+        for (open, close) in [('{', '}'), ('[', ']')] {
+            assert_eq!(j.matches(open).count(), j.matches(close).count(), "{j}");
+        }
+    }
+
+    #[test]
+    fn empty_trace_serializes() {
+        let t = ChaosTrace { seed: 0, events: Vec::new() };
+        assert!(t.to_json().contains("\"events\": []"));
+    }
+
+    #[test]
+    fn recovery_note_lands_in_trace() {
+        let mut ctl = ChaosController::new(&ChaosPolicy {
+            seed: 1,
+            schedule: ChaosSchedule { kill_at: vec![0], ..ChaosSchedule::default() },
+        });
+        ctl.begin_barrier(0);
+        ctl.end_barrier();
+        assert!(ctl.take_pending().is_some());
+        ctl.note_recovery();
+        let t = ctl.into_trace();
+        assert_eq!(t.count(ChaosEventKind::Recover), 1);
+    }
+}

@@ -105,29 +105,67 @@ pub struct Checkpoint<V, M> {
     pub migrations: Vec<MigrationPlan>,
 }
 
+/// Header magic of the on-disk checkpoint format ("GHCK").
+const CKPT_MAGIC: u32 = 0x4748_434B;
+/// On-disk format version; bumped on any layout change.
+const CKPT_VERSION: u32 = 1;
+
+/// FNV-1a 64 over the payload — the integrity check that turns any
+/// truncation or bit flip into a clean `None` instead of a decode of
+/// garbage that happens to parse. Not cryptographic; it only has to
+/// catch accidental corruption (the chaos suite's corrupt-checkpoint
+/// schedule flips random bits and expects loud rejection).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h = (h ^ u64::from(b)).wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
 impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
-    /// Serialize with the crate's little-endian [`Codec`].
+    /// Serialize with the crate's little-endian [`Codec`], framed by an
+    /// integrity header: magic, version, payload length, FNV-1a 64
+    /// payload checksum. [`decode_bytes`](Self::decode_bytes) verifies
+    /// the frame before touching the payload, so corrupt bytes are
+    /// rejected instead of decoded.
     pub fn encode_bytes(&self) -> Vec<u8> {
-        let mut buf = Vec::new();
-        self.iteration.encode(&mut buf);
-        (self.values.len() as u64).encode(&mut buf);
+        let mut payload = Vec::new();
+        self.iteration.encode(&mut payload);
+        (self.values.len() as u64).encode(&mut payload);
         for p in 0..self.values.len() {
-            self.values[p].encode(&mut buf);
-            self.halted[p].encode(&mut buf);
-            self.inbox[p].encode(&mut buf);
-            self.local_cur[p].encode(&mut buf);
-            self.local_nxt[p].encode(&mut buf);
-            self.frontier[p].encode(&mut buf);
-            self.policy[p].encode(&mut buf);
+            self.values[p].encode(&mut payload);
+            self.halted[p].encode(&mut payload);
+            self.inbox[p].encode(&mut payload);
+            self.local_cur[p].encode(&mut payload);
+            self.local_nxt[p].encode(&mut payload);
+            self.frontier[p].encode(&mut payload);
+            self.policy[p].encode(&mut payload);
         }
-        self.migrations.encode(&mut buf);
+        self.migrations.encode(&mut payload);
+        let mut buf = Vec::with_capacity(payload.len() + 24);
+        CKPT_MAGIC.encode(&mut buf);
+        CKPT_VERSION.encode(&mut buf);
+        (payload.len() as u64).encode(&mut buf);
+        fnv1a64(&payload).encode(&mut buf);
+        buf.extend_from_slice(&payload);
         buf
     }
 
     /// Inverse of [`encode_bytes`](Self::encode_bytes); `None` on
-    /// truncated or malformed input.
+    /// truncated, bit-flipped or otherwise malformed input — never a
+    /// panic. The header (magic, version, exact payload length, FNV-1a
+    /// checksum) is verified before any payload field is decoded.
     pub fn decode_bytes(mut r: &[u8]) -> Option<Self> {
         let r = &mut r;
+        if u32::decode(r)? != CKPT_MAGIC || u32::decode(r)? != CKPT_VERSION {
+            return None;
+        }
+        let len = u64::decode(r)? as usize;
+        let sum = u64::decode(r)?;
+        if r.len() != len || fnv1a64(r) != sum {
+            return None;
+        }
         let iteration = u64::decode(r)?;
         let np = u64::decode(r)? as usize;
         let mut values = Vec::with_capacity(np);
@@ -173,16 +211,7 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
         if !dir.exists() {
             return Ok(None);
         }
-        let mut ckpts: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
-            .filter_map(|e| e.ok())
-            .map(|e| e.path())
-            .filter(|p| {
-                p.file_name()
-                    .and_then(|n| n.to_str())
-                    .is_some_and(|n| n.starts_with("ckpt_") && n.ends_with(".bin"))
-            })
-            .collect();
-        ckpts.sort();
+        let mut ckpts = checkpoint_files(dir)?;
         let Some(path) = ckpts.pop() else {
             return Ok(None);
         };
@@ -192,6 +221,45 @@ impl<V: Codec + Clone, M: Codec + Clone> Checkpoint<V, M> {
                 .with_context(|| format!("corrupt checkpoint {path:?}"))?,
         ))
     }
+}
+
+/// List `dir`'s checkpoint files (`ckpt_*.bin`) in ascending iteration
+/// order — the zero-padded filenames make lexicographic order iteration
+/// order.
+fn checkpoint_files(dir: &Path) -> Result<Vec<std::path::PathBuf>> {
+    let mut ckpts: Vec<std::path::PathBuf> = std::fs::read_dir(dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| {
+            p.file_name()
+                .and_then(|n| n.to_str())
+                .is_some_and(|n| n.starts_with("ckpt_") && n.ends_with(".bin"))
+        })
+        .collect();
+    ckpts.sort();
+    Ok(ckpts)
+}
+
+/// Retention: delete all but the newest `keep` checkpoint files in
+/// `dir`. Recovery only ever loads the newest, so older files are pure
+/// disk growth; `keep` is floored at 1 so the newest always survives.
+/// Returns how many files were removed. A missing directory is a no-op.
+pub fn prune_checkpoints(dir: &Path, keep: usize) -> Result<usize> {
+    if !dir.exists() {
+        return Ok(0);
+    }
+    let mut ckpts = checkpoint_files(dir)?;
+    let keep = keep.max(1);
+    if ckpts.len() <= keep {
+        return Ok(0);
+    }
+    let drop_n = ckpts.len() - keep;
+    let mut removed = 0usize;
+    for path in ckpts.drain(..drop_n) {
+        std::fs::remove_file(&path).with_context(|| format!("prune {path:?}"))?;
+        removed += 1;
+    }
+    Ok(removed)
 }
 
 impl<A: Codec, B: Codec, C: Codec> Codec for (A, B, C) {
@@ -296,5 +364,60 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("ckpt_00000001.bin"), b"garbage").unwrap();
         assert!(Checkpoint::<f32, u32>::load_latest(&dir).is_err());
+    }
+
+    #[test]
+    fn header_rejects_wrong_magic_or_version() {
+        let c = sample();
+        let mut b = c.encode_bytes();
+        b[0] ^= 0xFF; // magic
+        assert!(Checkpoint::<f32, u32>::decode_bytes(&b).is_none());
+        let mut b = c.encode_bytes();
+        b[4] ^= 0x01; // version
+        assert!(Checkpoint::<f32, u32>::decode_bytes(&b).is_none());
+    }
+
+    #[test]
+    fn every_truncation_is_rejected_without_panic() {
+        let b = sample().encode_bytes();
+        for cut in 0..b.len() {
+            assert!(
+                Checkpoint::<f32, u32>::decode_bytes(&b[..cut]).is_none(),
+                "truncation at {cut} must be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn prune_keeps_newest_and_load_latest_still_finds_it() {
+        let dir = std::env::temp_dir().join("graphhp_ckpt_prune");
+        let _ = std::fs::remove_dir_all(&dir);
+        for it in [1u64, 4, 9, 12, 20] {
+            let mut c = sample();
+            c.iteration = it;
+            c.values[0][0] = it as f32;
+            c.save(&dir).unwrap();
+        }
+        assert_eq!(prune_checkpoints(&dir, 2).unwrap(), 3);
+        let left = checkpoint_files(&dir).unwrap();
+        assert_eq!(left.len(), 2);
+        assert!(left[0].to_string_lossy().contains("ckpt_00000012"), "{left:?}");
+        assert!(left[1].to_string_lossy().contains("ckpt_00000020"), "{left:?}");
+        let latest = Checkpoint::<f32, u32>::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.iteration, 20);
+        assert_eq!(latest.values[0][0], 20.0);
+        // already within budget: nothing more to remove
+        assert_eq!(prune_checkpoints(&dir, 2).unwrap(), 0);
+        // keep is floored at 1 — the newest always survives
+        assert_eq!(prune_checkpoints(&dir, 0).unwrap(), 1);
+        let latest = Checkpoint::<f32, u32>::load_latest(&dir).unwrap().unwrap();
+        assert_eq!(latest.iteration, 20);
+    }
+
+    #[test]
+    fn prune_missing_dir_is_a_noop() {
+        let dir = std::env::temp_dir().join("graphhp_ckpt_prune_missing");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert_eq!(prune_checkpoints(&dir, 3).unwrap(), 0);
     }
 }

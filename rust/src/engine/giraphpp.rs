@@ -175,6 +175,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     let mut superstep: u64 = 0;
     let planner = cfg.repartition.map(MigrationPlanner::new);
     let mut dg_owned: Option<Box<DistGraph>> = None;
+    let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
 
     loop {
         let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
@@ -237,6 +238,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             &cfg.net,
             &mut metrics,
             &mut trace,
+            chaos_ctl.as_mut(),
             |tp, tl, m| {
                 workers[tp as usize].rt.nxt.push_combined(tl as usize, m, combiner);
             },
@@ -246,6 +248,12 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             // debug sanitizer: step closed, inboxes/frontier intact
             // after delivery (no-op in release builds)
             super::invariants::check_runtime(&w.rt);
+        }
+
+        // ---- chaos: a loss event corrupted this barrier. Giraph++ has
+        // no checkpointing — refuse to continue on partial state.
+        if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
+            panic!("{}", super::chaos::no_checkpoint_panic("giraph++", &reason));
         }
 
         // ---- online repartitioning: every partition is step-closed and
@@ -298,7 +306,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     let values =
         super::gather_values_owned(dgr, workers.into_iter().map(|w| w.rt.values).collect());
-    RunResult { values, metrics, trace }
+    RunResult { values, metrics, trace, chaos: chaos_ctl.map(|c| c.into_trace()) }
 }
 
 /// Adapter: run a vertex-centric [`VertexProgram`] under Giraph++

@@ -280,6 +280,7 @@ pub fn run_graphhp<P: VertexProgram>(
     let mut iteration: u64 = 0;
     let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
     let mut failure_pending = cfg.fault.inject_failure_at;
+    let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
 
     // ---- online repartitioning state: the migrated graph (None while
     // still at epoch 0) and the applied-plan trajectory checkpoints
@@ -307,6 +308,12 @@ pub fn run_graphhp<P: VertexProgram>(
             };
             if let Some(dir) = &cfg.fault.checkpoint_dir {
                 let _ = ckpt.save(dir);
+                // retention: keep only the newest K files — recovery
+                // only ever loads the newest, so the directory must not
+                // grow without bound across long runs
+                if let Some(k) = cfg.fault.checkpoint_retain {
+                    let _ = super::checkpoint::prune_checkpoints(dir, k);
+                }
             }
             last_ckpt = Some(ckpt);
             metrics.checkpoints += 1;
@@ -320,39 +327,16 @@ pub fn run_graphhp<P: VertexProgram>(
                     // worker back to the latest consistent checkpoint —
                     // including the scheduler state, so the replay runs
                     // under exactly the policies the checkpointed run
-                    // had (not ones adapted by the aborted timeline).
-                    // Geometry first: the failure may have happened
-                    // epochs ahead of the checkpoint, so replay the
-                    // checkpointed migration trajectory onto the
-                    // pristine graph to rebuild the exact geometry the
-                    // per-partition arrays were snapshotted under.
-                    let mut rebuilt: Option<Box<DistGraph>> = None;
-                    for plan in &ckpt.migrations {
-                        let base: &DistGraph = rebuilt.as_deref().unwrap_or(dg);
-                        rebuilt = Some(Box::new(base.apply_migration(plan)));
-                    }
-                    dg_owned = rebuilt;
-                    applied_plans = ckpt.migrations.clone();
-                    let dgc: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
-                    parts = dgc.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
-                    for (p, hp) in parts.iter_mut().enumerate() {
-                        let n = hp.rt.num_vertices();
-                        hp.rt.values = ckpt.values[p].clone();
-                        hp.rt.halted = ckpt.halted[p].clone();
-                        hp.rt.cur = MsgStore::restore(n, &ckpt.local_cur[p]);
-                        hp.rt.nxt = MsgStore::restore(n, &ckpt.local_nxt[p]);
-                        hp.rt.frontier = Frontier::restore(n, &ckpt.frontier[p]);
-                        hp.gq_cur = MsgStore::restore(n, &ckpt.inbox[p]);
-                        hp.gq_nxt = MsgStore::new(n);
-                    }
-                    // cap floored at 1 defensively: a hand-edited on-disk
-                    // checkpoint with cap 0 would abort every local step
-                    policies = ckpt
-                        .policy
-                        .iter()
-                        .map(|pol| PolicyCheckpoint { cap: pol.cap.max(1), ..*pol })
-                        .collect();
-                    iteration = ckpt.iteration;
+                    // had (not ones adapted by the aborted timeline)
+                    iteration = restore_from_checkpoint(
+                        program,
+                        dg,
+                        ckpt,
+                        &mut dg_owned,
+                        &mut applied_plans,
+                        &mut parts,
+                        &mut policies,
+                    );
                 }
                 None => {
                     // no checkpoint yet: restart from scratch — scheduler
@@ -559,6 +543,7 @@ pub fn run_graphhp<P: VertexProgram>(
             &cfg.net,
             &mut metrics,
             &mut trace,
+            chaos_ctl.as_mut(),
             |tp, tl, m| {
                 parts[tp as usize].gq_nxt.push_combined(tl as usize, m, combiner);
             },
@@ -573,6 +558,43 @@ pub fn run_graphhp<P: VertexProgram>(
             super::invariants::check_runtime(&hp.rt);
             super::invariants::check_msgstore(&hp.gq_cur, "gq_cur");
             super::invariants::check_msgstore(&hp.gq_nxt, "gq_nxt");
+        }
+
+        // ---- chaos recovery: a loss event (dropped/held mail or a
+        // scheduled worker kill) corrupted this barrier. It must be
+        // handled HERE, at the point of detection — before the adaptive
+        // fold, the migration planner or the next loop-top checkpoint
+        // could consume state derived from a lossy barrier — by rolling
+        // every partition back to the latest checkpoint and replaying.
+        // The chaos clock (the monotone barrier counter) keeps advancing
+        // across rollbacks, so the replay draws fresh RNG streams and
+        // recovery always makes progress. Held/dropped mail is never
+        // delivered late: the rolled-back timeline regenerates it, which
+        // is what keeps the recovered run bit-identical to a clean one.
+        if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
+            match &last_ckpt {
+                Some(ckpt) => {
+                    metrics.recoveries += 1;
+                    iteration = restore_from_checkpoint(
+                        program,
+                        dg,
+                        ckpt,
+                        &mut dg_owned,
+                        &mut applied_plans,
+                        &mut parts,
+                        &mut policies,
+                    );
+                    if let Some(ctl) = chaos_ctl.as_mut() {
+                        ctl.note_recovery();
+                    }
+                    continue;
+                }
+                None => panic!(
+                    "chaos: {reason} at iteration {iteration} with no checkpoint to \
+                     roll back to; refusing to converge to a silently wrong fixpoint \
+                     (set FaultPolicy::checkpoint_interval or drop the lossy schedule)"
+                ),
+            }
         }
 
         // ---- adaptive barrier update: fold the just-recorded counters
@@ -649,7 +671,53 @@ pub fn run_graphhp<P: VertexProgram>(
     let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     let values =
         super::gather_values_owned(dgr, parts.into_iter().map(|hp| hp.rt.values).collect());
-    RunResult { values, metrics, trace }
+    RunResult { values, metrics, trace, chaos: chaos_ctl.map(|c| c.into_trace()) }
+}
+
+/// Roll every partition back to `ckpt` — the shared body of legacy
+/// `inject_failure_at` recovery and chaos-driven recovery. Geometry
+/// first: the failure may have happened epochs ahead of the checkpoint,
+/// so the checkpointed migration trajectory is replayed onto the
+/// pristine graph to rebuild the exact geometry the per-partition
+/// arrays were snapshotted under; then values, halt flags, in-flight
+/// mail (local inbox pair + global-phase inbox) and scheduler policies
+/// are restored verbatim. Returns the checkpoint's iteration.
+fn restore_from_checkpoint<P: VertexProgram>(
+    program: &P,
+    dg: &DistGraph,
+    ckpt: &super::checkpoint::Checkpoint<P::V, P::M>,
+    dg_owned: &mut Option<Box<DistGraph>>,
+    applied_plans: &mut Vec<MigrationPlan>,
+    parts: &mut Vec<HpPart<P>>,
+    policies: &mut Vec<PartitionPolicy>,
+) -> u64 {
+    let mut rebuilt: Option<Box<DistGraph>> = None;
+    for plan in &ckpt.migrations {
+        let base: &DistGraph = rebuilt.as_deref().unwrap_or(dg);
+        rebuilt = Some(Box::new(base.apply_migration(plan)));
+    }
+    *dg_owned = rebuilt;
+    *applied_plans = ckpt.migrations.clone();
+    let dgc: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
+    *parts = dgc.parts.iter().map(|pg| HpPart::new(program, pg)).collect();
+    for (p, hp) in parts.iter_mut().enumerate() {
+        let n = hp.rt.num_vertices();
+        hp.rt.values = ckpt.values[p].clone();
+        hp.rt.halted = ckpt.halted[p].clone();
+        hp.rt.cur = MsgStore::restore(n, &ckpt.local_cur[p]);
+        hp.rt.nxt = MsgStore::restore(n, &ckpt.local_nxt[p]);
+        hp.rt.frontier = Frontier::restore(n, &ckpt.frontier[p]);
+        hp.gq_cur = MsgStore::restore(n, &ckpt.inbox[p]);
+        hp.gq_nxt = MsgStore::new(n);
+    }
+    // cap floored at 1 defensively: a hand-edited on-disk checkpoint
+    // with cap 0 would abort every local step
+    *policies = ckpt
+        .policy
+        .iter()
+        .map(|pol| PolicyCheckpoint { cap: pol.cap.max(1), ..*pol })
+        .collect();
+    ckpt.iteration
 }
 
 #[cfg(test)]

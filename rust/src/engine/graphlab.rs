@@ -197,6 +197,11 @@ pub fn run_graphlab_sync<P: GasProgram>(
     let mut clock = SuperstepClock::new();
     let planner = cfg.repartition.map(MigrationPlanner::new);
     let mut dg_owned: Option<Box<DistGraph>> = None;
+    // chaos: the pull model has no message plane — batch events
+    // (drop/delay/duplicate/reorder/splits) are vacuous here and never
+    // fire, but scheduled worker kills still apply at every round
+    // barrier, and sync GraphLab has no checkpointing to survive them
+    let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
 
     // the shared scheduling structure of the push engines doubles as
     // GraphLab's round scheduler: rounds begin by draining it (the step
@@ -320,6 +325,16 @@ pub fn run_graphlab_sync<P: GasProgram>(
         // after scatter re-scheduling (no-op in release builds)
         super::invariants::check_frontier(&frontier);
 
+        // ---- chaos: poll scheduled worker kills at this round's
+        // barrier (monotone counter = rounds recorded so far)
+        if let Some(ctl) = chaos_ctl.as_mut() {
+            ctl.begin_barrier(trace.steps.len() as u64 - 1);
+            ctl.end_barrier();
+            if let Some(reason) = ctl.take_pending() {
+                panic!("{}", super::chaos::no_checkpoint_panic("graphlab-sync", &reason));
+            }
+        }
+
         // ---- online repartitioning: values and the round scheduler are
         // global-id indexed, so only the graph and the pull-mode view
         // change hands — results stay bitwise identical
@@ -341,7 +356,7 @@ pub fn run_graphlab_sync<P: GasProgram>(
         rounds += 1;
     }
 
-    RunResult { values, metrics, trace }
+    RunResult { values, metrics, trace, chaos: chaos_ctl.map(|c| c.into_trace()) }
 }
 
 /// Asynchronous GraphLab: FIFO vertex scheduler, immediate visibility,
@@ -420,8 +435,11 @@ pub fn run_graphlab_async<P: GasProgram>(
     metrics.global_iterations = 0;
 
     // async has no barriers either, so there is nothing to trace per
-    // superstep — the trace stays empty by design
-    RunResult { values, metrics, trace: RunTrace::default() }
+    // superstep — the trace stays empty by design, and chaos injection
+    // (like migration) is documented out of scope: without barriers
+    // there is no delivery fold to inject into and no synchronous
+    // recovery point to roll back to
+    RunResult { values, metrics, trace: RunTrace::default(), chaos: None }
 }
 
 #[cfg(test)]

@@ -485,6 +485,43 @@ pub(crate) fn check_vertex_layout(part: &crate::graph::PartGraph) {
     }
 }
 
+/// Validate a recorded [`super::chaos::ChaosTrace`]: events are in
+/// injection order (nondecreasing monotone superstep), batch-tied kinds
+/// carry real endpoints, and worker/window events carry the sentinel.
+#[cfg(any(test, debug_assertions))]
+pub(crate) fn check_chaos_trace(t: &super::chaos::ChaosTrace) {
+    use super::chaos::{ChaosEventKind, NO_PART};
+    let mut prev = 0u64;
+    for e in &t.events {
+        assert!(
+            e.superstep >= prev,
+            "invariant violated: chaos trace out of injection order \
+             (superstep {} after {prev})",
+            e.superstep
+        );
+        prev = e.superstep;
+        let batch_tied = matches!(
+            e.kind,
+            ChaosEventKind::Drop
+                | ChaosEventKind::Delay
+                | ChaosEventKind::Duplicate
+                | ChaosEventKind::Reorder
+                | ChaosEventKind::SplitHold
+        );
+        if batch_tied {
+            assert!(
+                e.from != NO_PART && e.to != NO_PART && e.from != e.to,
+                "invariant violated: chaos batch event without endpoints ({e:?})"
+            );
+        } else {
+            assert!(
+                e.from == NO_PART && e.to == NO_PART && e.messages == 0,
+                "invariant violated: chaos worker event carries batch fields ({e:?})"
+            );
+        }
+    }
+}
+
 // Release builds: inline no-op stubs — the barrier paths pay nothing.
 #[cfg(not(any(test, debug_assertions)))]
 mod stubs {
@@ -508,6 +545,8 @@ mod stubs {
     pub(crate) fn check_migration_plan(_dg: &DistGraph, _plan: &crate::graph::MigrationPlan) {}
     #[inline(always)]
     pub(crate) fn check_vertex_layout(_part: &crate::graph::PartGraph) {}
+    #[inline(always)]
+    pub(crate) fn check_chaos_trace(_t: &super::chaos::ChaosTrace) {}
 }
 #[cfg(not(any(test, debug_assertions)))]
 pub(crate) use stubs::*;
@@ -787,5 +826,51 @@ mod tests {
         let part = dg.parts.iter_mut().find(|p| p.num_edges() > 0).unwrap();
         part.packed.pop(); // final block offset now points past the bytes
         check_edge_routes(&dg);
+    }
+
+    fn chaos_event(
+        superstep: u64,
+        kind: super::super::chaos::ChaosEventKind,
+        from: u32,
+        to: u32,
+    ) -> super::super::chaos::ChaosEvent {
+        super::super::chaos::ChaosEvent { superstep, kind, from, to, messages: 0, batch: 0 }
+    }
+
+    #[test]
+    fn ordered_chaos_trace_passes() {
+        use super::super::chaos::{ChaosEventKind, ChaosTrace, NO_PART};
+        let mut t = ChaosTrace { seed: 1, events: Vec::new() };
+        let mut e = chaos_event(0, ChaosEventKind::Drop, 0, 1);
+        e.messages = 4;
+        t.events.push(e);
+        t.events.push(chaos_event(0, ChaosEventKind::Kill, NO_PART, NO_PART));
+        t.events.push(chaos_event(2, ChaosEventKind::Recover, NO_PART, NO_PART));
+        check_chaos_trace(&t);
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos trace out of injection order")]
+    fn unordered_chaos_trace_is_caught() {
+        use super::super::chaos::{ChaosEventKind, ChaosTrace};
+        let t = ChaosTrace {
+            seed: 1,
+            events: vec![
+                chaos_event(3, ChaosEventKind::Duplicate, 0, 1),
+                chaos_event(1, ChaosEventKind::Reorder, 1, 0),
+            ],
+        };
+        check_chaos_trace(&t);
+    }
+
+    #[test]
+    #[should_panic(expected = "chaos batch event without endpoints")]
+    fn chaos_batch_event_without_endpoints_is_caught() {
+        use super::super::chaos::{ChaosEventKind, ChaosTrace, NO_PART};
+        let t = ChaosTrace {
+            seed: 1,
+            events: vec![chaos_event(0, ChaosEventKind::Drop, NO_PART, NO_PART)],
+        };
+        check_chaos_trace(&t);
     }
 }

@@ -430,6 +430,30 @@ impl<M: Clone + Codec> Outbox<M> {
             .enumerate()
             .flat_map(|(p, b)| b.drain(..).map(move |(l, _, m)| (p as u32, l, m)))
     }
+
+    /// Destination-partition slots the outbox has grown (some may hold
+    /// empty batches). For the batch-granular barrier fold under fault
+    /// injection.
+    pub(crate) fn num_dests(&self) -> usize {
+        self.batches.len()
+    }
+
+    /// Combined messages sealed for destination partition `dest`.
+    pub(crate) fn batch_size(&self, dest: usize) -> usize {
+        self.batches[dest].len()
+    }
+
+    /// Drain the sealed batch for one destination partition in its
+    /// canonical `(dest_local, src)` order, yielding
+    /// `(dest_local, message)`. Requires [`seal`](Self::seal); batch
+    /// capacity survives for [`reset`](Self::reset). Length accounting
+    /// is kept so a partially drained (chaos-dropped) outbox still
+    /// reports the undelivered remainder.
+    pub(crate) fn drain_batch(&mut self, dest: usize) -> impl Iterator<Item = (u32, M)> + '_ {
+        debug_assert!(self.sealed, "Outbox::drain_batch before seal");
+        self.len -= self.batches[dest].len();
+        self.batches[dest].drain(..).map(|(l, _, m)| (l, m))
+    }
 }
 
 #[cfg(test)]

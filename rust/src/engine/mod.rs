@@ -101,6 +101,7 @@
 
 pub mod aggregator;
 pub mod am_hama;
+pub mod chaos;
 pub mod checkpoint;
 pub mod context;
 pub mod giraphpp;
@@ -118,6 +119,7 @@ pub mod state;
 pub(crate) mod worker;
 
 pub use aggregator::{AggOp, Aggregators};
+pub use chaos::{ChaosEvent, ChaosEventKind, ChaosPolicy, ChaosSchedule, ChaosTrace, NetSplit};
 pub use context::VertexContext;
 pub use graphlab::GasCost;
 pub use metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
@@ -404,15 +406,31 @@ impl Default for AdaptiveConfig {
 
 /// Checkpointing and deterministic fault injection (paper §5.3;
 /// GraphHP engine only).
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug)]
 pub struct FaultPolicy {
     /// Checkpoint every N global iterations (None = off).
     pub checkpoint_interval: Option<u64>,
     /// Directory for persisted checkpoints (None = keep in memory only).
     pub checkpoint_dir: Option<std::path::PathBuf>,
+    /// Keep only the newest K checkpoint files in `checkpoint_dir`,
+    /// pruning older ones after each save (None = keep all). Recovery
+    /// only ever loads the newest, so the default keeps a small safety
+    /// margin instead of growing the directory without bound.
+    pub checkpoint_retain: Option<usize>,
     /// Simulate losing a worker at the start of the given global
     /// iteration; the engine recovers from the latest checkpoint.
     pub inject_failure_at: Option<u64>,
+}
+
+impl Default for FaultPolicy {
+    fn default() -> Self {
+        FaultPolicy {
+            checkpoint_interval: None,
+            checkpoint_dir: None,
+            checkpoint_retain: Some(4),
+            inject_failure_at: None,
+        }
+    }
 }
 
 /// Engine configuration shared by all engines, split into the
@@ -450,6 +468,10 @@ pub struct EngineConfig {
     /// superstep (None = static partitioning; GraphLab-async, which has
     /// no barriers, ignores it).
     pub repartition: Option<RepartitionConfig>,
+    /// Deterministic fault injection on the barrier delivery path
+    /// (None = honest transport; GraphLab-async, which has no barriers,
+    /// is documented out of scope like migration).
+    pub chaos: Option<ChaosPolicy>,
 }
 
 impl Default for EngineConfig {
@@ -463,6 +485,7 @@ impl Default for EngineConfig {
             parallelism: Parallelism::default(),
             seed: 42,
             repartition: None,
+            chaos: None,
         }
     }
 }
@@ -479,6 +502,10 @@ pub struct RunResult<V> {
     /// ([`RunTrace::to_json`] dumps it; the adaptive scheduler consumes
     /// it online).
     pub trace: RunTrace,
+    /// Every fault the chaos layer injected, in injection order (None
+    /// when the run had no [`EngineConfig::chaos`] policy, and for
+    /// GraphLab-async, where chaos is out of scope).
+    pub chaos: Option<ChaosTrace>,
 }
 
 /// Gather per-partition values back into a global-id-indexed vector,

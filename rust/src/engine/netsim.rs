@@ -191,6 +191,61 @@ mod tests {
     }
 
     #[test]
+    fn record_at_with_index_gaps_takes_straggler_over_all_slots() {
+        // the parallel runtime may record a high index before the gaps
+        // are filled; unfilled slots are zero-cost workers and the
+        // straggler max must still come from the slowest recorded slot
+        let cfg = NetSimConfig { barrier_latency_us: 0.0, ..Default::default() };
+        let mut m = Metrics::default();
+        let mut clock = SuperstepClock::new();
+        clock.record_worker_at(3, Duration::from_millis(8), Duration::from_millis(2));
+        clock.record_worker_at(0, Duration::from_millis(1), Duration::ZERO);
+        clock.barrier(&cfg, &mut m);
+        // slowest = slot 3: 8 + 2 = 10 ms; slots 1 and 2 idle the whole step
+        assert_eq!(m.elapsed, Duration::from_millis(10));
+        // averages are over all four slots: compute (8+1)/4, comm 2/4
+        assert_eq!(m.compute_time, Duration::from_micros(2_250));
+        assert_eq!(m.comm_time, Duration::from_micros(500));
+    }
+
+    #[test]
+    fn barrier_resets_worker_records_between_supersteps() {
+        let cfg = NetSimConfig { barrier_latency_us: 1_000.0, ..Default::default() };
+        let mut m = Metrics::default();
+        let mut clock = SuperstepClock::new();
+        clock.record_worker(Duration::from_millis(7), Duration::ZERO);
+        clock.barrier(&cfg, &mut m);
+        assert_eq!(m.elapsed, Duration::from_millis(8));
+        // the straggler from step 1 must not leak into step 2
+        clock.record_worker(Duration::from_millis(2), Duration::ZERO);
+        clock.barrier(&cfg, &mut m);
+        assert_eq!(m.elapsed, Duration::from_millis(11), "8 + (2 + 1)");
+        // an empty superstep costs exactly the barrier latency
+        clock.barrier(&cfg, &mut m);
+        assert_eq!(m.elapsed, Duration::from_millis(12));
+    }
+
+    #[test]
+    fn sync_time_is_elapsed_minus_compute_minus_comm() {
+        // the doc-comment identity sync_w = step − compute_w − comm_w
+        // must hold in aggregate across heterogeneous supersteps
+        let cfg = NetSimConfig::default();
+        let mut m = Metrics::default();
+        let mut clock = SuperstepClock::new();
+        for s in 0..7u64 {
+            for w in 0..5u64 {
+                clock.record_worker_at(
+                    w as usize,
+                    Duration::from_micros(100 + 37 * ((s + w) % 5)),
+                    Duration::from_micros(11 * ((s * w) % 4)),
+                );
+            }
+            clock.barrier(&cfg, &mut m);
+        }
+        assert_eq!(m.elapsed, m.compute_time + m.comm_time + m.sync_time);
+    }
+
+    #[test]
     fn straggler_shows_up_as_sync_for_others() {
         let cfg = NetSimConfig { barrier_latency_us: 0.0, ..Default::default() };
         let mut m = Metrics::default();

@@ -288,6 +288,24 @@ impl<'g> Runner<'g> {
         self
     }
 
+    /// How many checkpoint files to retain on disk (`None` = unbounded).
+    /// The default keeps the newest 4 — see
+    /// [`super::FaultPolicy::checkpoint_retain`].
+    pub fn checkpoint_retain(mut self, keep: Option<usize>) -> Self {
+        self.cfg.fault.checkpoint_retain = keep;
+        self
+    }
+
+    /// Seeded deterministic chaos injection on the barrier delivery path
+    /// (see [`super::ChaosPolicy`]). Engines without checkpointing fail
+    /// loudly on any loss event rather than converge on partial state —
+    /// pair lossy schedules with [`Runner::checkpoint_interval`] on the
+    /// GraphHP engine, or use [`Runner::try_run`] to observe the failure.
+    pub fn chaos(mut self, policy: super::ChaosPolicy) -> Self {
+        self.cfg.chaos = Some(policy);
+        self
+    }
+
     // ---------------------------------------------------------- access
 
     /// The session's engine kind.
@@ -393,6 +411,23 @@ impl<'g> Runner<'g> {
         }
     }
 
+    /// [`Runner::run`], but a loud engine failure (e.g. a chaos loss
+    /// event on an engine with no checkpoint to roll back to) is caught
+    /// and returned as `Err` carrying the panic message, instead of
+    /// unwinding through the caller. Used by the chaos stress suite to
+    /// assert that lossy schedules *fail* rather than converge wrong.
+    pub fn try_run<P: VertexProgram>(&mut self, program: &P) -> Result<RunResult<P::V>, String> {
+        let kind = self.engine;
+        catch_run(std::panic::AssertUnwindSafe(|| self.run_on(kind, program)))
+    }
+
+    /// [`Runner::run_gas`] with the same loud-failure-to-`Err` contract
+    /// as [`Runner::try_run`].
+    pub fn try_run_gas<P: GasProgram>(&mut self, program: &P) -> Result<RunResult<P::V>, String> {
+        let kind = self.engine;
+        catch_run(std::panic::AssertUnwindSafe(|| self.run_gas_on(kind, program)))
+    }
+
     /// Run a graph-centric (Giraph++-style) partition program.
     pub fn run_partition<PP: PartitionProgram>(&mut self, program: &PP) -> RunResult<PP::V> {
         let cfg = self.cfg.clone();
@@ -410,6 +445,21 @@ impl<'g> Runner<'g> {
     ) -> Vec<(EngineKind, RunResult<P::V>)> {
         kinds.iter().map(|&k| (k, self.run_on(k, program))).collect()
     }
+}
+
+/// Run `f`, converting a panic into `Err(message)`. Engine panics carry
+/// `String` or `&str` payloads (all chaos failures are `panic!("{..}")`
+/// with a `"chaos: "` prefix); anything else is reported generically.
+fn catch_run<T>(f: impl FnOnce() -> T + std::panic::UnwindSafe) -> Result<T, String> {
+    std::panic::catch_unwind(f).map_err(|payload| {
+        if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else {
+            "engine panicked with a non-string payload".to_string()
+        }
+    })
 }
 
 #[cfg(test)]
@@ -533,6 +583,42 @@ mod tests {
         ));
         assert_eq!(runner.cfg().seed, 99);
         assert_eq!(runner.cfg().fault.checkpoint_interval, Some(2));
+    }
+
+    #[test]
+    fn try_run_ok_matches_run_and_lossy_chaos_surfaces_as_err() {
+        let g = generators::connected(100, 40, 3);
+        let mut runner = Runner::new(&g).partitions(3).engine(EngineKind::Hama);
+        let ok = runner.try_run(&Wcc).expect("clean run succeeds");
+        let direct = runner.run(&Wcc);
+        assert_eq!(ok.values, direct.values);
+        assert!(ok.chaos.is_none(), "no chaos policy => no trace");
+
+        // certain loss on a checkpoint-less engine must surface as Err,
+        // not unwind through the caller or converge on partial state
+        let mut lossy = Runner::new(&g).partitions(3).engine(EngineKind::Hama).chaos(
+            crate::engine::ChaosPolicy {
+                seed: 1,
+                schedule: crate::engine::ChaosSchedule {
+                    drop_prob: 1.0,
+                    ..Default::default()
+                },
+            },
+        );
+        let err = lossy.try_run(&Wcc).expect_err("loss without checkpoints must fail");
+        assert!(err.starts_with("chaos:"), "unexpected message: {err}");
+    }
+
+    #[test]
+    fn chaos_and_retention_setters_reach_the_config() {
+        let g = generators::erdos_renyi(10, 20, 1);
+        let runner = Runner::new(&g)
+            .chaos(crate::engine::ChaosPolicy::benign(42))
+            .checkpoint_retain(Some(9));
+        assert_eq!(runner.cfg().chaos.as_ref().expect("chaos set").seed, 42);
+        assert_eq!(runner.cfg().fault.checkpoint_retain, Some(9));
+        let runner = Runner::new(&g).checkpoint_retain(None);
+        assert_eq!(runner.cfg().fault.checkpoint_retain, None);
     }
 
     #[test]

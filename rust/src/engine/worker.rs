@@ -748,6 +748,17 @@ where
 /// [`MsgStore::push_combined`]). Appends one [`StepTrace`] (the workers'
 /// telemetry records in partition order) to `trace`. Returns the drained
 /// outboxes in partition order so engines can slot them back for reuse.
+///
+/// When a [`super::chaos::ChaosController`] is supplied, every sealed
+/// batch gets a fault verdict *here* — after `Outbox::seal` (sender-side
+/// combining done), before inbox push (receiver-side combining not yet
+/// run) — so injected faults act on wire batches without ever violating
+/// combiner semantics. Verdicts are drawn on the engine thread in
+/// partition order, which keeps sequential ≡ threaded and the same seed
+/// ⇒ the same `ChaosTrace`. A lost batch is simply not delivered; the
+/// engine must poll [`super::chaos::ChaosController::take_pending`]
+/// right after this returns and either roll back to a checkpoint or
+/// fail loudly.
 pub(crate) fn close_superstep<M: Clone + Codec>(
     outs: Vec<WorkerOut<M>>,
     aggs: &mut Aggregators,
@@ -755,6 +766,7 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
     net: &NetSimConfig,
     metrics: &mut Metrics,
     trace: &mut RunTrace,
+    mut chaos: Option<&mut super::chaos::ChaosController>,
     mut deliver: impl FnMut(u32, u32, M),
 ) -> Vec<Outbox<M>> {
     let mut outboxes = Vec::with_capacity(outs.len());
@@ -765,6 +777,12 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
         // once its migration decision for this iteration is known
         ..Default::default()
     };
+    if let Some(ctl) = chaos.as_deref_mut() {
+        // the monotone barrier counter keys all chaos scheduling: it
+        // keeps advancing across rollbacks, so replayed iterations draw
+        // fresh RNG streams and recovery always makes progress
+        ctl.begin_barrier(step.iteration);
+    }
     for (w, mut o) in outs.into_iter().enumerate() {
         // debug sanitizer: an outbox reaching the barrier must be sealed
         // and destination-ordered (no-op in release builds)
@@ -775,8 +793,31 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
         metrics.vertex_computations += o.computations;
         metrics.supersteps_total += o.supersteps;
         clock.record_worker_at(w, o.compute, net.comm_time(&o.comm));
-        for (tp, tl, m) in o.outbox.drain() {
-            deliver(tp, tl, m);
+        match chaos.as_deref_mut() {
+            None => {
+                for (tp, tl, m) in o.outbox.drain() {
+                    deliver(tp, tl, m);
+                }
+            }
+            Some(ctl) => {
+                // batch-granular delivery: one verdict per sealed
+                // (sender, destination) batch. A self-batch never
+                // touches the wire, so it cannot be judged.
+                for tp in 0..o.outbox.num_dests() {
+                    let n = o.outbox.batch_size(tp);
+                    if n == 0 {
+                        continue;
+                    }
+                    if tp == w || ctl.judge(w as u32, tp as u32, n as u64) {
+                        for (tl, m) in o.outbox.drain_batch(tp) {
+                            deliver(tp as u32, tl, m);
+                        }
+                    }
+                    // a lost batch stays undrained; the pending-loss
+                    // flag forces the engine to roll back (or die)
+                    // before the stale outbox could ever be reused
+                }
+            }
         }
         outboxes.push(o.outbox);
         aggs.merge_current(&o.aggs);
@@ -785,6 +826,9 @@ pub(crate) fn close_superstep<M: Clone + Codec>(
     trace.steps.push(step);
     aggs.barrier();
     clock.barrier(net, metrics);
+    if let Some(ctl) = chaos.as_deref_mut() {
+        ctl.end_barrier();
+    }
     outboxes
 }
 

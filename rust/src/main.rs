@@ -30,6 +30,15 @@
 //! vertices off the most network-bound partition, bumping the routing
 //! epoch. Ignored by `graphlab-async` (no barriers).
 //!
+//! `--chaos benign|stress` turns on seeded deterministic fault
+//! injection on the barrier delivery path (`--chaos-seed N` picks the
+//! replay seed, default 42; see `engine/chaos.rs`). Lossy schedules
+//! need `--checkpoint N` (checkpoint every N iterations, GraphHP
+//! engine) to recover — without it the run fails loudly rather than
+//! converge on partial state. `--chaos-trace FILE` dumps the recorded
+//! `ChaosTrace` as JSON for replay. Ignored by `graphlab-async`
+//! (documented out of scope, like migration).
+//!
 //! Execution goes through the `Runner` session; `--engine` accepts every
 //! `EngineKind` spelling (`hama|am-hama|graphhp|giraph++|graphlab-sync|
 //! graphlab-async` — the GraphLab engines run the GAS algorithm forms).
@@ -45,8 +54,8 @@ use graphhp::algorithms::{
     IncrementalPageRank, Sssp, Wcc,
 };
 use graphhp::engine::{
-    EngineKind, HybridPolicy, Metrics, Parallelism, Partitioner, RepartitionConfig, RunTrace,
-    Runner,
+    ChaosPolicy, ChaosTrace, EngineKind, HybridPolicy, Metrics, Parallelism, Partitioner,
+    RepartitionConfig, RunTrace, Runner,
 };
 use graphhp::graph::{generators, io, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
@@ -185,6 +194,25 @@ fn dump_trace(flags: &HashMap<String, String>, trace: &RunTrace) -> Result<()> {
     Ok(())
 }
 
+/// Report injected chaos and write the recorded `ChaosTrace` to the
+/// `--chaos-trace` file, if requested.
+fn dump_chaos(flags: &HashMap<String, String>, chaos: &Option<ChaosTrace>) -> Result<()> {
+    let Some(trace) = chaos else {
+        return Ok(());
+    };
+    println!(
+        "chaos: {} events injected ({} loss) under seed {}",
+        trace.events.len(),
+        trace.loss_events(),
+        trace.seed
+    );
+    if let Some(path) = flags.get("chaos-trace") {
+        std::fs::write(path, trace.to_json()).with_context(|| format!("write {path}"))?;
+        println!("wrote chaos trace to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
     let g = load_graph(get(flags, "graph")?)?;
     let (assignment, k) = make_partition(&g, flags)?;
@@ -219,6 +247,22 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         }
         runner = runner.repartition(rc);
     }
+    if let Some(v) = flags.get("checkpoint") {
+        let n: u64 = v.parse().with_context(|| format!("bad --checkpoint {v}"))?;
+        anyhow::ensure!(n > 0, "--checkpoint needs an interval > 0");
+        runner = runner.checkpoint_interval(Some(n));
+    }
+    if let Some(v) = flags.get("chaos") {
+        let seed: u64 = get_or(flags, "chaos-seed", "42")
+            .parse()
+            .with_context(|| "bad --chaos-seed")?;
+        let policy = match v.as_str() {
+            "benign" => ChaosPolicy::benign(seed),
+            "stress" => ChaosPolicy::stress(seed),
+            other => bail!("unknown chaos preset {other} (benign|stress)"),
+        };
+        runner = runner.chaos(policy);
+    }
 
     match algo {
         "sssp" => {
@@ -233,6 +277,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             println!("sssp: {reached}/{} vertices reached", r.values.len());
             report(engine, &r.metrics);
             dump_trace(flags, &r.trace)?;
+            dump_chaos(flags, &r.chaos)?;
         }
         "pagerank" => {
             let tol: f64 = get_or(flags, "tolerance", "1e-4").parse()?;
@@ -247,6 +292,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             println!("pagerank top-5: {:?}", &top[..5.min(top.len())]);
             report(engine, &r.metrics);
             dump_trace(flags, &r.trace)?;
+            dump_chaos(flags, &r.chaos)?;
         }
         "wcc" => {
             let r = if kind.is_gas() { runner.run_gas(&GasWcc) } else { runner.run(&Wcc) };
@@ -256,6 +302,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             println!("wcc: {} components", labels.len());
             report(engine, &r.metrics);
             dump_trace(flags, &r.trace)?;
+            dump_chaos(flags, &r.chaos)?;
         }
         "bm" => {
             if kind.is_gas() {
@@ -268,6 +315,7 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
             println!("bm: maximal matching of size {size}");
             report(engine, &r.metrics);
             dump_trace(flags, &r.trace)?;
+            dump_chaos(flags, &r.chaos)?;
         }
         other => bail!("unknown algo {other} (sssp|pagerank|wcc|bm)"),
     }

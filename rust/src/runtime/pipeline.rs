@@ -136,7 +136,7 @@ pub fn run_pagerank_accelerated(
         .map(|r| r.iter().map(|&x| x as f64).collect())
         .collect();
     let values = crate::engine::gather_values(dg, &per_part);
-    Ok(RunResult { values, metrics, trace: Default::default() })
+    Ok(RunResult { values, metrics, trace: Default::default(), chaos: None })
 }
 
 /// GraphHP SSSP with XLA min-plus local phases.
@@ -242,7 +242,7 @@ pub fn run_sssp_accelerated(
     }
 
     let values = crate::engine::gather_values(dg, &dist);
-    Ok(RunResult { values, metrics, trace: Default::default() })
+    Ok(RunResult { values, metrics, trace: Default::default(), chaos: None })
 }
 
 /// Wall-clock helper for perf reporting: XLA execute time of one phase

@@ -1,0 +1,333 @@
+//! Chaos stress suite: the recovery contract of every engine under
+//! seeded, deterministic fault injection (see `engine/chaos.rs` and
+//! `docs/architecture.md` § "Chaos & fault injection").
+//!
+//! The contract, asserted across all six engines × PageRank/SSSP/WCC:
+//!
+//! - **benign schedules** (duplicate/reorder — events the barrier
+//!   absorbs by construction) leave every engine's fixpoint untouched;
+//! - **lossy schedules with checkpointing** (GraphHP, the engine with
+//!   rollback) converge to the bit-identical (1e-6 for PageRank)
+//!   no-chaos answer after recovery;
+//! - **lossy schedules without checkpoints** fail loudly — an explicit
+//!   `chaos:` error, never a silently wrong fixpoint;
+//! - **same seed ⇒ same `ChaosTrace`**, and `Sequential` ≡ `Threads(n)`
+//!   down to the injected-event stream (graphlab-async is documented
+//!   out of scope, like migration: it runs chaos-free).
+
+use graphhp::algorithms::{GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
+use graphhp::bench_support::runner;
+use graphhp::engine::{
+    ChaosEventKind, ChaosPolicy, ChaosSchedule, EngineKind, Parallelism, Runner,
+};
+use graphhp::graph::{generators, Graph};
+
+/// Long-diameter grids keep every algorithm running well past the
+/// stress preset's scheduled kill (barrier 5), so recovery always has
+/// something to do.
+fn grid() -> Graph {
+    generators::road(20, 20, 9)
+}
+
+fn bits_f32(vs: &[f32]) -> Vec<u32> {
+    vs.iter().map(|v| v.to_bits()).collect()
+}
+
+fn assert_pagerank_close(a: &[f64], b: &[f64], what: &str) {
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!((x - y).abs() < 1e-6, "{what} v{i}: {x} vs {y}");
+    }
+}
+
+// ------------------------------------------------ benign: all engines
+
+#[test]
+fn benign_chaos_preserves_every_push_engine_fixpoint() {
+    // duplicates are deduplicated by batch sequence and reorders are
+    // reassembled into canonical order at the barrier, so the delivery
+    // stream — and therefore the fixpoint — is identical to a clean run
+    let g = grid();
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let clean_sssp = runner(&g, 4).engine(kind).run(&Sssp { source: 0 });
+        let chaotic = runner(&g, 4)
+            .engine(kind)
+            .chaos(ChaosPolicy::benign(21))
+            .run(&Sssp { source: 0 });
+        assert_eq!(
+            bits_f32(&clean_sssp.values),
+            bits_f32(&chaotic.values),
+            "{kind}: benign chaos changed the SSSP fixpoint"
+        );
+        let trace = chaotic.chaos.expect("policy set => trace");
+        assert_eq!(trace.loss_events(), 0, "{kind}: benign schedule injected loss");
+        assert!(
+            trace.count(ChaosEventKind::Duplicate) + trace.count(ChaosEventKind::Reorder) > 0,
+            "{kind}: benign schedule never fired on a cross-partition batch"
+        );
+
+        let clean_wcc = runner(&g, 4).engine(kind).run(&Wcc);
+        let chaotic_wcc =
+            runner(&g, 4).engine(kind).chaos(ChaosPolicy::benign(22)).run(&Wcc);
+        assert_eq!(clean_wcc.values, chaotic_wcc.values, "{kind}: WCC fixpoint");
+
+        let prog = IncrementalPageRank { tolerance: 1e-6 };
+        let clean_pr = runner(&g, 4).engine(kind).run(&prog);
+        let chaotic_pr =
+            runner(&g, 4).engine(kind).chaos(ChaosPolicy::benign(23)).run(&prog);
+        assert_pagerank_close(&clean_pr.values, &chaotic_pr.values, &format!("{kind}"));
+    }
+}
+
+#[test]
+fn benign_chaos_is_vacuous_on_the_pull_engines() {
+    // the GraphLab kinds have no push message plane: batch events never
+    // fire (sync records an empty trace; async runs chaos-free)
+    let g = grid();
+    for (kind, kills_apply) in
+        [(EngineKind::GraphLabSync, true), (EngineKind::GraphLabAsync, false)]
+    {
+        let clean = Runner::new(&g).partitions(4).engine(kind).run_gas(&GasWcc);
+        let chaotic = Runner::new(&g)
+            .partitions(4)
+            .engine(kind)
+            .chaos(ChaosPolicy::benign(31))
+            .run_gas(&GasWcc);
+        assert_eq!(clean.values, chaotic.values, "{kind}: WCC fixpoint");
+        match (kills_apply, &chaotic.chaos) {
+            (true, Some(trace)) => {
+                assert!(trace.events.is_empty(), "{kind}: batch events on a pull engine")
+            }
+            (true, None) => panic!("{kind}: chaos policy set but no trace recorded"),
+            (false, trace) => {
+                assert!(trace.is_none(), "{kind}: chaos is documented out of scope")
+            }
+        }
+
+        let clean_pr = Runner::new(&g)
+            .partitions(4)
+            .engine(kind)
+            .run_gas(&GasPageRank { tolerance: 1e-6 });
+        let chaotic_pr = Runner::new(&g)
+            .partitions(4)
+            .engine(kind)
+            .chaos(ChaosPolicy::benign(32))
+            .run_gas(&GasPageRank { tolerance: 1e-6 });
+        assert_pagerank_close(&clean_pr.values, &chaotic_pr.values, &format!("{kind}"));
+
+        let clean_sssp = Runner::new(&g)
+            .partitions(4)
+            .engine(kind)
+            .run_gas(&GasSssp { source: 0 });
+        let chaotic_sssp = Runner::new(&g)
+            .partitions(4)
+            .engine(kind)
+            .chaos(ChaosPolicy::benign(33))
+            .run_gas(&GasSssp { source: 0 });
+        assert_eq!(
+            bits_f32(&clean_sssp.values),
+            bits_f32(&chaotic_sssp.values),
+            "{kind}: SSSP fixpoint"
+        );
+    }
+}
+
+// --------------------------- lossy + checkpointing: exact recovery
+
+#[test]
+fn stress_schedule_with_checkpointing_recovers_sssp_exactly() {
+    let g = grid();
+    let prog = Sssp { source: 0 };
+    let clean = runner(&g, 4).run(&prog);
+    let stressed = runner(&g, 4)
+        .checkpoint_interval(Some(2))
+        .chaos(ChaosPolicy::stress(41))
+        .run(&prog);
+    assert!(stressed.metrics.recoveries > 0, "the scheduled kill must recover");
+    assert_eq!(
+        bits_f32(&clean.values),
+        bits_f32(&stressed.values),
+        "recovery must replay the clean trajectory bit-for-bit"
+    );
+    let trace = stressed.chaos.expect("trace recorded");
+    assert!(trace.count(ChaosEventKind::Kill) >= 1);
+    assert_eq!(
+        trace.count(ChaosEventKind::Recover),
+        stressed.metrics.recoveries,
+        "every recovery must land in the trace"
+    );
+}
+
+#[test]
+fn stress_schedule_with_checkpointing_recovers_wcc_exactly() {
+    let g = grid();
+    let clean = runner(&g, 4).run(&Wcc);
+    let stressed = runner(&g, 4)
+        .checkpoint_interval(Some(2))
+        .chaos(ChaosPolicy::stress(42))
+        .run(&Wcc);
+    assert!(stressed.metrics.recoveries > 0);
+    assert_eq!(clean.values, stressed.values);
+}
+
+#[test]
+fn stress_schedule_with_checkpointing_recovers_pagerank_within_tolerance() {
+    let g = grid();
+    let prog = IncrementalPageRank { tolerance: 1e-6 };
+    let clean = runner(&g, 4).run(&prog);
+    let stressed = runner(&g, 4)
+        .checkpoint_interval(Some(2))
+        .chaos(ChaosPolicy::stress(43))
+        .run(&prog);
+    assert!(stressed.metrics.recoveries > 0);
+    assert_pagerank_close(&clean.values, &stressed.values, "stressed pagerank");
+}
+
+#[test]
+fn partition_then_heal_window_recovers_exactly() {
+    use graphhp::engine::NetSplit;
+    let g = grid();
+    let prog = Sssp { source: 0 };
+    let clean = runner(&g, 4).run(&prog);
+    let split = ChaosPolicy {
+        seed: 44,
+        schedule: ChaosSchedule {
+            splits: vec![NetSplit { from: 1, heal_at: 6, group: vec![0, 1] }],
+            ..Default::default()
+        },
+    };
+    let stressed =
+        runner(&g, 4).checkpoint_interval(Some(2)).chaos(split).run(&prog);
+    assert!(stressed.metrics.recoveries > 0, "severed batches must trigger rollback");
+    assert_eq!(bits_f32(&clean.values), bits_f32(&stressed.values));
+    let trace = stressed.chaos.expect("trace recorded");
+    assert!(trace.count(ChaosEventKind::SplitHold) > 0, "the split must sever traffic");
+    assert!(trace.count(ChaosEventKind::Heal) >= 1, "the heal must be recorded");
+}
+
+// ----------------------- lossy without checkpoints: loud failure
+
+#[test]
+fn loss_without_checkpoints_fails_loudly_on_every_engine() {
+    let g = grid();
+    // a scheduled kill is loss on every engine, independent of whether
+    // the schedule's probabilistic events hit a cross-partition batch
+    let kill = |seed: u64| ChaosPolicy {
+        seed,
+        schedule: ChaosSchedule { kill_at: vec![1], ..Default::default() },
+    };
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let err = runner(&g, 4)
+            .engine(kind)
+            .chaos(kill(51))
+            .try_run(&Wcc)
+            .expect_err("kill without checkpoints must fail loudly");
+        assert!(err.starts_with("chaos:"), "{kind}: unexpected message: {err}");
+    }
+    let err = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::GraphLabSync)
+        .chaos(kill(52))
+        .try_run_gas(&GasWcc)
+        .expect_err("graphlab-sync kill without checkpoints must fail loudly");
+    assert!(err.starts_with("chaos:"), "graphlab-sync: unexpected message: {err}");
+    // graphlab-async: documented out of scope — the run ignores chaos
+    let r = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::GraphLabAsync)
+        .chaos(kill(53))
+        .run_gas(&GasWcc);
+    assert!(r.chaos.is_none());
+}
+
+#[test]
+fn certain_drop_without_checkpoints_never_converges_silently() {
+    // drop_prob = 1.0: every cross-partition batch is lost. The first
+    // corrupted barrier must already surface the error — on every
+    // push engine and algorithm
+    let g = grid();
+    let lossy = |seed: u64| ChaosPolicy {
+        seed,
+        schedule: ChaosSchedule { drop_prob: 1.0, ..Default::default() },
+    };
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let err = runner(&g, 4)
+            .engine(kind)
+            .chaos(lossy(61))
+            .try_run(&Sssp { source: 0 })
+            .expect_err("dropped mail must not yield a silent fixpoint");
+        assert!(err.starts_with("chaos:"), "{kind}: unexpected message: {err}");
+        assert!(err.contains("drop"), "{kind}: loss kind missing from: {err}");
+    }
+}
+
+// ------------------------------------ determinism: seed and threads
+
+#[test]
+fn same_seed_reproduces_the_exact_chaos_trace() {
+    let g = grid();
+    let run = || {
+        runner(&g, 4)
+            .checkpoint_interval(Some(2))
+            .chaos(ChaosPolicy::stress(71))
+            .run(&Sssp { source: 0 })
+    };
+    let a = run();
+    let b = run();
+    let (ta, tb) = (a.chaos.expect("trace"), b.chaos.expect("trace"));
+    assert_eq!(ta, tb, "same seed must reproduce the injected-event stream");
+    assert!(!ta.events.is_empty(), "stress schedule must inject something");
+    assert_eq!(a.metrics.recoveries, b.metrics.recoveries);
+    assert_eq!(bits_f32(&a.values), bits_f32(&b.values));
+}
+
+#[test]
+fn sequential_and_threaded_runs_inject_identically() {
+    // verdicts are drawn on the engine thread in (worker, dest) order,
+    // so the chaos stream is independent of worker interleaving
+    let g = grid();
+    let run = |p: Parallelism| {
+        runner(&g, 4)
+            .parallelism(p)
+            .checkpoint_interval(Some(2))
+            .chaos(ChaosPolicy::stress(72))
+            .run(&Sssp { source: 0 })
+    };
+    let seq = run(Parallelism::Sequential);
+    let par = run(Parallelism::Threads(4));
+    assert_eq!(
+        seq.chaos.expect("trace"),
+        par.chaos.expect("trace"),
+        "Sequential and Threads(n) must inject the identical event stream"
+    );
+    assert_eq!(bits_f32(&seq.values), bits_f32(&par.values));
+    assert_eq!(seq.metrics.recoveries, par.metrics.recoveries);
+
+    // benign schedules hold the same equivalence on a checkpoint-less
+    // engine (no recovery in play, pure delivery-path determinism)
+    let bx = |p: Parallelism| {
+        runner(&g, 4)
+            .engine(EngineKind::Hama)
+            .parallelism(p)
+            .chaos(ChaosPolicy::benign(73))
+            .run(&Wcc)
+    };
+    let s = bx(Parallelism::Sequential);
+    let t = bx(Parallelism::Threads(4));
+    assert_eq!(s.chaos.expect("trace"), t.chaos.expect("trace"));
+    assert_eq!(s.values, t.values);
+}
+
+#[test]
+fn chaos_trace_json_serializes_every_recorded_event() {
+    let g = grid();
+    let r = runner(&g, 4)
+        .checkpoint_interval(Some(2))
+        .chaos(ChaosPolicy::stress(74))
+        .run(&Wcc);
+    let trace = r.chaos.expect("trace");
+    let json = trace.to_json();
+    assert_eq!(json.matches("\"kind\"").count(), trace.events.len());
+    for needle in ["\"seed\": 74", "\"events\": ["] {
+        assert!(json.contains(needle), "missing {needle} in {json}");
+    }
+}

@@ -4,10 +4,11 @@
 //! property is checked on many random cases with failures reporting the
 //! case seed.
 
+use graphhp::engine::checkpoint::{Checkpoint, PolicyCheckpoint};
 use graphhp::engine::messages::{MsgStore, Outbox};
 use graphhp::engine::netsim::{NetSimConfig, WorkerComm};
 use graphhp::engine::{SourceCombine, VertexContext, VertexProgram};
-use graphhp::graph::{generators, DistGraph, Graph, VertexId};
+use graphhp::graph::{generators, DistGraph, Graph, MigrationPlan, VertexId};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
 use graphhp::util::{Codec, Rng};
 
@@ -321,6 +322,100 @@ fn codec_roundtrips_random_values() {
         let mut r = &buf[..];
         assert_eq!(Vec::<(u32, f32)>::decode(&mut r), Some(v));
         assert!(r.is_empty());
+    }
+}
+
+// ---------------------------------------------------- checkpoint frame
+
+fn random_checkpoint(rng: &mut Rng) -> Checkpoint<f32, u32> {
+    let np = 1 + rng.index(4);
+    let mailbox = |rng: &mut Rng, n: usize| -> Vec<(u32, Vec<u32>)> {
+        (0..rng.index(5))
+            .map(|_| {
+                let lv = rng.index(n.max(1)) as u32;
+                let msgs = (0..1 + rng.index(4)).map(|_| rng.next_u64() as u32).collect();
+                (lv, msgs)
+            })
+            .collect()
+    };
+    let sizes: Vec<usize> = (0..np).map(|_| rng.index(30)).collect();
+    Checkpoint {
+        iteration: rng.next_u64() % 1_000,
+        values: sizes
+            .iter()
+            .map(|&n| (0..n).map(|_| rng.f32_range(-1e6, 1e6)).collect())
+            .collect(),
+        halted: sizes.iter().map(|&n| (0..n).map(|_| rng.chance(0.5)).collect()).collect(),
+        inbox: sizes.iter().map(|&n| mailbox(rng, n)).collect(),
+        local_cur: sizes.iter().map(|&n| mailbox(rng, n)).collect(),
+        local_nxt: sizes.iter().map(|&n| mailbox(rng, n)).collect(),
+        frontier: sizes
+            .iter()
+            .map(|&n| (0..rng.index(n + 1)).map(|_| rng.index(n.max(1)) as u32).collect())
+            .collect(),
+        policy: (0..np)
+            .map(|_| PolicyCheckpoint {
+                run_local: rng.chance(0.5),
+                cap: 1 + rng.next_u64() % 64,
+                boundary_in_local: rng.chance(0.5),
+                preferred_boundary: rng.chance(0.5),
+                carryover_streak: rng.index(8) as u32,
+                clean_streak: rng.index(8) as u32,
+            })
+            .collect(),
+        migrations: (0..rng.index(4))
+            .map(|e| MigrationPlan {
+                epoch: e as u64 + 1,
+                moves: (0..rng.index(6))
+                    .map(|_| (rng.index(100) as u32, rng.index(np) as u32))
+                    .collect(),
+            })
+            .collect(),
+    }
+}
+
+#[test]
+fn prop_checkpoint_roundtrips_arbitrary_state() {
+    let mut rng = Rng::new(0xC4E0);
+    for case in 0..60 {
+        let c = random_checkpoint(&mut rng);
+        let d = Checkpoint::<f32, u32>::decode_bytes(&c.encode_bytes());
+        assert_eq!(d.as_ref(), Some(&c), "case {case}");
+    }
+}
+
+#[test]
+fn prop_truncated_checkpoint_bytes_never_panic() {
+    // every strict prefix must be cleanly rejected — the frame's length
+    // field catches truncation before any payload decode runs
+    let mut rng = Rng::new(0xC4E1);
+    for case in 0..10 {
+        let b = random_checkpoint(&mut rng).encode_bytes();
+        for cut in 0..b.len() {
+            assert!(
+                Checkpoint::<f32, u32>::decode_bytes(&b[..cut]).is_none(),
+                "case {case}: truncation at {cut} must be rejected"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_bit_flipped_checkpoint_bytes_are_rejected() {
+    // a single bit flip anywhere — header or payload — must yield None.
+    // FNV-1a's xor-then-multiply-by-odd steps are bijective in the
+    // running hash, so a one-bit payload difference always changes the
+    // checksum; header flips fail the magic/version/length checks.
+    let mut rng = Rng::new(0xC4E2);
+    for case in 0..40 {
+        let mut b = random_checkpoint(&mut rng).encode_bytes();
+        let byte = rng.index(b.len());
+        let bit = rng.index(8) as u8;
+        b[byte] ^= 1 << bit;
+        assert!(
+            Checkpoint::<f32, u32>::decode_bytes(&b).is_none(),
+            "case {case}: flip at byte {byte} bit {bit} must be rejected"
+        );
     }
 }
 
