@@ -3,11 +3,12 @@
 //! Runs the recorded chaos matrix (engines × algorithms × schedules
 //! from `tests/chaos_suite.rs`) and emits one schema-stable JSON
 //! document per row: how many events the seeded schedule injected, how
-//! many were loss, whether the run converged, whether the fixpoint
-//! matched the clean baseline, and whether loss without checkpoints
-//! failed loudly. The committed `STRESS_chaos_results.json` at the
-//! repository root is this tool's output format (see its `provenance`
-//! field for how it was produced).
+//! many were loss, how many checkpoint rollbacks the run spent, whether
+//! the retry budget was exhausted, whether the recovered replay matched
+//! the clean baseline bit-for-bit, and whether loss without checkpoints
+//! (or an exhausted budget) failed loudly. The committed
+//! `STRESS_chaos_results.json` at the repository root is this tool's
+//! output format (see its `provenance` field for how it was produced).
 //!
 //! ```text
 //! cargo run --release --bin chaosjson                 # JSON on stdout
@@ -15,16 +16,24 @@
 //! cargo run --release --bin chaosjson -- --quick      # CI smoke scale
 //! ```
 //!
-//! Schema (version 1) — field order is fixed; additions bump the
+//! Schema (version 2) — field order is fixed; additions bump the
 //! version:
 //!
 //! ```text
 //! { schema_version, suite, provenance, measured, quick,
 //!   graph: { name, vertices, edges, partitions },
 //!   rows: [ { engine, algo, schedule, seed, events, loss_events,
-//!             recoveries, converged, matched_clean, loud_failure,
-//!             error } ] }
+//!             recoveries, retries_exhausted, replay_equal, converged,
+//!             matched_clean, loud_failure, error } ] }
 //! ```
+//!
+//! v2 (universal recovery): every barrier engine now gets a
+//! `stress+checkpoint` row (recoveries > 0, `replay_equal` asserts the
+//! rolled-back replay reconverged on the clean fixpoint) and a
+//! `kill-budget-0` row (`max_recoveries = 0` must surface the
+//! structured budget-exhausted error, never loop); graphlab-sync gains
+//! a `kill+checkpoint` recovery row and graphlab-async a
+//! `checkpoint-config-error` row for its loud rejection.
 //!
 //! Every row is a pure function of its seed: two runs of this binary
 //! produce byte-identical `rows` (the determinism the chaos suite
@@ -35,7 +44,9 @@ use std::process::ExitCode;
 
 use graphhp::algorithms::{GasWcc, IncrementalPageRank, Sssp, Wcc};
 use graphhp::bench_support::runner;
-use graphhp::engine::{ChaosPolicy, ChaosSchedule, ChaosTrace, EngineKind, Runner};
+use graphhp::engine::{
+    ChaosPolicy, ChaosSchedule, ChaosTrace, EngineKind, RecoveryPolicy, Runner,
+};
 use graphhp::graph::{generators, Graph};
 
 const USAGE: &str = "usage: chaosjson [--out FILE] [--quick]\n\
@@ -50,6 +61,8 @@ struct ChaosRow {
     events: u64,
     loss_events: u64,
     recoveries: u64,
+    retries_exhausted: bool,
+    replay_equal: bool,
     converged: bool,
     matched_clean: bool,
     loud_failure: bool,
@@ -111,35 +124,38 @@ fn push_rows<P, F>(
         events,
         loss_events: loss,
         recoveries: benign.metrics.recoveries,
+        retries_exhausted: false,
+        replay_equal: false,
         converged: true,
         matched_clean: matched(&clean.values, &benign.values),
         loud_failure: false,
         error: String::new(),
     });
 
-    // checkpoint rollback is GraphHP's; the other push engines refuse
-    // loss outright (covered by the kill row below)
-    if matches!(kind, EngineKind::GraphHP) {
-        let stress = runner(g, 4)
-            .engine(kind)
-            .checkpoint_interval(Some(2))
-            .chaos(ChaosPolicy::stress(base_seed + 1))
-            .run(prog);
-        let (events, loss) = trace_counts(&stress.chaos);
-        rows.push(ChaosRow {
-            engine: kind.to_string(),
-            algo,
-            schedule: "stress+checkpoint",
-            seed: base_seed + 1,
-            events,
-            loss_events: loss,
-            recoveries: stress.metrics.recoveries,
-            converged: true,
-            matched_clean: matched(&clean.values, &stress.values),
-            loud_failure: false,
-            error: String::new(),
-        });
-    }
+    // every barrier engine checkpoints and rolls back through the
+    // shared recovery layer (engine/recovery.rs)
+    let stress = runner(g, 4)
+        .engine(kind)
+        .checkpoint_interval(Some(2))
+        .chaos(ChaosPolicy::stress(base_seed + 1))
+        .run(prog);
+    let (events, loss) = trace_counts(&stress.chaos);
+    let stress_matched = matched(&clean.values, &stress.values);
+    rows.push(ChaosRow {
+        engine: kind.to_string(),
+        algo,
+        schedule: "stress+checkpoint",
+        seed: base_seed + 1,
+        events,
+        loss_events: loss,
+        recoveries: stress.metrics.recoveries,
+        retries_exhausted: false,
+        replay_equal: stress.metrics.recoveries > 0 && stress_matched,
+        converged: true,
+        matched_clean: stress_matched,
+        loud_failure: false,
+        error: String::new(),
+    });
 
     let killed = runner(g, 4).engine(kind).chaos(kill_policy(base_seed + 2)).try_run(prog);
     let (loud, error) = match killed {
@@ -154,6 +170,36 @@ fn push_rows<P, F>(
         events: 0,
         loss_events: 0,
         recoveries: 0,
+        retries_exhausted: false,
+        replay_equal: false,
+        converged: false,
+        matched_clean: false,
+        loud_failure: loud,
+        error,
+    });
+
+    // a zero retry budget turns the very first rollback into the
+    // structured budget-exhausted error — the bounded-retry contract
+    let broke = runner(g, 4)
+        .engine(kind)
+        .checkpoint_interval(Some(2))
+        .recovery(RecoveryPolicy { max_recoveries: 0, ..Default::default() })
+        .chaos(kill_policy(base_seed + 3))
+        .try_run(prog);
+    let (loud, exhausted, error) = match broke {
+        Ok(_) => (false, false, "zero-budget kill converged silently".to_string()),
+        Err(e) => (e.starts_with("chaos:"), e.contains("recovery budget exhausted"), e),
+    };
+    rows.push(ChaosRow {
+        engine: kind.to_string(),
+        algo,
+        schedule: "kill-budget-0",
+        seed: base_seed + 3,
+        events: 0,
+        loss_events: 0,
+        recoveries: 0,
+        retries_exhausted: exhausted,
+        replay_equal: false,
         converged: false,
         matched_clean: false,
         loud_failure: loud,
@@ -161,9 +207,9 @@ fn push_rows<P, F>(
     });
 }
 
-/// The pull-engine rows: graphlab-sync must fail loudly on a kill and
-/// record an empty trace under benign chaos; graphlab-async is
-/// documented out of scope and runs chaos-free.
+/// The pull-engine rows: graphlab-sync fails loudly on a kill without
+/// checkpoints but recovers bit-exactly with them; graphlab-async is
+/// documented out of scope and rejects a checkpoint policy loudly.
 fn gas_rows(rows: &mut Vec<ChaosRow>, g: &Graph, base_seed: u64) {
     let sync = EngineKind::GraphLabSync;
     let clean = Runner::new(g).partitions(4).engine(sync).run_gas(&GasWcc);
@@ -181,6 +227,8 @@ fn gas_rows(rows: &mut Vec<ChaosRow>, g: &Graph, base_seed: u64) {
         events,
         loss_events: loss,
         recoveries: benign.metrics.recoveries,
+        retries_exhausted: false,
+        replay_equal: false,
         converged: true,
         matched_clean: clean.values == benign.values,
         loud_failure: false,
@@ -203,30 +251,87 @@ fn gas_rows(rows: &mut Vec<ChaosRow>, g: &Graph, base_seed: u64) {
         events: 0,
         loss_events: 0,
         recoveries: 0,
+        retries_exhausted: false,
+        replay_equal: false,
         converged: false,
         matched_clean: false,
         loud_failure: loud,
         error,
     });
 
+    // with a checkpoint interval the sync engine rolls back in-memory
+    // GasSnapshots and reconverges on the clean fixpoint
+    let recovered = Runner::new(g)
+        .partitions(4)
+        .engine(sync)
+        .checkpoint_interval(Some(2))
+        .chaos(kill_policy(base_seed + 2))
+        .run_gas(&GasWcc);
+    let (events, loss) = trace_counts(&recovered.chaos);
+    let rec_matched = clean.values == recovered.values;
+    rows.push(ChaosRow {
+        engine: sync.to_string(),
+        algo: "wcc",
+        schedule: "kill+checkpoint",
+        seed: base_seed + 2,
+        events,
+        loss_events: loss,
+        recoveries: recovered.metrics.recoveries,
+        retries_exhausted: false,
+        replay_equal: recovered.metrics.recoveries > 0 && rec_matched,
+        converged: true,
+        matched_clean: rec_matched,
+        loud_failure: false,
+        error: String::new(),
+    });
+
     let kind = EngineKind::GraphLabAsync;
     let r = Runner::new(g)
         .partitions(4)
         .engine(kind)
-        .chaos(kill_policy(base_seed + 2))
+        .chaos(kill_policy(base_seed + 3))
         .run_gas(&GasWcc);
     rows.push(ChaosRow {
         engine: kind.to_string(),
         algo: "wcc",
         schedule: "out-of-scope",
-        seed: base_seed + 2,
+        seed: base_seed + 3,
         events: 0,
         loss_events: 0,
         recoveries: 0,
+        retries_exhausted: false,
+        replay_equal: false,
         converged: true,
         matched_clean: r.chaos.is_none() && clean.values == r.values,
         loud_failure: false,
         error: String::new(),
+    });
+
+    // the async engine has no barriers: a configured checkpoint policy
+    // must be rejected loudly, never dropped on the floor
+    let rejected = Runner::new(g)
+        .partitions(4)
+        .engine(kind)
+        .checkpoint_interval(Some(2))
+        .try_run_gas(&GasWcc);
+    let (loud, error) = match rejected {
+        Ok(_) => (false, "async accepted a checkpoint policy silently".to_string()),
+        Err(e) => (e.starts_with("config:"), e),
+    };
+    rows.push(ChaosRow {
+        engine: kind.to_string(),
+        algo: "wcc",
+        schedule: "checkpoint-config-error",
+        seed: base_seed + 4,
+        events: 0,
+        loss_events: 0,
+        recoveries: 0,
+        retries_exhausted: false,
+        replay_equal: false,
+        converged: false,
+        matched_clean: false,
+        loud_failure: loud,
+        error,
     });
 }
 
@@ -287,7 +392,7 @@ fn main() -> ExitCode {
 
     let mut doc = String::new();
     doc.push_str("{\n");
-    let _ = writeln!(doc, "  \"schema_version\": 1,");
+    let _ = writeln!(doc, "  \"schema_version\": 2,");
     let _ = writeln!(doc, "  \"suite\": \"chaos_stress\",");
     let _ = writeln!(
         doc,
@@ -310,6 +415,7 @@ fn main() -> ExitCode {
             doc,
             "    {{ \"engine\": \"{}\", \"algo\": \"{}\", \"schedule\": \"{}\", \
              \"seed\": {}, \"events\": {}, \"loss_events\": {}, \"recoveries\": {}, \
+             \"retries_exhausted\": {}, \"replay_equal\": {}, \
              \"converged\": {}, \"matched_clean\": {}, \"loud_failure\": {}, \
              \"error\": \"{}\" }}{}",
             json_escape(&r.engine),
@@ -319,6 +425,8 @@ fn main() -> ExitCode {
             r.events,
             r.loss_events,
             r.recoveries,
+            r.retries_exhausted,
+            r.replay_equal,
             r.converged,
             r.matched_clean,
             r.loud_failure,
@@ -332,7 +440,9 @@ fn main() -> ExitCode {
     let bad: Vec<&ChaosRow> = rows
         .iter()
         .filter(|r| match r.schedule {
-            "kill-no-checkpoint" => !r.loud_failure,
+            "kill-no-checkpoint" | "checkpoint-config-error" => !r.loud_failure,
+            "kill-budget-0" => !(r.loud_failure && r.retries_exhausted),
+            "stress+checkpoint" | "kill+checkpoint" => !r.replay_equal,
             _ => !r.matched_clean,
         })
         .collect();

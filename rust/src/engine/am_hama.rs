@@ -12,9 +12,12 @@
 //!
 //! Routing policy: `LocalRoute::ThisSweep`. The worker body lives in
 //! `super::worker`; workers run in parallel per
-//! [`super::EngineConfig::parallelism`].
+//! [`super::EngineConfig::parallelism`]. With
+//! `FaultPolicy::checkpoint_interval` set, the engine snapshots at the
+//! superstep boundary and recovers from injected loss through the
+//! shared recovery layer (`engine/recovery.rs`).
 
-use crate::graph::DistGraph;
+use crate::graph::{DistGraph, MigrationPlan};
 
 use super::aggregator::Aggregators;
 use super::messages::Outbox;
@@ -22,9 +25,11 @@ use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
 use super::migrate::{remap_runtimes, MigrationPlanner};
 use super::netsim::SuperstepClock;
 use super::program::{SourceCombine, VertexProgram};
+use super::recovery::{persist_checkpoint, RecoveryCoordinator};
 use super::worker::{
-    boundary_count, close_superstep, init_worker_states, run_workers, LocalRoute,
-    ProcessedMarks, Reschedule, Sweep, WorkerOut, WorkerScratch, WorkerState,
+    boundary_count, close_superstep, init_worker_states, restore_worker_states, run_workers,
+    snapshot_worker_states, LocalRoute, ProcessedMarks, Reschedule, Sweep, WorkerOut,
+    WorkerScratch, WorkerState,
 };
 use super::{EngineConfig, RunResult};
 
@@ -56,9 +61,20 @@ pub fn run_am_hama<P: VertexProgram>(
     let mut superstep: u64 = 0;
     let planner = cfg.repartition.map(MigrationPlanner::new);
     let mut dg_owned: Option<Box<DistGraph>> = None;
+    let mut applied_plans: Vec<MigrationPlan> = Vec::new();
     let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
+    let mut recovery = RecoveryCoordinator::new(cfg.fault.recovery);
 
     loop {
+        // ---- fault tolerance (paper §5.3, via engine/recovery.rs):
+        // snapshot the full superstep-boundary state so a chaos loss
+        // event rolls back and replays instead of panicking
+        if recovery.should_checkpoint(&cfg.fault, superstep) {
+            let ckpt = snapshot_worker_states(superstep, &mut workers, &applied_plans);
+            persist_checkpoint(&ckpt, &cfg.fault);
+            recovery.install(superstep, ckpt, &mut metrics);
+        }
+
         let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let outs = run_workers(cfg.parallelism, &mut workers, |p, ws| {
             ws.outbox.reset();
@@ -128,10 +144,21 @@ pub fn run_am_hama<P: VertexProgram>(
             super::invariants::check_runtime(&ws.rt);
         }
 
-        // ---- chaos: a loss event corrupted this barrier. AM-Hama has
-        // no checkpointing — refuse to continue on partial state.
+        // ---- chaos recovery: a loss event corrupted this barrier —
+        // roll every worker back to the latest checkpoint and replay
+        // (the monotone chaos counter keeps advancing, so the replay
+        // draws fresh RNG streams and a consumed kill never re-fires).
+        // Without a checkpoint the coordinator refuses loss loudly.
         if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
-            panic!("{}", super::chaos::no_checkpoint_panic("am-hama", &reason));
+            let ckpt = recovery.rollback("am-hama", &reason, &mut metrics);
+            let (ws, at) =
+                restore_worker_states(dg, ckpt, &mut dg_owned, &mut applied_plans, combiner);
+            workers = ws;
+            superstep = at;
+            if let Some(ctl) = chaos_ctl.as_mut() {
+                ctl.note_recovery();
+            }
+            continue;
         }
 
         // ---- online repartitioning: every partition is step-closed and
@@ -141,6 +168,34 @@ pub fn run_am_hama<P: VertexProgram>(
             step.routing_epoch = dgr.routing.epoch;
             let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, superstep));
             if let Some(plan) = plan {
+                // chaos: a kill scheduled inside this migration window
+                // fires between plan and apply — abandon the plan and
+                // roll back; the replay re-derives the identical plan
+                // from the same counters and applies it cleanly
+                let survive = match chaos_ctl.as_mut() {
+                    Some(ctl) => ctl.judge_migration(plan.len() as u64),
+                    None => true,
+                };
+                if !survive {
+                    let reason = chaos_ctl
+                        .as_mut()
+                        .and_then(|c| c.take_pending())
+                        .expect("migration kill raised a pending loss");
+                    let ckpt = recovery.rollback("am-hama", &reason, &mut metrics);
+                    let (ws, at) = restore_worker_states(
+                        dg,
+                        ckpt,
+                        &mut dg_owned,
+                        &mut applied_plans,
+                        combiner,
+                    );
+                    workers = ws;
+                    superstep = at;
+                    if let Some(ctl) = chaos_ctl.as_mut() {
+                        ctl.note_recovery();
+                    }
+                    continue;
+                }
                 step.migrated = plan.len() as u64;
                 let new_dg = Box::new(dgr.apply_migration(&plan));
                 let rts = remap_runtimes(
@@ -161,6 +216,7 @@ pub fn run_am_hama<P: VertexProgram>(
                         }
                     })
                     .collect();
+                applied_plans.push(plan);
                 dg_owned = Some(new_dg);
             }
         }

@@ -35,8 +35,13 @@
 //!   transport detects every loss event *at the barrier it corrupts*
 //!   (sequence-number gap) and raises a pending-recovery flag. The
 //!   engine must then either roll every partition back to the last
-//!   checkpoint (GraphHP) or fail loudly (engines without
-//!   checkpointing) — never continue on partially-delivered state.
+//!   checkpoint (any barrier engine with `checkpoint_interval` set —
+//!   the shared rollback lives in `engine/recovery.rs`) or fail loudly
+//!   (checkpointing disabled) — never continue on partially-delivered
+//!   state. `MigrationKill` extends the kill family into migration
+//!   windows: the worker dies between `MigrationPlanner::plan` and
+//!   `apply_migration`, the planned epoch is abandoned, and recovery
+//!   replays the checkpointed plan trajectory exactly.
 //!   Held mail is **never delivered late**: the rolled-back timeline
 //!   regenerates it, which is what keeps recovery bit-identical to the
 //!   clean run.
@@ -86,6 +91,11 @@ pub enum ChaosEventKind {
     /// Worker killed at the barrier (loss; generalizes
     /// `inject_failure_at` to repeated failures).
     Kill,
+    /// Worker killed inside a migration window — between
+    /// `MigrationPlanner::plan` returning a plan and `apply_migration`
+    /// (loss; the planned epoch is abandoned and recovery replays the
+    /// checkpointed migration trajectory).
+    MigrationKill,
     /// The engine rolled back to a checkpoint in response to a loss
     /// event.
     Recover,
@@ -102,6 +112,7 @@ impl ChaosEventKind {
             ChaosEventKind::SplitHold => "split_hold",
             ChaosEventKind::Heal => "heal",
             ChaosEventKind::Kill => "kill",
+            ChaosEventKind::MigrationKill => "migration_kill",
             ChaosEventKind::Recover => "recover",
         }
     }
@@ -115,6 +126,7 @@ impl ChaosEventKind {
                 | ChaosEventKind::Delay
                 | ChaosEventKind::SplitHold
                 | ChaosEventKind::Kill
+                | ChaosEventKind::MigrationKill
         )
     }
 }
@@ -194,6 +206,12 @@ pub struct ChaosSchedule {
     /// Monotone barriers at which a worker is killed (each entry fires
     /// once; generalizes `inject_failure_at` to repeated failures).
     pub kill_at: Vec<u64>,
+    /// Monotone barriers at whose *migration window* a worker is killed:
+    /// the kill fires between `MigrationPlanner::plan` returning a plan
+    /// and `apply_migration`, at the first open window at or after the
+    /// scheduled barrier (each entry fires once). Vacuous unless online
+    /// repartitioning is enabled and the planner emits a plan.
+    pub migration_kill_at: Vec<u64>,
     /// Partition-then-heal windows.
     pub splits: Vec<NetSplit>,
     /// Hard cap on loss events per run — the termination backstop that
@@ -214,6 +232,7 @@ impl Default for ChaosSchedule {
             senders: Vec::new(),
             receivers: Vec::new(),
             kill_at: Vec::new(),
+            migration_kill_at: Vec::new(),
             splits: Vec::new(),
             max_loss_events: 64,
         }
@@ -335,6 +354,8 @@ pub struct ChaosController {
     superstep: u64,
     /// Next unconsumed entry of the (sorted) kill list.
     kill_cursor: usize,
+    /// Next unconsumed entry of the (sorted) migration-kill list.
+    mig_kill_cursor: usize,
     /// Which splits have had their `Heal` event recorded.
     healed: Vec<bool>,
     /// Loss verdicts issued so far (bounded by `max_loss_events`).
@@ -352,6 +373,7 @@ impl ChaosController {
     pub fn new(policy: &ChaosPolicy) -> Self {
         let mut sched = policy.schedule.clone();
         sched.kill_at.sort_unstable();
+        sched.migration_kill_at.sort_unstable();
         let healed = vec![false; sched.splits.len()];
         ChaosController {
             seed: policy.seed,
@@ -359,6 +381,7 @@ impl ChaosController {
             sched,
             superstep: 0,
             kill_cursor: 0,
+            mig_kill_cursor: 0,
             healed,
             loss_events: 0,
             batch_seq: 0,
@@ -435,6 +458,33 @@ impl ChaosController {
             let s = self.superstep;
             self.raise(format!("worker killed at barrier {s}"));
         }
+    }
+
+    /// Verdict for one open migration window (`moves` planned moves) at
+    /// the current barrier: `true` = apply the plan, `false` = a worker
+    /// was killed between plan and apply, the plan must be abandoned,
+    /// and a recovery is pending. Each scheduled entry fires exactly
+    /// once, at the first *open* window at or after its barrier —
+    /// windows only open when the planner actually emits a plan, so an
+    /// entry can fire later than scheduled (or never, without a
+    /// planner). Recovery replays the checkpointed plan trajectory; the
+    /// abandoned plan is re-derived identically from the same counters
+    /// and applies cleanly on the retry.
+    pub(crate) fn judge_migration(&mut self, moves: u64) -> bool {
+        if self.mig_kill_cursor < self.sched.migration_kill_at.len()
+            && self.sched.migration_kill_at[self.mig_kill_cursor] <= self.superstep
+        {
+            self.mig_kill_cursor += 1;
+            self.loss_events += 1;
+            self.record(ChaosEventKind::MigrationKill, NO_PART, NO_PART, 0, 0);
+            let s = self.superstep;
+            self.raise(format!(
+                "worker killed in the migration window at barrier {s} \
+                 ({moves} planned moves abandoned)"
+            ));
+            return false;
+        }
+        true
     }
 
     /// Take the pending loss reason, if any. The engine MUST respond:
@@ -645,6 +695,39 @@ mod tests {
     fn empty_trace_serializes() {
         let t = ChaosTrace { seed: 0, events: Vec::new() };
         assert!(t.to_json().contains("\"events\": []"));
+    }
+
+    #[test]
+    fn migration_kill_fires_once_at_first_open_window() {
+        let mut ctl = ChaosController::new(&ChaosPolicy {
+            seed: 2,
+            schedule: ChaosSchedule { migration_kill_at: vec![3], ..ChaosSchedule::default() },
+        });
+        for s in 0..8 {
+            ctl.begin_barrier(s);
+            ctl.end_barrier();
+            assert!(ctl.take_pending().is_none(), "barrier events leaked a pending");
+            // windows only open at even barriers in this synthetic run
+            if s % 2 == 0 {
+                let applied = ctl.judge_migration(7);
+                if s < 3 {
+                    assert!(applied, "entry must wait for its barrier");
+                    assert!(ctl.take_pending().is_none());
+                } else if s == 4 {
+                    assert!(!applied, "first open window at/after barrier 3 must kill");
+                    let reason = ctl.take_pending().expect("migration kill raises a pending");
+                    assert!(reason.contains("migration window"), "{reason}");
+                    ctl.note_recovery();
+                } else {
+                    assert!(applied, "a consumed entry must never re-fire");
+                    assert!(ctl.take_pending().is_none());
+                }
+            }
+        }
+        let t = ctl.into_trace();
+        assert_eq!(t.count(ChaosEventKind::MigrationKill), 1);
+        assert_eq!(t.count(ChaosEventKind::Recover), 1);
+        assert_eq!(t.loss_events(), 1, "a migration kill is a loss event");
     }
 
     #[test]

@@ -19,6 +19,15 @@
 //! holds for the adaptive scheduler's per-partition caps/streaks/skip
 //! flags: without them, rolled-back iterations would replay under a
 //! schedule the clean run never executed.
+//!
+//! The [`Checkpoint`] container is shared by **every** barrier engine,
+//! not just GraphHP: the push engines (Hama, AM-Hama, Giraph++)
+//! snapshot their generalized worker state into the same structure via
+//! `engine/recovery.rs` (the GraphHP-specific `PolicyCheckpoint` slots
+//! simply stay at their defaults there), and the rollback/replay
+//! lifecycle is driven by the shared `RecoveryCoordinator`.
+//! GraphLab-sync checkpoints in memory only (its GAS value types carry
+//! no [`Codec`] bound) — see `engine/recovery.rs`.
 
 use std::path::Path;
 

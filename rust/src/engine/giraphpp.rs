@@ -15,7 +15,7 @@
 //! [`VertexSweep`] adapter runs any [`VertexProgram`] under those
 //! single-sweep semantics via the shared `super::worker::Sweep` body.
 
-use crate::graph::{DistGraph, PartGraph, VertexId};
+use crate::graph::{DistGraph, MigrationPlan, PartGraph, VertexId};
 use crate::util::Codec;
 
 use super::messages::{MsgStore, Outbox};
@@ -23,10 +23,12 @@ use super::metrics::{Metrics, PartitionStepTrace, RunTrace};
 use super::migrate::{remap_runtimes, MigrationPlanner};
 use super::netsim::SuperstepClock;
 use super::program::{SourceCombine, VertexProgram};
+use super::recovery::{persist_checkpoint, RecoveryCoordinator};
 use super::state::{Frontier, PartitionRuntime};
 use super::worker::{
-    boundary_count, close_superstep, run_workers, LocalRoute, ProcessedMarks, Reschedule, Sweep,
-    SweepTarget, WorkerOut, WorkerScratch,
+    boundary_count, close_superstep, restore_worker_states, run_workers, snapshot_worker_states,
+    LocalRoute, ProcessedMarks, Reschedule, Sweep, SweepTarget, WorkerOut, WorkerScratch,
+    WorkerState,
 };
 use super::{Aggregators, EngineConfig, RunResult};
 
@@ -126,16 +128,10 @@ impl<'a, PP: PartitionProgram> PartitionContext<'a, PP> {
     }
 }
 
-/// What a Giraph++ worker owns for its partition: the shared runtime
-/// plus the pooled outbox and sweep scratch (reused across supersteps).
-struct GpWorker<PP: PartitionProgram> {
-    rt: PartitionRuntime<PP::V, PP::M>,
-    outbox: Outbox<PP::M>,
-    scratch: WorkerScratch<PP::M>,
-    marks: ProcessedMarks,
-}
-
-/// Run a [`PartitionProgram`] to completion.
+/// Run a [`PartitionProgram`] to completion. Workers own the shared
+/// `WorkerState` (runtime + pooled outbox + sweep scratch), which is
+/// also what lets this engine share the universal checkpoint/rollback
+/// helpers in `engine/worker.rs`/`engine/recovery.rs`.
 ///
 /// Legacy entry point — use [`super::Runner::run_partition`] (or
 /// [`super::Runner::run`] with [`super::EngineKind::GiraphPP`] for a
@@ -147,7 +143,7 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     cfg: &EngineConfig,
 ) -> RunResult<PP::V> {
     let combiner = program.combiner();
-    let mut workers: Vec<GpWorker<PP>> = dg
+    let mut workers: Vec<WorkerState<PP::V, PP::M>> = dg
         .parts
         .iter()
         .map(|pg| {
@@ -157,11 +153,11 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                     .collect(),
             );
             let n = rt.num_vertices();
-            GpWorker {
+            WorkerState {
                 rt,
-                outbox: Outbox::new(combiner),
                 scratch: WorkerScratch::new(),
                 marks: ProcessedMarks::new(n),
+                outbox: Outbox::new(combiner),
             }
         })
         .collect();
@@ -175,12 +171,23 @@ pub fn run_giraphpp<PP: PartitionProgram>(
     let mut superstep: u64 = 0;
     let planner = cfg.repartition.map(MigrationPlanner::new);
     let mut dg_owned: Option<Box<DistGraph>> = None;
+    let mut applied_plans: Vec<MigrationPlan> = Vec::new();
     let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
+    let mut recovery = RecoveryCoordinator::new(cfg.fault.recovery);
 
     loop {
+        // ---- fault tolerance (paper §5.3, via engine/recovery.rs):
+        // snapshot the full superstep-boundary state so a chaos loss
+        // event rolls back and replays instead of panicking
+        if recovery.should_checkpoint(&cfg.fault, superstep) {
+            let ckpt = snapshot_worker_states(superstep, &mut workers, &applied_plans);
+            persist_checkpoint(&ckpt, &cfg.fault);
+            recovery.install(superstep, ckpt, &mut metrics);
+        }
+
         let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let outs = run_workers(cfg.parallelism, &mut workers, |p, w| {
-            let GpWorker { rt, outbox, scratch, marks } = w;
+            let WorkerState { rt, scratch, marks, outbox } = w;
             outbox.reset();
             let scheduled = rt.begin_step();
             let pt = PartitionStepTrace {
@@ -250,10 +257,21 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             super::invariants::check_runtime(&w.rt);
         }
 
-        // ---- chaos: a loss event corrupted this barrier. Giraph++ has
-        // no checkpointing — refuse to continue on partial state.
+        // ---- chaos recovery: a loss event corrupted this barrier —
+        // roll every worker back to the latest checkpoint and replay
+        // (the monotone chaos counter keeps advancing, so the replay
+        // draws fresh RNG streams and a consumed kill never re-fires).
+        // Without a checkpoint the coordinator refuses loss loudly.
         if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
-            panic!("{}", super::chaos::no_checkpoint_panic("giraph++", &reason));
+            let ckpt = recovery.rollback("giraph++", &reason, &mut metrics);
+            let (ws, at) =
+                restore_worker_states(dg, ckpt, &mut dg_owned, &mut applied_plans, combiner);
+            workers = ws;
+            superstep = at;
+            if let Some(ctl) = chaos_ctl.as_mut() {
+                ctl.note_recovery();
+            }
+            continue;
         }
 
         // ---- online repartitioning: every partition is step-closed and
@@ -263,6 +281,34 @@ pub fn run_giraphpp<PP: PartitionProgram>(
             step.routing_epoch = dgr.routing.epoch;
             let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, superstep));
             if let Some(plan) = plan {
+                // chaos: a kill scheduled inside this migration window
+                // fires between plan and apply — abandon the plan and
+                // roll back; the replay re-derives the identical plan
+                // from the same counters and applies it cleanly
+                let survive = match chaos_ctl.as_mut() {
+                    Some(ctl) => ctl.judge_migration(plan.len() as u64),
+                    None => true,
+                };
+                if !survive {
+                    let reason = chaos_ctl
+                        .as_mut()
+                        .and_then(|c| c.take_pending())
+                        .expect("migration kill raised a pending loss");
+                    let ckpt = recovery.rollback("giraph++", &reason, &mut metrics);
+                    let (ws, at) = restore_worker_states(
+                        dg,
+                        ckpt,
+                        &mut dg_owned,
+                        &mut applied_plans,
+                        combiner,
+                    );
+                    workers = ws;
+                    superstep = at;
+                    if let Some(ctl) = chaos_ctl.as_mut() {
+                        ctl.note_recovery();
+                    }
+                    continue;
+                }
                 step.migrated = plan.len() as u64;
                 let new_dg = Box::new(dgr.apply_migration(&plan));
                 let rts = remap_runtimes(
@@ -275,14 +321,15 @@ pub fn run_giraphpp<PP: PartitionProgram>(
                     .into_iter()
                     .map(|rt| {
                         let n = rt.num_vertices();
-                        GpWorker {
+                        WorkerState {
                             rt,
-                            outbox: Outbox::new(combiner),
                             scratch: WorkerScratch::new(),
                             marks: ProcessedMarks::new(n),
+                            outbox: Outbox::new(combiner),
                         }
                     })
                     .collect();
+                applied_plans.push(plan);
                 dg_owned = Some(new_dg);
             }
         }

@@ -278,7 +278,9 @@ pub fn run_graphhp<P: VertexProgram>(
     let mut policies = build_policies(&cfg.hybrid, &trace.partition_locality, limit_cap);
 
     let mut iteration: u64 = 0;
-    let mut last_ckpt: Option<super::checkpoint::Checkpoint<P::V, P::M>> = None;
+    let mut recovery: super::recovery::RecoveryCoordinator<
+        super::checkpoint::Checkpoint<P::V, P::M>,
+    > = super::recovery::RecoveryCoordinator::new(cfg.fault.recovery);
     let mut failure_pending = cfg.fault.inject_failure_at;
     let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
 
@@ -291,7 +293,7 @@ pub fn run_graphhp<P: VertexProgram>(
 
     loop {
         // ---- fault tolerance (paper §5.3) --------------------------
-        if cfg.fault.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0) {
+        if recovery.should_checkpoint(&cfg.fault, iteration) {
             // the snapshot covers the local-phase runtime state too:
             // after a cap-truncated local phase the carryover frontier
             // and in-flight mail are live state at the boundary
@@ -306,22 +308,16 @@ pub fn run_graphhp<P: VertexProgram>(
                 policy: policies.clone(),
                 migrations: applied_plans.clone(),
             };
-            if let Some(dir) = &cfg.fault.checkpoint_dir {
-                let _ = ckpt.save(dir);
-                // retention: keep only the newest K files — recovery
-                // only ever loads the newest, so the directory must not
-                // grow without bound across long runs
-                if let Some(k) = cfg.fault.checkpoint_retain {
-                    let _ = super::checkpoint::prune_checkpoints(dir, k);
-                }
-            }
-            last_ckpt = Some(ckpt);
-            metrics.checkpoints += 1;
+            super::recovery::persist_checkpoint(&ckpt, &cfg.fault);
+            recovery.install(iteration, ckpt, &mut metrics);
         }
         if failure_pending == Some(iteration) {
+            // legacy single-failure drill: budget-exempt by design (it
+            // models one planned loss, not chaos pressure), so it reads
+            // the snapshot directly instead of charging `rollback`
             failure_pending = None;
             metrics.recoveries += 1;
-            match &last_ckpt {
+            match recovery.last() {
                 Some(ckpt) => {
                     // worker lost: reassign its partitions and roll every
                     // worker back to the latest consistent checkpoint —
@@ -572,29 +568,20 @@ pub fn run_graphhp<P: VertexProgram>(
         // delivered late: the rolled-back timeline regenerates it, which
         // is what keeps the recovered run bit-identical to a clean one.
         if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
-            match &last_ckpt {
-                Some(ckpt) => {
-                    metrics.recoveries += 1;
-                    iteration = restore_from_checkpoint(
-                        program,
-                        dg,
-                        ckpt,
-                        &mut dg_owned,
-                        &mut applied_plans,
-                        &mut parts,
-                        &mut policies,
-                    );
-                    if let Some(ctl) = chaos_ctl.as_mut() {
-                        ctl.note_recovery();
-                    }
-                    continue;
-                }
-                None => panic!(
-                    "chaos: {reason} at iteration {iteration} with no checkpoint to \
-                     roll back to; refusing to converge to a silently wrong fixpoint \
-                     (set FaultPolicy::checkpoint_interval or drop the lossy schedule)"
-                ),
+            let ckpt = recovery.rollback("graphhp", &reason, &mut metrics);
+            iteration = restore_from_checkpoint(
+                program,
+                dg,
+                ckpt,
+                &mut dg_owned,
+                &mut applied_plans,
+                &mut parts,
+                &mut policies,
+            );
+            if let Some(ctl) = chaos_ctl.as_mut() {
+                ctl.note_recovery();
             }
+            continue;
         }
 
         // ---- adaptive barrier update: fold the just-recorded counters
@@ -616,6 +603,36 @@ pub fn run_graphhp<P: VertexProgram>(
             step.routing_epoch = dgr.routing.epoch;
             let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, iteration));
             if let Some(plan) = plan {
+                // chaos: a kill scheduled inside this migration window
+                // fires between plan and apply — the planned epoch is
+                // abandoned and the engine rolls back; the replay
+                // re-derives the identical plan from the same counters
+                // and the consumed entry never re-fires, so the retried
+                // window applies cleanly
+                let survive = match chaos_ctl.as_mut() {
+                    Some(ctl) => ctl.judge_migration(plan.len() as u64),
+                    None => true,
+                };
+                if !survive {
+                    let reason = chaos_ctl
+                        .as_mut()
+                        .and_then(|c| c.take_pending())
+                        .expect("migration kill raised a pending loss");
+                    let ckpt = recovery.rollback("graphhp", &reason, &mut metrics);
+                    iteration = restore_from_checkpoint(
+                        program,
+                        dg,
+                        ckpt,
+                        &mut dg_owned,
+                        &mut applied_plans,
+                        &mut parts,
+                        &mut policies,
+                    );
+                    if let Some(ctl) = chaos_ctl.as_mut() {
+                        ctl.note_recovery();
+                    }
+                    continue;
+                }
                 step.migrated = plan.len() as u64;
                 let new_dg = Box::new(dgr.apply_migration(&plan));
                 let mut rts = Vec::with_capacity(parts.len());
@@ -691,12 +708,7 @@ fn restore_from_checkpoint<P: VertexProgram>(
     parts: &mut Vec<HpPart<P>>,
     policies: &mut Vec<PartitionPolicy>,
 ) -> u64 {
-    let mut rebuilt: Option<Box<DistGraph>> = None;
-    for plan in &ckpt.migrations {
-        let base: &DistGraph = rebuilt.as_deref().unwrap_or(dg);
-        rebuilt = Some(Box::new(base.apply_migration(plan)));
-    }
-    *dg_owned = rebuilt;
+    *dg_owned = super::recovery::replay_geometry(dg, &ckpt.migrations);
     *applied_plans = ckpt.migrations.clone();
     let dgc: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
     *parts = dgc.parts.iter().map(|pg| HpPart::new(program, pg)).collect();

@@ -38,14 +38,26 @@
 //! moves — results are bitwise identical to a static-partition run; only
 //! the simulated remote-gather accounting shifts. The async engine has
 //! no barriers and ignores `cfg.repartition` entirely.
+//!
+//! # Fault tolerance
+//!
+//! With `FaultPolicy::checkpoint_interval` set, the sync engine takes
+//! in-memory `GasSnapshot` checkpoints at round boundaries (GAS values
+//! carry no `Codec` bound, so nothing is persisted to disk) and rolls
+//! back + replays through the shared recovery layer when chaos kills a
+//! worker — including kills landing inside a migration window. The
+//! async engine has no barriers, hence no consistent cut to checkpoint:
+//! a configured `checkpoint_interval` is rejected with a loud
+//! `config:` error rather than being silently ignored.
 
 use std::time::Duration;
 
-use crate::graph::{DistGraph, VertexId};
+use crate::graph::{DistGraph, MigrationPlan, VertexId};
 
 use super::metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
 use super::migrate::MigrationPlanner;
 use super::netsim::SuperstepClock;
+use super::recovery::{replay_geometry, GasSnapshot, RecoveryCoordinator};
 use super::state::{FifoScheduler, Frontier};
 use super::worker::run_workers;
 use super::{EngineConfig, RunResult};
@@ -200,8 +212,14 @@ pub fn run_graphlab_sync<P: GasProgram>(
     // chaos: the pull model has no message plane — batch events
     // (drop/delay/duplicate/reorder/splits) are vacuous here and never
     // fire, but scheduled worker kills still apply at every round
-    // barrier, and sync GraphLab has no checkpointing to survive them
+    // barrier; with `FaultPolicy::checkpoint_interval` set the engine
+    // survives them through in-memory `GasSnapshot` checkpoints
     let mut chaos_ctl = cfg.chaos.as_ref().map(super::chaos::ChaosController::new);
+    // GAS values carry no Codec bound, so sync-GraphLab checkpoints stay
+    // in memory (checkpoint_dir is a push-engine affordance)
+    let mut recovery: RecoveryCoordinator<GasSnapshot<P::V>> =
+        RecoveryCoordinator::new(cfg.fault.recovery);
+    let mut applied_plans: Vec<MigrationPlan> = Vec::new();
 
     // the shared scheduling structure of the push engines doubles as
     // GraphLab's round scheduler: rounds begin by draining it (the step
@@ -222,6 +240,17 @@ pub fn run_graphlab_sync<P: GasProgram>(
     loop {
         if rounds >= cfg.limits.max_iterations {
             break;
+        }
+        // ---- fault tolerance (via engine/recovery.rs): snapshot the
+        // round-start state BEFORE frontier.take() drains the scheduler
+        if recovery.should_checkpoint(&cfg.fault, rounds) {
+            let snap = GasSnapshot {
+                round: rounds,
+                values: values.clone(),
+                frontier: frontier.snapshot(),
+                plans: applied_plans.clone(),
+            };
+            recovery.install(rounds, snap, &mut metrics);
         }
         let dgr: &DistGraph = dg_owned.as_deref().unwrap_or(dg);
         let active = frontier.take();
@@ -330,9 +359,23 @@ pub fn run_graphlab_sync<P: GasProgram>(
         if let Some(ctl) = chaos_ctl.as_mut() {
             ctl.begin_barrier(trace.steps.len() as u64 - 1);
             ctl.end_barrier();
-            if let Some(reason) = ctl.take_pending() {
-                panic!("{}", super::chaos::no_checkpoint_panic("graphlab-sync", &reason));
+        }
+        // a loss event corrupted this round — roll back to the latest
+        // in-memory snapshot and replay (the monotone counter keeps the
+        // consumed kill from re-firing); without a checkpoint the
+        // coordinator refuses loss loudly
+        if let Some(reason) = chaos_ctl.as_mut().and_then(|c| c.take_pending()) {
+            let snap = recovery.rollback("graphlab-sync", &reason, &mut metrics);
+            values = snap.values.clone();
+            frontier = Frontier::restore(nv, &snap.frontier);
+            applied_plans = snap.plans.clone();
+            rounds = snap.round;
+            dg_owned = replay_geometry(dg, &snap.plans);
+            view = GasView::new(dg_owned.as_deref().unwrap_or(dg));
+            if let Some(ctl) = chaos_ctl.as_mut() {
+                ctl.note_recovery();
             }
+            continue;
         }
 
         // ---- online repartitioning: values and the round scheduler are
@@ -343,9 +386,34 @@ pub fn run_graphlab_sync<P: GasProgram>(
             step.routing_epoch = dgr.routing.epoch;
             let plan = planner.as_ref().and_then(|pl| pl.plan(dgr, step, rounds));
             if let Some(plan) = plan {
+                // chaos: a kill scheduled inside this migration window
+                // fires between plan and apply — abandon the plan, roll
+                // back, and let the replay re-derive it deterministically
+                let survive = match chaos_ctl.as_mut() {
+                    Some(ctl) => ctl.judge_migration(plan.len() as u64),
+                    None => true,
+                };
+                if !survive {
+                    let reason = chaos_ctl
+                        .as_mut()
+                        .and_then(|c| c.take_pending())
+                        .expect("migration kill raised a pending loss");
+                    let snap = recovery.rollback("graphlab-sync", &reason, &mut metrics);
+                    values = snap.values.clone();
+                    frontier = Frontier::restore(nv, &snap.frontier);
+                    applied_plans = snap.plans.clone();
+                    rounds = snap.round;
+                    dg_owned = replay_geometry(dg, &snap.plans);
+                    view = GasView::new(dg_owned.as_deref().unwrap_or(dg));
+                    if let Some(ctl) = chaos_ctl.as_mut() {
+                        ctl.note_recovery();
+                    }
+                    continue;
+                }
                 step.migrated = plan.len() as u64;
                 let new_dg = Box::new(dgr.apply_migration(&plan));
                 view = GasView::new(&new_dg);
+                applied_plans.push(plan);
                 dg_owned = Some(new_dg);
             }
         }
@@ -368,6 +436,12 @@ pub fn run_graphlab_sync<P: GasProgram>(
 /// break the determinism guarantee the other engines honor. The engine
 /// *models* the paper's reduced async parallelism through [`GasCost`].
 ///
+/// Checkpoint/recovery is documented out of scope: with no barriers
+/// there is no consistent cut to snapshot at, so a configured
+/// `FaultPolicy::checkpoint_interval` is rejected loudly (observe it as
+/// a structured error through [`super::Runner::try_run_gas`]) instead
+/// of being silently dropped.
+///
 /// Legacy entry point — use [`super::Runner::run_gas`] with
 /// [`super::EngineKind::GraphLabAsync`]; kept as a delegate for one
 /// release.
@@ -377,6 +451,13 @@ pub fn run_graphlab_async<P: GasProgram>(
     dg: &DistGraph,
     cfg: &EngineConfig,
 ) -> RunResult<P::V> {
+    if cfg.fault.checkpoint_interval.is_some() {
+        panic!(
+            "config: FaultPolicy::checkpoint_interval is set but the graphlab-async \
+             engine has no barriers to checkpoint at; run GraphLabSync or clear the \
+             checkpoint policy (use Runner::try_run_gas to observe this error)"
+        );
+    }
     let nv = dg.num_vertices;
     let num_parts = dg.num_parts();
     let view = GasView::new(dg);

@@ -22,9 +22,15 @@
 //!    order preserved) and carryover frontier entries — to each
 //!    vertex's new owner.
 //!
-//! Plans are [`Codec`](crate::util::Codec)-encodable pure data, so the
-//! GraphHP engine checkpoints the applied-plan trajectory and replays
-//! it bit-for-bit on recovery (the `PolicyCheckpoint` contract).
+//! Plans are [`Codec`](crate::util::Codec)-encodable pure data, so
+//! every barrier engine checkpoints the applied-plan trajectory and
+//! replays it bit-for-bit on recovery (`engine/recovery.rs` replays
+//! the plans over the base graph to rebuild the checkpointed
+//! geometry). The window between [`MigrationPlanner::plan`] and
+//! [`DistGraph::apply_migration`] is itself a chaos target
+//! (`ChaosSchedule::migration_kill_at`): a kill there abandons the
+//! planned moves and recovery re-derives the identical plan from the
+//! checkpointed counters.
 //!
 //! [`RunTrace`]: super::RunTrace
 

@@ -114,6 +114,7 @@ pub mod metrics;
 pub mod migrate;
 pub mod netsim;
 pub mod program;
+pub mod recovery;
 pub mod runner;
 pub mod state;
 pub(crate) mod worker;
@@ -126,6 +127,7 @@ pub use metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
 pub use migrate::{MigrationPlanner, RepartitionConfig};
 pub use netsim::NetSimConfig;
 pub use program::{SourceCombine, VertexProgram};
+pub use recovery::RecoveryPolicy;
 pub use runner::{Partitioner, Runner};
 
 use crate::graph::DistGraph;
@@ -404,11 +406,20 @@ impl Default for AdaptiveConfig {
     }
 }
 
-/// Checkpointing and deterministic fault injection (paper §5.3;
-/// GraphHP engine only).
+/// Checkpointing and deterministic fault injection (paper §5.3).
+///
+/// Honored by every barrier engine — GraphHP, Hama, AM-Hama, Giraph++
+/// and GraphLab-sync — through the shared recovery layer
+/// ([`recovery`]): with `checkpoint_interval` set, a detected chaos
+/// loss event rolls the run back to the latest checkpoint and replays
+/// bit-identically instead of panicking. The async GraphLab engine has
+/// no barriers and rejects a configured interval loudly rather than
+/// silently ignoring it. `checkpoint_dir` persistence applies to the
+/// vertex-centric engines only (GAS values carry no `Codec` bound, so
+/// GraphLab-sync checkpoints stay in memory).
 #[derive(Clone, Debug)]
 pub struct FaultPolicy {
-    /// Checkpoint every N global iterations (None = off).
+    /// Checkpoint every N global iterations/supersteps (None = off).
     pub checkpoint_interval: Option<u64>,
     /// Directory for persisted checkpoints (None = keep in memory only).
     pub checkpoint_dir: Option<std::path::PathBuf>,
@@ -420,6 +431,9 @@ pub struct FaultPolicy {
     /// Simulate losing a worker at the start of the given global
     /// iteration; the engine recovers from the latest checkpoint.
     pub inject_failure_at: Option<u64>,
+    /// Bounded rollback budget and post-recovery checkpoint backoff
+    /// shared by all barrier engines (see [`RecoveryPolicy`]).
+    pub recovery: RecoveryPolicy,
 }
 
 impl Default for FaultPolicy {
@@ -429,6 +443,7 @@ impl Default for FaultPolicy {
             checkpoint_dir: None,
             checkpoint_retain: Some(4),
             inject_failure_at: None,
+            recovery: RecoveryPolicy::default(),
         }
     }
 }

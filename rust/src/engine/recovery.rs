@@ -1,0 +1,281 @@
+//! The shared checkpoint/rollback layer every barrier engine recovers
+//! through (paper §5.3: master-coordinated checkpoint + all-worker
+//! rollback).
+//!
+//! Through PR 9 only the hybrid engine could *recover* from an injected
+//! loss event — Hama, AM-Hama, Giraph++ and GraphLab-sync refused loss
+//! outright via `no_checkpoint_panic` (engine/chaos.rs). This module
+//! extracts the machinery GraphHP used (snapshot at the iteration
+//! boundary, rollback to the latest snapshot, bit-exact replay driven by
+//! the monotone chaos counter, migration-trajectory restoration) into
+//! one coordinator so `FaultPolicy::checkpoint_interval` means the same
+//! thing on every engine with barriers:
+//!
+//! 1. **Checkpoint** — at each barrier whose iteration hits the
+//!    configured interval, the engine snapshots its full resumable state
+//!    (vertex values, halt flags, in-flight mail, frontier, applied
+//!    migration plans — plus scheduler policy for GraphHP) and hands it
+//!    to the coordinator (`RecoveryCoordinator::install`).
+//!    Vertex-centric engines optionally persist the snapshot to
+//!    `checkpoint_dir` (`persist_checkpoint`); GraphLab-sync checkpoints
+//!    stay in memory because [`GasProgram`](super::graphlab::GasProgram)
+//!    values carry no `Codec` bound.
+//! 2. **Rollback** — when the chaos controller raises a pending loss
+//!    event at a barrier (or inside a migration window), the engine calls
+//!    `RecoveryCoordinator::rollback`: the coordinator charges the
+//!    bounded retry budget and returns the latest snapshot; the engine
+//!    rebuilds partition runtimes from it and replays the checkpointed
+//!    migration trajectory (`replay_geometry`) so the routing geometry
+//!    matches the snapshot exactly.
+//! 3. **Replay** — the superstep counter rewinds but the chaos counter
+//!    (`trace.steps.len()`) never does, so the replayed barriers draw
+//!    fresh RNG streams and a consumed kill entry never re-fires: every
+//!    recovery makes progress, and the replayed run converges to the
+//!    bit-identical fixpoint the clean run reaches (the contract
+//!    `tests/chaos_suite.rs` and `tests/migration_equivalence.rs`
+//!    enforce).
+//!
+//! Without a checkpoint the panic path is unchanged: loss is refused
+//! loudly rather than converging to a silently wrong fixpoint. The
+//! async GraphLab engine has no barriers, hence no consistent snapshot
+//! boundary, and stays documented out of scope — it rejects a configured
+//! interval loudly instead of ignoring it (see `run_graphlab_async`).
+
+use crate::graph::{DistGraph, MigrationPlan};
+use crate::util::Codec;
+
+use super::checkpoint::{prune_checkpoints, Checkpoint};
+use super::metrics::Metrics;
+use super::state::{Frontier, MsgStore, PartitionRuntime};
+use super::FaultPolicy;
+
+/// Bounded, deterministic recovery budget shared by all barrier engines.
+///
+/// Chaos recovery replays from the latest checkpoint; this policy bounds
+/// how many times an engine may do so before surfacing a structured
+/// error through [`Runner::try_run`](super::Runner::try_run) instead of
+/// retrying forever, and optionally backs checkpointing off after a
+/// rollback so a kill landing right on the checkpoint barrier cannot
+/// re-checkpoint corrupt-adjacent state immediately.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Maximum rollbacks one run may take. The next loss event after the
+    /// budget is spent panics with a `"chaos: recovery budget exhausted"`
+    /// message (caught by `try_run` as an `Err`). The default (64)
+    /// matches the default
+    /// [`ChaosSchedule::max_loss_events`](super::ChaosSchedule::max_loss_events),
+    /// so a default schedule can never exhaust it: every loss event
+    /// charges at most one rollback.
+    pub max_recoveries: u64,
+    /// After a rollback to checkpoint iteration `c`, suppress new
+    /// checkpoints until iteration `c + backoff_barriers`. Zero (the
+    /// default) re-checkpoints on the normal interval; a positive value
+    /// widens the replay window after each recovery, which is
+    /// deterministic but trades replay work for fewer snapshot clones
+    /// under sustained fault pressure.
+    pub backoff_barriers: u64,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { max_recoveries: 64, backoff_barriers: 0 }
+    }
+}
+
+/// Per-run recovery state machine: owns the latest snapshot, charges the
+/// retry budget, and applies checkpoint backoff. `S` is whatever the
+/// engine can resume from — [`Checkpoint<V, M>`] for the vertex-centric
+/// engines, [`GasSnapshot`] for GraphLab-sync.
+pub(crate) struct RecoveryCoordinator<S> {
+    policy: RecoveryPolicy,
+    /// `(checkpoint iteration, snapshot)` — latest wins.
+    last: Option<(u64, S)>,
+    recoveries: u64,
+    /// Checkpoints are suppressed below this iteration (backoff).
+    resume_at: u64,
+}
+
+impl<S> RecoveryCoordinator<S> {
+    pub(crate) fn new(policy: RecoveryPolicy) -> Self {
+        RecoveryCoordinator { policy, last: None, recoveries: 0, resume_at: 0 }
+    }
+
+    /// Should the engine snapshot at this barrier? True on the
+    /// configured interval, unless post-rollback backoff suppresses it.
+    pub(crate) fn should_checkpoint(&self, fault: &FaultPolicy, iteration: u64) -> bool {
+        fault.checkpoint_interval.is_some_and(|n| n > 0 && iteration % n == 0)
+            && iteration >= self.resume_at
+    }
+
+    /// Install `snap` as the rollback target for every later loss event.
+    pub(crate) fn install(&mut self, iteration: u64, snap: S, metrics: &mut Metrics) {
+        self.last = Some((iteration, snap));
+        metrics.checkpoints += 1;
+    }
+
+    /// The latest snapshot, if any (the legacy `inject_failure_at` drill
+    /// reads this directly: injected-failure restarts are budget-exempt,
+    /// only chaos-detected loss charges [`rollback`](Self::rollback)).
+    pub(crate) fn last(&self) -> Option<&S> {
+        self.last.as_ref().map(|(_, s)| s)
+    }
+
+    /// Charge one rollback against the budget and return the snapshot to
+    /// resume from. Panics (structured, `try_run`-catchable) when no
+    /// checkpoint exists or the budget is exhausted — never loops
+    /// forever.
+    pub(crate) fn rollback(
+        &mut self,
+        engine: &str,
+        reason: &str,
+        metrics: &mut Metrics,
+    ) -> &S {
+        let (at, snap) = match &self.last {
+            Some(pair) => pair,
+            None => panic!("{}", super::chaos::no_checkpoint_panic(engine, reason)),
+        };
+        if self.recoveries >= self.policy.max_recoveries {
+            panic!(
+                "chaos: recovery budget exhausted — the {engine} engine already rolled back \
+                 {} times (RecoveryPolicy::max_recoveries = {}) and another loss event \
+                 arrived ({reason}); surfacing a structured error instead of retrying forever \
+                 (raise max_recoveries or tame the chaos schedule)",
+                self.recoveries, self.policy.max_recoveries,
+            );
+        }
+        self.recoveries += 1;
+        metrics.recoveries += 1;
+        self.resume_at = at + self.policy.backoff_barriers;
+        snap
+    }
+}
+
+/// Persist `ckpt` under the policy's checkpoint directory (when one is
+/// configured) and apply the retention policy. Write errors are
+/// deliberately swallowed — matching the pre-existing GraphHP behavior —
+/// because the in-memory snapshot already guarantees recovery within
+/// this run; the on-disk copy only serves post-mortem `load_latest`.
+pub(crate) fn persist_checkpoint<V, M>(ckpt: &Checkpoint<V, M>, fault: &FaultPolicy)
+where
+    V: Codec + Clone,
+    M: Codec + Clone,
+{
+    if let Some(dir) = &fault.checkpoint_dir {
+        let _ = ckpt.save(dir);
+        if let Some(keep) = fault.checkpoint_retain {
+            let _ = prune_checkpoints(dir, keep);
+        }
+    }
+}
+
+/// Replay a checkpointed migration trajectory onto the pristine graph:
+/// the snapshot's partition runtimes are only meaningful under the
+/// routing geometry that existed when it was taken, so rollback rebuilds
+/// that geometry by re-applying every checkpointed plan in order.
+/// Returns `None` when no migrations had been applied (resume on the
+/// caller's original `DistGraph`).
+pub(crate) fn replay_geometry(base: &DistGraph, plans: &[MigrationPlan]) -> Option<Box<DistGraph>> {
+    let mut rebuilt: Option<Box<DistGraph>> = None;
+    for plan in plans {
+        let cur: &DistGraph = rebuilt.as_deref().unwrap_or(base);
+        rebuilt = Some(Box::new(cur.apply_migration(plan)));
+    }
+    rebuilt
+}
+
+/// Rebuild one partition's runtime verbatim from checkpoint column `p`:
+/// values, halt flags, both message stores, and the frontier (in its
+/// checkpointed schedule order, preserving drain determinism).
+pub(crate) fn restore_runtime<V: Clone, M: Clone>(
+    ckpt: &Checkpoint<V, M>,
+    p: usize,
+) -> PartitionRuntime<V, M> {
+    let n = ckpt.values[p].len();
+    let mut rt = PartitionRuntime::from_values(ckpt.values[p].clone());
+    rt.halted = ckpt.halted[p].clone();
+    rt.cur = MsgStore::restore(n, &ckpt.local_cur[p]);
+    rt.nxt = MsgStore::restore(n, &ckpt.local_nxt[p]);
+    rt.frontier = Frontier::restore(n, &ckpt.frontier[p]);
+    rt
+}
+
+/// GraphLab-sync's in-memory snapshot. GAS vertex values carry no
+/// [`Codec`] bound, so there is no on-disk format — the snapshot lives
+/// only inside the run's [`RecoveryCoordinator`], which is exactly what
+/// chaos recovery needs (a crashed *process* is out of scope for the
+/// pull engine; a killed *worker* is not).
+pub(crate) struct GasSnapshot<V> {
+    /// The round the snapshot was taken at (resume point).
+    pub(crate) round: u64,
+    /// Vertex values by global id.
+    pub(crate) values: Vec<V>,
+    /// Scheduled-vertex frontier, in schedule order.
+    pub(crate) frontier: Vec<u32>,
+    /// Migration plans applied before the snapshot (geometry replay).
+    pub(crate) plans: Vec<MigrationPlan>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics() -> Metrics {
+        Metrics::default()
+    }
+
+    #[test]
+    fn rollback_without_checkpoint_panics_loudly() {
+        let mut m = metrics();
+        let mut rc: RecoveryCoordinator<u64> = RecoveryCoordinator::new(RecoveryPolicy::default());
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            rc.rollback("hama", "worker killed at barrier 1", &mut m);
+        }))
+        .expect_err("no checkpoint must refuse");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.starts_with("chaos:"), "{msg}");
+        assert!(msg.contains("no checkpoint"), "{msg}");
+    }
+
+    #[test]
+    fn budget_exhaustion_is_a_structured_panic_not_a_loop() {
+        let mut m = metrics();
+        let mut rc: RecoveryCoordinator<u64> =
+            RecoveryCoordinator::new(RecoveryPolicy { max_recoveries: 2, backoff_barriers: 0 });
+        rc.install(4, 0xC0FFEE, &mut m);
+        assert_eq!(*rc.rollback("hama", "loss", &mut m), 0xC0FFEE);
+        assert_eq!(*rc.rollback("hama", "loss", &mut m), 0xC0FFEE);
+        assert_eq!(m.recoveries, 2);
+        assert_eq!(m.checkpoints, 1);
+        let err = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            rc.rollback("hama", "loss", &mut m);
+        }))
+        .expect_err("third rollback must exhaust the budget");
+        let msg = err.downcast_ref::<String>().expect("string payload");
+        assert!(msg.starts_with("chaos: recovery budget exhausted"), "{msg}");
+        assert!(msg.contains("max_recoveries = 2"), "{msg}");
+    }
+
+    #[test]
+    fn backoff_suppresses_checkpoints_below_the_resume_point() {
+        let fault = FaultPolicy { checkpoint_interval: Some(2), ..Default::default() };
+        let mut m = metrics();
+        let mut rc: RecoveryCoordinator<u64> =
+            RecoveryCoordinator::new(RecoveryPolicy { max_recoveries: 8, backoff_barriers: 3 });
+        assert!(rc.should_checkpoint(&fault, 0));
+        assert!(!rc.should_checkpoint(&fault, 1), "off-interval barrier");
+        rc.install(4, 7, &mut m);
+        rc.rollback("graphhp", "loss", &mut m);
+        // resume_at = 4 + 3 = 7: the interval hit at 6 is suppressed,
+        // the one at 8 is live again
+        assert!(!rc.should_checkpoint(&fault, 6));
+        assert!(rc.should_checkpoint(&fault, 8));
+    }
+
+    #[test]
+    fn zero_interval_never_checkpoints() {
+        let rc: RecoveryCoordinator<u64> = RecoveryCoordinator::new(RecoveryPolicy::default());
+        let fault = FaultPolicy { checkpoint_interval: Some(0), ..Default::default() };
+        assert!(!rc.should_checkpoint(&fault, 0));
+        assert!(rc.last().is_none());
+    }
+}

@@ -270,7 +270,10 @@ impl<'g> Runner<'g> {
         self
     }
 
-    /// Checkpoint every N global iterations (GraphHP engine).
+    /// Checkpoint every N global iterations/supersteps. Honored by every
+    /// barrier engine (Hama, AM-Hama, GraphHP, Giraph++, GraphLab-sync);
+    /// the barrier-less async GraphLab engine rejects it loudly (see
+    /// [`super::FaultPolicy::checkpoint_interval`]).
     pub fn checkpoint_interval(mut self, n: Option<u64>) -> Self {
         self.cfg.fault.checkpoint_interval = n;
         self
@@ -296,11 +299,21 @@ impl<'g> Runner<'g> {
         self
     }
 
+    /// Bounded-retry recovery policy: how many rollbacks a run may spend
+    /// before a further loss event surfaces as a structured error, plus
+    /// the post-rollback checkpoint backoff (see
+    /// [`super::RecoveryPolicy`]).
+    pub fn recovery(mut self, policy: super::RecoveryPolicy) -> Self {
+        self.cfg.fault.recovery = policy;
+        self
+    }
+
     /// Seeded deterministic chaos injection on the barrier delivery path
-    /// (see [`super::ChaosPolicy`]). Engines without checkpointing fail
-    /// loudly on any loss event rather than converge on partial state —
-    /// pair lossy schedules with [`Runner::checkpoint_interval`] on the
-    /// GraphHP engine, or use [`Runner::try_run`] to observe the failure.
+    /// (see [`super::ChaosPolicy`]). Without
+    /// [`Runner::checkpoint_interval`] set, any loss event fails loudly
+    /// rather than converge on partial state — pair lossy schedules with
+    /// a checkpoint interval so the engine rolls back and replays, or
+    /// use [`Runner::try_run`] to observe the failure as an `Err`.
     pub fn chaos(mut self, policy: super::ChaosPolicy) -> Self {
         self.cfg.chaos = Some(policy);
         self
@@ -412,20 +425,34 @@ impl<'g> Runner<'g> {
     }
 
     /// [`Runner::run`], but a loud engine failure (e.g. a chaos loss
-    /// event on an engine with no checkpoint to roll back to) is caught
-    /// and returned as `Err` carrying the panic message, instead of
+    /// event on an engine with no checkpoint to roll back to, or an
+    /// exhausted [`super::RecoveryPolicy`] retry budget) is caught and
+    /// returned as `Err` carrying the panic message, instead of
     /// unwinding through the caller. Used by the chaos stress suite to
     /// assert that lossy schedules *fail* rather than converge wrong.
+    ///
+    /// On `Err` the session's cached [`DistGraph`] is dropped: the
+    /// unwound engine may have been interrupted mid-run, so the next
+    /// call rebuilds the distributed view from the source graph rather
+    /// than trusting state a failed run executed over.
     pub fn try_run<P: VertexProgram>(&mut self, program: &P) -> Result<RunResult<P::V>, String> {
         let kind = self.engine;
-        catch_run(std::panic::AssertUnwindSafe(|| self.run_on(kind, program)))
+        let r = catch_run(std::panic::AssertUnwindSafe(|| self.run_on(kind, program)));
+        if r.is_err() {
+            self.built = None;
+        }
+        r
     }
 
     /// [`Runner::run_gas`] with the same loud-failure-to-`Err` contract
-    /// as [`Runner::try_run`].
+    /// (and cached-view invalidation) as [`Runner::try_run`].
     pub fn try_run_gas<P: GasProgram>(&mut self, program: &P) -> Result<RunResult<P::V>, String> {
         let kind = self.engine;
-        catch_run(std::panic::AssertUnwindSafe(|| self.run_gas_on(kind, program)))
+        let r = catch_run(std::panic::AssertUnwindSafe(|| self.run_gas_on(kind, program)));
+        if r.is_err() {
+            self.built = None;
+        }
+        r
     }
 
     /// Run a graph-centric (Giraph++-style) partition program.
@@ -619,6 +646,32 @@ mod tests {
         assert_eq!(runner.cfg().fault.checkpoint_retain, Some(9));
         let runner = Runner::new(&g).checkpoint_retain(None);
         assert_eq!(runner.cfg().fault.checkpoint_retain, None);
+        let runner = Runner::new(&g).recovery(crate::engine::RecoveryPolicy {
+            max_recoveries: 3,
+            backoff_barriers: 1,
+        });
+        assert_eq!(runner.cfg().fault.recovery.max_recoveries, 3);
+        assert_eq!(runner.cfg().fault.recovery.backoff_barriers, 1);
+    }
+
+    #[test]
+    fn failed_try_run_drops_and_rebuilds_the_cached_view() {
+        let g = generators::connected(100, 40, 3);
+        let mut runner = Runner::new(&g).partitions(3).engine(EngineKind::Hama).chaos(
+            crate::engine::ChaosPolicy {
+                seed: 1,
+                schedule: crate::engine::ChaosSchedule {
+                    drop_prob: 1.0,
+                    ..Default::default()
+                },
+            },
+        );
+        let cut = runner.dist().edge_cut();
+        assert!(runner.built.is_some(), "view cached after dist()");
+        let _ = runner.try_run(&Wcc).expect_err("loss without checkpoints must fail");
+        assert!(runner.built.is_none(), "failed run must drop the cached view");
+        // the rebuild is deterministic, so the session stays usable
+        assert_eq!(runner.dist().edge_cut(), cut);
     }
 
     #[test]

@@ -28,10 +28,11 @@
 
 use std::time::Duration;
 
-use crate::graph::{DistGraph, PartGraph};
+use crate::graph::{DistGraph, MigrationPlan, PartGraph};
 use crate::util::Codec;
 
 use super::aggregator::Aggregators;
+use super::checkpoint::Checkpoint;
 use super::context::{SendBuffer, VertexContext};
 use super::messages::{MsgStore, Outbox};
 use super::metrics::{Metrics, PartitionStepTrace, RunTrace, StepTrace};
@@ -605,6 +606,67 @@ pub(crate) fn init_worker_states<P: VertexProgram>(
             }
         })
         .collect()
+}
+
+/// Snapshot every worker's partition runtime into a [`Checkpoint`] at a
+/// superstep boundary, tagged with the migration trajectory applied so
+/// far. The plain BSP engines have no global-phase inbox and no hybrid
+/// scheduler, so those checkpoint columns stay empty; GraphHP builds its
+/// richer checkpoint by hand in `engine/graphhp.rs`.
+pub(crate) fn snapshot_worker_states<V: Clone, M: Clone>(
+    iteration: u64,
+    workers: &mut [WorkerState<V, M>],
+    plans: &[MigrationPlan],
+) -> Checkpoint<V, M> {
+    let nparts = workers.len();
+    let mut ckpt = Checkpoint {
+        iteration,
+        values: Vec::with_capacity(nparts),
+        halted: Vec::with_capacity(nparts),
+        inbox: vec![Vec::new(); nparts],
+        local_cur: Vec::with_capacity(nparts),
+        local_nxt: Vec::with_capacity(nparts),
+        frontier: Vec::with_capacity(nparts),
+        policy: Vec::new(),
+        migrations: plans.to_vec(),
+    };
+    for w in workers {
+        ckpt.values.push(w.rt.values.clone());
+        ckpt.halted.push(w.rt.halted.clone());
+        ckpt.local_cur.push(w.rt.cur.export());
+        ckpt.local_nxt.push(w.rt.nxt.export());
+        ckpt.frontier.push(w.rt.frontier.snapshot());
+    }
+    ckpt
+}
+
+/// Rebuild every worker from `ckpt`: replay the checkpointed migration
+/// trajectory onto the pristine graph so the routing geometry matches
+/// the snapshot, then restore each partition's runtime verbatim (scratch,
+/// marks and outbox are rebuilt empty — they carry no cross-superstep
+/// state). Returns the superstep to resume at.
+pub(crate) fn restore_worker_states<V: Clone, M: Clone + Codec>(
+    dg: &DistGraph,
+    ckpt: &Checkpoint<V, M>,
+    dg_owned: &mut Option<Box<DistGraph>>,
+    applied_plans: &mut Vec<MigrationPlan>,
+    combiner: Option<fn(M, M) -> M>,
+) -> (Vec<WorkerState<V, M>>, u64) {
+    *dg_owned = super::recovery::replay_geometry(dg, &ckpt.migrations);
+    *applied_plans = ckpt.migrations.clone();
+    let workers = (0..ckpt.values.len())
+        .map(|p| {
+            let rt = super::recovery::restore_runtime(ckpt, p);
+            let n = rt.num_vertices();
+            WorkerState {
+                rt,
+                scratch: WorkerScratch::new(),
+                marks: ProcessedMarks::new(n),
+                outbox: Outbox::new(combiner),
+            }
+        })
+        .collect();
+    (workers, ckpt.iteration)
 }
 
 /// What one worker hands back at the barrier.

@@ -33,11 +33,14 @@
 //! `--chaos benign|stress` turns on seeded deterministic fault
 //! injection on the barrier delivery path (`--chaos-seed N` picks the
 //! replay seed, default 42; see `engine/chaos.rs`). Lossy schedules
-//! need `--checkpoint N` (checkpoint every N iterations, GraphHP
-//! engine) to recover — without it the run fails loudly rather than
-//! converge on partial state. `--chaos-trace FILE` dumps the recorded
-//! `ChaosTrace` as JSON for replay. Ignored by `graphlab-async`
-//! (documented out of scope, like migration).
+//! need `--checkpoint N` (checkpoint every N iterations — honored by
+//! every barrier engine) to recover — without it the run fails loudly
+//! rather than converge on partial state. `--max-recoveries N` bounds
+//! the rollback retry budget (default 64); exhausting it fails the run
+//! loudly instead of retrying forever. `--chaos-trace FILE` dumps the
+//! recorded `ChaosTrace` as JSON for replay. `graphlab-async` has no
+//! barriers: chaos and migration are documented out of scope there,
+//! and a configured `--checkpoint` is rejected loudly.
 //!
 //! Execution goes through the `Runner` session; `--engine` accepts every
 //! `EngineKind` spelling (`hama|am-hama|graphhp|giraph++|graphlab-sync|
@@ -55,7 +58,7 @@ use graphhp::algorithms::{
 };
 use graphhp::engine::{
     ChaosPolicy, ChaosTrace, EngineKind, HybridPolicy, Metrics, Parallelism, Partitioner,
-    RepartitionConfig, RunTrace, Runner,
+    RecoveryPolicy, RepartitionConfig, RunTrace, Runner,
 };
 use graphhp::graph::{generators, io, Graph};
 use graphhp::partition::{hash_partition, metis_partition, MetisConfig, PartitionStats};
@@ -251,6 +254,10 @@ fn cmd_run(flags: &HashMap<String, String>) -> Result<()> {
         let n: u64 = v.parse().with_context(|| format!("bad --checkpoint {v}"))?;
         anyhow::ensure!(n > 0, "--checkpoint needs an interval > 0");
         runner = runner.checkpoint_interval(Some(n));
+    }
+    if let Some(v) = flags.get("max-recoveries") {
+        let n: u64 = v.parse().with_context(|| format!("bad --max-recoveries {v}"))?;
+        runner = runner.recovery(RecoveryPolicy { max_recoveries: n, ..Default::default() });
     }
     if let Some(v) = flags.get("chaos") {
         let seed: u64 = get_or(flags, "chaos-seed", "42")

@@ -6,19 +6,23 @@
 //!
 //! - **benign schedules** (duplicate/reorder — events the barrier
 //!   absorbs by construction) leave every engine's fixpoint untouched;
-//! - **lossy schedules with checkpointing** (GraphHP, the engine with
-//!   rollback) converge to the bit-identical (1e-6 for PageRank)
-//!   no-chaos answer after recovery;
+//! - **lossy schedules with checkpointing** converge to the
+//!   bit-identical (1e-6 for PageRank) no-chaos answer after recovery —
+//!   on *every* barrier engine, through the shared rollback layer in
+//!   `engine/recovery.rs`;
 //! - **lossy schedules without checkpoints** fail loudly — an explicit
-//!   `chaos:` error, never a silently wrong fixpoint;
+//!   `chaos:` error, never a silently wrong fixpoint — and an exhausted
+//!   `RecoveryPolicy` budget surfaces the structured
+//!   budget-exhausted error instead of retrying forever;
 //! - **same seed ⇒ same `ChaosTrace`**, and `Sequential` ≡ `Threads(n)`
 //!   down to the injected-event stream (graphlab-async is documented
-//!   out of scope, like migration: it runs chaos-free).
+//!   out of scope, like migration: it runs chaos-free and rejects a
+//!   configured checkpoint policy loudly).
 
 use graphhp::algorithms::{GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
 use graphhp::bench_support::runner;
 use graphhp::engine::{
-    ChaosEventKind, ChaosPolicy, ChaosSchedule, EngineKind, Parallelism, Runner,
+    ChaosEventKind, ChaosPolicy, ChaosSchedule, EngineKind, Parallelism, RecoveryPolicy, Runner,
 };
 use graphhp::graph::{generators, Graph};
 
@@ -202,6 +206,164 @@ fn partition_then_heal_window_recovers_exactly() {
     let trace = stressed.chaos.expect("trace recorded");
     assert!(trace.count(ChaosEventKind::SplitHold) > 0, "the split must sever traffic");
     assert!(trace.count(ChaosEventKind::Heal) >= 1, "the heal must be recorded");
+}
+
+// ------------------- recovery matrix: every barrier engine recovers
+
+#[test]
+fn every_barrier_engine_recovers_sssp_exactly_under_stress() {
+    let g = grid();
+    let prog = Sssp { source: 0 };
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let clean = runner(&g, 4).engine(kind).run(&prog);
+        let stressed = runner(&g, 4)
+            .engine(kind)
+            .checkpoint_interval(Some(2))
+            .chaos(ChaosPolicy::stress(81))
+            .run(&prog);
+        assert!(stressed.metrics.recoveries > 0, "{kind}: the scheduled kill must recover");
+        assert_eq!(
+            bits_f32(&clean.values),
+            bits_f32(&stressed.values),
+            "{kind}: recovery must replay the clean trajectory bit-for-bit"
+        );
+        let trace = stressed.chaos.expect("trace recorded");
+        assert_eq!(
+            trace.count(ChaosEventKind::Recover),
+            stressed.metrics.recoveries,
+            "{kind}: every recovery must land in the trace"
+        );
+    }
+}
+
+#[test]
+fn every_barrier_engine_recovers_wcc_exactly_under_stress() {
+    let g = grid();
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let clean = runner(&g, 4).engine(kind).run(&Wcc);
+        let stressed = runner(&g, 4)
+            .engine(kind)
+            .checkpoint_interval(Some(2))
+            .chaos(ChaosPolicy::stress(82))
+            .run(&Wcc);
+        assert!(stressed.metrics.recoveries > 0, "{kind}: recoveries");
+        assert_eq!(clean.values, stressed.values, "{kind}: WCC fixpoint after recovery");
+    }
+}
+
+#[test]
+fn every_barrier_engine_recovers_pagerank_within_tolerance_under_stress() {
+    let g = grid();
+    let prog = IncrementalPageRank { tolerance: 1e-6 };
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let clean = runner(&g, 4).engine(kind).run(&prog);
+        let stressed = runner(&g, 4)
+            .engine(kind)
+            .checkpoint_interval(Some(2))
+            .chaos(ChaosPolicy::stress(83))
+            .run(&prog);
+        assert!(stressed.metrics.recoveries > 0, "{kind}: recoveries");
+        assert_pagerank_close(&clean.values, &stressed.values, &format!("{kind}"));
+    }
+}
+
+#[test]
+fn recovery_is_thread_count_independent_on_every_barrier_engine() {
+    let g = grid();
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let run = |p: Parallelism| {
+            runner(&g, 4)
+                .engine(kind)
+                .parallelism(p)
+                .checkpoint_interval(Some(2))
+                .chaos(ChaosPolicy::stress(84))
+                .run(&Sssp { source: 0 })
+        };
+        let seq = run(Parallelism::Sequential);
+        let par = run(Parallelism::Threads(4));
+        assert_eq!(
+            seq.chaos.expect("trace"),
+            par.chaos.expect("trace"),
+            "{kind}: Sequential and Threads(4) must inject identically"
+        );
+        assert_eq!(bits_f32(&seq.values), bits_f32(&par.values), "{kind}: values");
+        assert_eq!(seq.metrics.recoveries, par.metrics.recoveries, "{kind}: recoveries");
+    }
+}
+
+#[test]
+fn graphlab_sync_recovers_from_a_kill_with_checkpoints() {
+    let g = grid();
+    let clean = Runner::new(&g).partitions(4).engine(EngineKind::GraphLabSync).run_gas(&GasWcc);
+    let stressed = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::GraphLabSync)
+        .checkpoint_interval(Some(2))
+        .chaos(ChaosPolicy {
+            seed: 85,
+            schedule: ChaosSchedule { kill_at: vec![1], ..Default::default() },
+        })
+        .run_gas(&GasWcc);
+    assert!(stressed.metrics.recoveries > 0, "the kill must recover");
+    assert_eq!(clean.values, stressed.values, "recovered WCC must match the clean run");
+    let trace = stressed.chaos.expect("trace recorded");
+    assert!(trace.count(ChaosEventKind::Kill) >= 1);
+    assert_eq!(trace.count(ChaosEventKind::Recover), stressed.metrics.recoveries);
+}
+
+// ------------------- bounded retries: budget exhaustion is structured
+
+#[test]
+fn exhausted_recovery_budget_surfaces_a_structured_error() {
+    // max_recoveries = 0: the very first rollback attempt must turn
+    // into the budget-exhausted error — never an infinite retry loop
+    let g = grid();
+    let kill = |seed: u64| ChaosPolicy {
+        seed,
+        schedule: ChaosSchedule { kill_at: vec![1], ..Default::default() },
+    };
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let err = runner(&g, 4)
+            .engine(kind)
+            .checkpoint_interval(Some(2))
+            .recovery(RecoveryPolicy { max_recoveries: 0, ..Default::default() })
+            .chaos(kill(91))
+            .try_run(&Wcc)
+            .expect_err("zero budget must fail the run");
+        assert!(err.starts_with("chaos:"), "{kind}: {err}");
+        assert!(err.contains("recovery budget exhausted"), "{kind}: {err}");
+    }
+    let err = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::GraphLabSync)
+        .checkpoint_interval(Some(2))
+        .recovery(RecoveryPolicy { max_recoveries: 0, ..Default::default() })
+        .chaos(kill(92))
+        .try_run_gas(&GasWcc)
+        .expect_err("zero budget must fail the run");
+    assert!(err.contains("recovery budget exhausted"), "graphlab-sync: {err}");
+}
+
+#[test]
+fn default_budget_covers_the_default_stress_schedule() {
+    // RecoveryPolicy::default().max_recoveries == 64 ==
+    // ChaosSchedule::default().max_loss_events: a default stress run can
+    // spend its whole loss budget and still converge
+    assert_eq!(RecoveryPolicy::default().max_recoveries, 64);
+    assert_eq!(ChaosSchedule::default().max_loss_events, 64);
+}
+
+#[test]
+fn graphlab_async_rejects_a_checkpoint_policy_loudly() {
+    let g = grid();
+    let err = Runner::new(&g)
+        .partitions(4)
+        .engine(EngineKind::GraphLabAsync)
+        .checkpoint_interval(Some(2))
+        .try_run_gas(&GasWcc)
+        .expect_err("async has no barriers: the config must be rejected");
+    assert!(err.starts_with("config:"), "unexpected message: {err}");
+    assert!(err.contains("no barriers"), "unexpected message: {err}");
 }
 
 // ----------------------- lossy without checkpoints: loud failure

@@ -17,7 +17,10 @@
 //! builds, so passing tests also certify post-migration geometry.
 
 use graphhp::algorithms::{GasPageRank, GasSssp, GasWcc, IncrementalPageRank, Sssp, Wcc};
-use graphhp::engine::{EngineKind, Parallelism, RepartitionConfig, Runner};
+use graphhp::engine::{
+    ChaosEventKind, ChaosPolicy, ChaosSchedule, EngineKind, Parallelism, RepartitionConfig,
+    Runner,
+};
 use graphhp::graph::{generators, DistGraph, Graph};
 use graphhp::partition::hash_partition;
 
@@ -142,6 +145,80 @@ fn threads_match_sequential_with_migration_enabled() {
         assert_eq!(seq.metrics.network_messages, par.metrics.network_messages, "{kind}");
         assert!(seq.trace.vertices_migrated() > 0, "{kind}: vacuous without migrations");
     }
+}
+
+// ---- chaos in the migration window -------------------------------------
+
+/// A kill scheduled inside the migration window (between
+/// `MigrationPlanner::plan` and `apply_migration`) fires at the first
+/// barrier that actually produces a plan at or after the scheduled
+/// point.
+fn migration_kill(seed: u64) -> ChaosPolicy {
+    ChaosPolicy {
+        seed,
+        schedule: ChaosSchedule { migration_kill_at: vec![1], ..Default::default() },
+    }
+}
+
+#[test]
+fn kill_in_the_migration_window_recovers_bitwise_on_every_engine() {
+    // the recovered replay re-derives the identical plan trajectory from
+    // the checkpointed counters, so the final values match the clean
+    // migrated run bit-for-bit
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+    for kind in EngineKind::VERTEX_CENTRIC {
+        let clean = runner(&dg, true).run_on(kind, &Sssp { source: 0 });
+        let killed = runner(&dg, true)
+            .checkpoint_interval(Some(1))
+            .chaos(migration_kill(7))
+            .run_on(kind, &Sssp { source: 0 });
+        assert!(killed.metrics.recoveries > 0, "{kind}: the window kill must recover");
+        for (i, (a, b)) in clean.values.iter().zip(&killed.values).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind} v{i}: recovery diverged");
+        }
+        assert_eq!(
+            clean.trace.vertices_migrated(),
+            killed.trace.vertices_migrated(),
+            "{kind}: the replay must re-apply the identical plan trajectory"
+        );
+        let trace = killed.chaos.expect("trace recorded");
+        assert!(
+            trace.count(ChaosEventKind::MigrationKill) >= 1,
+            "{kind}: the kill must land inside a migration window"
+        );
+        assert_eq!(trace.count(ChaosEventKind::Recover), killed.metrics.recoveries);
+    }
+}
+
+#[test]
+fn graphlab_sync_survives_a_migration_window_kill() {
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+    let clean = runner(&dg, true).run_gas_on(EngineKind::GraphLabSync, &GasSssp { source: 0 });
+    let killed = runner(&dg, true)
+        .checkpoint_interval(Some(1))
+        .chaos(migration_kill(8))
+        .run_gas_on(EngineKind::GraphLabSync, &GasSssp { source: 0 });
+    assert!(killed.metrics.recoveries > 0, "the window kill must recover");
+    for (a, b) in clean.values.iter().zip(&killed.values) {
+        assert_eq!(a.to_bits(), b.to_bits(), "graphlab-sync: recovery diverged");
+    }
+    assert_eq!(clean.trace.vertices_migrated(), killed.trace.vertices_migrated());
+    let trace = killed.chaos.expect("trace recorded");
+    assert!(trace.count(ChaosEventKind::MigrationKill) >= 1);
+}
+
+#[test]
+fn migration_window_kill_without_checkpoints_fails_loudly() {
+    let g = generators::connected(300, 120, 7);
+    let dg = dist(&g, 4);
+    let err = runner(&dg, true)
+        .chaos(migration_kill(9))
+        .try_run(&Sssp { source: 0 })
+        .expect_err("a window kill without checkpoints must fail loudly");
+    assert!(err.starts_with("chaos:"), "unexpected message: {err}");
+    assert!(err.contains("migration window"), "unexpected message: {err}");
 }
 
 // ---- interval semantics ------------------------------------------------
